@@ -1,0 +1,61 @@
+//! Cluster-size tuning sweep (the Fig. 11 experiment as a user-facing
+//! tool): for a model/sequence grid, evaluate the fused dataflow at every
+//! legal cluster size and report the optimum — the paper's conclusion that
+//! "cluster size should be tuned accordingly" as a utility.
+//!
+//! ```bash
+//! cargo run --release --example cluster_size_sweep -- [model]
+//! ```
+
+use anyhow::{Context, Result};
+use clusterfusion::clustersim::dataflow::{mla, split_token, AttnProblem, CostEnv};
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::metrics::Table;
+use clusterfusion::models::{AttnKind, ModelConfig};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model_name = args.first().map(String::as_str).unwrap_or("llama2-7b");
+    let model = ModelConfig::by_name(model_name).context("unknown model")?;
+
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+
+    println!("== cluster-size sweep: {} ==\n", model.name);
+    let mut t = Table::new(vec![
+        "batch", "seq", "N=1", "N=2", "N=4", "N=8", "N=16", "best", "gain vs N=1",
+    ]);
+    for batch in [1usize, 4, 16] {
+        for seq in [1024usize, 4096, 16384] {
+            let p = AttnProblem {
+                batch,
+                d_model: model.d_model,
+                n_heads: model.n_heads,
+                head_dim: model.head_dim,
+                seq,
+                kv_lora_rank: model.kv_lora_rank,
+            };
+            let lats: Vec<(usize, f64)> = Noc::cluster_sizes()
+                .iter()
+                .map(|&n| {
+                    let env = CostEnv::clusterfusion(&hw, &noc, n);
+                    let lat = match model.attn {
+                        AttnKind::Mha => split_token::cost(&p, &env).latency,
+                        AttnKind::Mla => mla::cost(&p, &env).latency,
+                    };
+                    (n, lat)
+                })
+                .collect();
+            let best = lats.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+            let mut row = vec![batch.to_string(), seq.to_string()];
+            row.extend(lats.iter().map(|(_, l)| format!("{:.1}", l * 1e6)));
+            row.push(format!("N={}", best.0));
+            row.push(format!("{:.2}x", lats[0].1 / best.1));
+            t.row(row);
+        }
+    }
+    t.print();
+    println!("\n(latencies in us per layer; the best cluster size is workload-dependent,");
+    println!(" which is the paper's §4.1 tuning conclusion)");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! **End-to-end validation driver** (DESIGN.md): serve a ShareGPT-like
+//! request trace against the ~100 M-parameter tiny-llama on the real PJRT
+//! runtime — router → continuous batcher → paged KV cache → fused decode
+//! executable — and report latency/throughput percentiles.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_trace -- [n_requests] [model]
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §End-to-end used the defaults
+//! (12 requests, tiny-llama-100m).
+
+use anyhow::Result;
+use clusterfusion::coordinator::engine::{Backend, Engine};
+use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
+use clusterfusion::coordinator::request::{Event, Request};
+use clusterfusion::coordinator::router::Router;
+use clusterfusion::coordinator::server::Server;
+use clusterfusion::metrics::{LatencyRecorder, Table, Throughput};
+use clusterfusion::util::rng::Rng;
+use clusterfusion::workload::{SeqlenDist, Trace};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(12);
+    let model = args.get(1).map(String::as_str).unwrap_or("tiny-llama-100m");
+
+    println!("== serve_trace: end-to-end serving on PJRT ==");
+    println!("loading {model} ...");
+    let backend = PjrtBackend::load("artifacts", model, 0)?;
+    println!(
+        "platform {}, buckets {:?}, vocab {}",
+        backend.platform(),
+        backend.buckets(),
+        backend.geom().vocab
+    );
+    let vocab = backend.geom().vocab;
+    let engine = Engine::new(backend, 512, 16, 0.5);
+    let server = Server::spawn(engine);
+    let mut router = Router::new(1, 4096);
+
+    // ShareGPT-like trace, scaled to the demo model's context budget
+    let trace = Trace::poisson(n_requests, 8.0, SeqlenDist::ShareGpt, (4, 12), 96, 42);
+    println!("trace: {} requests, offered {:.1} rps\n", trace.requests.len(), trace.offered_rps());
+
+    let mut rng = Rng::seed_from_u64(7);
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::new();
+    for r in &trace.requests {
+        let prompt: Vec<i32> =
+            (0..r.prompt_len.clamp(1, 16)).map(|_| rng.below(vocab) as i32).collect();
+        let req = Request::new(r.id, prompt, r.gen_len.clamp(4, 12));
+        let route = router.route(&req)?;
+        router.on_started(route.replica);
+        receivers.push((r.id, server.submit(req)?));
+    }
+
+    let mut tokens = 0u64;
+    let mut first_tokens = 0u64;
+    for (id, rx) in receivers {
+        for ev in rx.iter() {
+            match ev {
+                Event::FirstToken { .. } => {
+                    first_tokens += 1;
+                    tokens += 1;
+                }
+                Event::Token { .. } => tokens += 1,
+                Event::Finished { .. } => router.on_finished(0, id),
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = server.shutdown()?;
+
+    let mut total_lat = LatencyRecorder::new();
+    let mut ttft = LatencyRecorder::new();
+    let mut gen_tokens = 0usize;
+    for t in &report.timings {
+        total_lat.record(t.total);
+        ttft.record(t.ttft);
+        gen_tokens += t.generated;
+    }
+    let thr = Throughput { tokens, seconds: wall };
+
+    println!("== results ==");
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["requests completed".to_string(), report.timings.len().to_string()]);
+    t.row(vec!["tokens generated".to_string(), gen_tokens.to_string()]);
+    t.row(vec!["first tokens".to_string(), first_tokens.to_string()]);
+    t.row(vec!["wall time (s)".to_string(), format!("{wall:.2}")]);
+    t.row(vec!["throughput (tok/s)".to_string(), format!("{:.2}", thr.tokens_per_second())]);
+    t.row(vec!["engine steps".to_string(), report.steps.to_string()]);
+    t.row(vec![
+        "tokens per step".to_string(),
+        format!("{:.2}", report.tokens_out as f64 / report.steps.max(1) as f64),
+    ]);
+    t.row(vec!["preemptions".to_string(), report.preemptions.to_string()]);
+    t.print();
+    println!("\nrequest latency: {}", total_lat.summary().fmt_ms());
+    println!("ttft:            {}", ttft.summary().fmt_ms());
+
+    assert_eq!(report.timings.len(), n_requests, "every request must finish");
+    assert!(tokens > 0 && thr.tokens_per_second() > 0.0);
+    println!("\nserve_trace OK");
+    Ok(())
+}

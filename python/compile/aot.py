@@ -1,0 +1,150 @@
+"""AOT compile path: lower decode_step to HLO *text* + a JSON manifest.
+
+HLO text (NOT `lowered.compiler_ir(...).serialize()`): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects. The text parser
+reassigns ids, so text round-trips cleanly — see /opt/xla-example/README.md.
+
+Usage:
+  python -m compile.aot --out ../artifacts [--models tiny-llama-100m,...]
+                        [--batches 1,4,8]
+
+Outputs per (model, batch): `decode_<model>_b<batch>.hlo.txt` plus one
+`manifest.json` describing the exact flat input/output interface so the
+Rust runtime can build buffers without re-deriving shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust-side
+    to_tuple unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(arr_like) -> dict:
+    return {"shape": list(arr_like.shape), "dtype": str(arr_like.dtype)}
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int, *, use_kernel=True, serving=False):
+    """Lower one decode-step executable; returns (hlo_text, interface).
+
+    `serving=False`: device appends to the cache and returns it
+    (self-contained; used by the quickstart / tests).
+    `serving=True`: device returns only the per-layer new K/V rows and the
+    host-authoritative paged cache (rust coordinator) appends them — the
+    interface the serving engine loads.
+    """
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    cache = M.init_cache(cfg, batch)
+    cache_keys = ("k", "v") if cfg.attn == "mha" else ("kv",)
+    cache_specs = [jax.ShapeDtypeStruct(cache[k].shape, cache[k].dtype) for k in cache_keys]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    flat_params = M.flatten_params(cfg, params)
+    param_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat_params]
+
+    if serving:
+        f = M.decode_step_knew_flat(cfg, use_kernel=use_kernel)
+    else:
+        f = M.decode_step_flat(cfg, use_kernel=use_kernel)
+    lowered = jax.jit(f).lower(tokens, pos, *cache_specs, *param_specs)
+    text = to_hlo_text(lowered)
+
+    l_, nh, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    if serving:
+        if cfg.attn == "mha":
+            out_rows = [
+                {"name": "k_new", "shape": [l_, batch, nh, dh], "dtype": "float32"},
+                {"name": "v_new", "shape": [l_, batch, nh, dh], "dtype": "float32"},
+            ]
+        else:
+            out_rows = [
+                {"name": "kv_new", "shape": [l_, batch, cfg.kv_lora_rank], "dtype": "float32"},
+            ]
+    else:
+        out_rows = [
+            {"name": f"cache_{k}", **_spec(s)} for k, s in zip(cache_keys, cache_specs)
+        ]
+
+    interface = {
+        "model": cfg.name,
+        "batch": batch,
+        "attn": cfg.attn,
+        "max_seq": cfg.max_seq,
+        "vocab": cfg.vocab,
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "kv_lora_rank": cfg.kv_lora_rank,
+        "inputs": (
+            [{"name": "tokens", **_spec(tokens)}, {"name": "pos", **_spec(pos)}]
+            + [{"name": f"cache_{k}", **_spec(s)} for k, s in zip(cache_keys, cache_specs)]
+            + [
+                {"name": f"param_{n}", **_spec(s)}
+                for n, s in zip(M.param_order(cfg), param_specs)
+            ]
+        ),
+        "outputs": (
+            [{"name": "logits", "shape": [batch, cfg.vocab], "dtype": "float32"}] + out_rows
+        ),
+        "serving": serving,
+        "n_cache": len(cache_keys),
+        "n_params": len(param_specs),
+    }
+    return text, interface
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny-llama-100m,tiny-mla-100m")
+    ap.add_argument("--batches", default="1,4,8")
+    ap.add_argument("--no-kernel", action="store_true", help="lower the jnp oracle instead")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": 1, "executables": []}
+
+    for name in args.models.split(","):
+        cfg = M.CONFIGS[name.strip()]
+        # serving executables (host-authoritative cache) for every bucket,
+        # plus one self-contained executable for the quickstart example.
+        jobs = [(b, True) for b in (int(x) for x in args.batches.split(","))]
+        jobs.append((1, False))
+        for b, serving in jobs:
+            text, interface = lower_decode(
+                cfg, b, use_kernel=not args.no_kernel, serving=serving
+            )
+            kind = "serve" if serving else "full"
+            fname = f"decode_{cfg.name}_{kind}_b{b}.hlo.txt"
+            (out / fname).write_text(text)
+            interface["file"] = fname
+            interface["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest["executables"].append(interface)
+            print(f"wrote {fname}: {len(text) / 1e6:.2f} MB, batch={b}")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote manifest.json with {len(manifest['executables'])} executables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Fused MHA decode kernel (paper Alg. 3, "SplitToken" dataflow) in Pallas.
+
+One `pallas_call` fuses *QKV Projection + Attention + Output Projection* for
+a single decode step — the paper's expanded fusion scope — so none of the
+Q/K/V vectors, softmax statistics, or per-head attention outputs are ever
+materialised to HBM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's thread
+block *cluster* (one per attention head, blocks partitioning the KV
+sequence) becomes the Pallas grid `(heads, kv_chunks)`; DSMEM exchange
+becomes VMEM scratch carried across the sequential grid:
+
+  * ClusterGather of Q/K/V segments  -> Q/K_new/V_new tiles computed once per
+    head into VMEM scratch (grid step c==0) and reused by later chunks.
+  * ClusterReduce of softmax stats   -> online-softmax (m, l) accumulators in
+    VMEM scratch updated chunk-by-chunk (FlashDecoding-style partials).
+  * ClusterReduce of attention out   -> the `acc` VMEM accumulator.
+  * atomicAdd of the output tiles    -> `o_ref[...] +=` into a single output
+    block revisited by every grid step (zeroed at the first step).
+
+Grid iteration is row-major (head-major), so per-head scratch written at
+chunk 0 is live for all chunks of that head.
+
+Must run with interpret=True on CPU; real-TPU lowering of the same kernel is
+a compile-only target (Mosaic custom-call).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_BIG = -1e30
+
+
+def _mha_kernel(
+    hidden_ref,  # (B, D)
+    wq_ref,  # (D, 1, dh)
+    wk_ref,  # (D, 1, dh)
+    wv_ref,  # (D, 1, dh)
+    wo_ref,  # (1, dh, D)
+    k_cache_ref,  # (B, chunk, 1, dh)
+    v_cache_ref,  # (B, chunk, 1, dh)
+    pos_ref,  # (B,)
+    o_ref,  # (B, D)  accumulated across all grid steps
+    k_new_ref,  # (B, 1, dh)
+    v_new_ref,  # (B, 1, dh)
+    q_s,  # scratch (B, dh) f32
+    kn_s,  # scratch (B, dh) f32
+    vn_s,  # scratch (B, dh) f32
+    acc_s,  # scratch (B, dh) f32
+    m_s,  # scratch (B, 1) f32
+    l_s,  # scratch (B, 1) f32
+    *,
+    chunk: int,
+    num_chunks: int,
+    scale: float,
+):
+    c = pl.program_id(1)
+    h_first = pl.program_id(0) == 0
+
+    @pl.when(h_first & (c == 0))
+    def _zero_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(c == 0)
+    def _project_qkv():
+        # QKV projection for this head (paper: segment matmul +
+        # ClusterGather; here: one VMEM-resident tile per head).
+        h = hidden_ref[...].astype(jnp.float32)  # (B, D)
+        q_s[...] = h @ wq_ref[:, 0, :].astype(jnp.float32)
+        kn_s[...] = h @ wk_ref[:, 0, :].astype(jnp.float32)
+        vn_s[...] = h @ wv_ref[:, 0, :].astype(jnp.float32)
+        k_new_ref[:, 0, :] = kn_s[...].astype(k_new_ref.dtype)
+        v_new_ref[:, 0, :] = vn_s[...].astype(v_new_ref.dtype)
+        m_s[...] = jnp.full_like(m_s, _NEG_BIG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # ---- FlashDecoding-style partial attention over this KV chunk ----
+    q = q_s[...]  # (B, dh) f32
+    k_chunk = k_cache_ref[:, :, 0, :].astype(jnp.float32)  # (B, chunk, dh)
+    v_chunk = v_cache_ref[:, :, 0, :].astype(jnp.float32)
+    scores = jnp.einsum("bk,bsk->bs", q, k_chunk) * scale  # (B, chunk)
+
+    pos = pos_ref[...]  # (B,) int32
+    idx = c * chunk + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    mask = idx < pos[:, None]
+    scores = jnp.where(mask, scores, _NEG_BIG)
+
+    m_prev, l_prev = m_s[...], l_s[...]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)  # (B, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new) * mask.astype(jnp.float32)
+    l_s[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jnp.einsum("bs,bsk->bk", p, v_chunk)
+    m_s[...] = m_new
+
+    @pl.when(c == num_chunks - 1)
+    def _finish_head():
+        # Fold in the freshly produced token's own K/V (it is always valid),
+        # normalise (paper: ClusterReduce of S_sum/S_max then rescale), and
+        # apply this head's slice of the output projection.
+        s_self = jnp.sum(q_s[...] * kn_s[...], axis=-1, keepdims=True) * scale
+        m_prev2, l_prev2 = m_s[...], l_s[...]
+        m_fin = jnp.maximum(m_prev2, s_self)
+        alpha2 = jnp.exp(m_prev2 - m_fin)
+        p_self = jnp.exp(s_self - m_fin)  # (B, 1)
+        l_fin = l_prev2 * alpha2 + p_self
+        acc = acc_s[...] * alpha2 + p_self * vn_s[...]
+        attn = acc / l_fin  # (B, dh)
+        wo = wo_ref[0].astype(jnp.float32)  # (dh, D)
+        o_ref[...] += (attn @ wo).astype(o_ref.dtype)
+
+
+def fused_mha_decode(hidden, wq, wk, wv, wo, k_cache, v_cache, pos, *, chunk=None):
+    """Fused single-token MHA decode step.
+
+    Args mirror `ref.mha_decode_ref`; returns (out(B,D), k_new(B,nh,dh),
+    v_new(B,nh,dh)). `chunk` is the KV-sequence tile per grid step (the
+    paper's per-block KV segment); must divide S.
+    """
+    b, d = hidden.shape
+    _, nh, dh = wq.shape
+    s = k_cache.shape[1]
+    if chunk is None:
+        chunk = min(s, 128)
+    if s % chunk != 0:
+        raise ValueError(f"S={s} not divisible by chunk={chunk}")
+    num_chunks = s // chunk
+    scale = 1.0 / float(dh) ** 0.5
+
+    kernel = functools.partial(
+        _mha_kernel, chunk=chunk, num_chunks=num_chunks, scale=scale
+    )
+    grid = (nh, num_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda h, c: (0, 0)),  # hidden
+            pl.BlockSpec((d, 1, dh), lambda h, c: (0, h, 0)),  # wq
+            pl.BlockSpec((d, 1, dh), lambda h, c: (0, h, 0)),  # wk
+            pl.BlockSpec((d, 1, dh), lambda h, c: (0, h, 0)),  # wv
+            pl.BlockSpec((1, dh, d), lambda h, c: (h, 0, 0)),  # wo
+            pl.BlockSpec((b, chunk, 1, dh), lambda h, c: (0, c, h, 0)),  # k$
+            pl.BlockSpec((b, chunk, 1, dh), lambda h, c: (0, c, h, 0)),  # v$
+            pl.BlockSpec((b,), lambda h, c: (0,)),  # pos
+        ],
+        out_specs=[
+            pl.BlockSpec((b, d), lambda h, c: (0, 0)),  # out (accumulated)
+            pl.BlockSpec((b, 1, dh), lambda h, c: (0, h, 0)),  # k_new
+            pl.BlockSpec((b, 1, dh), lambda h, c: (0, h, 0)),  # v_new
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), hidden.dtype),
+            jax.ShapeDtypeStruct((b, nh, dh), hidden.dtype),
+            jax.ShapeDtypeStruct((b, nh, dh), hidden.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, dh), jnp.float32),  # q
+            pltpu.VMEM((b, dh), jnp.float32),  # k_new
+            pltpu.VMEM((b, dh), jnp.float32),  # v_new
+            pltpu.VMEM((b, dh), jnp.float32),  # acc
+            pltpu.VMEM((b, 1), jnp.float32),  # m (running max)
+            pltpu.VMEM((b, 1), jnp.float32),  # l (running sum)
+        ],
+        interpret=True,
+    )(hidden, wq, wk, wv, wo, k_cache, v_cache, pos)

@@ -1,0 +1,150 @@
+"""Fused MLA decode kernel (paper Alg. 4) in Pallas.
+
+DeepSeek Multi-head Latent Attention, weight-absorbed decode form (paper
+Appendix B.1, rope_dim omitted exactly as the paper does): one `pallas_call`
+fuses the absorbed Q projection, the latent KV projection, attention over
+the compressed latent cache (shared by all heads, MQA-style), the per-head
+down projection, and the output projection.
+
+Cluster -> grid mapping is identical to `fused_decode.py`: grid =
+(heads, kv_chunks); the latent cache chunk plays the role of the per-block
+KV segment; the new latent entry `kv_new` is computed once (first grid
+step) into VMEM scratch and shared by every head — the analogue of the
+paper's ClusterGather of the compressed KV.
+
+interpret=True only on CPU (see fused_decode.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_BIG = -1e30
+
+
+def _mla_kernel(
+    hidden_ref,  # (B, D)
+    wq_ref,  # (D, 1, l)   absorbed per-head query weights
+    wkv_ref,  # (D, l)      latent KV projection (shared)
+    w_down_ref,  # (1, l, dh)
+    wo_ref,  # (1, dh, D)
+    kv_cache_ref,  # (B, chunk, l)
+    pos_ref,  # (B,)
+    o_ref,  # (B, D)  accumulated
+    kv_new_ref,  # (B, l)
+    q_s,  # scratch (B, l)
+    kv_s,  # scratch (B, l)  new latent entry, shared across heads
+    acc_s,  # scratch (B, l)
+    m_s,  # scratch (B, 1)
+    l_s,  # scratch (B, 1)
+    *,
+    chunk: int,
+    num_chunks: int,
+    scale: float,
+):
+    h_idx = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when((h_idx == 0) & (c == 0))
+    def _once():
+        # New latent cache entry: computed once, shared by all heads
+        # (paper: KV Projection segments + ClusterGather).
+        h = hidden_ref[...].astype(jnp.float32)
+        kv_s[...] = h @ wkv_ref[...].astype(jnp.float32)
+        kv_new_ref[...] = kv_s[...].astype(kv_new_ref.dtype)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(c == 0)
+    def _per_head():
+        h = hidden_ref[...].astype(jnp.float32)
+        q_s[...] = h @ wq_ref[:, 0, :].astype(jnp.float32)
+        m_s[...] = jnp.full_like(m_s, _NEG_BIG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # ---- partial attention over this latent-cache chunk ----
+    q = q_s[...]  # (B, l)
+    kv_chunk = kv_cache_ref[...].astype(jnp.float32)  # (B, chunk, l)
+    scores = jnp.einsum("bl,bsl->bs", q, kv_chunk) * scale
+
+    pos = pos_ref[...]
+    idx = c * chunk + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    mask = idx < pos[:, None]
+    scores = jnp.where(mask, scores, _NEG_BIG)
+
+    m_prev, l_prev = m_s[...], l_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new) * mask.astype(jnp.float32)
+    l_s[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jnp.einsum("bs,bsl->bl", p, kv_chunk)
+    m_s[...] = m_new
+
+    @pl.when(c == num_chunks - 1)
+    def _finish_head():
+        # Self token (value = the latent entry itself, MQA-style), then
+        # down projection and output projection for this head.
+        s_self = jnp.sum(q_s[...] * kv_s[...], axis=-1, keepdims=True) * scale
+        m_prev2, l_prev2 = m_s[...], l_s[...]
+        m_fin = jnp.maximum(m_prev2, s_self)
+        alpha2 = jnp.exp(m_prev2 - m_fin)
+        p_self = jnp.exp(s_self - m_fin)
+        l_fin = l_prev2 * alpha2 + p_self
+        attn = (acc_s[...] * alpha2 + p_self * kv_s[...]) / l_fin  # (B, l)
+        z = attn @ w_down_ref[0].astype(jnp.float32)  # (B, dh)
+        o_ref[...] += (z @ wo_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def fused_mla_decode(hidden, wq, wkv, w_down, wo, kv_cache, pos, *, chunk=None):
+    """Fused single-token MLA decode step.
+
+    Args mirror `ref.mla_decode_ref`; returns (out(B,D), kv_new(B,l)).
+    """
+    b, d = hidden.shape
+    _, nh, l = wq.shape
+    dh = w_down.shape[2]
+    s = kv_cache.shape[1]
+    if chunk is None:
+        chunk = min(s, 128)
+    if s % chunk != 0:
+        raise ValueError(f"S={s} not divisible by chunk={chunk}")
+    num_chunks = s // chunk
+    scale = 1.0 / float(l) ** 0.5
+
+    kernel = functools.partial(
+        _mla_kernel, chunk=chunk, num_chunks=num_chunks, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nh, num_chunks),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda h, c: (0, 0)),  # hidden
+            pl.BlockSpec((d, 1, l), lambda h, c: (0, h, 0)),  # wq
+            pl.BlockSpec((d, l), lambda h, c: (0, 0)),  # wkv
+            pl.BlockSpec((1, l, dh), lambda h, c: (h, 0, 0)),  # w_down
+            pl.BlockSpec((1, dh, d), lambda h, c: (h, 0, 0)),  # wo
+            pl.BlockSpec((b, chunk, l), lambda h, c: (0, c, 0)),  # kv cache
+            pl.BlockSpec((b,), lambda h, c: (0,)),  # pos
+        ],
+        out_specs=[
+            pl.BlockSpec((b, d), lambda h, c: (0, 0)),  # out (accumulated)
+            pl.BlockSpec((b, l), lambda h, c: (0, 0)),  # kv_new
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), hidden.dtype),
+            jax.ShapeDtypeStruct((b, l), hidden.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, l), jnp.float32),  # q
+            pltpu.VMEM((b, l), jnp.float32),  # kv_new
+            pltpu.VMEM((b, l), jnp.float32),  # acc
+            pltpu.VMEM((b, 1), jnp.float32),  # m
+            pltpu.VMEM((b, 1), jnp.float32),  # l
+        ],
+        interpret=True,
+    )(hidden, wq, wkv, w_down, wo, kv_cache, pos)

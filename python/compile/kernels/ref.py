@@ -1,0 +1,132 @@
+"""Pure-jnp correctness oracles for the ClusterFusion fused decode kernels.
+
+These implement the *mathematical* content of the paper's fused dataflows
+(Alg. 3 fused MHA decode, Alg. 4 fused MLA decode) with no fusion tricks:
+plain projections, masked softmax attention over a padded KV cache, and the
+output projection. The Pallas kernels in `fused_decode.py` / `mla_decode.py`
+must match these (fp32 tight tolerance).
+
+Shapes (B = batch, D = model dim, nh = heads, dh = head dim, S = padded KV
+capacity, l = kv_lora_rank):
+
+  mha_decode_ref(hidden(B,D), wq(D,nh,dh), wk, wv, wo(nh,dh,D),
+                 k_cache(B,S,nh,dh), v_cache(B,S,nh,dh), pos(B,))
+      -> (out(B,D), k_new(B,nh,dh), v_new(B,nh,dh))
+
+  mla_decode_ref(hidden(B,D), wq(D,nh,l), wkv(D,l), w_down(nh,l,dh),
+                 wo(nh,dh,D), kv_cache(B,S,l), pos(B,))
+      -> (out(B,D), kv_new(B,l))
+
+`pos[b]` is the number of valid cached tokens for sequence b; the newly
+generated token attends to cache[0:pos[b]] plus itself.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _masked_softmax_rows(scores, pos, s):
+    """Softmax over the last axis of `scores` (rows, S+1) where entries at
+    cache index >= pos[row] are masked out. Index S (the last column) is the
+    new token itself and is always valid."""
+    idx = jnp.arange(s + 1)[None, :]  # (1, S+1)
+    valid = (idx < pos[:, None]) | (idx == s)  # (rows, S+1)
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(valid, scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(valid, e, 0.0)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def mha_decode_ref(hidden, wq, wk, wv, wo, k_cache, v_cache, pos):
+    """Reference fused QKV-projection + attention + output-projection for a
+    single decode step (the computation of paper Alg. 3)."""
+    b, d = hidden.shape
+    _, nh, dh = wq.shape
+    _, s, _, _ = k_cache.shape
+    f32 = jnp.float32
+    h = hidden.astype(f32)
+
+    # QKV projection (paper: per-cluster segment matmul + ClusterGather).
+    q = jnp.einsum("bd,dhk->bhk", h, wq.astype(f32))  # (B, nh, dh)
+    k_new = jnp.einsum("bd,dhk->bhk", h, wk.astype(f32))
+    v_new = jnp.einsum("bd,dhk->bhk", h, wv.astype(f32))
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, f32))
+    # Scores against the padded cache plus the new token (FlashDecoding
+    # partials + ClusterReduce of softmax stats in the paper).
+    s_cache = jnp.einsum("bhk,bshk->bhs", q, k_cache.astype(f32)) * scale
+    s_self = jnp.einsum("bhk,bhk->bh", q, k_new)[:, :, None] * scale
+    scores = jnp.concatenate([s_cache, s_self], axis=-1)  # (B, nh, S+1)
+
+    probs = _masked_softmax_rows(
+        scores.reshape(b * nh, s + 1),
+        jnp.repeat(pos, nh),
+        s,
+    ).reshape(b, nh, s + 1)
+
+    attn = jnp.einsum("bhs,bshk->bhk", probs[:, :, :s], v_cache.astype(f32))
+    attn = attn + probs[:, :, s][:, :, None] * v_new  # (B, nh, dh)
+
+    # Output projection (paper: per-cluster tile + atomicAdd).
+    out = jnp.einsum("bhk,hkd->bd", attn, wo.astype(f32))
+    return (
+        out.astype(hidden.dtype),
+        k_new.astype(hidden.dtype),
+        v_new.astype(hidden.dtype),
+    )
+
+
+def mla_decode_ref(hidden, wq, wkv, w_down, wo, kv_cache, pos):
+    """Reference fused MLA decode (paper Alg. 4, weight-absorbed form,
+    rope_dim omitted exactly as in the paper's appendix).
+
+    Q_h = H @ Wq[:, h]            (B, l)   absorbed query per head
+    kv  = H @ Wkv                 (B, l)   new latent cache entry
+    A_h = softmax(Q_h kv_cache^T) kv_cache  (B, l)
+    z_h = A_h @ W_down[h]         (B, dh)
+    out = sum_h z_h @ Wo[h]       (B, D)
+    """
+    b, d = hidden.shape
+    _, nh, l = wq.shape
+    _, s, _ = kv_cache.shape
+    f32 = jnp.float32
+    h = hidden.astype(f32)
+
+    q = jnp.einsum("bd,dhl->bhl", h, wq.astype(f32))  # (B, nh, l)
+    kv_new = h @ wkv.astype(f32)  # (B, l)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(l, f32))
+    s_cache = jnp.einsum("bhl,bsl->bhs", q, kv_cache.astype(f32)) * scale
+    s_self = jnp.einsum("bhl,bl->bh", q, kv_new)[:, :, None] * scale
+    scores = jnp.concatenate([s_cache, s_self], axis=-1)  # (B, nh, S+1)
+
+    probs = _masked_softmax_rows(
+        scores.reshape(b * nh, s + 1), jnp.repeat(pos, nh), s
+    ).reshape(b, nh, s + 1)
+
+    attn = jnp.einsum("bhs,bsl->bhl", probs[:, :, :s], kv_cache.astype(f32))
+    attn = attn + probs[:, :, s][:, :, None] * kv_new[:, None, :]  # (B, nh, l)
+
+    z = jnp.einsum("bhl,hlk->bhk", attn, w_down.astype(f32))  # (B, nh, dh)
+    out = jnp.einsum("bhk,hkd->bd", z, wo.astype(f32))
+    return out.astype(hidden.dtype), kv_new.astype(hidden.dtype)
+
+
+def rmsnorm_ref(x, weight, eps=1e-5):
+    """RMSNorm with fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * (1.0 / jnp.sqrt(var + eps)) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def swiglu_ref(x, w1, w2, w3):
+    """SwiGLU FFN: W3(silu(W1 x) * W2 x) — paper Eq. 2 with sigma = SiLU."""
+    xf = x.astype(jnp.float32)
+    a = xf @ w1.astype(jnp.float32)
+    g = xf @ w2.astype(jnp.float32)
+    silu = a * (1.0 / (1.0 + jnp.exp(-a)))
+    return ((silu * g) @ w3.astype(jnp.float32)).astype(x.dtype)

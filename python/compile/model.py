@@ -1,0 +1,395 @@
+"""Layer-2: JAX decoder model whose attention block is the fused
+ClusterFusion kernel (L1). Build-time only — lowered to HLO text by
+`aot.py`, executed from Rust via PJRT. Never imported on the request path.
+
+Two architectures, mirroring the paper's evaluation models:
+  * "mha" — Llama-style: RMSNorm -> fused(QKV proj + attention + out proj)
+    -> residual -> RMSNorm -> SwiGLU FFN -> residual. (Llama2-7B shape.)
+  * "mla" — DeepSeek-style Multi-head Latent Attention, weight-absorbed
+    decode form with a compressed latent KV cache. (DeepSeek-V2-Lite shape.)
+
+Positions are used only for KV-cache masking/appending (the paper's fused
+dataflow omits RoPE's rope_dim in its appendix; we follow it for the fused
+scope — see DESIGN.md §Substitutions).
+
+The public entrypoint is `decode_step(cfg, params, tokens, pos, caches)`:
+one autoregressive step for a padded batch. All shapes are static; `pos[b]`
+carries each sequence's live length. Layers are scanned so the lowered HLO
+is one while-loop regardless of depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref as kref
+from compile.kernels.fused_decode import fused_mha_decode
+from compile.kernels.mla_decode import fused_mla_decode
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architectural hyper-parameters (weights are random at run time; the
+    decode-latency shape only depends on these dimensions)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    head_dim: int
+    ffn_dim: int
+    max_seq: int
+    attn: Literal["mha", "mla"] = "mha"
+    kv_lora_rank: int = 0  # only for attn == "mla"
+    kv_chunk: int = 128  # Pallas kernel KV tile (paper: per-block segment)
+
+    def param_count(self) -> int:
+        d, f, v, l_ = self.d_model, self.ffn_dim, self.vocab, self.n_layers
+        h = self.n_heads * self.head_dim
+        if self.attn == "mha":
+            attn = d * h * 3 + h * d
+        else:
+            r = self.kv_lora_rank
+            attn = d * self.n_heads * r + d * r + self.n_heads * r * self.head_dim + h * d
+        per_layer = attn + 3 * d * f + 2 * d
+        return v * d + l_ * per_layer + d
+
+
+# ---------------------------------------------------------------------------
+# Reference model configurations (paper §4 Models + the e2e demo model).
+# ---------------------------------------------------------------------------
+
+TINY_LLAMA_100M = ModelConfig(
+    name="tiny-llama-100m",
+    vocab=16384,
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    head_dim=64,
+    ffn_dim=2048,
+    max_seq=512,
+    attn="mha",
+    kv_chunk=512,
+)
+
+TINY_MLA_100M = ModelConfig(
+    name="tiny-mla-100m",
+    vocab=16384,
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    head_dim=64,
+    ffn_dim=2048,
+    max_seq=512,
+    attn="mla",
+    kv_lora_rank=128,
+    kv_chunk=512,
+)
+
+# Architectural shapes of the paper's evaluation models (used by the Rust
+# simulator for cost modelling; too big to execute live here).
+LLAMA2_7B = ModelConfig(
+    name="llama2-7b",
+    vocab=32000,
+    d_model=4096,
+    n_layers=32,
+    n_heads=32,
+    head_dim=128,
+    ffn_dim=11008,
+    max_seq=16384,
+    attn="mha",
+)
+
+DEEPSEEK_V2_LITE = ModelConfig(
+    name="deepseek-v2-lite",
+    vocab=102400,
+    d_model=2048,
+    n_layers=27,
+    n_heads=16,
+    head_dim=128,
+    ffn_dim=10944,
+    max_seq=16384,
+    attn="mla",
+    kv_lora_rank=512,
+)
+
+CONFIGS = {
+    c.name: c for c in (TINY_LLAMA_100M, TINY_MLA_100M, LLAMA2_7B, DEEPSEEK_V2_LITE)
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    """Random parameters with 1/sqrt(fan_in) scaling; layer weights stacked
+    on a leading axis so decode_step can lax.scan over layers."""
+    d, f, nh, dh, l_ = cfg.d_model, cfg.ffn_dim, cfg.n_heads, cfg.head_dim, cfg.n_layers
+    keys = iter(jax.random.split(key, 16))
+
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+    params = {
+        "emb": w(next(keys), (cfg.vocab, d), d),
+        "final_norm": jnp.ones((d,), dtype),
+        "attn_norm": jnp.ones((l_, d), dtype),
+        "ffn_norm": jnp.ones((l_, d), dtype),
+        "w1": w(next(keys), (l_, d, f), d),
+        "w2": w(next(keys), (l_, d, f), d),
+        "w3": w(next(keys), (l_, f, d), f),
+    }
+    if cfg.attn == "mha":
+        params.update(
+            wq=w(next(keys), (l_, d, nh, dh), d),
+            wk=w(next(keys), (l_, d, nh, dh), d),
+            wv=w(next(keys), (l_, d, nh, dh), d),
+            wo=w(next(keys), (l_, nh, dh, d), nh * dh),
+        )
+    else:
+        r = cfg.kv_lora_rank
+        params.update(
+            wq=w(next(keys), (l_, d, nh, r), d),
+            wkv=w(next(keys), (l_, d, r), d),
+            w_down=w(next(keys), (l_, nh, r, dh), r),
+            wo=w(next(keys), (l_, nh, dh, d), nh * dh),
+        )
+    return params
+
+
+# Canonical flat ordering of parameters for the AOT interface (must match
+# rust/src/runtime manifest handling).
+def param_order(cfg: ModelConfig) -> list[str]:
+    common_head = ["emb", "final_norm", "attn_norm", "ffn_norm"]
+    ffn = ["w1", "w2", "w3"]
+    if cfg.attn == "mha":
+        return common_head + ["wq", "wk", "wv", "wo"] + ffn
+    return common_head + ["wq", "wkv", "w_down", "wo"] + ffn
+
+
+def flatten_params(cfg: ModelConfig, params) -> list:
+    return [params[k] for k in param_order(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> dict:
+    return dict(zip(param_order(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """KV cache pytree. MHA: (k, v) each (L, B, S, nh, dh). MLA: a single
+    latent cache (L, B, S, r)."""
+    l_, s = cfg.n_layers, cfg.max_seq
+    if cfg.attn == "mha":
+        shape = (l_, batch, s, cfg.n_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return {"kv": jnp.zeros((l_, batch, s, cfg.kv_lora_rank), dtype)}
+
+
+def _append_rows(cache_l, new, pos):
+    """Write `new[b]` into cache_l[b, pos[b]] for every batch row.
+    cache_l: (B, S, ...), new: (B, ...), pos: (B,) int32."""
+
+    def one(row_cache, row_new, p):
+        return jax.lax.dynamic_update_slice_in_dim(row_cache, row_new[None], p, axis=0)
+
+    return jax.vmap(one)(cache_l, new, pos)
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params, tokens, pos, cache, *, use_kernel=True):
+    """One autoregressive decode step.
+
+    Args:
+      tokens: (B,) int32 current input token ids.
+      pos: (B,) int32 number of tokens already cached for each row (the new
+        token lands at cache index pos[b]).
+      cache: pytree from init_cache.
+      use_kernel: fused Pallas kernels (True) or the jnp oracle (False) —
+        both must produce identical numbers (differential test).
+
+    Returns (logits (B, vocab) f32, new cache).
+    """
+    x = params["emb"][tokens].astype(jnp.float32)  # (B, D)
+
+    if cfg.attn == "mha":
+        layer_xs = (
+            params["attn_norm"],
+            params["wq"],
+            params["wk"],
+            params["wv"],
+            params["wo"],
+            params["ffn_norm"],
+            params["w1"],
+            params["w2"],
+            params["w3"],
+            cache["k"],
+            cache["v"],
+        )
+
+        def body(x, xs):
+            an, wq, wk, wv, wo, fn_, w1, w2, w3, kc, vc = xs
+            h = kref.rmsnorm_ref(x, an)
+            if use_kernel:
+                attn, k_new, v_new = fused_mha_decode(
+                    h, wq, wk, wv, wo, kc, vc, pos, chunk=min(cfg.kv_chunk, cfg.max_seq)
+                )
+            else:
+                attn, k_new, v_new = kref.mha_decode_ref(h, wq, wk, wv, wo, kc, vc, pos)
+            x = x + attn
+            h2 = kref.rmsnorm_ref(x, fn_)
+            x = x + kref.swiglu_ref(h2, w1, w2, w3)
+            kc = _append_rows(kc, k_new, pos)
+            vc = _append_rows(vc, v_new, pos)
+            return x, (kc, vc)
+
+        x, (k_cache, v_cache) = jax.lax.scan(body, x, layer_xs)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        layer_xs = (
+            params["attn_norm"],
+            params["wq"],
+            params["wkv"],
+            params["w_down"],
+            params["wo"],
+            params["ffn_norm"],
+            params["w1"],
+            params["w2"],
+            params["w3"],
+            cache["kv"],
+        )
+
+        def body(x, xs):
+            an, wq, wkv, wd, wo, fn_, w1, w2, w3, kvc = xs
+            h = kref.rmsnorm_ref(x, an)
+            if use_kernel:
+                attn, kv_new = fused_mla_decode(
+                    h, wq, wkv, wd, wo, kvc, pos, chunk=min(cfg.kv_chunk, cfg.max_seq)
+                )
+            else:
+                attn, kv_new = kref.mla_decode_ref(h, wq, wkv, wd, wo, kvc, pos)
+            x = x + attn
+            h2 = kref.rmsnorm_ref(x, fn_)
+            x = x + kref.swiglu_ref(h2, w1, w2, w3)
+            kvc = _append_rows(kvc, kv_new, pos)
+            return x, (kvc,)
+
+        x, (kv_cache,) = jax.lax.scan(body, x, layer_xs)
+        new_cache = {"kv": kv_cache}
+
+    x = kref.rmsnorm_ref(x, params["final_norm"])
+    logits = x.astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    return logits, new_cache
+
+
+def decode_step_flat(cfg: ModelConfig, *, use_kernel=True):
+    """AOT-friendly closure over cfg with a flat signature:
+    f(tokens, pos, *cache_arrays, *param_arrays) -> (logits, *new_cache).
+    Cache arrays come first so Rust can donate/rotate them cheaply."""
+    n_cache = 2 if cfg.attn == "mha" else 1
+    cache_keys = ("k", "v") if cfg.attn == "mha" else ("kv",)
+
+    def f(tokens, pos, *rest):
+        cache = dict(zip(cache_keys, rest[:n_cache]))
+        params = unflatten_params(cfg, rest[n_cache:])
+        logits, new_cache = decode_step(cfg, params, tokens, pos, cache, use_kernel=use_kernel)
+        return (logits, *[new_cache[k] for k in cache_keys])
+
+    return f
+
+
+def decode_step_knew(cfg: ModelConfig, params, tokens, pos, cache, *, use_kernel=True):
+    """Like `decode_step` but the device does NOT write the cache: it
+    returns the per-layer new K/V rows and the host appends them.
+
+    This is the serving interface (see rust/src/coordinator): the paged KV
+    cache is host-authoritative so the continuous batcher can recompose
+    batches between steps; only the small new rows come back from the
+    device. Attention correctness does not depend on the append because the
+    fused kernels fold the self token in directly from k_new/v_new.
+
+    Returns (logits, new_rows) with new_rows shapes:
+      MHA: (k_new (L,B,nh,dh), v_new (L,B,nh,dh));  MLA: (kv_new (L,B,r),).
+    """
+    x = params["emb"][tokens].astype(jnp.float32)
+
+    if cfg.attn == "mha":
+        layer_xs = (
+            params["attn_norm"], params["wq"], params["wk"], params["wv"],
+            params["wo"], params["ffn_norm"], params["w1"], params["w2"],
+            params["w3"], cache["k"], cache["v"],
+        )
+
+        def body(x, xs):
+            an, wq, wk, wv, wo, fn_, w1, w2, w3, kc, vc = xs
+            h = kref.rmsnorm_ref(x, an)
+            if use_kernel:
+                attn, k_new, v_new = fused_mha_decode(
+                    h, wq, wk, wv, wo, kc, vc, pos, chunk=min(cfg.kv_chunk, cfg.max_seq)
+                )
+            else:
+                attn, k_new, v_new = kref.mha_decode_ref(h, wq, wk, wv, wo, kc, vc, pos)
+            x = x + attn
+            h2 = kref.rmsnorm_ref(x, fn_)
+            x = x + kref.swiglu_ref(h2, w1, w2, w3)
+            return x, (k_new, v_new)
+
+        x, new_rows = jax.lax.scan(body, x, layer_xs)
+    else:
+        layer_xs = (
+            params["attn_norm"], params["wq"], params["wkv"], params["w_down"],
+            params["wo"], params["ffn_norm"], params["w1"], params["w2"],
+            params["w3"], cache["kv"],
+        )
+
+        def body(x, xs):
+            an, wq, wkv, wd, wo, fn_, w1, w2, w3, kvc = xs
+            h = kref.rmsnorm_ref(x, an)
+            if use_kernel:
+                attn, kv_new = fused_mla_decode(
+                    h, wq, wkv, wd, wo, kvc, pos, chunk=min(cfg.kv_chunk, cfg.max_seq)
+                )
+            else:
+                attn, kv_new = kref.mla_decode_ref(h, wq, wkv, wd, wo, kvc, pos)
+            x = x + attn
+            h2 = kref.rmsnorm_ref(x, fn_)
+            x = x + kref.swiglu_ref(h2, w1, w2, w3)
+            return x, (kv_new,)
+
+        x, new_rows = jax.lax.scan(body, x, layer_xs)
+
+    x = kref.rmsnorm_ref(x, params["final_norm"])
+    logits = x.astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    return logits, new_rows
+
+
+def decode_step_knew_flat(cfg: ModelConfig, *, use_kernel=True):
+    """Flat-signature serving variant for AOT:
+    f(tokens, pos, *cache_arrays, *param_arrays) -> (logits, *new_rows)."""
+    n_cache = 2 if cfg.attn == "mha" else 1
+    cache_keys = ("k", "v") if cfg.attn == "mha" else ("kv",)
+
+    def f(tokens, pos, *rest):
+        cache = dict(zip(cache_keys, rest[:n_cache]))
+        params = unflatten_params(cfg, rest[n_cache:])
+        logits, new_rows = decode_step_knew(
+            cfg, params, tokens, pos, cache, use_kernel=use_kernel
+        )
+        return (logits, *new_rows)
+
+    return f

@@ -1,0 +1,56 @@
+"""AOT path tests: lowering, manifest interface, HLO text sanity."""
+
+import json
+
+import jax.numpy as jnp
+
+from compile import aot, model as M
+
+MICRO = M.ModelConfig(
+    name="micro-aot", vocab=64, d_model=32, n_layers=2, n_heads=2,
+    head_dim=8, ffn_dim=48, max_seq=16, attn="mha", kv_chunk=8,
+)
+MICRO_MLA = M.ModelConfig(
+    name="micro-aot-mla", vocab=64, d_model=32, n_layers=2, n_heads=2,
+    head_dim=8, ffn_dim=48, max_seq=16, attn="mla", kv_lora_rank=12, kv_chunk=8,
+)
+
+
+def test_lower_decode_mha():
+    text, iface = aot.lower_decode(MICRO, 2)
+    assert text.startswith("HloModule")
+    assert iface["n_cache"] == 2
+    names = [i["name"] for i in iface["inputs"]]
+    assert names[:4] == ["tokens", "pos", "cache_k", "cache_v"]
+    assert names[4:] == [f"param_{n}" for n in M.param_order(MICRO)]
+    assert iface["outputs"][0]["name"] == "logits"
+    assert iface["outputs"][0]["shape"] == [2, 64]
+    # cache outputs mirror cache inputs exactly (rotation contract)
+    assert iface["outputs"][1]["shape"] == iface["inputs"][2]["shape"]
+    assert iface["outputs"][2]["shape"] == iface["inputs"][3]["shape"]
+
+
+def test_lower_decode_mla():
+    text, iface = aot.lower_decode(MICRO_MLA, 1)
+    assert text.startswith("HloModule")
+    assert iface["n_cache"] == 1
+    assert iface["inputs"][2]["name"] == "cache_kv"
+    assert iface["inputs"][2]["shape"] == [2, 1, 16, 12]  # (L,B,S,r)
+
+
+def test_interface_is_json_serialisable():
+    _, iface = aot.lower_decode(MICRO, 1)
+    json.dumps(iface)
+
+
+def test_kernel_and_oracle_lower_to_same_interface():
+    _, a = aot.lower_decode(MICRO, 1, use_kernel=True)
+    _, b = aot.lower_decode(MICRO, 1, use_kernel=False)
+    a.pop("file", None), b.pop("file", None)
+    assert a == b
+
+
+def test_dtype_strings():
+    _, iface = aot.lower_decode(MICRO, 1)
+    for i in iface["inputs"]:
+        assert i["dtype"] in ("int32", "float32"), i

@@ -1,0 +1,116 @@
+"""Fused MHA Pallas kernel vs the pure-jnp oracle (DESIGN.md §4 L1).
+
+hypothesis sweeps shapes/dtypes/cache-fill patterns; every case asserts
+allclose between `fused_mha_decode` and `mha_decode_ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_decode import fused_mha_decode
+from compile.kernels.ref import mha_decode_ref
+
+
+def make_case(seed, b, d, nh, dh, s, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    hidden = jax.random.normal(ks[0], (b, d), jnp.float32).astype(dtype)
+    wq = (jax.random.normal(ks[1], (d, nh, dh)) * 0.2).astype(dtype)
+    wk = (jax.random.normal(ks[2], (d, nh, dh)) * 0.2).astype(dtype)
+    wv = (jax.random.normal(ks[3], (d, nh, dh)) * 0.2).astype(dtype)
+    wo = (jax.random.normal(ks[4], (nh, dh, d)) * 0.2).astype(dtype)
+    kc = jax.random.normal(ks[5], (b, s, nh, dh)).astype(dtype)
+    vc = jax.random.normal(ks[6], (b, s, nh, dh)).astype(dtype)
+    pos = jax.random.randint(ks[7], (b,), 0, s + 1).astype(jnp.int32)
+    return hidden, wq, wk, wv, wo, kc, vc, pos
+
+
+def check(case, chunk, rtol, atol):
+    ref = mha_decode_ref(*case)
+    out = fused_mha_decode(*case, chunk=chunk)
+    for r, o, name in zip(ref, out, ["out", "k_new", "v_new"]):
+        np.testing.assert_allclose(
+            np.asarray(r, np.float32), np.asarray(o, np.float32),
+            rtol=rtol, atol=atol, err_msg=name,
+        )
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([1, 2, 3]),
+    nh=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([4, 8, 16]),
+    s_chunks=st.integers(1, 4),
+    chunk=st.sampled_from([4, 8]),
+)
+def test_matches_ref_f32_sweep(seed, b, nh, dh, s_chunks, chunk):
+    d = nh * dh  # keep D tied to heads; D is independent below
+    case = make_case(seed, b, d, nh, dh, s_chunks * chunk, jnp.float32)
+    check(case, chunk, rtol=3e-5, atol=3e-5)
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([24, 40, 96]))
+def test_d_model_decoupled_from_heads(seed, d):
+    case = make_case(seed, 2, d, 2, 8, 16, jnp.float32)
+    check(case, 8, rtol=3e-5, atol=3e-5)
+
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bf16_loose(seed):
+    case = make_case(seed, 2, 32, 2, 16, 16, jnp.bfloat16)
+    check(case, 8, rtol=5e-2, atol=5e-2)
+
+
+def test_empty_cache_first_token():
+    """pos == 0: only the self token participates (first decode step)."""
+    case = make_case(0, 2, 32, 2, 16, 16, jnp.float32)
+    case = case[:-1] + (jnp.zeros((2,), jnp.int32),)
+    check(case, 8, rtol=3e-5, atol=3e-5)
+
+
+def test_full_cache():
+    """pos == S: every cache slot participates."""
+    case = make_case(1, 2, 32, 2, 16, 16, jnp.float32)
+    case = case[:-1] + (jnp.full((2,), 16, jnp.int32),)
+    check(case, 8, rtol=3e-5, atol=3e-5)
+
+
+def test_masked_slots_do_not_leak():
+    """Garbage beyond pos[b] must not change the output (the paper's
+    masking of the padded KV segment)."""
+    case = make_case(2, 2, 32, 2, 16, 16, jnp.float32)
+    hidden, wq, wk, wv, wo, kc, vc, _ = case
+    pos = jnp.array([5, 9], jnp.int32)
+    out1 = fused_mha_decode(hidden, wq, wk, wv, wo, kc, vc, pos, chunk=8)
+    kc2 = kc.at[0, 5:].set(1e4)
+    vc2 = vc.at[0, 5:].set(-1e4)
+    kc2 = kc2.at[1, 9:].set(333.0)
+    out2 = fused_mha_decode(hidden, wq, wk, wv, wo, kc2, vc2, pos, chunk=8)
+    for a, b_ in zip(out1, out2):
+        np.testing.assert_allclose(a, b_, rtol=1e-6, atol=1e-6)
+
+
+def test_chunk_invariance():
+    """Result must not depend on the KV tile size (the paper's cluster size
+    N must not change numerics, only performance)."""
+    case = make_case(3, 2, 32, 2, 16, 32, jnp.float32)
+    outs = [fused_mha_decode(*case, chunk=c) for c in (4, 8, 16, 32)]
+    for o in outs[1:]:
+        for a, b_ in zip(outs[0], o):
+            np.testing.assert_allclose(a, b_, rtol=2e-5, atol=2e-5)
+
+
+def test_bad_chunk_raises():
+    case = make_case(4, 1, 16, 1, 16, 12, jnp.float32)
+    with pytest.raises(ValueError):
+        fused_mha_decode(*case, chunk=8)
+
+
+def test_single_head_single_chunk():
+    case = make_case(5, 1, 16, 1, 16, 8, jnp.float32)
+    check(case, 8, rtol=3e-5, atol=3e-5)

@@ -1,0 +1,100 @@
+"""Fused MLA Pallas kernel vs the pure-jnp oracle (paper Alg. 4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mla_decode import fused_mla_decode
+from compile.kernels.ref import mla_decode_ref
+
+
+def make_case(seed, b, d, nh, l, dh, s, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    hidden = jax.random.normal(ks[0], (b, d), jnp.float32).astype(dtype)
+    wq = (jax.random.normal(ks[1], (d, nh, l)) * 0.2).astype(dtype)
+    wkv = (jax.random.normal(ks[2], (d, l)) * 0.2).astype(dtype)
+    wd = (jax.random.normal(ks[3], (nh, l, dh)) * 0.2).astype(dtype)
+    wo = (jax.random.normal(ks[4], (nh, dh, d)) * 0.2).astype(dtype)
+    kvc = jax.random.normal(ks[5], (b, s, l)).astype(dtype)
+    pos = jax.random.randint(ks[6], (b,), 0, s + 1).astype(jnp.int32)
+    return hidden, wq, wkv, wd, wo, kvc, pos
+
+
+def check(case, chunk, rtol, atol):
+    ref = mla_decode_ref(*case)
+    out = fused_mla_decode(*case, chunk=chunk)
+    for r, o, name in zip(ref, out, ["out", "kv_new"]):
+        np.testing.assert_allclose(
+            np.asarray(r, np.float32), np.asarray(o, np.float32),
+            rtol=rtol, atol=atol, err_msg=name,
+        )
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([1, 2, 3]),
+    nh=st.sampled_from([1, 2, 4]),
+    l=st.sampled_from([8, 16, 24]),
+    dh=st.sampled_from([4, 8]),
+    s_chunks=st.integers(1, 4),
+)
+def test_matches_ref_f32_sweep(seed, b, nh, l, dh, s_chunks):
+    case = make_case(seed, b, 32, nh, l, dh, s_chunks * 8, jnp.float32)
+    check(case, 8, rtol=3e-5, atol=3e-5)
+
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bf16_loose(seed):
+    case = make_case(seed, 2, 32, 2, 16, 8, 16, jnp.bfloat16)
+    check(case, 8, rtol=5e-2, atol=5e-2)
+
+
+def test_empty_cache_first_token():
+    case = make_case(0, 2, 32, 2, 16, 8, 16, jnp.float32)
+    case = case[:-1] + (jnp.zeros((2,), jnp.int32),)
+    check(case, 8, rtol=3e-5, atol=3e-5)
+
+
+def test_full_cache():
+    case = make_case(1, 2, 32, 2, 16, 8, 16, jnp.float32)
+    case = case[:-1] + (jnp.full((2,), 16, jnp.int32),)
+    check(case, 8, rtol=3e-5, atol=3e-5)
+
+
+def test_masked_slots_do_not_leak():
+    hidden, wq, wkv, wd, wo, kvc, _ = make_case(2, 2, 32, 2, 16, 8, 16, jnp.float32)
+    pos = jnp.array([3, 11], jnp.int32)
+    out1 = fused_mla_decode(hidden, wq, wkv, wd, wo, kvc, pos, chunk=8)
+    kvc2 = kvc.at[0, 3:].set(9e3).at[1, 11:].set(-7e3)
+    out2 = fused_mla_decode(hidden, wq, wkv, wd, wo, kvc2, pos, chunk=8)
+    for a, b_ in zip(out1, out2):
+        np.testing.assert_allclose(a, b_, rtol=1e-6, atol=1e-6)
+
+
+def test_chunk_invariance():
+    case = make_case(3, 2, 32, 2, 16, 8, 32, jnp.float32)
+    outs = [fused_mla_decode(*case, chunk=c) for c in (4, 8, 16, 32)]
+    for o in outs[1:]:
+        for a, b_ in zip(outs[0], o):
+            np.testing.assert_allclose(a, b_, rtol=2e-5, atol=2e-5)
+
+
+def test_kv_new_shared_across_heads():
+    """kv_new is head-independent (MQA-style latent cache): computing with
+    1 head or 4 heads must give the same kv_new."""
+    hidden, wq, wkv, wd, wo, kvc, pos = make_case(4, 2, 32, 4, 16, 8, 16, jnp.float32)
+    _, kv4 = fused_mla_decode(hidden, wq, wkv, wd, wo, kvc, pos, chunk=8)
+    _, kv1 = fused_mla_decode(
+        hidden, wq[:, :1], wkv, wd[:1], wo[:1], kvc, pos, chunk=8
+    )
+    np.testing.assert_allclose(kv4, kv1, rtol=1e-6, atol=1e-6)
+
+
+def test_bad_chunk_raises():
+    case = make_case(5, 1, 16, 1, 8, 4, 12, jnp.float32)
+    with pytest.raises(ValueError):
+        fused_mla_decode(*case, chunk=8)

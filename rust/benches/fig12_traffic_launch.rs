@@ -1,0 +1,83 @@
+//! Fig. 12 (bs=1) and Fig. 19 (bs=16): global-memory data-transfer size
+//! (left) and GPU kernel-launch overhead (right), ClusterFusion vs the
+//! block-isolated baselines.
+//!
+//! The traffic panel reports the *intermediate* transfers of the fused
+//! scope (Q/K/V vectors, FlashDecoding partials, attention output) — the
+//! bytes the paper's Nsight profiling attributes to inter-kernel
+//! materialisation. Mandatory traffic (weights, KV cache, activations) is
+//! identical across systems and listed for scale; at bs=16 it dominates,
+//! which is exactly the Appendix-C observation that the relative traffic
+//! gain shrinks.
+
+use clusterfusion::clustersim::dataflow::AttnProblem;
+use clusterfusion::clustersim::e2e::{attn_block_cost, decode_step, Engine};
+use clusterfusion::clustersim::frameworks::FrameworkProfile;
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::metrics::Table;
+use clusterfusion::models::{AttnKind, ModelConfig};
+
+fn main() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let cf = FrameworkProfile::clusterfusion();
+    let sg = FrameworkProfile::sglang();
+
+    for batch in [1usize, 16] {
+        let fig = if batch == 1 { "Fig. 12" } else { "Fig. 19 (Appendix C)" };
+        println!("== {fig}: intermediate HBM traffic + kernel launches, batch {batch} ==\n");
+        let mut t = Table::new(vec![
+            "model",
+            "seq",
+            "mandatory (MB/layer)",
+            "base intermed (MB/layer)",
+            "CF intermed (MB/layer)",
+            "base launches/step",
+            "CF launches/step",
+            "ratio",
+        ]);
+        for model in [ModelConfig::llama2_7b(), ModelConfig::deepseek_v2_lite()] {
+            for seq in [1024usize, 4096, 16384] {
+                let p = AttnProblem {
+                    batch,
+                    d_model: model.d_model,
+                    n_heads: model.n_heads,
+                    head_dim: model.head_dim,
+                    seq,
+                    kv_lora_rank: model.kv_lora_rank,
+                };
+                let mandatory = match model.attn {
+                    AttnKind::Mha => p.mandatory_bytes_mha(),
+                    AttnKind::Mla => p.mandatory_bytes_mla(),
+                };
+                let base = attn_block_cost(&model, batch, seq, Engine::BlockIsolated, &sg, &hw, &noc);
+                let fused = attn_block_cost(
+                    &model, batch, seq,
+                    Engine::ClusterFusion { cluster_size: 4 },
+                    &cf, &hw, &noc,
+                );
+                let base_e2e = decode_step(&model, batch, seq, Engine::BlockIsolated, &sg, &hw, &noc);
+                let cf_e2e = decode_step(
+                    &model, batch, seq,
+                    Engine::ClusterFusion { cluster_size: 4 },
+                    &cf, &hw, &noc,
+                );
+                t.row(vec![
+                    model.name.clone(),
+                    seq.to_string(),
+                    format!("{:.1}", mandatory / 1e6),
+                    format!("{:.3}", (base.hbm_bytes - mandatory).max(0.0) / 1e6),
+                    format!("{:.3}", (fused.hbm_bytes - mandatory).max(0.0) / 1e6),
+                    base_e2e.launches.to_string(),
+                    cf_e2e.launches.to_string(),
+                    format!("{:.1}x", base_e2e.launches as f64 / cf_e2e.launches as f64),
+                ]);
+            }
+        }
+        t.print();
+        println!();
+    }
+    println!("shape checks: CF intermediates == 0 (everything on-chip) vs baseline > 0;");
+    println!("launch count cut >2x vs CUDA-graph baselines (paper: ~an order of magnitude");
+    println!("counting every auxiliary kernel); mandatory traffic dwarfs intermediates at bs=16.");
+}

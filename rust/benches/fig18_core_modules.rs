@@ -1,0 +1,81 @@
+//! Fig. 18 (batch 1) and Appendix C Fig. 18 (batch 16): latency of the
+//! core modules (QKV Projection + Attention + Output Projection, summed
+//! over layers) — the fused scope itself, without FFN dilution.
+//!
+//! Paper average speedups (batch 1): Llama2-7B 1.85/1.73/1.61/3.19x;
+//! DeepSeek-V2-Lite 1.66/1.64/1.35/3.5x.
+
+use clusterfusion::clustersim::e2e::{attn_block_cost, Engine};
+use clusterfusion::clustersim::frameworks::FrameworkProfile;
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::metrics::Table;
+use clusterfusion::models::ModelConfig;
+
+fn main() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let seqs = [1024usize, 2048, 4096, 8192, 16384];
+    let paper_b1 = [
+        ("llama2-7b", [1.85, 1.73, 1.61, 3.19]),
+        ("deepseek-v2-lite", [1.66, 1.64, 1.35, 3.50]),
+    ];
+    let paper_b16 = [
+        ("llama2-7b", [1.14, 1.12, 1.20, 1.41]),
+        ("deepseek-v2-lite", [1.19, 1.18, 1.14, 2.04]),
+    ];
+
+    for batch in [1usize, 16] {
+        let fig = if batch == 1 { "Fig. 18" } else { "Appendix C Fig. 18" };
+        let paper = if batch == 1 { &paper_b1 } else { &paper_b16 };
+        for model in [ModelConfig::llama2_7b(), ModelConfig::deepseek_v2_lite()] {
+            println!(
+                "== {fig}: core-module latency (ms, all layers), {}, batch {batch} ==\n",
+                model.name
+            );
+            let mut t = Table::new(vec![
+                "seq", "SGLang", "vLLM", "TRT-LLM", "MLC-LLM", "ClusterFusion",
+            ]);
+            let l = model.n_layers as f64;
+            let mut sums = [0.0f64; 4];
+            let mut cf_sum = 0.0;
+            for &seq in &seqs {
+                let cf = attn_block_cost(
+                    &model,
+                    batch,
+                    seq,
+                    Engine::ClusterFusion { cluster_size: 4 },
+                    &FrameworkProfile::clusterfusion(),
+                    &hw,
+                    &noc,
+                )
+                .latency
+                    * l;
+                cf_sum += cf;
+                let mut row = vec![seq.to_string()];
+                for (i, b) in FrameworkProfile::baselines().iter().enumerate() {
+                    let tp =
+                        attn_block_cost(&model, batch, seq, Engine::BlockIsolated, b, &hw, &noc)
+                            .latency
+                            * l;
+                    sums[i] += tp;
+                    row.push(format!("{:.3}", tp * 1e3));
+                }
+                row.push(format!("{:.3}", cf * 1e3));
+                t.row(row);
+            }
+            t.print();
+            let pp = paper.iter().find(|(n, _)| *n == model.name).unwrap().1;
+            println!("\navg speedup vs [SGLang vLLM TRT MLC]:");
+            print!("  measured: ");
+            for s in sums {
+                print!("{:.2}x ", s / cf_sum);
+            }
+            print!("\n  paper:    ");
+            for p in pp {
+                print!("{p:.2}x ");
+            }
+            println!("\n");
+        }
+    }
+    println!("shape checks: core-module speedups exceed e2e speedups (fusion scope undiluted).");
+}

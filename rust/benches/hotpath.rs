@@ -1,0 +1,123 @@
+//! Coordinator + simulator hot-path micro-benchmarks (§Perf pass).
+//!
+//! Uses the in-tree harness (`util::bench`) — offline build, no criterion.
+//! Targets (DESIGN.md §5): coordinator overhead per decode step must be
+//! negligible next to executable time; the simulator must evaluate fast
+//! enough for dense sweeps (>=1e5 dataflow evals/s).
+
+use clusterfusion::clustersim::collective::{
+    cluster_gather, cluster_reduce, ReduceOp, Transport,
+};
+use clusterfusion::clustersim::dataflow::{split_token, AttnProblem, CostEnv};
+use clusterfusion::clustersim::e2e::{decode_step, Engine as SimEngine};
+use clusterfusion::clustersim::frameworks::FrameworkProfile;
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::coordinator::engine::{Engine, MockBackend};
+use clusterfusion::coordinator::kv_cache::{CacheGeometry, KvPool};
+use clusterfusion::coordinator::request::Request;
+use clusterfusion::util::bench::bench;
+
+fn main() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let budget = 300; // ms per case
+
+    println!("== hot-path micro-benchmarks ==");
+
+    // --- simulator ---
+    let p = AttnProblem {
+        batch: 1, d_model: 4096, n_heads: 32, head_dim: 128, seq: 4096, kv_lora_rank: 0,
+    };
+    let env = CostEnv::clusterfusion(&hw, &noc, 4);
+    println!("{}", bench("sim: split_token::cost", budget, || split_token::cost(&p, &env)).report());
+
+    let model = clusterfusion::models::ModelConfig::llama2_7b();
+    let prof = FrameworkProfile::clusterfusion();
+    println!(
+        "{}",
+        bench("sim: e2e decode_step estimate", budget, || decode_step(
+            &model, 1, 4096, SimEngine::ClusterFusion { cluster_size: 4 }, &prof, &hw, &noc,
+        ))
+        .report()
+    );
+
+    // --- functional collectives ---
+    println!(
+        "{}",
+        bench("collective: reduce 8x1KB f32", budget, || {
+            let mut blocks = vec![vec![1.0f32; 256]; 8];
+            cluster_reduce(&mut blocks, ReduceOp::Sum, Transport::Dsmem, &hw, &noc)
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench("collective: gather 8x1KB f32", budget, || {
+            let blocks = vec![vec![1.0f32; 256]; 8];
+            cluster_gather(&blocks, Transport::Dsmem, &hw, &noc)
+        })
+        .report()
+    );
+
+    // --- KV pool ---
+    let geom = CacheGeometry { n_layers: 12, row_elems: 768, planes: 2, max_seq: 512 };
+    {
+        let mut pool = KvPool::new(geom, 16, 1024);
+        pool.alloc_seq(1).unwrap();
+        let row = vec![0.5f32; geom.n_layers * geom.row_elems];
+        let mut next = 1u64;
+        println!(
+            "{}",
+            bench("kv: append 1 token (12L x 768 x 2)", budget, || {
+                if !pool.can_append(next) {
+                    pool.free_seq(next);
+                    next += 1;
+                    pool.alloc_seq(next).unwrap();
+                }
+                pool.append(next, &[&row, &row]).unwrap();
+            })
+            .report()
+        );
+    }
+    {
+        let mut pool = KvPool::new(geom, 16, 64);
+        let row = vec![0.5f32; geom.n_layers * geom.row_elems];
+        for id in 1..=4u64 {
+            pool.alloc_seq(id).unwrap();
+            for _ in 0..128 {
+                pool.append(id, &[&row, &row]).unwrap();
+            }
+        }
+        let g = pool.geometry();
+        let mut planes =
+            vec![vec![0.0f32; g.n_layers * 4 * g.max_seq * g.row_elems]; g.planes];
+        println!(
+            "{}",
+            bench("kv: gather_into 4 seq x 128 tok -> b4 (hot path)", budget, || {
+                pool.gather_batch_into(&[1, 2, 3, 4], 4, &mut planes).unwrap()
+            })
+            .report()
+        );
+        println!(
+            "{}",
+            bench("kv: gather_batch alloc+zero (cold path)", budget, || {
+                pool.gather_batch(&[1, 2, 3, 4], 4).unwrap()
+            })
+            .report()
+        );
+    }
+
+    // --- coordinator step (mock backend = pure coordinator overhead) ---
+    println!(
+        "{}",
+        bench("engine: full step, mock backend, b4", budget, || {
+            let mut e = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
+            for id in 0..4 {
+                e.submit(Request::new(id, vec![1, 2], 2));
+            }
+            e.run_to_completion(64).unwrap();
+            e.steps
+        })
+        .report()
+    );
+}

@@ -1,0 +1,67 @@
+//! Table 1: latency of on-chip ClusterReduce/ClusterGather over DSMEM vs
+//! the off-chip (global-memory) implementations, 32–256 KB, cluster 4.
+//!
+//! Paper reference (H100):
+//!   Reduce: 1.18× / 1.36× / 2.01× / 2.44× (speedup grows with size)
+//!   Gather: 1.60× / 1.52× / 1.44× / 1.59× (speedup ~flat)
+//!
+//! The microbenchmark measures a *standalone* collective kernel, so both
+//! columns carry the fixed standalone-kernel overhead (launch + cluster
+//! barrier setup) on top of the transport cost — that fixed floor is why
+//! the paper's on-chip latencies start at ~6.8 µs.
+
+use clusterfusion::clustersim::collective::{gather_cost, reduce_cost, Transport};
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::metrics::Table;
+
+/// Standalone microbenchmark overhead: raw kernel launch + cluster
+/// spin-up + timing fence (calibrated to the paper's ~6.5 µs floor).
+const STANDALONE_OVERHEAD: f64 = 6.3e-6;
+
+fn main() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let n = 4;
+
+    println!("== Table 1: on-chip vs off-chip collective latency (cluster size {n}) ==\n");
+    let mut t = Table::new(vec![
+        "Operation",
+        "Data Size (KB)",
+        "Off-chip (us)",
+        "On-chip (us)",
+        "Speedup",
+        "paper",
+    ]);
+    let paper_reduce = [1.18, 1.36, 2.01, 2.44];
+    let paper_gather = [1.60, 1.52, 1.44, 1.59];
+    for (i, kb) in [32.0, 64.0, 128.0, 256.0].iter().enumerate() {
+        let bytes = kb * 1024.0;
+        let off = reduce_cost(bytes, n, Transport::GlobalMemory, &hw, &noc).latency
+            + STANDALONE_OVERHEAD;
+        let on = reduce_cost(bytes, n, Transport::Dsmem, &hw, &noc).latency + STANDALONE_OVERHEAD;
+        t.row(vec![
+            "ClusterReduce".to_string(),
+            format!("{kb:.0}"),
+            format!("{:.2}", off * 1e6),
+            format!("{:.2}", on * 1e6),
+            format!("{:.2}x", off / on),
+            format!("{:.2}x", paper_reduce[i]),
+        ]);
+    }
+    for (i, kb) in [32.0, 64.0, 128.0, 256.0].iter().enumerate() {
+        let bytes = kb * 1024.0;
+        let off = gather_cost(bytes, n, Transport::GlobalMemory, &hw, &noc).latency
+            + STANDALONE_OVERHEAD;
+        let on = gather_cost(bytes, n, Transport::Dsmem, &hw, &noc).latency + STANDALONE_OVERHEAD;
+        t.row(vec![
+            "ClusterGather".to_string(),
+            format!("{kb:.0}"),
+            format!("{:.2}", off * 1e6),
+            format!("{:.2}", on * 1e6),
+            format!("{:.2}x", off / on),
+            format!("{:.2}x", paper_gather[i]),
+        ]);
+    }
+    t.print();
+    println!("\nshape checks: on-chip always wins; Reduce speedup grows with size; Gather ~flat.");
+}

@@ -1,0 +1,397 @@
+//! Cluster-level collective primitives — paper §3.1, Algorithms 1 and 2.
+//!
+//! `ClusterReduce` and `ClusterGather` are the paper's core contribution:
+//! structured collectives over DSMEM that let thread blocks in a cluster
+//! exchange/reduce intermediate results without touching global memory.
+//!
+//! Both use a binary-exchange schedule over log2(N) rounds: in round r
+//! (stride = 2^r) block `b` sends to `(b + stride) mod N` and receives
+//! from `(b - stride + N) mod N`. Reduce keeps the message size constant
+//! and folds with ⊕; Gather doubles the message each round.
+//!
+//! This module executes the schedule *functionally* (real data movement
+//! between per-block buffers — the simulator's DSMEM) and *charges* it
+//! through the NoC cost model, so numerics and timing come from the same
+//! schedule. The off-chip fallback (used by the Fig. 13 ablation and the
+//! Table 1 comparison) runs the identical schedule through global memory.
+
+
+use super::hw::Hardware;
+use super::noc::Noc;
+
+/// Achieved fraction of HBM bandwidth for global-memory collective
+/// staging passes (small strided writes + fences between dependent
+/// rounds). Calibrated so the off-chip ClusterReduce of Table 1 grows
+/// with message size at the paper's rate.
+pub const GMEM_STAGING_EFF: f64 = 0.10;
+
+/// Reduction operator ⊕ (paper: "associative operators such as sum or max").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+}
+
+impl ReduceOp {
+    #[inline]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+        }
+    }
+
+    pub fn identity(self) -> f32 {
+        match self {
+            ReduceOp::Sum => 0.0,
+            ReduceOp::Max => f32::NEG_INFINITY,
+        }
+    }
+}
+
+/// Where the exchanged messages travel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// DSMEM over the SM-to-SM NoC (the paper's primitives).
+    Dsmem,
+    /// Global-memory staging (the paper's "off-chip" baseline in Table 1
+    /// and the Fig. 13 "w/o DSMEM" ablation).
+    GlobalMemory,
+}
+
+/// Cost account of one collective invocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CollectiveCost {
+    /// Wall-clock seconds for the whole cluster to finish.
+    pub latency: f64,
+    /// Total bytes moved over the transport, summed across blocks
+    /// (comparable to the paper's analytical DSMEM-traffic model, §3.2).
+    pub traffic_bytes: f64,
+    /// Number of exchange rounds (= log2 N).
+    pub rounds: usize,
+}
+
+fn assert_cluster_size(n: usize) {
+    assert!(
+        n.is_power_of_two() && (1..=16).contains(&n),
+        "cluster size must be a power of two in 1..=16 (Hopper limit), got {n}"
+    );
+}
+
+/// Cost of one exchange round: every block sends `bytes` concurrently.
+///
+/// Per round the cluster pays one transport latency (the peer write plus
+/// the arrival barrier of Alg. 1 line 8) and the serialisation time of the
+/// N concurrent messages through the shared crossbar / memory system.
+fn round_cost(bytes_per_block: f64, n: usize, transport: Transport, hw: &Hardware, noc: &Noc) -> f64 {
+    let total = bytes_per_block * n as f64;
+    match transport {
+        Transport::Dsmem => noc.latency(n) + total / noc.bandwidth(n),
+        Transport::GlobalMemory => {
+            // Staged through L2/HBM: a store pass and a load pass, each a
+            // full memory round-trip, plus a device-visibility fence that
+            // costs far more than a cluster-scoped barrier. The achieved
+            // bandwidth of these small strided staging passes is a fraction
+            // of peak (uncoalesced partial lines + fence-serialised
+            // round-trips) — this is what makes the off-chip Reduce of
+            // Table 1 degrade with message size while the on-chip one
+            // barely moves.
+            2.0 * hw.gmem_latency() + 2.0 * total / (GMEM_STAGING_EFF * hw.hbm_bw)
+                + hw.kernel_boundary_sync
+        }
+    }
+}
+
+/// ClusterReduce (paper Alg. 1), functional + costed.
+///
+/// `blocks` holds each thread block's shared-memory buffer `D_b`; on return
+/// every `D_b` contains the element-wise ⊕-reduction of all inputs (every
+/// block ends with the full result, as in the paper where each block needs
+/// the complete softmax statistics / attention output).
+pub fn cluster_reduce(
+    blocks: &mut [Vec<f32>],
+    op: ReduceOp,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> CollectiveCost {
+    let n = blocks.len();
+    assert_cluster_size(n);
+    let size = blocks[0].len();
+    assert!(blocks.iter().all(|b| b.len() == size), "ragged block buffers");
+
+    let elem_bytes = std::mem::size_of::<f32>() as f64;
+    let mut cost = CollectiveCost::default();
+    let mut stride = 1;
+    // Receive staging buffers B_b (Alg. 1 line 1).
+    let mut recv = vec![vec![0f32; size]; n];
+    while stride < n {
+        // Send D_b -> B_{(b+stride) mod N} (lines 4-7); all transfers in a
+        // round are concurrent, so data movement is taken from a snapshot.
+        for b in 0..n {
+            let to = (b + stride) % n;
+            recv[to].copy_from_slice(&blocks[b]);
+        }
+        // D_b <- D_b ⊕ B_b (line 9).
+        for b in 0..n {
+            for (d, r) in blocks[b].iter_mut().zip(&recv[b]) {
+                *d = op.apply(*d, *r);
+            }
+        }
+        cost.latency += round_cost(size as f64 * elem_bytes, n, transport, hw, noc);
+        cost.traffic_bytes += size as f64 * elem_bytes * n as f64;
+        cost.rounds += 1;
+        stride *= 2;
+    }
+    cost
+}
+
+/// ClusterGather (paper Alg. 2), functional + costed.
+///
+/// Input: each block's local segment (`blocks[b]`, equal sizes). Output:
+/// per-block gathered buffers of N * size laid out in the paper's rotated
+/// order — `out[b][j*size..][..size]` holds block `(b - j + N) mod N`'s
+/// segment (j = 0 is the block's own data). Use [`gathered_segment`] to
+/// read it back in rank order.
+pub fn cluster_gather(
+    blocks: &[Vec<f32>],
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (Vec<Vec<f32>>, CollectiveCost) {
+    let n = blocks.len();
+    assert_cluster_size(n);
+    let size = blocks[0].len();
+    assert!(blocks.iter().all(|b| b.len() == size), "ragged block buffers");
+
+    let elem_bytes = std::mem::size_of::<f32>() as f64;
+    // D_b of size N*size, first segment = local data (Alg. 2 requirement).
+    let mut bufs: Vec<Vec<f32>> = blocks
+        .iter()
+        .map(|b| {
+            let mut d = vec![0f32; n * size];
+            d[..size].copy_from_slice(b);
+            d
+        })
+        .collect();
+
+    let mut cost = CollectiveCost::default();
+    let mut stride = 1;
+    while stride < n {
+        let seg = size * stride;
+        // Send D_b[0 : size*stride] -> D_{send_to}[stride*size : 2*stride*size]
+        // (lines 5-7); snapshot for intra-round concurrency.
+        let snapshot: Vec<Vec<f32>> = bufs.iter().map(|d| d[..seg].to_vec()).collect();
+        for b in 0..n {
+            let to = (b + stride) % n;
+            bufs[to][seg..2 * seg].copy_from_slice(&snapshot[b]);
+        }
+        stride *= 2;
+    }
+    // Charge through the same cost query the analytical model uses, so the
+    // functional and analytical paths cannot drift (tested below).
+    let q = gather_cost(size as f64 * elem_bytes, n, transport, hw, noc);
+    cost.latency = q.latency;
+    cost.traffic_bytes = q.traffic_bytes;
+    cost.rounds = q.rounds;
+    (bufs, cost)
+}
+
+/// Read block `rank`'s segment out of a gathered buffer owned by `owner`
+/// (undoes the rotated layout of [`cluster_gather`]).
+pub fn gathered_segment<'a>(
+    gathered: &'a [f32],
+    owner: usize,
+    rank: usize,
+    n: usize,
+    size: usize,
+) -> &'a [f32] {
+    let j = (owner + n - rank) % n;
+    &gathered[j * size..(j + 1) * size]
+}
+
+/// Pure cost query (no data movement) for a ClusterReduce of `bytes` per
+/// block — used by the dataflow cost models where the numerics are carried
+/// by the functional path separately.
+pub fn reduce_cost(
+    bytes: f64,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> CollectiveCost {
+    assert_cluster_size(n);
+    let rounds = n.trailing_zeros() as usize;
+    let mut cost = CollectiveCost { rounds, ..Default::default() };
+    for _ in 0..rounds {
+        cost.latency += round_cost(bytes, n, transport, hw, noc);
+        cost.traffic_bytes += bytes * n as f64;
+    }
+    cost
+}
+
+/// Pure cost query for a ClusterGather whose per-block segment is `bytes`.
+///
+/// Off-chip gather needs no exchange rounds at all: every block stores its
+/// segment once and loads the other N-1 (the natural global-memory
+/// all-gather) — which is why the paper's Table 1 off-chip Gather latency
+/// is flat in data size while off-chip Reduce grows.
+pub fn gather_cost(
+    bytes: f64,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> CollectiveCost {
+    assert_cluster_size(n);
+    let rounds = n.trailing_zeros() as usize;
+    let mut cost = CollectiveCost { rounds, ..Default::default() };
+    match transport {
+        Transport::Dsmem => {
+            let mut seg = bytes;
+            for _ in 0..rounds {
+                cost.latency += round_cost(seg, n, transport, hw, noc);
+                cost.traffic_bytes += seg * n as f64;
+                seg *= 2.0;
+            }
+        }
+        Transport::GlobalMemory => {
+            if n > 1 {
+                let total = bytes * n as f64; // store pass
+                let reads = bytes * (n as f64 - 1.0) * n as f64; // load pass
+                cost.latency += 2.0 * hw.gmem_latency()
+                    + (total + reads) / hw.hbm_bw
+                    + hw.kernel_boundary_sync;
+                cost.traffic_bytes += total + reads;
+                cost.rounds = 1;
+            }
+        }
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Hardware, Noc) {
+        let hw = Hardware::h100_sxm5();
+        let noc = Noc::h100(&hw);
+        (hw, noc)
+    }
+
+    #[test]
+    fn reduce_sum_all_blocks_converge() {
+        let (hw, noc) = env();
+        let n = 8;
+        let size = 16;
+        let mut blocks: Vec<Vec<f32>> =
+            (0..n).map(|b| (0..size).map(|i| (b * size + i) as f32).collect()).collect();
+        let expect: Vec<f32> = (0..size)
+            .map(|i| (0..n).map(|b| (b * size + i) as f32).sum())
+            .collect();
+        let cost = cluster_reduce(&mut blocks, ReduceOp::Sum, Transport::Dsmem, &hw, &noc);
+        for b in &blocks {
+            assert_eq!(b, &expect);
+        }
+        assert_eq!(cost.rounds, 3);
+    }
+
+    #[test]
+    fn reduce_max() {
+        let (hw, noc) = env();
+        let mut blocks = vec![vec![1.0, -5.0], vec![0.5, 7.0], vec![3.0, 0.0], vec![-1.0, 2.0]];
+        cluster_reduce(&mut blocks, ReduceOp::Max, Transport::Dsmem, &hw, &noc);
+        for b in &blocks {
+            assert_eq!(b, &vec![3.0, 7.0]);
+        }
+    }
+
+    #[test]
+    fn gather_layout_rotated_and_complete() {
+        let (hw, noc) = env();
+        let n = 4;
+        let size = 3;
+        let blocks: Vec<Vec<f32>> =
+            (0..n).map(|b| vec![b as f32; size]).collect();
+        let (out, cost) = cluster_gather(&blocks, Transport::Dsmem, &hw, &noc);
+        for owner in 0..n {
+            for rank in 0..n {
+                let seg = gathered_segment(&out[owner], owner, rank, n, size);
+                assert_eq!(seg, &vec![rank as f32; size][..], "owner {owner} rank {rank}");
+            }
+        }
+        assert_eq!(cost.rounds, 2);
+    }
+
+    #[test]
+    fn traffic_matches_paper_formulas() {
+        // Traffic_Reduce(size, N) = size * log2(N) * N
+        // Traffic_Gather(size, N) = size * (N - 1) * N   (closed form of the
+        // paper's 2^(log2(N/2)+1) - 1 = N - 1 doubling series)
+        let (hw, noc) = env();
+        for n in [2usize, 4, 8, 16] {
+            let size = 64usize; // floats
+            let bytes = (size * 4) as f64;
+            let mut blocks = vec![vec![1.0f32; size]; n];
+            let rc = cluster_reduce(&mut blocks, ReduceOp::Sum, Transport::Dsmem, &hw, &noc);
+            assert_eq!(rc.traffic_bytes, bytes * (n.trailing_zeros() as f64) * n as f64);
+            let blocks = vec![vec![1.0f32; size]; n];
+            let (_, gc) = cluster_gather(&blocks, Transport::Dsmem, &hw, &noc);
+            assert_eq!(gc.traffic_bytes, bytes * (n as f64 - 1.0) * n as f64);
+        }
+    }
+
+    #[test]
+    fn cost_queries_match_functional_costs() {
+        let (hw, noc) = env();
+        let n = 8;
+        let size = 128usize;
+        let mut blocks = vec![vec![0.5f32; size]; n];
+        let f = cluster_reduce(&mut blocks, ReduceOp::Sum, Transport::Dsmem, &hw, &noc);
+        let q = reduce_cost((size * 4) as f64, n, Transport::Dsmem, &hw, &noc);
+        assert!((f.latency - q.latency).abs() < 1e-12);
+        assert_eq!(f.traffic_bytes, q.traffic_bytes);
+
+        let blocks = vec![vec![0.5f32; size]; n];
+        let (_, f) = cluster_gather(&blocks, Transport::Dsmem, &hw, &noc);
+        let q = gather_cost((size * 4) as f64, n, Transport::Dsmem, &hw, &noc);
+        assert!((f.latency - q.latency).abs() < 1e-12);
+        assert_eq!(f.traffic_bytes, q.traffic_bytes);
+    }
+
+    #[test]
+    fn onchip_beats_offchip_and_gap_grows_with_size_for_reduce() {
+        // Shape of paper Table 1.
+        let (hw, noc) = env();
+        let n = 4;
+        let mut prev_speedup = 0.0;
+        for kb in [32.0, 64.0, 128.0, 256.0] {
+            let bytes = kb * 1024.0;
+            let on = reduce_cost(bytes, n, Transport::Dsmem, &hw, &noc).latency;
+            let off = reduce_cost(bytes, n, Transport::GlobalMemory, &hw, &noc).latency;
+            let speedup = off / on;
+            assert!(speedup > 1.0, "on-chip must win ({kb} KB: {speedup:.2})");
+            assert!(speedup >= prev_speedup, "reduce speedup grows with size");
+            prev_speedup = speedup;
+        }
+    }
+
+    #[test]
+    fn single_block_cluster_is_free() {
+        let (hw, noc) = env();
+        let mut blocks = vec![vec![3.0f32; 8]];
+        let c = cluster_reduce(&mut blocks, ReduceOp::Sum, Transport::Dsmem, &hw, &noc);
+        assert_eq!(c.rounds, 0);
+        assert_eq!(c.latency, 0.0);
+        assert_eq!(blocks[0], vec![3.0f32; 8]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        let (hw, noc) = env();
+        let mut blocks = vec![vec![0.0f32; 4]; 3];
+        cluster_reduce(&mut blocks, ReduceOp::Sum, Transport::Dsmem, &hw, &noc);
+    }
+}

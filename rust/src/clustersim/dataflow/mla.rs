@@ -1,0 +1,412 @@
+//! Fused MLA dataflow — paper Alg. 4 / Appendix B.1, cluster-centric
+//! DeepSeek Multi-head Latent Attention in its weight-absorbed decode form.
+//!
+//! One cluster per query head (the latent KV cache is MQA-shared). Within
+//! a cluster the N blocks partition
+//!
+//! * the lora rank for the absorbed *Q Projection* and the *KV Projection*
+//!   (segments assembled with `ClusterGather`);
+//! * the latent-cache token dimension for *Attention* (FlashDecoding
+//!   partials + `ClusterReduce` of stats and of the (B, l) output);
+//! * the lora rank again for the *Down Projection*
+//!   (`ClusterReduce(sum)` of the (B, dh) partial);
+//! * the output dimension for the *Output Projection* (atomicAdd).
+//!
+//! Note: the paper's Alg. 4 gathers Q twice (before and after the Up
+//! Projection). Our weight-absorbed `wq` folds W_Q·W_Up into one matrix, so
+//! the functional path needs a single Q gather; the *cost* model still
+//! charges the paper's schedule (Gather(h) + 2·Gather(l)) for fidelity to
+//! the analytical traffic model it reports.
+
+use crate::clustersim::collective::{
+    cluster_gather, cluster_reduce, gather_cost, gathered_segment, reduce_cost, ReduceOp,
+    Transport,
+};
+use crate::clustersim::hw::Hardware;
+use crate::clustersim::noc::Noc;
+
+use super::reference::AttnOut;
+use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SETUP};
+
+/// Functional execution of the fused MLA dataflow. Requires
+/// `l % n == 0`, `s % n == 0`, `d % n == 0`.
+#[allow(clippy::too_many_arguments)]
+pub fn execute(
+    hidden: &[f32],
+    wq: &[f32],       // (D, nh*l)
+    wkv: &[f32],      // (D, l)
+    w_down: &[f32],   // (nh, l, dh)
+    wo: &[f32],       // (nh*dh, D)
+    kv_cache: &[f32], // (B, S, l)
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
+    assert!(l % n == 0 && s % n == 0 && d % n == 0, "cluster must divide l, S, D");
+    let (ls, ss, ds) = (l / n, s / n, d / n);
+    let scale = 1.0 / (l as f32).sqrt();
+
+    let mut out = vec![0f32; b * d];
+    let mut kv_new_g = vec![0f32; b * l];
+    let mut report = CostReport { launches: 1, ..Default::default() };
+
+    // ---- KV Projection segments + gather (shared by all heads; computed
+    // by the first cluster, broadcast via the latent cache write) ----
+    let kv_segs: Vec<Vec<f32>> = (0..n)
+        .map(|r| {
+            let mut seg = vec![0f32; b * ls];
+            for bi in 0..b {
+                for (j, sj) in seg[bi * ls..(bi + 1) * ls].iter_mut().enumerate() {
+                    let col = r * ls + j;
+                    let mut acc = 0f32;
+                    for i in 0..d {
+                        acc += hidden[bi * d + i] * wkv[i * l + col];
+                    }
+                    *sj = acc;
+                }
+            }
+            seg
+        })
+        .collect();
+    let (kv_gathered, gc_kv) = cluster_gather(&kv_segs, transport, hw, noc);
+    report.dsmem_bytes += gc_kv.traffic_bytes;
+    let mut kv_new = vec![0f32; b * l];
+    for r in 0..n {
+        let seg = gathered_segment(&kv_gathered[0], 0, r, n, b * ls);
+        for bi in 0..b {
+            kv_new[bi * l + r * ls..bi * l + (r + 1) * ls]
+                .copy_from_slice(&seg[bi * ls..(bi + 1) * ls]);
+        }
+    }
+    kv_new_g.copy_from_slice(&kv_new);
+
+    for head in 0..nh {
+        // ---- absorbed Q projection segments + gather ----
+        let q_segs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut seg = vec![0f32; b * ls];
+                for bi in 0..b {
+                    for (j, sj) in seg[bi * ls..(bi + 1) * ls].iter_mut().enumerate() {
+                        let col = head * l + r * ls + j;
+                        let mut acc = 0f32;
+                        for i in 0..d {
+                            acc += hidden[bi * d + i] * wq[i * nh * l + col];
+                        }
+                        *sj = acc;
+                    }
+                }
+                seg
+            })
+            .collect();
+        let (q_gathered, gc_q) = cluster_gather(&q_segs, transport, hw, noc);
+        report.dsmem_bytes += gc_q.traffic_bytes;
+        let mut q = vec![0f32; b * l];
+        for r in 0..n {
+            let seg = gathered_segment(&q_gathered[0], 0, r, n, b * ls);
+            for bi in 0..b {
+                q[bi * l + r * ls..bi * l + (r + 1) * ls]
+                    .copy_from_slice(&seg[bi * ls..(bi + 1) * ls]);
+            }
+        }
+
+        // ---- FlashDecoding partials over latent-cache spans ----
+        let mut m_bufs: Vec<Vec<f32>> = vec![vec![f32::NEG_INFINITY; b]; n];
+        let mut l_bufs: Vec<Vec<f32>> = vec![vec![0f32; b]; n];
+        let mut acc_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * l]; n];
+        for r in 0..n {
+            for bi in 0..b {
+                let valid = pos[bi];
+                let lo = r * ss;
+                let hi = ((r + 1) * ss).min(valid);
+                let qrow = &q[bi * l..(bi + 1) * l];
+                let mut scores: Vec<(usize, f32)> = Vec::new();
+                for t in lo..hi.max(lo) {
+                    let base = (bi * s + t) * l;
+                    let dot: f32 =
+                        qrow.iter().zip(&kv_cache[base..base + l]).map(|(a, c)| a * c).sum();
+                    scores.push((t, dot * scale));
+                }
+                let self_here = r == n - 1;
+                let self_score = if self_here {
+                    let dot: f32 = qrow
+                        .iter()
+                        .zip(&kv_new[bi * l..(bi + 1) * l])
+                        .map(|(a, c)| a * c)
+                        .sum();
+                    Some(dot * scale)
+                } else {
+                    None
+                };
+                let mut m = f32::NEG_INFINITY;
+                for (_, sc) in &scores {
+                    m = m.max(*sc);
+                }
+                if let Some(sc) = self_score {
+                    m = m.max(sc);
+                }
+                if m == f32::NEG_INFINITY {
+                    continue;
+                }
+                let mut lsum = 0f32;
+                let acc = &mut acc_bufs[r][bi * l..(bi + 1) * l];
+                for (t, sc) in &scores {
+                    let p = (sc - m).exp();
+                    lsum += p;
+                    let base = (bi * s + t) * l;
+                    for (a, kv) in acc.iter_mut().zip(&kv_cache[base..base + l]) {
+                        *a += p * kv;
+                    }
+                }
+                if let Some(sc) = self_score {
+                    let p = (sc - m).exp();
+                    lsum += p;
+                    for (a, kv) in acc.iter_mut().zip(&kv_new[bi * l..(bi + 1) * l]) {
+                        *a += p * kv;
+                    }
+                }
+                m_bufs[r][bi] = m;
+                l_bufs[r][bi] = lsum;
+            }
+        }
+
+        // ---- stats + output reduces ----
+        let m_local = m_bufs.clone();
+        let rc1 = cluster_reduce(&mut m_bufs, ReduceOp::Max, transport, hw, noc);
+        for r in 0..n {
+            for bi in 0..b {
+                let alpha = if m_local[r][bi] == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    (m_local[r][bi] - m_bufs[r][bi]).exp()
+                };
+                l_bufs[r][bi] *= alpha;
+                for a in &mut acc_bufs[r][bi * l..(bi + 1) * l] {
+                    *a *= alpha;
+                }
+            }
+        }
+        let rc2 = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
+        let rc3 = cluster_reduce(&mut acc_bufs, ReduceOp::Sum, transport, hw, noc);
+        report.dsmem_bytes += rc1.traffic_bytes + rc2.traffic_bytes + rc3.traffic_bytes;
+
+        // normalised attention output (identical in every block now)
+        let attn: Vec<f32> = (0..b * l)
+            .map(|i| acc_bufs[0][i] / l_bufs[0][i / l])
+            .collect();
+
+        // ---- Down Projection: blocks partition the lora rank; partial
+        // (B, dh) results combined with ClusterReduce(sum) ----
+        let mut z_bufs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut z = vec![0f32; b * dh];
+                for bi in 0..b {
+                    for j in 0..ls {
+                        let av = attn[bi * l + r * ls + j];
+                        let wrow = &w_down
+                            [head * l * dh + (r * ls + j) * dh..head * l * dh + (r * ls + j + 1) * dh];
+                        for (zv, wv) in z[bi * dh..(bi + 1) * dh].iter_mut().zip(wrow) {
+                            *zv += av * wv;
+                        }
+                    }
+                }
+                z
+            })
+            .collect();
+        let rc4 = cluster_reduce(&mut z_bufs, ReduceOp::Sum, transport, hw, noc);
+        report.dsmem_bytes += rc4.traffic_bytes;
+
+        // ---- Output Projection tiles + atomicAdd ----
+        for r in 0..n {
+            for bi in 0..b {
+                for c in 0..ds {
+                    let col = r * ds + c;
+                    let mut acc = 0f32;
+                    for j in 0..dh {
+                        acc += z_bufs[r][bi * dh + j] * wo[(head * dh + j) * d + col];
+                    }
+                    out[bi * d + col] += acc;
+                }
+            }
+        }
+    }
+
+    (AttnOut { out, k_new: kv_new_g, v_new: vec![] }, report)
+}
+
+/// Performance model of the fused MLA kernel — the paper's collective
+/// schedule: Gather(h) + 2·Gather(l), Reduce(l) + Reduce(H) (+ stats).
+pub fn cost(p: &AttnProblem, env: &CostEnv) -> CostReport {
+    assert!(p.kv_lora_rank > 0, "MLA cost needs kv_lora_rank");
+    let n = env.cluster_size;
+    let (hw, noc) = (env.hw, env.noc);
+    let mut rep = CostReport { launches: 1, ..Default::default() };
+
+    let blocks = p.n_heads * n;
+    let active = noc.active_sms(n);
+    let bytes = p.mandatory_bytes_mla();
+    rep.hbm_bytes = bytes;
+
+    let t_mem = occupancy_mem_time(bytes, blocks, active, hw) / env.bw_efficiency;
+    let t_compute = hw.compute_time(p.flops_mla());
+    rep.stage("fused-mem/compute", t_mem.max(t_compute));
+
+    let bh = p.batch as f64;
+    let l = p.kv_lora_rank as f64;
+    let g_h = gather_cost((p.head_dim / n) as f64 * bh * ELEM, n, env.transport, hw, noc);
+    let g_l = gather_cost(l / n as f64 * bh * ELEM, n, env.transport, hw, noc);
+    let r_l = reduce_cost(l * bh * ELEM, n, env.transport, hw, noc);
+    let r_h = reduce_cost(p.head_dim as f64 * bh * ELEM, n, env.transport, hw, noc);
+    let r_stats = reduce_cost(2.0 * bh * 4.0, n, env.transport, hw, noc);
+    rep.stage(
+        "collectives",
+        g_h.latency + 2.0 * g_l.latency + r_l.latency + r_h.latency + r_stats.latency,
+    );
+    rep.dsmem_bytes = (g_h.traffic_bytes
+        + 2.0 * g_l.traffic_bytes
+        + r_l.traffic_bytes
+        + r_h.traffic_bytes
+        + r_stats.traffic_bytes)
+        * p.n_heads as f64;
+    if env.transport == Transport::Dsmem {
+        rep.stage("dsmem-contention", rep.dsmem_bytes / noc.bandwidth(n));
+    }
+    if env.transport == Transport::GlobalMemory {
+        // grid-wide software barriers replace the cluster-scoped ones
+        let rounds = g_h.rounds + 2 * g_l.rounds + r_l.rounds + r_h.rounds + r_stats.rounds;
+        rep.stage(
+            "gmem-grid-barriers",
+            rounds as f64 * super::GMEM_BARRIER_PER_BLOCK * blocks as f64,
+        );
+    }
+
+
+    rep.stage("phase-setup", 4.0 * PHASE_SETUP / (n.min(2) as f64));
+    rep.stage("launch", hw.graph_kernel_launch);
+    rep
+}
+
+/// Baseline (block-isolated) cost for the MLA attention block: four
+/// kernels with intermediates through HBM, mirroring
+/// [`super::block_isolated::cost`] with MLA footprints.
+pub fn cost_block_isolated(p: &AttnProblem, env: &CostEnv) -> CostReport {
+    let hw = env.hw;
+    let (b, d) = (p.batch as f64, p.d_model as f64);
+    let (nh, dh, l) = (p.n_heads as f64, p.head_dim as f64, p.kv_lora_rank as f64);
+    let s = p.seq as f64;
+    let active = env.noc.active_sms(1);
+    let mut rep = CostReport::default();
+
+    // K1: Q + KV projections (absorbed weights + hidden in, Q/KV out)
+    let k1_bytes = (d * nh * l + d * l + b * d + b * (nh * l + l)) * ELEM;
+    let t1 = occupancy_mem_time(k1_bytes, p.n_heads * 4, active, hw) / env.bw_efficiency;
+    rep.stage(
+        "qkv-proj",
+        t1.max(hw.compute_time(2.0 * b * d * (nh * l + l)))
+            + hw.graph_kernel_launch
+            + hw.kernel_boundary_sync,
+    );
+
+    // K2: attention over latent cache + partials
+    let splits = super::block_isolated::FLASH_SPLITS as f64;
+    let part_bytes = nh * splits * b * (l * ELEM + 8.0);
+    let k2_bytes = (b * s * l + 2.0 * b * nh * l) * ELEM + part_bytes;
+    let t2 = occupancy_mem_time(
+        k2_bytes,
+        p.n_heads * super::block_isolated::FLASH_SPLITS,
+        active,
+        hw,
+    ) / env.bw_efficiency;
+    rep.stage(
+        "flash-decode",
+        t2.max(hw.compute_time(4.0 * b * nh * l * (s + 1.0)))
+            + hw.graph_kernel_launch
+            + hw.kernel_boundary_sync,
+    );
+
+    // K3: rescale
+    let k3_bytes = part_bytes + b * nh * l * ELEM;
+    let t3 = occupancy_mem_time(k3_bytes, p.n_heads, active, hw) / env.bw_efficiency;
+    rep.stage("rescale", t3 + hw.graph_kernel_launch + hw.kernel_boundary_sync);
+
+    // K4: down + output projection
+    let k4_bytes = (nh * l * dh + nh * dh * d + b * nh * l + b * d) * ELEM;
+    let t4 = occupancy_mem_time(k4_bytes, p.n_heads * 4, active, hw) / env.bw_efficiency;
+    rep.stage(
+        "down-out-proj",
+        t4.max(hw.compute_time(2.0 * b * nh * (l * dh + dh * d)))
+            + hw.graph_kernel_launch
+            + hw.kernel_boundary_sync,
+    );
+
+    rep.launches = 4;
+    rep.hbm_bytes = k1_bytes + k2_bytes + k3_bytes + k4_bytes;
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustersim::dataflow::reference::mla_block_ref;
+    use crate::clustersim::dataflow::testutil::{assert_close, mla_case};
+    use crate::clustersim::{Hardware, Noc};
+
+    fn env() -> (Hardware, Noc) {
+        let hw = Hardware::h100_sxm5();
+        let noc = Noc::h100(&hw);
+        (hw, noc)
+    }
+
+    #[test]
+    fn matches_reference_all_cluster_sizes() {
+        let (hw, noc) = env();
+        let c = mla_case(13, 2, 2, 16, 8, 16, 16);
+        let r = mla_block_ref(
+            &c.hidden, &c.wq, &c.wkv, &c.w_down, &c.wo, &c.kv_cache, &c.pos,
+            c.batch, c.d_model, c.n_heads, c.lora, c.head_dim, c.seq,
+        );
+        for n in [1usize, 2, 4, 8] {
+            let (got, rep) = execute(
+                &c.hidden, &c.wq, &c.wkv, &c.w_down, &c.wo, &c.kv_cache, &c.pos,
+                c.batch, c.d_model, c.n_heads, c.lora, c.head_dim, c.seq, n,
+                Transport::Dsmem, &hw, &noc,
+            );
+            assert_close(&got.out, &r.out, 1e-4, &format!("out n={n}"));
+            assert_close(&got.k_new, &r.k_new, 1e-4, "kv_new");
+            assert_eq!(rep.launches, 1);
+        }
+    }
+
+    #[test]
+    fn fused_beats_block_isolated() {
+        let (hw, noc) = env();
+        let p = AttnProblem {
+            batch: 1, d_model: 2048, n_heads: 16, head_dim: 128, seq: 4096, kv_lora_rank: 512,
+        };
+        let envc = CostEnv::clusterfusion(&hw, &noc, 4);
+        let mut base_env = envc;
+        base_env.bw_efficiency = 0.5; // framework-grade kernels
+        let fused = cost(&p, &envc);
+        let base = cost_block_isolated(&p, &base_env);
+        assert!(fused.latency < base.latency);
+        assert!(fused.launches < base.launches);
+    }
+
+    #[test]
+    fn latent_cache_traffic_much_smaller_than_mha() {
+        // MLA's point: the latent cache shrinks KV traffic vs MHA.
+        let p = AttnProblem {
+            batch: 1, d_model: 2048, n_heads: 16, head_dim: 128, seq: 8192, kv_lora_rank: 512,
+        };
+        let kv_mla = p.batch as f64 * p.seq as f64 * p.kv_lora_rank as f64 * ELEM;
+        let kv_mha = p.batch as f64 * p.seq as f64 * 2.0 * p.total_head_dim() as f64 * ELEM;
+        assert!(kv_mla < kv_mha / 4.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Decoding dataflow variants — paper §3.2 and Appendix B.
+//!
+//! Each dataflow is implemented twice, deliberately sharing one schedule:
+//!
+//! * **functionally** — `execute(...)` runs the real numerics over
+//!   simulated per-thread-block buffers, moving data *only* through the
+//!   collective primitives (the simulator's DSMEM) or explicit
+//!   global-memory staging vectors, so that data-dependency resolution is
+//!   exactly the paper's. All variants must agree with
+//!   [`reference::attention_block_ref`] to fp32 tolerance.
+//! * **as a cost model** — `cost(...)` charges the same schedule against
+//!   the hardware model and returns a [`CostReport`] (latency, HBM/DSMEM
+//!   traffic, kernel launches, per-stage breakdown) used by every paper
+//!   figure.
+//!
+//! Variants:
+//! * [`block_isolated`] — the baseline (SGLang/vLLM-style FlashDecoding
+//!   pipeline, Fig. 3): separate kernels, intermediates through HBM.
+//! * [`split_token`]   — the paper's ClusterFusion dataflow (Alg. 3):
+//!   clusters partition the KV sequence; QKV+Attention+OutProj fused.
+//! * [`split_head`]    — Appendix B.2 variant (Alg. 5): clusters partition
+//!   the head dimension everywhere; register-resident intermediates but
+//!   DSMEM traffic ∝ sequence length.
+//! * [`mla`]           — Appendix B.1 fused DeepSeek MLA dataflow (Alg. 4).
+
+pub mod block_isolated;
+pub mod mla;
+pub mod reference;
+pub mod split_head;
+pub mod split_token;
+
+
+use super::collective::Transport;
+use super::hw::Hardware;
+use super::noc::Noc;
+
+/// Element size in bytes on the simulated device (paper: FP16 end-to-end).
+pub const ELEM: f64 = 2.0;
+
+/// Per-SM sustained load bandwidth, bytes/s. 132 SMs × 25 GB/s ≈ 3.3 TB/s
+/// > HBM 2.96 TB/s, so full occupancy is HBM-bound while low occupancy is
+/// SM-limited — the effect behind Fig. 11's occupancy cliff.
+pub const PER_SM_BW: f64 = 25.0e9;
+
+/// Fixed per-phase setup cost inside a fused kernel (projection /
+/// attention / output-projection prologue: barrier arrival, descriptor
+/// setup). With a cluster the phases pipeline across blocks (saturating at
+/// two in-flight phases), so the cost is divided by min(N, 2); a
+/// single-block "cluster" serialises all phases. This calibrated constant is what makes cluster size 2 edge out
+/// size 1 at 128 heads (Fig. 11) — see DESIGN.md §2.
+pub const PHASE_SETUP: f64 = 2.0e-6;
+
+/// Per-block cost of a device-wide software barrier through global
+/// memory (atomics + polling), seconds. Without DSMEM a fused kernel's
+/// collectives must synchronise clusters via grid-wide gmem barriers whose
+/// cost scales with the number of participating blocks — the dominant
+/// term in the Fig. 13 ablation (the paper's "up to 33%" TPOT increase).
+/// In the Table 1 microbenchmark only one 4-block cluster participates,
+/// so the same constant contributes well under a microsecond there.
+pub const GMEM_BARRIER_PER_BLOCK: f64 = 5.0e-8;
+
+/// One attention-block decode problem (a single layer's QKV Projection +
+/// Attention + Output Projection — the paper's "core modules").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttnProblem {
+    pub batch: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// Valid tokens already in the KV cache.
+    pub seq: usize,
+    /// Latent rank for MLA (0 for MHA).
+    pub kv_lora_rank: usize,
+}
+
+impl AttnProblem {
+    pub fn total_head_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// HBM bytes that *must* move for one MHA decode step of this layer,
+    /// regardless of dataflow: weights + KV cache + activations i/o.
+    pub fn mandatory_bytes_mha(&self) -> f64 {
+        let (b, d, h) = (self.batch as f64, self.d_model as f64, self.total_head_dim() as f64);
+        let s = self.seq as f64;
+        let weights = (d * 3.0 * h + h * d) * ELEM;
+        let kv = b * s * 2.0 * h * ELEM;
+        let io = 2.0 * b * d * ELEM + b * 2.0 * h * ELEM; // hidden in/out + new K,V append
+        weights + kv + io
+    }
+
+    /// Same for the weight-absorbed MLA decode (latent cache, MQA-style).
+    pub fn mandatory_bytes_mla(&self) -> f64 {
+        let (b, d) = (self.batch as f64, self.d_model as f64);
+        let (nh, dh, l) = (self.n_heads as f64, self.head_dim as f64, self.kv_lora_rank as f64);
+        let s = self.seq as f64;
+        let weights = (d * nh * l + d * l + nh * l * dh + nh * dh * d) * ELEM;
+        let kv = b * s * l * ELEM;
+        let io = 2.0 * b * d * ELEM + b * l * ELEM;
+        weights + kv + io
+    }
+
+    /// FLOPs of the attention block (projections + attention), MHA.
+    pub fn flops_mha(&self) -> f64 {
+        let (b, d, h) = (self.batch as f64, self.d_model as f64, self.total_head_dim() as f64);
+        let s = self.seq as f64 + 1.0;
+        2.0 * b * d * 3.0 * h + 4.0 * b * h * s + 2.0 * b * h * d
+    }
+
+    pub fn flops_mla(&self) -> f64 {
+        let (b, d) = (self.batch as f64, self.d_model as f64);
+        let (nh, dh, l) = (self.n_heads as f64, self.head_dim as f64, self.kv_lora_rank as f64);
+        let s = self.seq as f64 + 1.0;
+        2.0 * b * d * (nh * l + l) + 4.0 * b * nh * l * s + 2.0 * b * nh * l * dh
+            + 2.0 * b * nh * dh * d
+    }
+}
+
+/// Cost account of one dataflow evaluation (one layer's core modules).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostReport {
+    /// Wall-clock seconds.
+    pub latency: f64,
+    /// Bytes moved through HBM (weights + cache + any intermediates).
+    pub hbm_bytes: f64,
+    /// Bytes moved over the SM-to-SM NoC (DSMEM).
+    pub dsmem_bytes: f64,
+    /// Kernel launches issued.
+    pub launches: usize,
+    /// (stage name, seconds) breakdown.
+    pub stages: Vec<(String, f64)>,
+}
+
+impl CostReport {
+    pub fn stage(&mut self, name: &str, seconds: f64) {
+        self.stages.push((name.to_string(), seconds));
+        self.latency += seconds;
+    }
+}
+
+/// Memory-side time for a wave of `blocks` thread blocks collectively
+/// reading `total_bytes` from HBM when the device schedules at most
+/// `active_sms` of its `sm_count` SMs (Fig. 5 right):
+/// `max(HBM-bound, SM-issue-bound with wave quantisation)`.
+pub fn occupancy_mem_time(total_bytes: f64, blocks: usize, active_sms: usize, hw: &Hardware) -> f64 {
+    let hbm_bound = total_bytes / hw.hbm_bw;
+    let waves = blocks.div_ceil(active_sms).max(1) as f64;
+    let per_block = total_bytes / blocks as f64 / PER_SM_BW;
+    hbm_bound.max(waves * per_block)
+}
+
+/// Execution knobs shared by the costed dataflows.
+#[derive(Debug, Clone, Copy)]
+pub struct CostEnv<'a> {
+    pub hw: &'a Hardware,
+    pub noc: &'a Noc,
+    /// Cluster size N (power of two ≤ 16).
+    pub cluster_size: usize,
+    /// DSMEM (the paper's system) or GlobalMemory (the Fig. 13 ablation).
+    pub transport: Transport,
+    /// Achieved-bandwidth derate of the fused kernel (ClusterFusion is
+    /// hand-tuned; baselines override per framework in `frameworks.rs`).
+    pub bw_efficiency: f64,
+}
+
+impl<'a> CostEnv<'a> {
+    pub fn clusterfusion(hw: &'a Hardware, noc: &'a Noc, cluster_size: usize) -> Self {
+        Self { hw, noc, cluster_size, transport: Transport::Dsmem, bw_efficiency: 0.85 }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared tensors for the functional differential tests.
+    use crate::util::rng::Rng;
+
+    pub struct MhaCase {
+        pub batch: usize,
+        pub d_model: usize,
+        pub n_heads: usize,
+        pub head_dim: usize,
+        pub seq: usize,
+        pub hidden: Vec<f32>,
+        pub wq: Vec<f32>, // (D, nh*dh) row-major
+        pub wk: Vec<f32>,
+        pub wv: Vec<f32>,
+        pub wo: Vec<f32>,      // (nh*dh, D)
+        pub k_cache: Vec<f32>, // (B, S, nh, dh)
+        pub v_cache: Vec<f32>,
+        pub pos: Vec<usize>,
+    }
+
+    pub fn mha_case(seed: u64, b: usize, nh: usize, dh: usize, s: usize, d: usize) -> MhaCase {
+        let mut rng = Rng::seed_from_u64(seed);
+        let h = nh * dh;
+        let mut v = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+        };
+        let hidden = v(b * d, 2.0);
+        let wq = v(d * h, 0.4);
+        let wk = v(d * h, 0.4);
+        let wv = v(d * h, 0.4);
+        let wo = v(h * d, 0.4);
+        let k_cache = v(b * s * h, 2.0);
+        let v_cache = v(b * s * h, 2.0);
+        let mut rng2 = Rng::seed_from_u64(seed ^ 0xdead);
+        let pos = (0..b).map(|_| rng2.range(0, s)).collect();
+        MhaCase { batch: b, d_model: d, n_heads: nh, head_dim: dh, seq: s, hidden, wq, wk, wv, wo, k_cache, v_cache, pos }
+    }
+
+    pub struct MlaCase {
+        pub batch: usize,
+        pub d_model: usize,
+        pub n_heads: usize,
+        pub head_dim: usize,
+        pub lora: usize,
+        pub seq: usize,
+        pub hidden: Vec<f32>,
+        pub wq: Vec<f32>,     // (D, nh*l)
+        pub wkv: Vec<f32>,    // (D, l)
+        pub w_down: Vec<f32>, // (nh, l, dh)
+        pub wo: Vec<f32>,     // (nh*dh, D)
+        pub kv_cache: Vec<f32>, // (B, S, l)
+        pub pos: Vec<usize>,
+    }
+
+    pub fn mla_case(seed: u64, b: usize, nh: usize, l: usize, dh: usize, s: usize, d: usize) -> MlaCase {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut v = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+        };
+        let hidden = v(b * d, 2.0);
+        let wq = v(d * nh * l, 0.4);
+        let wkv = v(d * l, 0.4);
+        let w_down = v(nh * l * dh, 0.4);
+        let wo = v(nh * dh * d, 0.4);
+        let kv_cache = v(b * s * l, 2.0);
+        let mut rng2 = Rng::seed_from_u64(seed ^ 0xbeef);
+        let pos = (0..b).map(|_| rng2.range(0, s)).collect();
+        MlaCase { batch: b, d_model: d, n_heads: nh, head_dim: dh, lora: l, seq: s, hidden, wq, wkv, w_down, wo, kv_cache, pos }
+    }
+
+    pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let denom = 1.0f32.max(x.abs()).max(y.abs());
+            assert!(
+                (x - y).abs() / denom < tol,
+                "{what}[{i}]: {x} vs {y} (tol {tol})"
+            );
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Plain single-threaded reference for the attention block (the oracle the
+//! simulated dataflows are differentially tested against — the Rust twin
+//! of `python/compile/kernels/ref.py`).
+
+/// Output of one attention-block decode step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttnOut {
+    /// (B, D) block output (after output projection).
+    pub out: Vec<f32>,
+    /// (B, nh*dh) new K row to append (MHA) / (B, l) latent row (MLA).
+    pub k_new: Vec<f32>,
+    /// (B, nh*dh) new V row (MHA only; empty for MLA).
+    pub v_new: Vec<f32>,
+}
+
+/// y[b, :n_out] += x[b, :n_in] @ w  where w is (n_in, n_out) row-major.
+pub fn gemm_acc(x: &[f32], w: &[f32], y: &mut [f32], b: usize, n_in: usize, n_out: usize) {
+    for bi in 0..b {
+        for i in 0..n_in {
+            let xv = x[bi * n_in + i];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * n_out..(i + 1) * n_out];
+            let yrow = &mut y[bi * n_out..(bi + 1) * n_out];
+            for (yo, wo) in yrow.iter_mut().zip(wrow) {
+                *yo += xv * wo;
+            }
+        }
+    }
+}
+
+/// Masked-softmax attention for one head over a padded cache + self token.
+///
+/// q: (B, dh); k_cache/v_cache laid out (B, S, nh, dh); k_new/v_new:
+/// (B, dh) the freshly projected row (always attended). Returns (B, dh).
+#[allow(clippy::too_many_arguments)]
+pub fn head_attention(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    pos: &[usize],
+    b: usize,
+    s: usize,
+    nh: usize,
+    dh: usize,
+    head: usize,
+) -> Vec<f32> {
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0f32; b * dh];
+    for bi in 0..b {
+        let qrow = &q[bi * dh..(bi + 1) * dh];
+        let n = pos[bi];
+        let mut scores = Vec::with_capacity(n + 1);
+        for t in 0..n {
+            let base = ((bi * s + t) * nh + head) * dh;
+            let dot: f32 = qrow.iter().zip(&k_cache[base..base + dh]).map(|(a, b)| a * b).sum();
+            scores.push(dot * scale);
+        }
+        let self_dot: f32 =
+            qrow.iter().zip(&k_new[bi * dh..(bi + 1) * dh]).map(|(a, b)| a * b).sum();
+        scores.push(self_dot * scale);
+
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l = 0.0;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - m).exp();
+            l += *sc;
+        }
+        let orow = &mut out[bi * dh..(bi + 1) * dh];
+        for (t, p) in scores[..n].iter().enumerate() {
+            let base = ((bi * s + t) * nh + head) * dh;
+            for (o, vv) in orow.iter_mut().zip(&v_cache[base..base + dh]) {
+                *o += p * vv;
+            }
+        }
+        let p_self = scores[n];
+        for (o, vv) in orow.iter_mut().zip(&v_new[bi * dh..(bi + 1) * dh]) {
+            *o += p_self * vv;
+        }
+        for o in orow.iter_mut() {
+            *o /= l;
+        }
+    }
+    out
+}
+
+/// Reference fused attention block (paper Alg. 3 semantics): QKV projection
+/// + masked attention over the cache + output projection, all plain math.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_block_ref(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+) -> AttnOut {
+    let h = nh * dh;
+    let mut q = vec![0f32; b * h];
+    let mut k_new = vec![0f32; b * h];
+    let mut v_new = vec![0f32; b * h];
+    gemm_acc(hidden, wq, &mut q, b, d, h);
+    gemm_acc(hidden, wk, &mut k_new, b, d, h);
+    gemm_acc(hidden, wv, &mut v_new, b, d, h);
+
+    let mut out = vec![0f32; b * d];
+    for head in 0..nh {
+        // slice this head's q / k_new / v_new columns
+        let take = |src: &[f32]| -> Vec<f32> {
+            let mut t = vec![0f32; b * dh];
+            for bi in 0..b {
+                t[bi * dh..(bi + 1) * dh]
+                    .copy_from_slice(&src[bi * h + head * dh..bi * h + (head + 1) * dh]);
+            }
+            t
+        };
+        let (qh, knh, vnh) = (take(&q), take(&k_new), take(&v_new));
+        let attn = head_attention(&qh, k_cache, v_cache, &knh, &vnh, pos, b, s, nh, dh, head);
+        // out += attn_h @ wo[head*dh .. (head+1)*dh, :]
+        let wo_head = &wo[head * dh * d..(head + 1) * dh * d];
+        gemm_acc(&attn, wo_head, &mut out, b, dh, d);
+    }
+    AttnOut { out, k_new, v_new }
+}
+
+/// Reference fused MLA block (paper Alg. 4 semantics, weight-absorbed).
+#[allow(clippy::too_many_arguments)]
+pub fn mla_block_ref(
+    hidden: &[f32],
+    wq: &[f32],     // (D, nh*l)
+    wkv: &[f32],    // (D, l)
+    w_down: &[f32], // (nh, l, dh)
+    wo: &[f32],     // (nh*dh, D)
+    kv_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+) -> AttnOut {
+    let mut q = vec![0f32; b * nh * l];
+    let mut kv_new = vec![0f32; b * l];
+    gemm_acc(hidden, wq, &mut q, b, d, nh * l);
+    gemm_acc(hidden, wkv, &mut kv_new, b, d, l);
+
+    let scale = 1.0 / (l as f32).sqrt();
+    let mut out = vec![0f32; b * d];
+    for head in 0..nh {
+        // attention over the shared latent cache (MQA-style)
+        let mut attn = vec![0f32; b * l];
+        for bi in 0..b {
+            let qrow = &q[bi * nh * l + head * l..bi * nh * l + (head + 1) * l];
+            let n = pos[bi];
+            let mut scores = Vec::with_capacity(n + 1);
+            for t in 0..n {
+                let base = (bi * s + t) * l;
+                let dot: f32 =
+                    qrow.iter().zip(&kv_cache[base..base + l]).map(|(a, b)| a * b).sum();
+                scores.push(dot * scale);
+            }
+            let kvrow = &kv_new[bi * l..(bi + 1) * l];
+            scores.push(qrow.iter().zip(kvrow).map(|(a, b)| a * b).sum::<f32>() * scale);
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut lsum = 0.0;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - m).exp();
+                lsum += *sc;
+            }
+            let arow = &mut attn[bi * l..(bi + 1) * l];
+            for (t, p) in scores[..n].iter().enumerate() {
+                let base = (bi * s + t) * l;
+                for (a, kv) in arow.iter_mut().zip(&kv_cache[base..base + l]) {
+                    *a += p * kv;
+                }
+            }
+            for (a, kv) in arow.iter_mut().zip(kvrow) {
+                *a += scores[n] * kv;
+            }
+            for a in arow.iter_mut() {
+                *a /= lsum;
+            }
+        }
+        // z = attn @ w_down[head]  (B, dh)
+        let mut z = vec![0f32; b * dh];
+        gemm_acc(&attn, &w_down[head * l * dh..(head + 1) * l * dh], &mut z, b, l, dh);
+        // out += z @ wo[head]
+        gemm_acc(&z, &wo[head * dh * d..(head + 1) * dh * d], &mut out, b, dh, d);
+    }
+    AttnOut { out, k_new: kv_new, v_new: vec![] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_identity() {
+        // x (1,2) @ I2 = x
+        let x = vec![3.0, -4.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let mut y = vec![0.0; 2];
+        gemm_acc(&x, &w, &mut y, 1, 2, 2);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn attention_uniform_values_average() {
+        // All V rows identical => attention output equals that row for any
+        // scores (softmax weights sum to 1).
+        let (b, s, nh, dh) = (1, 4, 1, 2);
+        let q = vec![0.3, -0.7];
+        let k_cache: Vec<f32> = (0..b * s * nh * dh).map(|i| i as f32 * 0.1).collect();
+        let v_cache = vec![5.0; b * s * nh * dh];
+        let k_new = vec![0.2, 0.2];
+        let v_new = vec![5.0, 5.0];
+        let out = head_attention(&q, &k_cache, &v_cache, &k_new, &v_new, &[4], b, s, nh, dh, 0);
+        for o in out {
+            assert!((o - 5.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn empty_cache_attends_self_only() {
+        let (b, s, nh, dh) = (1, 4, 1, 2);
+        let q = vec![1.0, 0.0];
+        let k_cache = vec![9.0; b * s * nh * dh];
+        let v_cache = vec![9.0; b * s * nh * dh];
+        let k_new = vec![0.0, 0.0];
+        let v_new = vec![7.0, -2.0];
+        let out = head_attention(&q, &k_cache, &v_cache, &k_new, &v_new, &[0], b, s, nh, dh, 0);
+        assert_eq!(out, vec![7.0, -2.0]);
+    }
+}

@@ -1,0 +1,289 @@
+//! SplitHead — the register-resident dataflow variant (Alg. 5, App. B.2).
+//!
+//! Blocks within a head-cluster partition the **head dimension** in all
+//! three stages, so Q/K/V segments stay in each block's registers (no
+//! gather needed). The price: the `Q·Kᵀ` score row is only *partially*
+//! summed in each block and must be combined with a
+//! `ClusterReduce(sum)` of size **S** (the whole sequence!), and the
+//! partial output projection needs another reduce of size **D**:
+//!
+//! ```text
+//! Traffic = Traffic_Reduce(S, N) + Traffic_Reduce(D, N)
+//! ```
+//!
+//! which grows with sequence length and loses to SplitToken at long
+//! context (Fig. 20) — the quantitative argument for the paper's final
+//! dataflow choice.
+
+use crate::clustersim::collective::{cluster_reduce, reduce_cost, ReduceOp, Transport};
+use crate::clustersim::hw::Hardware;
+use crate::clustersim::noc::Noc;
+
+use super::reference::AttnOut;
+use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SETUP};
+
+/// Functional execution of Alg. 5. Requires `dh % n == 0`.
+#[allow(clippy::too_many_arguments)]
+pub fn execute(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
+    assert!(dh % n == 0, "cluster must divide head_dim");
+    let h = nh * dh;
+    let hs = dh / n;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut out = vec![0f32; b * d];
+    let mut k_new_g = vec![0f32; b * h];
+    let mut v_new_g = vec![0f32; b * h];
+    let mut report = CostReport { launches: 1, ..Default::default() };
+
+    for head in 0..nh {
+        // ---- per-block register QKV segments (Alg. 5 lines 1-2) ----
+        // block r owns head-dim slice [r*hs, (r+1)*hs)
+        let project = |w: &[f32], r: usize| -> Vec<f32> {
+            let mut seg = vec![0f32; b * hs];
+            for bi in 0..b {
+                for (j, sj) in seg[bi * hs..(bi + 1) * hs].iter_mut().enumerate() {
+                    let col = head * dh + r * hs + j;
+                    let mut acc = 0f32;
+                    for i in 0..d {
+                        acc += hidden[bi * d + i] * w[i * h + col];
+                    }
+                    *sj = acc;
+                }
+            }
+            seg
+        };
+        let q_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wq, r)).collect();
+        let k_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wk, r)).collect();
+        let v_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wv, r)).collect();
+        for r in 0..n {
+            for bi in 0..b {
+                let dst = bi * h + head * dh + r * hs;
+                k_new_g[dst..dst + hs].copy_from_slice(&k_segs[r][bi * hs..(bi + 1) * hs]);
+                v_new_g[dst..dst + hs].copy_from_slice(&v_segs[r][bi * hs..(bi + 1) * hs]);
+            }
+        }
+
+        // ---- partial scores over the *full* sequence per block (Alg. 5
+        // line 3): S_b = Q_b × K_b^T summed over this block's dim slice ----
+        let mut score_bufs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut sc = vec![0f32; b * (s + 1)];
+                for bi in 0..b {
+                    for t in 0..pos[bi] {
+                        let base = ((bi * s + t) * nh + head) * dh + r * hs;
+                        let mut acc = 0f32;
+                        for j in 0..hs {
+                            acc += q_segs[r][bi * hs + j] * k_cache[base + j];
+                        }
+                        sc[bi * (s + 1) + t] = acc * scale;
+                    }
+                    // self token at row index s
+                    let mut acc = 0f32;
+                    for j in 0..hs {
+                        acc += q_segs[r][bi * hs + j] * k_segs[r][bi * hs + j];
+                    }
+                    sc[bi * (s + 1) + s] = acc * scale;
+                }
+                sc
+            })
+            .collect();
+
+        // ---- ClusterReduce(sum) of the S-sized score row ----
+        let rc = cluster_reduce(&mut score_bufs, ReduceOp::Sum, transport, hw, noc);
+        report.dsmem_bytes += rc.traffic_bytes;
+
+        // ---- local softmax (identical in every block), A_b over the
+        // block's V slice, partial output projection (lines 3-4) ----
+        let mut o_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * d]; n];
+        for r in 0..n {
+            for bi in 0..b {
+                let valid = pos[bi];
+                let row = &score_bufs[r][bi * (s + 1)..(bi + 1) * (s + 1)];
+                let mut m = row[s];
+                for t in 0..valid {
+                    m = m.max(row[t]);
+                }
+                let mut l = 0f32;
+                let mut probs = vec![0f32; valid + 1];
+                for t in 0..valid {
+                    probs[t] = (row[t] - m).exp();
+                    l += probs[t];
+                }
+                probs[valid] = (row[s] - m).exp();
+                l += probs[valid];
+                // A_b: (hs) attention output over this block's V slice
+                let mut a = vec![0f32; hs];
+                for t in 0..valid {
+                    let base = ((bi * s + t) * nh + head) * dh + r * hs;
+                    for (j, av) in a.iter_mut().enumerate() {
+                        *av += probs[t] * v_cache[base + j];
+                    }
+                }
+                for (j, av) in a.iter_mut().enumerate() {
+                    *av += probs[valid] * v_segs[r][bi * hs + j];
+                    *av /= l;
+                }
+                // partial output projection over the FULL D columns
+                for (j, av) in a.iter().enumerate() {
+                    let wrow = &wo[(head * dh + r * hs + j) * d..(head * dh + r * hs + j + 1) * d];
+                    let orow = &mut o_bufs[r][bi * d..(bi + 1) * d];
+                    for (o, w) in orow.iter_mut().zip(wrow) {
+                        *o += av * w;
+                    }
+                }
+            }
+        }
+
+        // ---- ClusterReduce(sum) of the D-sized partial output (line 5) ----
+        let rc2 = cluster_reduce(&mut o_bufs, ReduceOp::Sum, transport, hw, noc);
+        report.dsmem_bytes += rc2.traffic_bytes;
+
+        // atomicAdd into global output (line 6); rank 0 writes
+        for bi in 0..b * d {
+            out[bi] += o_bufs[0][bi];
+        }
+    }
+
+    (AttnOut { out, k_new: k_new_g, v_new: v_new_g }, report)
+}
+
+/// Performance model: same fused mandatory HBM traffic as SplitToken, but
+/// the collective schedule is Reduce(S) + Reduce(D) per cluster and the
+/// register residency shaves the phase-setup term.
+pub fn cost(p: &AttnProblem, env: &CostEnv) -> CostReport {
+    let n = env.cluster_size;
+    let (hw, noc) = (env.hw, env.noc);
+    let mut rep = CostReport { launches: 1, ..Default::default() };
+
+    let blocks = p.n_heads * n;
+    let active = noc.active_sms(n);
+    let bytes = p.mandatory_bytes_mha();
+    rep.hbm_bytes = bytes;
+
+    let t_mem = occupancy_mem_time(bytes, blocks, active, hw) / env.bw_efficiency;
+    let t_compute = hw.compute_time(p.flops_mha());
+    rep.stage("fused-mem/compute", t_mem.max(t_compute));
+
+    let bh = p.batch as f64;
+    // Reduce of the (S+1)-row of scores (fp32 accumulators) + Reduce(D)
+    let red_s = reduce_cost((p.seq as f64 + 1.0) * bh * 4.0, n, env.transport, hw, noc);
+    let red_d = reduce_cost(p.d_model as f64 * bh * ELEM, n, env.transport, hw, noc);
+    rep.stage("collectives", red_s.latency + red_d.latency);
+    rep.dsmem_bytes = (red_s.traffic_bytes + red_d.traffic_bytes) * p.n_heads as f64;
+    if env.transport == Transport::Dsmem {
+        rep.stage("dsmem-contention", rep.dsmem_bytes / noc.bandwidth(n));
+    }
+    if env.transport == Transport::GlobalMemory {
+        // grid-wide software barriers replace the cluster-scoped ones
+        let rounds = red_s.rounds + red_d.rounds;
+        rep.stage(
+            "gmem-grid-barriers",
+            rounds as f64 * super::GMEM_BARRIER_PER_BLOCK * blocks as f64,
+        );
+    }
+
+
+    // registers don't reduce the barrier count: three phases like SplitToken
+    rep.stage("phase-setup", 3.0 * PHASE_SETUP / (n.min(2) as f64));
+    rep.stage("launch", hw.graph_kernel_launch);
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustersim::dataflow::reference::attention_block_ref;
+    use crate::clustersim::dataflow::split_token;
+    use crate::clustersim::dataflow::testutil::{assert_close, mha_case};
+    use crate::clustersim::{Hardware, Noc};
+
+    fn env() -> (Hardware, Noc) {
+        let hw = Hardware::h100_sxm5();
+        let noc = Noc::h100(&hw);
+        (hw, noc)
+    }
+
+    #[test]
+    fn matches_reference_all_cluster_sizes() {
+        let (hw, noc) = env();
+        let c = mha_case(11, 2, 2, 8, 12, 16);
+        let r = attention_block_ref(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+            c.batch, c.d_model, c.n_heads, c.head_dim, c.seq,
+        );
+        for n in [1usize, 2, 4, 8] {
+            let (got, _) = execute(
+                &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                c.batch, c.d_model, c.n_heads, c.head_dim, c.seq, n,
+                Transport::Dsmem, &hw, &noc,
+            );
+            assert_close(&got.out, &r.out, 1e-4, &format!("out n={n}"));
+            assert_close(&got.k_new, &r.k_new, 1e-4, "k_new");
+            assert_close(&got.v_new, &r.v_new, 1e-4, "v_new");
+        }
+    }
+
+    #[test]
+    fn splithead_traffic_grows_with_seq_splittoken_does_not() {
+        // The Appendix B.2 argument, on executed (not analytical) traffic.
+        let (hw, noc) = env();
+        let mk = |s: usize| mha_case(5, 1, 1, 8, s, 8);
+        let run_sh = |s: usize| {
+            let c = mk(s);
+            execute(
+                &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                c.batch, c.d_model, c.n_heads, c.head_dim, c.seq, 4,
+                Transport::Dsmem, &hw, &noc,
+            )
+            .1
+            .dsmem_bytes
+        };
+        let run_st = |s: usize| {
+            let c = mk(s);
+            split_token::execute(
+                &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                c.batch, c.d_model, c.n_heads, c.head_dim, c.seq, 4,
+                Transport::Dsmem, &hw, &noc,
+            )
+            .1
+            .dsmem_bytes
+        };
+        assert!(run_sh(64) > 2.0 * run_sh(16), "SplitHead DSMEM grows with S");
+        assert_eq!(run_st(64), run_st(16), "SplitToken DSMEM independent of S");
+    }
+
+    #[test]
+    fn cost_crossover_with_sequence_length() {
+        // Fig. 20: near parity at short seq, SplitHead loses at long seq.
+        let (hw, noc) = env();
+        let env4 = CostEnv::clusterfusion(&hw, &noc, 4);
+        let p = |seq| AttnProblem {
+            batch: 1, d_model: 4096, n_heads: 32, head_dim: 128, seq, kv_lora_rank: 0,
+        };
+        let gap = |seq: usize| {
+            let sh = cost(&p(seq), &env4).latency;
+            let st = split_token::cost(&p(seq), &env4).latency;
+            sh / st
+        };
+        assert!(gap(1024) < 1.1, "short-seq gap should be small: {}", gap(1024));
+        assert!(gap(16384) > gap(1024), "long-seq gap must widen");
+    }
+}

@@ -1,0 +1,404 @@
+//! SplitToken — the paper's ClusterFusion dataflow (Alg. 3, Fig. 7).
+//!
+//! One thread-block **cluster per attention head**; within a cluster the
+//! N blocks partition
+//!
+//! * the head dimension for *QKV Projection* (each block computes an
+//!   `h = dh/N` slice, then `ClusterGather` assembles the full Q/K/V),
+//! * the KV-cache sequence for *Attention* (each block scans `S/N` cached
+//!   tokens FlashDecoding-style; softmax statistics and the partial
+//!   outputs are combined with `ClusterReduce(max)`/`ClusterReduce(sum)`),
+//! * the output dimension for *Output Projection* (each block produces a
+//!   `D/N` column tile and accumulates across head-clusters with
+//!   atomicAdd).
+//!
+//! All intermediates stay on-chip: the only HBM traffic is weights, the
+//! KV cache, and the activation in/out rows — which is exactly what
+//! `cost()` charges and what Fig. 12 measures.
+
+use crate::clustersim::collective::{
+    cluster_gather, cluster_reduce, gather_cost, gathered_segment, reduce_cost, ReduceOp,
+    Transport,
+};
+use crate::clustersim::hw::Hardware;
+use crate::clustersim::noc::Noc;
+
+use super::reference::AttnOut;
+use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SETUP};
+
+/// Functional execution of Alg. 3 over simulated per-block buffers.
+///
+/// Layouts match [`super::reference::attention_block_ref`]; requires
+/// `dh % n == 0`, `s % n == 0`, `d % n == 0` (the paper's partitioning
+/// assumption). `transport` selects DSMEM or the global-memory fallback —
+/// numerics are identical (the Fig. 13 ablation changes time, not values).
+#[allow(clippy::too_many_arguments)]
+pub fn execute(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
+    assert!(dh % n == 0 && s % n == 0 && d % n == 0, "cluster must divide dh, S, D");
+    let h = nh * dh;
+    let (hs, ss, ds) = (dh / n, s / n, d / n); // per-block slices
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut out = vec![0f32; b * d]; // global-memory output (atomicAdd target)
+    let mut k_new_g = vec![0f32; b * h];
+    let mut v_new_g = vec![0f32; b * h];
+    let mut report = CostReport::default();
+    report.launches = 1; // the whole block is ONE fused kernel
+
+    for head in 0..nh {
+        // ---- Stage 1: per-block QKV projection segments (Alg. 3 line 2) ----
+        // Block `r` computes columns [head*dh + r*hs, head*dh + (r+1)*hs).
+        let project = |w: &[f32]| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|r| {
+                    let mut seg = vec![0f32; b * hs];
+                    for bi in 0..b {
+                        for (j, sj) in seg[bi * hs..(bi + 1) * hs].iter_mut().enumerate() {
+                            let col = head * dh + r * hs + j;
+                            let mut acc = 0f32;
+                            for i in 0..d {
+                                acc += hidden[bi * d + i] * w[i * h + col];
+                            }
+                            *sj = acc;
+                        }
+                    }
+                    seg
+                })
+                .collect()
+        };
+        let q_segs = project(wq);
+        let k_segs = project(wk);
+        let v_segs = project(wv);
+
+        // ---- ClusterGather of Q/K/V (Alg. 3 line 3): one gather of the
+        // concatenated 3h-sized segment per block ----
+        let cat: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut c = Vec::with_capacity(3 * b * hs);
+                c.extend_from_slice(&q_segs[r]);
+                c.extend_from_slice(&k_segs[r]);
+                c.extend_from_slice(&v_segs[r]);
+                c
+            })
+            .collect();
+        let (gathered, gc) = cluster_gather(&cat, transport, hw, noc);
+        report.dsmem_bytes += gc.traffic_bytes;
+
+        // Each block reassembles the full per-head q/k_new/v_new (B, dh).
+        // All blocks end with identical copies; verify with block 0 and
+        // assert agreement for block n-1 (the cluster contract).
+        let assemble = |owner: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let seg_len = 3 * b * hs;
+            let mut q = vec![0f32; b * dh];
+            let mut kn = vec![0f32; b * dh];
+            let mut vn = vec![0f32; b * dh];
+            for r in 0..n {
+                let seg = gathered_segment(&gathered[owner], owner, r, n, seg_len);
+                for bi in 0..b {
+                    q[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[bi * hs..(bi + 1) * hs]);
+                    kn[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[b * hs + bi * hs..b * hs + (bi + 1) * hs]);
+                    vn[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[2 * b * hs + bi * hs..2 * b * hs + (bi + 1) * hs]);
+                }
+            }
+            (q, kn, vn)
+        };
+        let (q, k_new, v_new) = assemble(0);
+        debug_assert_eq!(assemble(n - 1), (q.clone(), k_new.clone(), v_new.clone()));
+
+        // write-back of the new K/V rows (cache append goes to HBM anyway)
+        for bi in 0..b {
+            k_new_g[bi * h + head * dh..bi * h + (head + 1) * dh]
+                .copy_from_slice(&k_new[bi * dh..(bi + 1) * dh]);
+            v_new_g[bi * h + head * dh..bi * h + (head + 1) * dh]
+                .copy_from_slice(&v_new[bi * dh..(bi + 1) * dh]);
+        }
+
+        // ---- Stage 2: FlashDecoding partials over each block's KV span
+        // (Alg. 3 line 4), block n-1 also owns the self token ----
+        let mut m_bufs: Vec<Vec<f32>> = vec![vec![f32::NEG_INFINITY; b]; n];
+        let mut l_bufs: Vec<Vec<f32>> = vec![vec![0f32; b]; n];
+        let mut acc_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * dh]; n];
+        for r in 0..n {
+            for bi in 0..b {
+                let valid = pos[bi];
+                let lo = r * ss;
+                let hi = ((r + 1) * ss).min(valid);
+                let qrow = &q[bi * dh..(bi + 1) * dh];
+                let mut scores: Vec<(usize, f32)> = Vec::new();
+                for t in lo..hi.max(lo) {
+                    if t >= valid {
+                        break;
+                    }
+                    let base = ((bi * s + t) * nh + head) * dh;
+                    let dot: f32 =
+                        qrow.iter().zip(&k_cache[base..base + dh]).map(|(a, c)| a * c).sum();
+                    scores.push((t, dot * scale));
+                }
+                let self_here = r == n - 1;
+                let self_score = if self_here {
+                    let dot: f32 = qrow
+                        .iter()
+                        .zip(&k_new[bi * dh..(bi + 1) * dh])
+                        .map(|(a, c)| a * c)
+                        .sum();
+                    Some(dot * scale)
+                } else {
+                    None
+                };
+                let mut m = f32::NEG_INFINITY;
+                for (_, sc) in &scores {
+                    m = m.max(*sc);
+                }
+                if let Some(sc) = self_score {
+                    m = m.max(sc);
+                }
+                if m == f32::NEG_INFINITY {
+                    continue; // nothing valid in this span
+                }
+                let mut l = 0f32;
+                let acc = &mut acc_bufs[r][bi * dh..(bi + 1) * dh];
+                for (t, sc) in &scores {
+                    let p = (sc - m).exp();
+                    l += p;
+                    let base = ((bi * s + t) * nh + head) * dh;
+                    for (a, vv) in acc.iter_mut().zip(&v_cache[base..base + dh]) {
+                        *a += p * vv;
+                    }
+                }
+                if let Some(sc) = self_score {
+                    let p = (sc - m).exp();
+                    l += p;
+                    for (a, vv) in acc.iter_mut().zip(&v_new[bi * dh..(bi + 1) * dh]) {
+                        *a += p * vv;
+                    }
+                }
+                m_bufs[r][bi] = m;
+                l_bufs[r][bi] = l;
+            }
+        }
+
+        // ---- ClusterReduce of softmax stats (Alg. 3 lines 5-6) ----
+        let m_local: Vec<Vec<f32>> = m_bufs.clone();
+        let rc1 = cluster_reduce(&mut m_bufs, ReduceOp::Max, transport, hw, noc);
+        report.dsmem_bytes += rc1.traffic_bytes;
+        // rescale local l and acc by exp(m_local - m_global) (line 6's
+        // online-softmax rescale with Reg_max)
+        for r in 0..n {
+            for bi in 0..b {
+                let alpha = if m_local[r][bi] == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    (m_local[r][bi] - m_bufs[r][bi]).exp()
+                };
+                l_bufs[r][bi] *= alpha;
+                for a in &mut acc_bufs[r][bi * dh..(bi + 1) * dh] {
+                    *a *= alpha;
+                }
+            }
+        }
+        let rc2 = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
+        report.dsmem_bytes += rc2.traffic_bytes;
+        // ---- ClusterReduce of the attention output (Alg. 3 line 7) ----
+        let rc3 = cluster_reduce(&mut acc_bufs, ReduceOp::Sum, transport, hw, noc);
+        report.dsmem_bytes += rc3.traffic_bytes;
+
+        // ---- Stage 3: per-block Output Projection tile + atomicAdd
+        // (Alg. 3 line 8): block r computes columns [r*ds, (r+1)*ds) ----
+        for r in 0..n {
+            for bi in 0..b {
+                let attn: Vec<f32> = acc_bufs[r][bi * dh..(bi + 1) * dh]
+                    .iter()
+                    .map(|a| a / l_bufs[r][bi])
+                    .collect();
+                for c in 0..ds {
+                    let col = r * ds + c;
+                    let mut acc = 0f32;
+                    for (j, av) in attn.iter().enumerate() {
+                        acc += av * wo[(head * dh + j) * d + col];
+                    }
+                    out[bi * d + col] += acc; // atomicAdd
+                }
+            }
+        }
+    }
+
+    (AttnOut { out, k_new: k_new_g, v_new: v_new_g }, report)
+}
+
+/// Performance model of the fused SplitToken kernel (one layer's core
+/// modules). Charges: one launch, mandatory HBM bytes at the fused
+/// kernel's achieved bandwidth under Fig. 5 occupancy, the collective
+/// schedule on the chosen transport, and the compute roofline term.
+pub fn cost(p: &AttnProblem, env: &CostEnv) -> CostReport {
+    let n = env.cluster_size;
+    let (hw, noc) = (env.hw, env.noc);
+    let mut rep = CostReport { launches: 1, ..Default::default() };
+
+    let blocks = p.n_heads * n;
+    let active = noc.active_sms(n);
+    let bytes = p.mandatory_bytes_mha();
+    rep.hbm_bytes = bytes;
+
+    // memory: weights + cache streamed once by the fused kernel
+    let t_mem = occupancy_mem_time(bytes, blocks, active, hw) / env.bw_efficiency;
+    // compute roofline (matters at batch ≥ 16, Appendix C)
+    let t_compute = hw.compute_time(p.flops_mha());
+    rep.stage("fused-mem/compute", t_mem.max(t_compute));
+
+    // collectives: per head-cluster, all clusters concurrent; one gather of
+    // 3h plus reduces of stats (negligible) and the H-sized output
+    // (per-block message = B * dh floats for acc, B floats for stats).
+    let bh = p.batch as f64;
+    let gather = gather_cost(3.0 * (p.head_dim / n) as f64 * bh * ELEM, n, env.transport, hw, noc);
+    let red_stats = reduce_cost(2.0 * bh * 4.0, n, env.transport, hw, noc);
+    let red_out = reduce_cost(p.head_dim as f64 * bh * ELEM, n, env.transport, hw, noc);
+    let coll = gather.latency + red_stats.latency + red_out.latency;
+    rep.stage("collectives", coll);
+    rep.dsmem_bytes = (gather.traffic_bytes + red_stats.traffic_bytes + red_out.traffic_bytes)
+        * p.n_heads as f64;
+    // All head-clusters share the crossbar: charge the device-aggregate
+    // DSMEM traffic against the Fig. 5 bandwidth (the contention the paper
+    // cites for large clusters / the SplitHead comparison).
+    if env.transport == Transport::Dsmem {
+        rep.stage("dsmem-contention", rep.dsmem_bytes / noc.bandwidth(n));
+    }
+    if env.transport == Transport::GlobalMemory {
+        // grid-wide software barriers replace the cluster-scoped ones
+        let rounds = gather.rounds + red_stats.rounds + red_out.rounds;
+        rep.stage(
+            "gmem-grid-barriers",
+            rounds as f64 * super::GMEM_BARRIER_PER_BLOCK * blocks as f64,
+        );
+    }
+
+
+    // phase pipelining: three fused phases amortised across the cluster
+    rep.stage("phase-setup", 3.0 * PHASE_SETUP / (n.min(2) as f64));
+
+    rep.stage("launch", hw.graph_kernel_launch);
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustersim::dataflow::reference::attention_block_ref;
+    use crate::clustersim::dataflow::testutil::{assert_close, mha_case};
+    use crate::clustersim::{Hardware, Noc};
+
+    fn env() -> (Hardware, Noc) {
+        let hw = Hardware::h100_sxm5();
+        let noc = Noc::h100(&hw);
+        (hw, noc)
+    }
+
+    #[test]
+    fn matches_reference_all_cluster_sizes() {
+        let (hw, noc) = env();
+        let c = mha_case(7, 2, 2, 8, 16, 16);
+        let r = attention_block_ref(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+            c.batch, c.d_model, c.n_heads, c.head_dim, c.seq,
+        );
+        for n in [1usize, 2, 4, 8] {
+            let (got, rep) = execute(
+                &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                c.batch, c.d_model, c.n_heads, c.head_dim, c.seq, n,
+                Transport::Dsmem, &hw, &noc,
+            );
+            assert_close(&got.out, &r.out, 1e-4, &format!("out n={n}"));
+            assert_close(&got.k_new, &r.k_new, 1e-4, "k_new");
+            assert_close(&got.v_new, &r.v_new, 1e-4, "v_new");
+            assert_eq!(rep.launches, 1);
+            if n > 1 {
+                assert!(rep.dsmem_bytes > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn offchip_transport_same_numbers() {
+        let (hw, noc) = env();
+        let c = mha_case(9, 1, 2, 8, 8, 16);
+        let run = |t| {
+            execute(
+                &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                c.batch, c.d_model, c.n_heads, c.head_dim, c.seq, 4, t, &hw, &noc,
+            )
+            .0
+        };
+        let a = run(Transport::Dsmem);
+        let b = run(Transport::GlobalMemory);
+        assert_close(&a.out, &b.out, 1e-6, "transport must not change numerics");
+    }
+
+    #[test]
+    fn cost_prefers_cluster4_at_32_heads() {
+        // Fig. 11: with 32 heads, cluster size 4 is optimal.
+        let (hw, noc) = env();
+        let p = AttnProblem {
+            batch: 1, d_model: 4096, n_heads: 32, head_dim: 128, seq: 4096, kv_lora_rank: 0,
+        };
+        let lat: Vec<(usize, f64)> = Noc::cluster_sizes()
+            .iter()
+            .map(|&s| (s, cost(&p, &CostEnv::clusterfusion(&hw, &noc, s)).latency))
+            .collect();
+        let best = lat.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
+        assert_eq!(best, 4, "{lat:?}");
+    }
+
+    #[test]
+    fn cost_prefers_cluster2_at_128_heads() {
+        // Fig. 11: with 128 heads, cluster size 2 becomes optimal.
+        let (hw, noc) = env();
+        let p = AttnProblem {
+            batch: 1, d_model: 128 * 128, n_heads: 128, head_dim: 128, seq: 4096, kv_lora_rank: 0,
+        };
+        let lat: Vec<(usize, f64)> = Noc::cluster_sizes()
+            .iter()
+            .map(|&s| (s, cost(&p, &CostEnv::clusterfusion(&hw, &noc, s)).latency))
+            .collect();
+        let best = lat.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
+        assert_eq!(best, 2, "{lat:?}");
+    }
+
+    #[test]
+    fn dsmem_faster_than_gmem_fallback() {
+        // Fig. 13's direction: disabling DSMEM must cost latency.
+        let (hw, noc) = env();
+        let p = AttnProblem {
+            batch: 1, d_model: 4096, n_heads: 32, head_dim: 128, seq: 4096, kv_lora_rank: 0,
+        };
+        let mut on = CostEnv::clusterfusion(&hw, &noc, 4);
+        let mut off = on;
+        off.transport = Transport::GlobalMemory;
+        assert!(cost(&p, &off).latency > cost(&p, &on).latency);
+        // direction holds across seq lengths
+        for seq in [1024, 16384] {
+            let p2 = AttnProblem { seq, ..p };
+            on.transport = Transport::Dsmem;
+            assert!(cost(&p2, &off).latency > cost(&p2, &on).latency);
+        }
+    }
+}

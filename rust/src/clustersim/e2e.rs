@@ -1,0 +1,316 @@
+//! End-to-end decode model: TPOT for a whole transformer, per framework.
+//!
+//! Composes the per-layer attention-block dataflow cost with the FFN /
+//! RMSNorm / LM-head kernels that every framework (including ClusterFusion,
+//! §3.2 last paragraph) runs as separate library kernels, plus launch and
+//! host overheads. This is the engine behind Figs. 2, 12, 13, 17, 18, 19
+//! and the Appendix C multi-batch runs.
+
+
+use crate::models::{AttnKind, ModelConfig};
+
+use super::collective::Transport;
+use super::dataflow::{
+    block_isolated, mla, occupancy_mem_time, split_token, AttnProblem, CostEnv, CostReport, ELEM,
+};
+use super::frameworks::FrameworkProfile;
+use super::hw::Hardware;
+use super::noc::Noc;
+
+/// Which attention-block dataflow the end-to-end model uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Block-isolated baseline pipeline (all four baseline frameworks).
+    BlockIsolated,
+    /// ClusterFusion's fused dataflow with the given cluster size.
+    ClusterFusion { cluster_size: usize },
+    /// ClusterFusion with DSMEM disabled (Fig. 13 ablation): the fused
+    /// schedule stays, collectives fall back to global memory.
+    ClusterFusionNoDsmem { cluster_size: usize },
+}
+
+/// One end-to-end decode-step estimate.
+#[derive(Debug, Clone, Default)]
+pub struct StepEstimate {
+    /// Time per output token, seconds.
+    pub tpot: f64,
+    /// Attention-block ("core modules") time summed over layers.
+    pub core_modules: f64,
+    /// FFN + norms + LM head time.
+    pub rest: f64,
+    /// Host-side overhead.
+    pub host: f64,
+    /// Total kernel launches per decode step.
+    pub launches: usize,
+    /// HBM bytes moved per decode step.
+    pub hbm_bytes: f64,
+    /// DSMEM bytes moved per decode step.
+    pub dsmem_bytes: f64,
+}
+
+fn attn_problem(model: &ModelConfig, batch: usize, seq: usize) -> AttnProblem {
+    AttnProblem {
+        batch,
+        d_model: model.d_model,
+        n_heads: model.n_heads,
+        head_dim: model.head_dim,
+        seq,
+        kv_lora_rank: model.kv_lora_rank,
+    }
+}
+
+/// Cost of one layer's attention block under the chosen engine.
+pub fn attn_block_cost(
+    model: &ModelConfig,
+    batch: usize,
+    seq: usize,
+    engine: Engine,
+    profile: &FrameworkProfile,
+    hw: &Hardware,
+    noc: &Noc,
+) -> CostReport {
+    let p = attn_problem(model, batch, seq);
+    let eff_b = profile.bw_eff_at(batch);
+    let mk_env = |cluster: usize, transport: Transport, eff: f64| CostEnv {
+        hw,
+        noc,
+        cluster_size: cluster,
+        transport,
+        bw_efficiency: eff,
+    };
+    match (engine, model.attn) {
+        (Engine::BlockIsolated, AttnKind::Mha) => {
+            block_isolated::cost(&p, &mk_env(1, Transport::GlobalMemory, eff_b))
+        }
+        (Engine::BlockIsolated, AttnKind::Mla) => {
+            mla::cost_block_isolated(&p, &mk_env(1, Transport::GlobalMemory, eff_b))
+        }
+        (Engine::ClusterFusion { cluster_size }, AttnKind::Mha) => {
+            split_token::cost(&p, &mk_env(cluster_size, Transport::Dsmem, eff_b))
+        }
+        (Engine::ClusterFusion { cluster_size }, AttnKind::Mla) => {
+            mla::cost(&p, &mk_env(cluster_size, Transport::Dsmem, eff_b))
+        }
+        (Engine::ClusterFusionNoDsmem { cluster_size }, AttnKind::Mha) => split_token::cost(
+            &p,
+            &mk_env(cluster_size, Transport::GlobalMemory, eff_b),
+        ),
+        (Engine::ClusterFusionNoDsmem { cluster_size }, AttnKind::Mla) => {
+            mla::cost(&p, &mk_env(cluster_size, Transport::GlobalMemory, eff_b))
+        }
+    }
+}
+
+/// FFN + 2 norms for one layer (3 GEMM + 2 elementwise kernels; every
+/// framework uses comparable CUTLASS-grade kernels here — the paper fuses
+/// only the attention scope).
+fn ffn_cost(model: &ModelConfig, batch: usize, hw: &Hardware, noc: &Noc, eff: f64) -> CostReport {
+    let (b, d, f) = (batch as f64, model.d_model as f64, model.ffn_dim as f64);
+    let mut rep = CostReport::default();
+    let active = noc.active_sms(1);
+    // W1, W2 (d x f) then W3 (f x d); activations small next to weights
+    let gemm_bytes = [d * f * ELEM + b * (d + f) * ELEM,
+                      d * f * ELEM + b * (d + f) * ELEM,
+                      f * d * ELEM + b * (d + f) * ELEM];
+    let gemm_flops = [2.0 * b * d * f, 2.0 * b * d * f, 2.0 * b * f * d];
+    for (i, (&bytes, &flops)) in gemm_bytes.iter().zip(&gemm_flops).enumerate() {
+        let t = occupancy_mem_time(bytes, 128, active, hw) / (eff.max(0.55));
+        rep.stage(&format!("ffn-gemm{i}"), t.max(hw.compute_time(flops)) + hw.graph_kernel_launch + hw.kernel_boundary_sync);
+        rep.hbm_bytes += bytes;
+    }
+    for i in 0..2 {
+        let bytes = 2.0 * b * d * ELEM;
+        let t = occupancy_mem_time(bytes, 32, active, hw);
+        rep.stage(&format!("rmsnorm{i}"), t + hw.graph_kernel_launch + hw.kernel_boundary_sync);
+        rep.hbm_bytes += bytes;
+    }
+    rep.launches = 5;
+    rep
+}
+
+/// LM head (vocab projection) cost.
+fn lm_head_cost(model: &ModelConfig, batch: usize, hw: &Hardware, noc: &Noc) -> CostReport {
+    let (b, d, v) = (batch as f64, model.d_model as f64, model.vocab as f64);
+    let mut rep = CostReport::default();
+    let bytes = d * v * ELEM + b * (d + v) * ELEM;
+    let t = occupancy_mem_time(bytes, 132, noc.active_sms(1), hw) / 0.7;
+    rep.stage("lm-head", t.max(hw.compute_time(2.0 * b * d * v)) + hw.graph_kernel_launch);
+    rep.hbm_bytes = bytes;
+    rep.launches = 1;
+    rep
+}
+
+/// Estimate one decode step (TPOT) for `model` at context length `seq`.
+pub fn decode_step(
+    model: &ModelConfig,
+    batch: usize,
+    seq: usize,
+    engine: Engine,
+    profile: &FrameworkProfile,
+    hw: &Hardware,
+    noc: &Noc,
+) -> StepEstimate {
+    let attn = attn_block_cost(model, batch, seq, engine, profile, hw, noc);
+    let ffn = ffn_cost(model, batch, hw, noc, profile.bw_eff_at(batch));
+    let head = lm_head_cost(model, batch, hw, noc);
+    let l = model.n_layers as f64;
+
+    let extra_per_layer = profile.kernels_per_layer_extra;
+    let extra_time = extra_per_layer as f64 * (hw.graph_kernel_launch + 0.5e-6);
+
+    let core = attn.latency * l;
+    let rest = (ffn.latency + extra_time) * l + head.latency;
+    let launches =
+        (attn.launches + ffn.launches + extra_per_layer) * model.n_layers + head.launches;
+    StepEstimate {
+        tpot: core + rest + profile.host_step_overhead,
+        core_modules: core,
+        rest,
+        host: profile.host_step_overhead,
+        launches,
+        hbm_bytes: (attn.hbm_bytes + ffn.hbm_bytes) * l + head.hbm_bytes,
+        dsmem_bytes: attn.dsmem_bytes * l,
+    }
+}
+
+/// Prefill estimate (compute-bound batched GEMMs over `prompt` tokens) —
+/// used only by the Fig. 2 latency-share analysis.
+pub fn prefill_time(model: &ModelConfig, prompt: usize, hw: &Hardware) -> f64 {
+    let params = model.param_count() as f64;
+    // 2 FLOPs per param per token + attention quadratic term
+    let flops = 2.0 * params * prompt as f64
+        + 2.0 * (model.n_layers * prompt * prompt * model.total_head_dim()) as f64;
+    // prefill achieves high MFU; weights read once
+    (flops / (hw.fp16_flops * 0.6)).max(hw.hbm_time(params * ELEM))
+}
+
+/// Fig. 2: fraction of total latency spent decoding when generating
+/// `gen_tokens` after a `prompt`-token prefill.
+pub fn decode_latency_share(
+    model: &ModelConfig,
+    prompt: usize,
+    gen_tokens: usize,
+    profile: &FrameworkProfile,
+    hw: &Hardware,
+    noc: &Noc,
+) -> f64 {
+    let pre = prefill_time(model, prompt, hw);
+    let mut dec = 0.0;
+    for t in 0..gen_tokens {
+        dec += decode_step(model, 1, prompt + t, Engine::BlockIsolated, profile, hw, noc).tpot;
+    }
+    dec / (pre + dec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Hardware, Noc) {
+        let hw = Hardware::h100_sxm5();
+        let noc = Noc::h100(&hw);
+        (hw, noc)
+    }
+
+    #[test]
+    fn clusterfusion_beats_all_baselines_on_llama() {
+        let (hw, noc) = env();
+        let m = ModelConfig::llama2_7b();
+        let cf = decode_step(
+            &m, 1, 4096,
+            Engine::ClusterFusion { cluster_size: 4 },
+            &FrameworkProfile::clusterfusion(), &hw, &noc,
+        );
+        for b in FrameworkProfile::baselines() {
+            let base = decode_step(&m, 1, 4096, Engine::BlockIsolated, &b, &hw, &noc);
+            let speedup = base.tpot / cf.tpot;
+            assert!(speedup > 1.0, "{}: {speedup}", b.name);
+            assert!(speedup < 4.0, "{}: implausible {speedup}", b.name);
+        }
+    }
+
+    #[test]
+    fn tpot_order_of_magnitude_sane() {
+        // Llama2-7B on H100 decodes in the ~5-20 ms/token range.
+        let (hw, noc) = env();
+        let m = ModelConfig::llama2_7b();
+        let e = decode_step(
+            &m, 1, 4096,
+            Engine::ClusterFusion { cluster_size: 4 },
+            &FrameworkProfile::clusterfusion(), &hw, &noc,
+        );
+        assert!(e.tpot > 2e-3 && e.tpot < 30e-3, "{}", e.tpot);
+    }
+
+    #[test]
+    fn decode_dominates_latency_fig2() {
+        // Paper Fig. 2: decoding > 95% of latency for 256 generated tokens.
+        let (hw, noc) = env();
+        let m = ModelConfig::llama2_7b();
+        let share =
+            decode_latency_share(&m, 256, 256, &FrameworkProfile::sglang(), &hw, &noc);
+        assert!(share > 0.95, "decode share {share}");
+    }
+
+    #[test]
+    fn ablation_dsmem_increases_tpot() {
+        // Fig. 13: disabling DSMEM raises TPOT, up to tens of percent.
+        let (hw, noc) = env();
+        let m = ModelConfig::llama2_7b();
+        let p = FrameworkProfile::clusterfusion();
+        let mut worst = 0.0f64;
+        for seq in [1024, 4096, 16384] {
+            let on = decode_step(&m, 1, seq, Engine::ClusterFusion { cluster_size: 4 }, &p, &hw, &noc);
+            let off = decode_step(
+                &m, 1, seq, Engine::ClusterFusionNoDsmem { cluster_size: 4 }, &p, &hw, &noc,
+            );
+            assert!(off.tpot > on.tpot, "seq {seq}");
+            worst = worst.max(off.tpot / on.tpot - 1.0);
+        }
+        assert!(worst > 0.05 && worst < 0.6, "ablation delta {worst}");
+    }
+
+    #[test]
+    fn launch_reduction_is_large() {
+        // Fig. 12 right: launch overhead cut by ~an order of magnitude.
+        let (hw, noc) = env();
+        let m = ModelConfig::llama2_7b();
+        let cf = decode_step(
+            &m, 1, 4096,
+            Engine::ClusterFusion { cluster_size: 4 },
+            &FrameworkProfile::clusterfusion(), &hw, &noc,
+        );
+        let base = decode_step(&m, 1, 4096, Engine::BlockIsolated, &FrameworkProfile::mlc_llm(), &hw, &noc);
+        assert!(base.launches as f64 / cf.launches as f64 > 2.0);
+    }
+
+    #[test]
+    fn multibatch_speedup_shrinks() {
+        // Appendix C: at batch 16 the speedup over baselines shrinks.
+        let (hw, noc) = env();
+        let m = ModelConfig::llama2_7b();
+        let speedup = |batch| {
+            let cf = decode_step(
+                &m, batch, 4096,
+                Engine::ClusterFusion { cluster_size: 4 },
+                &FrameworkProfile::clusterfusion(), &hw, &noc,
+            );
+            let sg = decode_step(&m, batch, 4096, Engine::BlockIsolated, &FrameworkProfile::sglang(), &hw, &noc);
+            sg.tpot / cf.tpot
+        };
+        assert!(speedup(16) < speedup(1), "bs16 {} !< bs1 {}", speedup(16), speedup(1));
+    }
+
+    #[test]
+    fn mla_engine_works_for_deepseek() {
+        let (hw, noc) = env();
+        let m = ModelConfig::deepseek_v2_lite();
+        let cf = decode_step(
+            &m, 1, 4096,
+            Engine::ClusterFusion { cluster_size: 4 },
+            &FrameworkProfile::clusterfusion(), &hw, &noc,
+        );
+        let sg = decode_step(&m, 1, 4096, Engine::BlockIsolated, &FrameworkProfile::sglang(), &hw, &noc);
+        assert!(sg.tpot / cf.tpot > 1.0);
+    }
+}

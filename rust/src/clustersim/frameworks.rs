@@ -1,0 +1,151 @@
+//! Baseline inference-framework profiles — paper §4 Baselines.
+//!
+//! The paper compares against SGLang 0.4.3, vLLM 0.6.4, TensorRT-LLM
+//! 0.18.0 and MLC-LLM 0.20.dev0, all with CUDA Graph enabled. All four run
+//! the *block-isolated* dataflow (§2.2); they differ in kernel quality and
+//! host-side overhead. Each profile has three calibrated parameters:
+//!
+//! * `bw_efficiency` — achieved fraction of HBM bandwidth on short bs=1
+//!   decode kernels (library GEMV/attention kernels do not reach the
+//!   hand-tuned fused kernel's utilisation);
+//! * `kernels_per_layer_extra` — auxiliary kernels per decoder layer
+//!   beyond the 4-kernel attention pipeline and the 5 FFN/norm kernels
+//!   (elementwise glue, rope, residual, quant/dequant...), driving the
+//!   Fig. 12-right launch-overhead gap;
+//! * `host_step_overhead` — per-decode-step scheduler/runtime cost on the
+//!   host that CUDA Graph does not remove.
+//!
+//! Values are calibrated so that the *ratios* of Figs. 17/18 reproduce;
+//! see EXPERIMENTS.md for measured-vs-paper numbers.
+
+
+/// A named baseline configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameworkProfile {
+    pub name: &'static str,
+    /// Achieved HBM fraction of the framework's decode kernels at batch 1
+    /// (GEMV regime, where library kernels are weakest).
+    pub bw_efficiency: f64,
+    /// Auxiliary kernel launches per decoder layer.
+    pub kernels_per_layer_extra: usize,
+    /// Host-side per-step overhead, seconds.
+    pub host_step_overhead: f64,
+    /// How much of the gap to peak library efficiency closes as batch
+    /// grows (1.0 = fully recovers by batch 16; the Appendix C effect that
+    /// shrinks ClusterFusion's edge at large batch).
+    pub batch_scaling: f64,
+}
+
+/// Library-kernel efficiency ceiling reached at large batch.
+pub const PEAK_LIBRARY_EFF: f64 = 0.82;
+
+impl FrameworkProfile {
+    pub fn sglang() -> Self {
+        Self {
+            name: "SGLang",
+            bw_efficiency: 0.56,
+            kernels_per_layer_extra: 4,
+            host_step_overhead: 45e-6,
+            batch_scaling: 1.0,
+        }
+    }
+
+    pub fn vllm() -> Self {
+        Self {
+            name: "vLLM",
+            bw_efficiency: 0.57,
+            kernels_per_layer_extra: 5,
+            host_step_overhead: 50e-6,
+            batch_scaling: 1.0,
+        }
+    }
+
+    pub fn tensorrt_llm() -> Self {
+        Self {
+            name: "TensorRT-LLM",
+            bw_efficiency: 0.55,
+            kernels_per_layer_extra: 3,
+            host_step_overhead: 30e-6,
+            batch_scaling: 1.0,
+        }
+    }
+
+    pub fn mlc_llm() -> Self {
+        Self {
+            name: "MLC-LLM",
+            bw_efficiency: 0.30,
+            kernels_per_layer_extra: 8,
+            host_step_overhead: 60e-6,
+            batch_scaling: 0.35,
+        }
+    }
+
+    /// The paper's system: the fused SplitToken/MLA kernel plus the same
+    /// CUTLASS/FlashInfer-grade FFN as the baselines (§3.2 last paragraph),
+    /// a thin C++-grade host loop, and almost no auxiliary kernels.
+    pub fn clusterfusion() -> Self {
+        Self {
+            name: "ClusterFusion",
+            bw_efficiency: 0.85,
+            kernels_per_layer_extra: 0,
+            host_step_overhead: 8e-6,
+            batch_scaling: 0.0, // already hand-tuned at batch 1
+        }
+    }
+
+    /// Achieved bandwidth fraction at a given batch size: GEMV-regime
+    /// `bw_efficiency` at batch 1, closing toward [`PEAK_LIBRARY_EFF`] as
+    /// the batch grows (GEMM regime).
+    pub fn bw_eff_at(&self, batch: usize) -> f64 {
+        let frac = ((batch.saturating_sub(1)) as f64 / 15.0).min(1.0) * self.batch_scaling;
+        let peak = PEAK_LIBRARY_EFF.max(self.bw_efficiency);
+        self.bw_efficiency + (peak - self.bw_efficiency) * frac
+    }
+
+    pub fn baselines() -> Vec<Self> {
+        vec![Self::sglang(), Self::vllm(), Self::tensorrt_llm(), Self::mlc_llm()]
+    }
+
+    pub fn all() -> Vec<Self> {
+        let mut v = Self::baselines();
+        v.push(Self::clusterfusion());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusterfusion_has_best_efficiency_and_fewest_kernels() {
+        let cf = FrameworkProfile::clusterfusion();
+        for b in FrameworkProfile::baselines() {
+            assert!(cf.bw_efficiency > b.bw_efficiency, "{}", b.name);
+            assert!(cf.kernels_per_layer_extra < b.kernels_per_layer_extra + 1);
+            assert!(cf.host_step_overhead < b.host_step_overhead);
+        }
+    }
+
+    #[test]
+    fn batch16_closes_most_of_the_gap() {
+        // Appendix C: baseline kernels reach GEMM-grade efficiency at
+        // batch 16, shrinking ClusterFusion's edge.
+        let sg = FrameworkProfile::sglang();
+        assert!(sg.bw_eff_at(1) < 0.6);
+        assert!(sg.bw_eff_at(16) > 0.8);
+        let mlc = FrameworkProfile::mlc_llm();
+        assert!(mlc.bw_eff_at(16) < 0.55, "MLC stays well below peak");
+        let cf = FrameworkProfile::clusterfusion();
+        assert_eq!(cf.bw_eff_at(16), cf.bw_eff_at(1));
+    }
+
+    #[test]
+    fn mlc_is_the_weakest_baseline() {
+        // Fig. 17/18: MLC-LLM trails the other baselines by ~2x.
+        let mlc = FrameworkProfile::mlc_llm();
+        for b in [FrameworkProfile::sglang(), FrameworkProfile::vllm(), FrameworkProfile::tensorrt_llm()] {
+            assert!(mlc.bw_efficiency < b.bw_efficiency);
+        }
+    }
+}

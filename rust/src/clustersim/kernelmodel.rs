@@ -1,0 +1,124 @@
+//! Per-kernel roofline cost model.
+//!
+//! Decode-phase kernels are scored as
+//! `launch + max(compute_time, memory_time) + boundary_sync`, the standard
+//! decode-latency decomposition: auto-regressive decoding is memory-bound
+//! (§2.1), so HBM bytes dominate, but the compute term matters at large
+//! batch (Appendix C: "overall computation intensity increases
+//! significantly with larger batch sizes, leading to a reduced speedup").
+//!
+//! Occupancy: a kernel that can only use `active_sms` of the device's SMs
+//! (clusters gang-schedule, Fig. 5 right) achieves a proportional fraction
+//! of both peak bandwidth and peak compute.
+
+
+use super::hw::Hardware;
+
+/// Resource footprint of one kernel launch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KernelSpec {
+    /// Floating-point operations executed.
+    pub flops: f64,
+    /// Bytes read from + written to HBM.
+    pub hbm_bytes: f64,
+    /// Fraction of device SMs this kernel can occupy (0, 1].
+    pub sm_fraction: f64,
+    /// Whether the launch is a CUDA-graph replay node (cheap) or raw.
+    pub graph_launch: bool,
+}
+
+impl KernelSpec {
+    pub fn new(flops: f64, hbm_bytes: f64) -> Self {
+        Self { flops, hbm_bytes, sm_fraction: 1.0, graph_launch: true }
+    }
+
+    pub fn with_sm_fraction(mut self, f: f64) -> Self {
+        assert!(f > 0.0 && f <= 1.0);
+        self.sm_fraction = f;
+        self
+    }
+}
+
+/// Cost breakdown of one kernel execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KernelCost {
+    pub launch: f64,
+    pub compute: f64,
+    pub memory: f64,
+    pub sync: f64,
+}
+
+impl KernelCost {
+    /// Wall-clock seconds: launch + roofline max + boundary sync.
+    pub fn total(&self) -> f64 {
+        self.launch + self.compute.max(self.memory) + self.sync
+    }
+
+    /// Whether HBM bandwidth (not compute) bounds this kernel.
+    pub fn memory_bound(&self) -> bool {
+        self.memory >= self.compute
+    }
+}
+
+/// Evaluate a kernel on the hardware model.
+pub fn kernel_cost(spec: &KernelSpec, hw: &Hardware) -> KernelCost {
+    let frac = spec.sm_fraction;
+    KernelCost {
+        launch: if spec.graph_launch { hw.graph_kernel_launch } else { hw.raw_kernel_launch },
+        compute: hw.compute_time(spec.flops) / frac,
+        memory: hw.hbm_time(spec.hbm_bytes) / frac + hw.gmem_latency(),
+        sync: hw.kernel_boundary_sync,
+    }
+}
+
+/// Aggregate cost of a *sequence* of dependent kernels (one stream): each
+/// kernel pays its own launch and boundary sync — this is exactly the
+/// fragmentation the paper's fusion removes.
+pub fn pipeline_cost(specs: &[KernelSpec], hw: &Hardware) -> (f64, usize) {
+    let total = specs.iter().map(|s| kernel_cost(s, hw).total()).sum();
+    (total, specs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_gemv_is_memory_bound() {
+        // bs=1 hidden-proj GEMV: 2*D*H flops, (D*H)*2 bytes of weights.
+        let hw = Hardware::h100_sxm5();
+        let d = 4096.0;
+        let spec = KernelSpec::new(2.0 * d * d, d * d * 2.0);
+        let c = kernel_cost(&spec, &hw);
+        assert!(c.memory_bound());
+    }
+
+    #[test]
+    fn large_batch_becomes_compute_heavier() {
+        let hw = Hardware::h100_sxm5();
+        let d = 4096.0;
+        let bytes = d * d * 2.0; // weights read once regardless of batch
+        let c1 = kernel_cost(&KernelSpec::new(2.0 * d * d, bytes), &hw);
+        let c256 = kernel_cost(&KernelSpec::new(256.0 * 2.0 * d * d, bytes), &hw);
+        assert!(c256.compute / c256.memory > 10.0 * (c1.compute / c1.memory));
+    }
+
+    #[test]
+    fn fewer_kernels_fewer_overheads() {
+        let hw = Hardware::h100_sxm5();
+        let one = vec![KernelSpec::new(1e9, 1e6)];
+        let four = vec![KernelSpec::new(0.25e9, 0.25e6); 4];
+        let (t1, n1) = pipeline_cost(&one, &hw);
+        let (t4, n4) = pipeline_cost(&four, &hw);
+        assert_eq!((n1, n4), (1, 4));
+        assert!(t4 > t1, "fragmentation must cost: {t4} vs {t1}");
+    }
+
+    #[test]
+    fn reduced_occupancy_slows_kernel() {
+        let hw = Hardware::h100_sxm5();
+        let full = kernel_cost(&KernelSpec::new(1e9, 1e8), &hw);
+        let half = kernel_cost(&KernelSpec::new(1e9, 1e8).with_sm_fraction(0.5), &hw);
+        assert!(half.total() > full.total());
+    }
+}

@@ -1,0 +1,33 @@
+//! # clustersim — the H100 substitute substrate
+//!
+//! The paper's system is a CUDA execution framework exploiting NVIDIA
+//! Hopper thread-block clusters and distributed shared memory (DSMEM).
+//! That hardware is not available here, so — per the substitution rule in
+//! DESIGN.md §2 — this module rebuilds the relevant machine as a simulator
+//! with two coupled facets:
+//!
+//! * a **functional** facet: the cluster-level collective primitives
+//!   (paper Algs. 1–2) and every dataflow variant (Algs. 3–5) are executed
+//!   for real over per-thread-block buffers, so their numerics can be
+//!   checked against a plain reference implementation; and
+//! * a **performance** facet: an analytical cost model of the H100
+//!   (SMs, the SM-to-SM crossbar NoC of Fig. 5, HBM, kernel-launch
+//!   overhead) that reproduces the *shape* of every latency/traffic result
+//!   in the paper's evaluation.
+//!
+//! The two facets share the same schedule: the cost model charges exactly
+//! the rounds/messages the functional collectives perform.
+
+pub mod collective;
+pub mod dataflow;
+pub mod e2e;
+pub mod frameworks;
+pub mod hw;
+pub mod kernelmodel;
+pub mod noc;
+pub mod scope;
+pub mod traffic;
+
+pub use collective::{cluster_gather, cluster_reduce, CollectiveCost, ReduceOp};
+pub use hw::Hardware;
+pub use noc::Noc;

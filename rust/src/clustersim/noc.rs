@@ -1,0 +1,136 @@
+//! SM-to-SM Network-on-Chip (DSMEM) model — paper §2.3 / Fig. 5.
+//!
+//! The paper profiles three quantities as a function of cluster size N on
+//! an H100 and bases the whole dataflow design on their trade-off:
+//!
+//! * **latency** — improves dramatically for small clusters (190 cycles at
+//!   N = 2, far below the > 470-cycle global-memory latency) and degrades
+//!   as the crossbar spans more SMs;
+//! * **bandwidth** — *decreases* with N because of the crossbar
+//!   architecture, slightly lagging HBM at N = 16 (2.90 vs 2.96 TB/s);
+//! * **active SMs** — drops at larger N due to scheduling granularity
+//!   (clusters are gang-scheduled on GPCs), reducing parallelism.
+//!
+//! The anchor points below interpolate the paper's reported values; the
+//! curves are monotone in the directions Fig. 5 shows. N must be a power
+//! of two ≤ 16 (hardware maximum, paper §3.1).
+
+
+use super::hw::Hardware;
+
+/// Crossbar NoC characteristics per cluster size.
+#[derive(Debug, Clone)]
+pub struct Noc {
+    /// (cluster_size, latency_cycles, aggregate_bw_bytes_per_s, active_sms)
+    /// anchor table; queried by exact cluster size.
+    anchors: Vec<(usize, f64, f64, usize)>,
+    clock_ghz: f64,
+}
+
+impl Noc {
+    /// H100 calibration. Latency: 190 cy @ N=2 (paper), rising with N.
+    /// Bandwidth: 2.90 TB/s @ N=16 (paper), higher for smaller N.
+    /// Active SMs: 132 total, gang-scheduling costs capacity at large N.
+    pub fn h100(hw: &Hardware) -> Self {
+        Self {
+            anchors: vec![
+                // N     lat_cycles   agg_bw        active SMs
+                (1, 29.0, 4.80e12, 132), // intra-SM shared memory
+                (2, 190.0, 3.90e12, 132),
+                (4, 235.0, 3.55e12, 128),
+                (8, 300.0, 3.20e12, 120),
+                (16, 370.0, 2.90e12, 96),
+            ],
+            clock_ghz: hw.clock_ghz,
+        }
+    }
+
+    fn anchor(&self, n: usize) -> &(usize, f64, f64, usize) {
+        self.anchors
+            .iter()
+            .find(|a| a.0 == n)
+            .unwrap_or_else(|| panic!("cluster size {n} not a power of two in 1..=16"))
+    }
+
+    /// SM-to-SM access latency in cycles for cluster size `n`.
+    pub fn latency_cycles(&self, n: usize) -> f64 {
+        self.anchor(n).1
+    }
+
+    /// SM-to-SM access latency in seconds.
+    pub fn latency(&self, n: usize) -> f64 {
+        self.latency_cycles(n) / (self.clock_ghz * 1e9)
+    }
+
+    /// Aggregate DSMEM bandwidth (bytes/s) available to a cluster of `n`.
+    pub fn bandwidth(&self, n: usize) -> f64 {
+        self.anchor(n).2
+    }
+
+    /// Number of SMs that remain schedulable device-wide when every block
+    /// runs in a cluster of size `n`.
+    pub fn active_sms(&self, n: usize) -> usize {
+        self.anchor(n).3
+    }
+
+    /// Valid cluster sizes (powers of two up to the Hopper max of 16).
+    pub fn cluster_sizes() -> [usize; 5] {
+        [1, 2, 4, 8, 16]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noc() -> Noc {
+        Noc::h100(&Hardware::h100_sxm5())
+    }
+
+    #[test]
+    fn latency_monotone_increasing_with_cluster_size() {
+        let n = noc();
+        let mut prev = 0.0;
+        for s in Noc::cluster_sizes() {
+            let l = n.latency_cycles(s);
+            assert!(l > prev, "latency must grow with cluster size");
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn paper_anchor_points() {
+        let hw = Hardware::h100_sxm5();
+        let n = noc();
+        // 190 cycles @ N=2, below gmem latency (paper §2.3)
+        assert_eq!(n.latency_cycles(2), 190.0);
+        assert!(n.latency_cycles(2) < hw.gmem_latency_cycles);
+        // 2.90 TB/s @ N=16, slightly lagging HBM's 2.96 TB/s
+        assert_eq!(n.bandwidth(16), 2.90e12);
+        assert!(n.bandwidth(16) < hw.hbm_bw);
+    }
+
+    #[test]
+    fn bandwidth_monotone_decreasing() {
+        let n = noc();
+        let mut prev = f64::INFINITY;
+        for s in Noc::cluster_sizes() {
+            let b = n.bandwidth(s);
+            assert!(b < prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn active_sms_shrink() {
+        let n = noc();
+        assert_eq!(n.active_sms(1), 132);
+        assert!(n.active_sms(16) < n.active_sms(4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_cluster_size_panics() {
+        noc().latency_cycles(3);
+    }
+}

@@ -1,0 +1,126 @@
+//! Analytical DSMEM-traffic model — paper §3.2 and Appendix B.
+//!
+//! The paper ranks dataflow variants by their total DSMEM traffic:
+//!
+//! ```text
+//! Traffic_Reduce(size, N) = size · log2(N) · N
+//! Traffic_Gather(size, N) = size · (2^(log2(N/2)+1) − 1) · N = size · (N−1) · N
+//! ```
+//!
+//! and per dataflow (h = H/N per-block head slice, H total head dim,
+//! l = kv_lora_rank slice, L total rank, S sequence length, D model dim —
+//! all in *bytes* here):
+//!
+//! * SplitToken (Alg. 3):  Reduce(H) + Gather(3h)
+//! * SplitHead  (Alg. 5):  Reduce(S) + Reduce(D)
+//! * Fused MLA  (Alg. 4):  Gather(h) + 2·Gather(l) + Reduce(l) + Reduce(L→H)
+//!
+//! These closed forms are unit-tested against the executed collectives in
+//! [`super::collective`], which is the point: the analytical model and the
+//! functional simulator must agree round for round.
+
+/// Bytes moved over DSMEM by one ClusterReduce of a `size`-byte buffer.
+pub fn traffic_reduce(size: f64, n: usize) -> f64 {
+    assert!(n.is_power_of_two() && n >= 1);
+    size * (n.trailing_zeros() as f64) * n as f64
+}
+
+/// Bytes moved over DSMEM by one ClusterGather with `size`-byte segments.
+pub fn traffic_gather(size: f64, n: usize) -> f64 {
+    assert!(n.is_power_of_two() && n >= 1);
+    size * (n as f64 - 1.0) * n as f64
+}
+
+/// Total DSMEM traffic of the SplitToken dataflow (paper Alg. 3) for one
+/// head-cluster: gather of per-block Q/K/V segments (3h bytes each) plus
+/// reduce of the attention output (H bytes). Softmax statistics (two
+/// floats) are omitted exactly as the paper does.
+pub fn split_token_traffic(total_head_bytes: f64, n: usize) -> f64 {
+    let h = total_head_bytes / n as f64;
+    traffic_reduce(total_head_bytes, n) + traffic_gather(3.0 * h, n)
+}
+
+/// Total DSMEM traffic of the SplitHead dataflow (paper Alg. 5):
+/// reduce of the S-length score row plus reduce of the D-dim output.
+pub fn split_head_traffic(seq_bytes: f64, d_model_bytes: f64, n: usize) -> f64 {
+    traffic_reduce(seq_bytes, n) + traffic_reduce(d_model_bytes, n)
+}
+
+/// Total DSMEM traffic of the fused MLA dataflow (paper Alg. 4, App. B.1):
+/// Gather(h) + 2·Gather(l) for the projections, Reduce(l) + Reduce(H) for
+/// the attention output and down projection.
+pub fn mla_traffic(head_bytes: f64, lora_bytes: f64, total_head_bytes: f64, n: usize) -> f64 {
+    let h = head_bytes / n as f64;
+    let l = lora_bytes / n as f64;
+    traffic_gather(h, n)
+        + 2.0 * traffic_gather(l, n)
+        + traffic_reduce(l, n)
+        + traffic_reduce(total_head_bytes, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustersim::collective::{
+        cluster_gather, cluster_reduce, ReduceOp, Transport,
+    };
+    use crate::clustersim::{Hardware, Noc};
+
+    #[test]
+    fn closed_forms_match_executed_collectives() {
+        let hw = Hardware::h100_sxm5();
+        let noc = Noc::h100(&hw);
+        for n in [2usize, 4, 8, 16] {
+            let floats = 96usize;
+            let bytes = (floats * 4) as f64;
+            let mut blocks = vec![vec![1.0f32; floats]; n];
+            let rc = cluster_reduce(&mut blocks, ReduceOp::Sum, Transport::Dsmem, &hw, &noc);
+            assert_eq!(rc.traffic_bytes, traffic_reduce(bytes, n));
+            let blocks = vec![vec![1.0f32; floats]; n];
+            let (_, gc) = cluster_gather(&blocks, Transport::Dsmem, &hw, &noc);
+            assert_eq!(gc.traffic_bytes, traffic_gather(bytes, n));
+        }
+    }
+
+    #[test]
+    fn split_token_beats_split_head_at_long_seq() {
+        // The paper's Appendix B conclusion: SplitHead traffic is dominated
+        // by S and loses at long sequences.
+        let n = 4;
+        let h_total = 128.0 * 2.0; // one head's dim in bytes (fp16)
+        let d_model = 4096.0 * 2.0;
+        for seq in [4096.0, 16384.0] {
+            let st = split_token_traffic(h_total, n);
+            let sh = split_head_traffic(seq * 2.0, d_model, n);
+            assert!(st < sh, "seq={seq}: {st} !< {sh}");
+        }
+    }
+
+    #[test]
+    fn split_head_traffic_grows_with_seq() {
+        // Paper Fig. 20 / App. B.2: SplitHead's DSMEM traffic is dominated
+        // by the S-sized score reduce, so it grows ~linearly in S while
+        // SplitToken's stays constant.
+        let n = 4;
+        let d_model = 4096.0 * 2.0;
+        let sh_small = split_head_traffic(128.0 * 2.0, d_model, n);
+        let sh_large = split_head_traffic(16384.0 * 2.0, d_model, n);
+        assert!(sh_large > 3.0 * sh_small, "{sh_large} vs {sh_small}");
+        let st = split_token_traffic(128.0 * 2.0, n);
+        assert_eq!(st, split_token_traffic(128.0 * 2.0, n)); // S-independent
+    }
+
+    #[test]
+    fn traffic_zero_for_single_block() {
+        assert_eq!(traffic_reduce(1024.0, 1), 0.0);
+        assert_eq!(traffic_gather(1024.0, 1), 0.0);
+    }
+
+    #[test]
+    fn mla_traffic_scales_with_rank() {
+        let n = 4;
+        let t_small = mla_traffic(128.0, 256.0, 2048.0, n);
+        let t_big = mla_traffic(128.0, 1024.0, 2048.0, n);
+        assert!(t_big > t_small);
+    }
+}

@@ -1,0 +1,188 @@
+//! Continuous batcher: admission control + per-step batch composition.
+//!
+//! vLLM/Orca-style iteration-level scheduling: every decode step the
+//! batcher re-derives the running set — finished sequences leave, queued
+//! requests join as long as (a) a batch-bucket slot is free and (b) the
+//! paged KV pool can hold their worst-case footprint. The engine executes
+//! whichever AOT batch bucket is the smallest that fits the running set.
+
+use std::collections::VecDeque;
+
+use super::kv_cache::KvPool;
+use super::request::{Request, RequestId};
+
+/// Admission + batch composition policy.
+#[derive(Debug)]
+pub struct Batcher {
+    /// Available AOT batch buckets, ascending (e.g. [1, 4, 8]).
+    buckets: Vec<usize>,
+    waiting: VecDeque<Request>,
+    running: Vec<RequestId>,
+    /// Admission headroom: fraction of a request's worst-case pages that
+    /// must be free to admit it (1.0 = fully conservative).
+    admit_fraction: f64,
+}
+
+impl Batcher {
+    pub fn new(mut buckets: Vec<usize>, admit_fraction: f64) -> Self {
+        assert!(!buckets.is_empty(), "need at least one batch bucket");
+        assert!(admit_fraction > 0.0 && admit_fraction <= 1.0);
+        buckets.sort_unstable();
+        buckets.dedup();
+        Self { buckets, waiting: VecDeque::new(), running: Vec::new(), admit_fraction }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket that fits `n` live sequences.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running(&self) -> &[RequestId] {
+        &self.running
+    }
+
+    /// Remove a finished/preempted id from the running set.
+    pub fn release(&mut self, id: RequestId) {
+        self.running.retain(|&r| r != id);
+    }
+
+    /// Put a preempted request back at the *front* of the queue (it
+    /// re-prefills from scratch — FCFS without starvation).
+    pub fn requeue_front(&mut self, req: Request) {
+        self.waiting.push_front(req);
+    }
+
+    /// Admit queued requests while capacity allows; returns newly admitted
+    /// requests (caller must alloc_seq + start prefill).
+    pub fn admit(&mut self, pool: &KvPool) -> Vec<Request> {
+        let mut admitted = Vec::new();
+        let mut reserved = 0usize; // pages promised to requests admitted now
+        while self.running.len() < self.max_batch() {
+            let Some(front) = self.waiting.front() else { break };
+            let worst_pages = pool.pages_for(front.max_total_len());
+            let need = ((worst_pages as f64) * self.admit_fraction).ceil() as usize;
+            if pool.free_pages() < reserved + need.max(1) {
+                break; // FCFS: do not skip ahead of the blocked head
+            }
+            let req = self.waiting.pop_front().unwrap();
+            reserved += need.max(1);
+            self.running.push(req.id);
+            admitted.push(req);
+        }
+        admitted
+    }
+
+    /// True when nothing is queued or running.
+    pub fn idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kv_cache::CacheGeometry;
+    use crate::util::rng::Rng;
+
+    fn pool(pages: usize) -> KvPool {
+        KvPool::new(
+            CacheGeometry { n_layers: 1, row_elems: 2, planes: 2, max_seq: 64 },
+            4,
+            pages,
+        )
+    }
+
+    fn req(id: u64, prompt: usize, gen: usize) -> Request {
+        Request::new(id, vec![1; prompt], gen)
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let b = Batcher::new(vec![8, 1, 4], 1.0);
+        assert_eq!(b.bucket_for(1), Some(1));
+        assert_eq!(b.bucket_for(2), Some(4));
+        assert_eq!(b.bucket_for(5), Some(8));
+        assert_eq!(b.bucket_for(9), None);
+        assert_eq!(b.max_batch(), 8);
+    }
+
+    #[test]
+    fn admits_up_to_bucket_and_capacity() {
+        let mut b = Batcher::new(vec![1, 4], 1.0);
+        let p = pool(6); // 24 token slots
+        for i in 0..6 {
+            b.submit(req(i, 4, 4)); // 8 tokens = 2 pages each
+        }
+        let admitted = b.admit(&p);
+        // capacity: 6 pages / 2 per req = 3 admitted (bucket would allow 4)
+        assert_eq!(admitted.len(), 3);
+        assert_eq!(b.running().len(), 3);
+        assert_eq!(b.queued(), 3);
+    }
+
+    #[test]
+    fn fcfs_head_blocks_queue() {
+        let mut b = Batcher::new(vec![4], 1.0);
+        let p = pool(2); // 8 token slots
+        b.submit(req(1, 30, 10)); // 10 pages — can never fit
+        b.submit(req(2, 2, 2)); // would fit, but FCFS must not bypass
+        assert!(b.admit(&p).is_empty());
+        assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn release_and_requeue() {
+        let mut b = Batcher::new(vec![2], 1.0);
+        let p = pool(16);
+        b.submit(req(1, 2, 2));
+        b.submit(req(2, 2, 2));
+        b.submit(req(3, 2, 2));
+        assert_eq!(b.admit(&p).len(), 2);
+        b.release(1);
+        assert_eq!(b.running(), &[2]);
+        b.requeue_front(req(1, 2, 2));
+        let again = b.admit(&p);
+        assert_eq!(again[0].id, 1, "preempted request resumes first");
+    }
+
+    #[test]
+    fn property_running_never_exceeds_max_batch_nor_duplicates() {
+        let mut rng = Rng::seed_from_u64(5);
+        let mut b = Batcher::new(vec![1, 2, 4], 0.5);
+        let p = pool(32);
+        let mut next = 0u64;
+        for _ in 0..300 {
+            match rng.below(3) {
+                0 => {
+                    next += 1;
+                    b.submit(req(next, 1 + rng.below(6), 1 + rng.below(6)));
+                }
+                1 => {
+                    let _ = b.admit(&p);
+                }
+                _ => {
+                    if let Some(&id) = b.running().first() {
+                        b.release(id);
+                    }
+                }
+            }
+            assert!(b.running().len() <= b.max_batch());
+            let mut ids: Vec<_> = b.running().to_vec();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), b.running().len(), "duplicate running id");
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Serving configuration: defaults, a simple `key = value` config-file
+//! format (offline build — no TOML dependency), and CLI-style overrides.
+//!
+//! ```text
+//! # serve.conf
+//! model = tiny-llama-100m
+//! artifacts = artifacts
+//! pool_pages = 256
+//! page_tokens = 16
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Engine + server configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    pub model: String,
+    pub artifacts: String,
+    /// KV pool capacity in pages.
+    pub pool_pages: usize,
+    /// Tokens per KV page.
+    pub page_tokens: usize,
+    /// Admission headroom fraction (see `Batcher`).
+    pub admit_fraction: f64,
+    /// Parameter RNG seed.
+    pub seed: u64,
+    /// Router queue bound per replica.
+    pub max_queue: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            model: "tiny-llama-100m".into(),
+            artifacts: "artifacts".into(),
+            pool_pages: 256,
+            page_tokens: 16,
+            admit_fraction: 0.5,
+            seed: 0,
+            max_queue: 1024,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply one `key = value` assignment (config file line or CLI
+    /// `--set key=value`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "model" => self.model = v.into(),
+            "artifacts" => self.artifacts = v.into(),
+            "pool_pages" => self.pool_pages = v.parse().context("pool_pages")?,
+            "page_tokens" => self.page_tokens = v.parse().context("page_tokens")?,
+            "admit_fraction" => self.admit_fraction = v.parse().context("admit_fraction")?,
+            "seed" => self.seed = v.parse().context("seed")?,
+            "max_queue" => self.max_queue = v.parse().context("max_queue")?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: `key = value` lines, `#` comments, blank lines.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let mut cfg = Self::default();
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        cfg.apply_text(&text)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_text(&mut self, text: &str) -> Result<()> {
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            self.set(k, v).with_context(|| format!("line {}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.pool_pages > 0, "pool_pages must be positive");
+        anyhow::ensure!(self.page_tokens > 0, "page_tokens must be positive");
+        anyhow::ensure!(
+            self.admit_fraction > 0.0 && self.admit_fraction <= 1.0,
+            "admit_fraction in (0, 1]"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_config_text() {
+        let mut c = ServeConfig::default();
+        c.apply_text(
+            "# demo\nmodel = tiny-mla-100m\npool_pages=64 # inline comment\n\npage_tokens = 8\n",
+        )
+        .unwrap();
+        assert_eq!(c.model, "tiny-mla-100m");
+        assert_eq!(c.pool_pages, 64);
+        assert_eq!(c.page_tokens, 8);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_lines() {
+        let mut c = ServeConfig::default();
+        assert!(c.apply_text("nope = 3").is_err());
+        assert!(c.apply_text("just-a-word").is_err());
+        assert!(c.set("pool_pages", "not-a-number").is_err());
+    }
+
+    #[test]
+    fn validate_bounds() {
+        let mut c = ServeConfig::default();
+        c.admit_fraction = 1.5;
+        assert!(c.validate().is_err());
+        c.admit_fraction = 0.5;
+        c.pool_pages = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,397 @@
+//! Paged KV-cache manager (vLLM-style, host-authoritative).
+//!
+//! The serving engine keeps the KV cache on the host in fixed-size pages
+//! so the continuous batcher can recompose batches between steps; each
+//! step the engine gathers the active sequences' pages into the padded
+//! dense cache tensors the AOT executable expects, and appends the new
+//! per-layer rows the device returns (see `python/compile/aot.py`,
+//! `serving=True` interface).
+//!
+//! Page layout: `[layer][plane][slot][row_elems]` — token-major *within*
+//! each (layer, plane), so gathering a page into the dense `(L, B, S, re)`
+//! executable layout is a handful of large contiguous memcpys per page
+//! (the §Perf fix that took gather_batch from ~155 ms to the low
+//! milliseconds; see EXPERIMENTS.md §Perf).
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Sequence identifier (the coordinator uses request ids).
+pub type SeqId = u64;
+
+/// Per-model geometry the pool needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheGeometry {
+    pub n_layers: usize,
+    /// Elements of one token's cache row in one layer for one of the K/V
+    /// planes: nh*dh for MHA; r (latent) for MLA.
+    pub row_elems: usize,
+    /// K and V planes for MHA (2); single latent plane for MLA (1).
+    pub planes: usize,
+    /// Model context limit (padded dense-cache S).
+    pub max_seq: usize,
+}
+
+impl CacheGeometry {
+    /// Elements one token occupies across all layers and planes.
+    pub fn token_elems(&self) -> usize {
+        self.n_layers * self.planes * self.row_elems
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct SeqEntry {
+    pages: Vec<usize>,
+    len: usize,
+}
+
+/// Fixed-capacity paged pool.
+#[derive(Debug)]
+pub struct KvPool {
+    geom: CacheGeometry,
+    page_tokens: usize,
+    data: Vec<f32>,
+    free: Vec<usize>,
+    seqs: HashMap<SeqId, SeqEntry>,
+    n_pages: usize,
+}
+
+impl KvPool {
+    pub fn new(geom: CacheGeometry, page_tokens: usize, n_pages: usize) -> Self {
+        assert!(page_tokens > 0 && n_pages > 0);
+        let page_elems = page_tokens * geom.token_elems();
+        Self {
+            geom,
+            page_tokens,
+            data: vec![0.0; page_elems * n_pages],
+            free: (0..n_pages).rev().collect(),
+            seqs: HashMap::new(),
+            n_pages,
+        }
+    }
+
+    pub fn geometry(&self) -> CacheGeometry {
+        self.geom
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.n_pages - self.free.len()
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.len)
+    }
+
+    pub fn contains(&self, id: SeqId) -> bool {
+        self.seqs.contains_key(&id)
+    }
+
+    /// Pages needed to hold `tokens`.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Register a new (empty) sequence.
+    pub fn alloc_seq(&mut self, id: SeqId) -> Result<()> {
+        if self.seqs.contains_key(&id) {
+            bail!("sequence {id} already allocated");
+        }
+        self.seqs.insert(id, SeqEntry::default());
+        Ok(())
+    }
+
+    /// Release a sequence and all its pages.
+    pub fn free_seq(&mut self, id: SeqId) {
+        if let Some(e) = self.seqs.remove(&id) {
+            self.free.extend(e.pages);
+        }
+    }
+
+    /// Will the next append to `id` require a fresh page?
+    pub fn needs_new_page(&self, id: SeqId) -> bool {
+        match self.seqs.get(&id) {
+            Some(e) => e.len == e.pages.len() * self.page_tokens,
+            None => false,
+        }
+    }
+
+    /// Can one more token be appended to `id` without allocation failure?
+    pub fn can_append(&self, id: SeqId) -> bool {
+        match self.seqs.get(&id) {
+            Some(e) => {
+                e.len < self.geom.max_seq
+                    && (e.len < e.pages.len() * self.page_tokens || !self.free.is_empty())
+            }
+            None => false,
+        }
+    }
+
+    fn page_elems(&self) -> usize {
+        self.page_tokens * self.geom.token_elems()
+    }
+
+    /// Append one token's rows for every (layer, plane).
+    ///
+    /// `rows[plane]` must be laid out `(n_layers, row_elems)` — exactly the
+    /// `k_new` / `v_new` (or `kv_new`) row of one batch slot as returned by
+    /// the serving executable.
+    pub fn append(&mut self, id: SeqId, rows: &[&[f32]]) -> Result<()> {
+        let g = self.geom;
+        anyhow::ensure!(rows.len() == g.planes, "expected {} planes", g.planes);
+        for r in rows {
+            anyhow::ensure!(r.len() == g.n_layers * g.row_elems, "bad row length");
+        }
+        let page_elems = self.page_elems();
+        let page_tokens = self.page_tokens;
+        let entry = self.seqs.get_mut(&id).ok_or_else(|| anyhow::anyhow!("unknown seq {id}"))?;
+        if entry.len >= g.max_seq {
+            bail!("sequence {id} at max_seq {}", g.max_seq);
+        }
+        if entry.len == entry.pages.len() * page_tokens {
+            let page = self.free.pop().ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
+            entry.pages.push(page);
+        }
+        let t = entry.len;
+        let page = entry.pages[t / page_tokens];
+        let slot = t % page_tokens;
+        // page layout: [layer][plane][slot][re]
+        for (plane, row) in rows.iter().enumerate() {
+            for l in 0..g.n_layers {
+                let dst = page * page_elems
+                    + ((l * g.planes + plane) * page_tokens + slot) * g.row_elems;
+                let src = &row[l * g.row_elems..(l + 1) * g.row_elems];
+                self.data[dst..dst + g.row_elems].copy_from_slice(src);
+            }
+        }
+        entry.len += 1;
+        Ok(())
+    }
+
+    /// Gather a batch of sequences into dense padded cache tensors shaped
+    /// `(L, B, S, row_elems)` per plane (the AOT executable's layout).
+    /// Allocates fresh zeroed buffers; the engine hot path uses
+    /// [`Self::gather_batch_into`] with persistent buffers instead.
+    pub fn gather_batch(&self, seq_ids: &[SeqId], batch: usize) -> Result<Vec<Vec<f32>>> {
+        let g = self.geom;
+        let mut planes =
+            vec![vec![0.0f32; g.n_layers * batch * g.max_seq * g.row_elems]; g.planes];
+        self.gather_batch_into(seq_ids, batch, &mut planes)?;
+        Ok(planes)
+    }
+
+    /// Gather into caller-owned buffers without zeroing.
+    ///
+    /// Padding slots and positions >= the sequence length are left with
+    /// whatever they contained — sound because the fused kernels mask all
+    /// cache positions >= pos[b], and every value ever written is finite.
+    /// Copies are contiguous (page_tokens * row_elems) runs thanks to the
+    /// page layout.
+    pub fn gather_batch_into(
+        &self,
+        seq_ids: &[SeqId],
+        batch: usize,
+        planes: &mut [Vec<f32>],
+    ) -> Result<()> {
+        let g = self.geom;
+        anyhow::ensure!(seq_ids.len() <= batch, "batch overflow");
+        anyhow::ensure!(planes.len() == g.planes, "plane count");
+        let (l_, s, re) = (g.n_layers, g.max_seq, g.row_elems);
+        for p in planes.iter() {
+            anyhow::ensure!(p.len() == l_ * batch * s * re, "plane buffer size");
+        }
+        let page_elems = self.page_elems();
+        let pt = self.page_tokens;
+        for (b, id) in seq_ids.iter().enumerate() {
+            let entry = self.seqs.get(id).ok_or_else(|| anyhow::anyhow!("unknown seq {id}"))?;
+            for (pi, &page) in entry.pages.iter().enumerate() {
+                let tok0 = pi * pt;
+                let ntok = (entry.len - tok0).min(pt);
+                if ntok == 0 {
+                    break;
+                }
+                for (plane, dst) in planes.iter_mut().enumerate() {
+                    for l in 0..l_ {
+                        let src = page * page_elems + ((l * g.planes + plane) * pt) * re;
+                        let d = ((l * batch + b) * s + tok0) * re;
+                        dst[d..d + ntok * re]
+                            .copy_from_slice(&self.data[src..src + ntok * re]);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read back one token's row (for tests / debugging).
+    pub fn peek(&self, id: SeqId, token: usize, layer: usize, plane: usize) -> Option<&[f32]> {
+        let g = self.geom;
+        let e = self.seqs.get(&id)?;
+        if token >= e.len {
+            return None;
+        }
+        let page = e.pages[token / self.page_tokens];
+        let base = page * self.page_elems()
+            + ((layer * g.planes + plane) * self.page_tokens + token % self.page_tokens)
+                * g.row_elems;
+        Some(&self.data[base..base + g.row_elems])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn geom() -> CacheGeometry {
+        CacheGeometry { n_layers: 2, row_elems: 4, planes: 2, max_seq: 8 }
+    }
+
+    fn rows(val: f32, g: &CacheGeometry) -> (Vec<f32>, Vec<f32>) {
+        let k: Vec<f32> = (0..g.n_layers * g.row_elems).map(|i| val + i as f32).collect();
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        (k, v)
+    }
+
+    #[test]
+    fn append_and_peek_roundtrip() {
+        let g = geom();
+        let mut pool = KvPool::new(g, 2, 4);
+        pool.alloc_seq(7).unwrap();
+        for t in 0..5 {
+            let (k, v) = rows(t as f32 * 100.0, &g);
+            pool.append(7, &[&k, &v]).unwrap();
+        }
+        assert_eq!(pool.seq_len(7), Some(5));
+        assert_eq!(pool.used_pages(), 3); // ceil(5/2)
+        // token 3, layer 1, plane K
+        let (k, _) = rows(300.0, &g);
+        assert_eq!(pool.peek(7, 3, 1, 0).unwrap(), &k[4..8]);
+        // plane V
+        let (_, v) = rows(300.0, &g);
+        assert_eq!(pool.peek(7, 3, 1, 1).unwrap(), &v[4..8]);
+    }
+
+    #[test]
+    fn gather_matches_appends_with_padding() {
+        let g = geom();
+        let mut pool = KvPool::new(g, 2, 8);
+        pool.alloc_seq(1).unwrap();
+        pool.alloc_seq(2).unwrap();
+        for t in 0..3 {
+            let (k, v) = rows(t as f32, &g);
+            pool.append(1, &[&k, &v]).unwrap();
+        }
+        let (k, v) = rows(50.0, &g);
+        pool.append(2, &[&k, &v]).unwrap();
+
+        let batch = 4;
+        let planes = pool.gather_batch(&[1, 2], batch).unwrap();
+        let (l_, s, re) = (g.n_layers, g.max_seq, g.row_elems);
+        // seq 1, token 2, layer 0, plane k
+        let (k2, _) = rows(2.0, &g);
+        let idx = ((0 * batch + 0) * s + 2) * re;
+        assert_eq!(&planes[0][idx..idx + re], &k2[0..re]);
+        // seq 2 in slot 1, token 0, layer 1, plane v
+        let (_, v50) = rows(50.0, &g);
+        let idx = ((1 * batch + 1) * s + 0) * re;
+        assert_eq!(&planes[1][idx..idx + re], &v50[re..2 * re]);
+        // padded slots stay zero
+        let idx = ((0 * batch + 3) * s) * re;
+        assert!(planes[0][idx..idx + s * re].iter().all(|&x| x == 0.0));
+        let _ = l_;
+    }
+
+    #[test]
+    fn pool_exhaustion_and_free() {
+        let g = geom();
+        let mut pool = KvPool::new(g, 2, 2); // 4 token capacity
+        pool.alloc_seq(1).unwrap();
+        let (k, v) = rows(0.0, &g);
+        for _ in 0..4 {
+            pool.append(1, &[&k, &v]).unwrap();
+        }
+        assert!(!pool.can_append(1));
+        assert!(pool.append(1, &[&k, &v]).is_err());
+        pool.free_seq(1);
+        assert_eq!(pool.free_pages(), 2);
+        pool.alloc_seq(2).unwrap();
+        assert!(pool.can_append(2));
+        pool.append(2, &[&k, &v]).unwrap();
+    }
+
+    #[test]
+    fn max_seq_enforced() {
+        let g = CacheGeometry { max_seq: 3, ..geom() };
+        let mut pool = KvPool::new(g, 2, 8);
+        pool.alloc_seq(1).unwrap();
+        let (k, v) = rows(0.0, &g);
+        for _ in 0..3 {
+            pool.append(1, &[&k, &v]).unwrap();
+        }
+        assert!(!pool.can_append(1));
+        assert!(pool.append(1, &[&k, &v]).is_err());
+    }
+
+    #[test]
+    fn double_alloc_rejected() {
+        let mut pool = KvPool::new(geom(), 2, 2);
+        pool.alloc_seq(1).unwrap();
+        assert!(pool.alloc_seq(1).is_err());
+    }
+
+    #[test]
+    fn property_no_page_shared_between_sequences() {
+        // Randomised invariant check (in-tree property test): after any
+        // interleaving of alloc/append/free, no page is owned twice and
+        // free + owned == total.
+        let g = geom();
+        let mut pool = KvPool::new(g, 2, 16);
+        let mut rng = Rng::seed_from_u64(99);
+        let mut live: Vec<SeqId> = vec![];
+        let mut next_id = 0u64;
+        for _ in 0..500 {
+            match rng.below(10) {
+                0..=2 => {
+                    next_id += 1;
+                    if pool.alloc_seq(next_id).is_ok() {
+                        live.push(next_id);
+                    }
+                }
+                3..=7 if !live.is_empty() => {
+                    let id = live[rng.below(live.len())];
+                    let (k, v) = rows(rng.f32(), &g);
+                    let _ = pool.append(id, &[&k, &v]);
+                }
+                8 if !live.is_empty() => {
+                    let idx = rng.below(live.len());
+                    let id = live.swap_remove(idx);
+                    pool.free_seq(id);
+                }
+                _ => {}
+            }
+            // invariant: page ownership is a partition
+            let mut seen = std::collections::HashSet::new();
+            let mut owned = 0;
+            for id in &live {
+                for t in 0..pool.seq_len(*id).unwrap() {
+                    let _ = t;
+                }
+            }
+            for (_, e) in pool.seqs.iter() {
+                for p in &e.pages {
+                    assert!(seen.insert(*p), "page {p} double-owned");
+                    owned += 1;
+                }
+            }
+            assert_eq!(owned + pool.free_pages(), pool.n_pages);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! # Layer-3 serving coordinator
+//!
+//! The framework around the fused kernels — what a team would actually
+//! deploy. Mirrors the vLLM-router shape:
+//!
+//! * [`router`] — admission control + least-loaded replica selection;
+//! * [`batcher`] — continuous (iteration-level) batching into the AOT
+//!   batch buckets;
+//! * [`kv_cache`] — paged, host-authoritative KV-cache pool;
+//! * [`scheduler`] — preemption policy under cache pressure;
+//! * [`engine`] — the decode-step loop (generic over [`engine::Backend`]);
+//! * [`pjrt_backend`] — the real backend executing AOT artifacts on PJRT;
+//! * [`server`] — threaded front-end with per-request event streams;
+//! * [`config`] — the serving configuration system.
+//!
+//! Python never runs on this path: the engine consumes `artifacts/*.hlo.txt`
+//! through the [`crate::runtime`] PJRT wrapper.
+pub mod batcher;
+pub mod config;
+pub mod engine;
+pub mod kv_cache;
+pub mod pjrt_backend;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;

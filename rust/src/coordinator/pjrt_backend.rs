@@ -1,0 +1,111 @@
+//! The real serving backend: AOT decode-step executables on PJRT.
+//!
+//! Holds one compiled executable per batch bucket (all sharing one
+//! parameter upload) and adapts between the engine's flat plane layout and
+//! the manifest's tensor shapes (identical memory layout, only the shape
+//! metadata differs).
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+
+use super::engine::{Backend, ModelGeom, StepOut};
+
+/// PJRT-backed [`Backend`] for one model.
+pub struct PjrtBackend {
+    rt: Runtime,
+    model: String,
+    buckets: Vec<usize>,
+    params: Vec<xla::PjRtBuffer>,
+    geom: ModelGeom,
+}
+
+// SAFETY: the xla crate's client/executable/buffer handles are internally
+// `Rc` + raw PJRT pointers, hence `!Send`. A `PjrtBackend` owns its
+// `Runtime` (the client and every executable/buffer clone of it) entirely —
+// no handle ever escapes this struct — so moving the *whole backend* to the
+// server thread transfers exclusive ownership of every Rc clone at once,
+// which is sound. The engine/server never share a backend across threads
+// (the engine loop is single-threaded by design).
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Load every serving bucket of `model` from `artifacts_dir`, compile,
+    /// and upload one random parameter set (seeded).
+    pub fn load(artifacts_dir: &str, model: &str, seed: u64) -> Result<Self> {
+        let mut rt = Runtime::open(artifacts_dir)?;
+        let buckets = rt.manifest.serving_buckets(model);
+        anyhow::ensure!(!buckets.is_empty(), "no serving artifacts for {model}");
+        for &b in &buckets {
+            rt.load(model, b, true).with_context(|| format!("loading bucket {b}"))?;
+        }
+        let iface = rt.manifest.require(model, buckets[0], true)?.clone();
+        let planes = iface.n_cache;
+        let row_elems = match iface.attn.as_str() {
+            "mha" => iface.n_heads * iface.head_dim,
+            "mla" => iface.kv_lora_rank,
+            other => anyhow::bail!("unknown attn kind {other}"),
+        };
+        let geom = ModelGeom {
+            vocab: iface.vocab,
+            n_layers: iface.n_layers,
+            row_elems,
+            planes,
+            max_seq: iface.max_seq,
+        };
+        let params = rt.random_params(&iface, seed)?;
+        Ok(Self { rt, model: model.to_string(), buckets, params, geom })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn geom(&self) -> ModelGeom {
+        self.geom
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn step(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        cache_planes: &[Vec<f32>],
+    ) -> Result<StepOut> {
+        let exe = self.rt.get(&self.model, bucket, true)?;
+        let iface = exe.iface.clone();
+        // engine plane layout (L, B, S, row_elems) has the same memory
+        // layout as the manifest's cache spec; only shape metadata differs.
+        let caches: Vec<HostTensor> = cache_planes
+            .iter()
+            .zip(iface.cache_specs())
+            .map(|(data, spec)| {
+                anyhow::ensure!(
+                    data.len() == spec.elems(),
+                    "plane has {} elems, spec {:?} wants {}",
+                    data.len(),
+                    spec.shape,
+                    spec.elems()
+                );
+                Ok(HostTensor { shape: spec.shape.clone(), data: data.clone() })
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.rt.get(&self.model, bucket, true)?;
+        let outs = self.rt.decode_step(exe, tokens, pos, &caches, &self.params)?;
+        let mut it = outs.into_iter();
+        let logits = it.next().context("missing logits output")?;
+        let new_rows: Vec<Vec<f32>> = it.map(|t| t.data).collect();
+        anyhow::ensure!(new_rows.len() == self.geom.planes, "plane count mismatch");
+        Ok(StepOut { logits: logits.data, new_rows })
+    }
+}

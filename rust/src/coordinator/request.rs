@@ -1,0 +1,102 @@
+//! Request/response types of the serving coordinator.
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// Why a sequence stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new_tokens`.
+    Length,
+    /// Hit the model's KV-cache capacity (max_seq).
+    CacheFull,
+    /// Sampler produced the EOS token.
+    Eos,
+    /// Evicted by the scheduler and not resumable (shutdown).
+    Aborted,
+}
+
+/// Sampling configuration. The demo engine is greedy by default; a
+/// temperature of 0 means argmax.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    /// Token id treated as end-of-sequence (None = never stop early).
+    pub eos_token: Option<i32>,
+    pub max_new_tokens: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, eos_token: None, max_new_tokens: 32 }
+    }
+}
+
+/// One inference request as submitted to the router.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub sampling: SamplingParams,
+    /// Arrival time offset (µs from engine start) for trace replay; 0 for
+    /// interactive submissions.
+    pub arrival_us: u64,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Self {
+            id,
+            prompt,
+            sampling: SamplingParams { max_new_tokens, ..Default::default() },
+            arrival_us: 0,
+        }
+    }
+
+    /// Total KV slots this request may need.
+    pub fn max_total_len(&self) -> usize {
+        self.prompt.len() + self.sampling.max_new_tokens
+    }
+}
+
+/// Lifecycle of a request inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting in the admission queue.
+    Queued,
+    /// Prompt tokens being fed (prefill via the decode path).
+    Prefill,
+    /// Auto-regressive generation.
+    Decode,
+    /// Done; see [`FinishReason`].
+    Finished(FinishReason),
+}
+
+/// Event stream emitted per request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Prefill finished; time-to-first-token measured from admission.
+    FirstToken { id: RequestId, token: i32 },
+    /// One generated token.
+    Token { id: RequestId, token: i32 },
+    /// Generation finished.
+    Finished { id: RequestId, reason: FinishReason, generated: Vec<i32> },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_total_len() {
+        let r = Request::new(1, vec![1, 2, 3], 10);
+        assert_eq!(r.max_total_len(), 13);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_prompt_rejected() {
+        Request::new(1, vec![], 4);
+    }
+}

@@ -1,0 +1,155 @@
+//! Request router: admission control and replica selection.
+//!
+//! Mirrors the vLLM router architecture: a front door that (a) rejects
+//! work beyond a queue bound, (b) picks the least-loaded engine replica,
+//! and (c) tracks per-replica in-flight counts. The demo deployment runs
+//! one replica per process, but the policy is replica-count generic and is
+//! exercised with many simulated replicas in tests.
+
+use anyhow::{bail, Result};
+
+use super::request::{Request, RequestId};
+
+/// Load snapshot the router keeps per replica.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaLoad {
+    pub queued: usize,
+    pub running: usize,
+}
+
+impl ReplicaLoad {
+    pub fn total(&self) -> usize {
+        self.queued + self.running
+    }
+}
+
+/// Routing decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    pub replica: usize,
+}
+
+/// Least-loaded router with a global queue bound.
+#[derive(Debug)]
+pub struct Router {
+    loads: Vec<ReplicaLoad>,
+    max_queue_per_replica: usize,
+    routed: u64,
+    rejected: u64,
+}
+
+impl Router {
+    pub fn new(replicas: usize, max_queue_per_replica: usize) -> Self {
+        assert!(replicas > 0);
+        Self {
+            loads: vec![ReplicaLoad::default(); replicas],
+            max_queue_per_replica,
+            routed: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn load(&self, replica: usize) -> &ReplicaLoad {
+        &self.loads[replica]
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.routed, self.rejected)
+    }
+
+    /// Route a request to the least-loaded replica, or reject when every
+    /// replica's queue is full (back-pressure to the client).
+    pub fn route(&mut self, _req: &Request) -> Result<Route> {
+        let (idx, load) = self
+            .loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.total())
+            .expect("at least one replica");
+        if load.queued >= self.max_queue_per_replica {
+            self.rejected += 1;
+            bail!("all replicas saturated (queue bound {})", self.max_queue_per_replica);
+        }
+        self.loads[idx].queued += 1;
+        self.routed += 1;
+        Ok(Route { replica: idx })
+    }
+
+    /// Replica picked up the request (queued -> running).
+    pub fn on_started(&mut self, replica: usize) {
+        let l = &mut self.loads[replica];
+        debug_assert!(l.queued > 0);
+        l.queued = l.queued.saturating_sub(1);
+        l.running += 1;
+    }
+
+    /// Replica finished a request.
+    pub fn on_finished(&mut self, replica: usize, _id: RequestId) {
+        let l = &mut self.loads[replica];
+        l.running = l.running.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1], 1)
+    }
+
+    #[test]
+    fn routes_to_least_loaded() {
+        let mut r = Router::new(3, 10);
+        let a = r.route(&req(1)).unwrap();
+        let b = r.route(&req(2)).unwrap();
+        let c = r.route(&req(3)).unwrap();
+        let mut seen = vec![a.replica, b.replica, c.replica];
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2], "spreads across replicas");
+    }
+
+    #[test]
+    fn rejects_when_saturated() {
+        let mut r = Router::new(2, 1);
+        r.route(&req(1)).unwrap();
+        r.route(&req(2)).unwrap();
+        assert!(r.route(&req(3)).is_err());
+        assert_eq!(r.stats(), (2, 1));
+    }
+
+    #[test]
+    fn lifecycle_counts() {
+        let mut r = Router::new(1, 8);
+        let route = r.route(&req(1)).unwrap();
+        assert_eq!(r.load(0).queued, 1);
+        r.on_started(route.replica);
+        assert_eq!((r.load(0).queued, r.load(0).running), (0, 1));
+        r.on_finished(route.replica, 1);
+        assert_eq!(r.load(0).running, 0);
+    }
+
+    #[test]
+    fn property_load_is_balanced() {
+        // After routing N requests with immediate pickup, replica loads
+        // differ by at most 1.
+        let mut r = Router::new(4, 1000);
+        let mut rng = Rng::seed_from_u64(3);
+        for id in 0..200 {
+            let route = r.route(&req(id)).unwrap();
+            r.on_started(route.replica);
+            // randomly finish some work
+            if rng.bool() {
+                r.on_finished(route.replica, id);
+            }
+        }
+        let loads: Vec<usize> = (0..4).map(|i| r.load(i).total()).collect();
+        let (lo, hi) = (loads.iter().min().unwrap(), loads.iter().max().unwrap());
+        assert!(hi - lo <= 2, "{loads:?}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Scheduling policies: preemption victim selection and (for the
+//! simulator) decode-step ordering.
+//!
+//! Recompute-style preemption as in vLLM: under cache pressure the
+//! *youngest* running sequence (most recently admitted) is evicted and
+//! re-queued at the front, preserving FCFS completion order for the older
+//! sequences that have already accumulated KV state.
+
+use std::time::Instant;
+
+use super::kv_cache::SeqId;
+
+/// Choose the preemption victim among `running`: the most recently
+/// admitted sequence (`admit_time` accessor avoids borrowing whole
+/// engine state).
+pub fn pick_victim(running: &[SeqId], admit_time: impl Fn(SeqId) -> Instant) -> SeqId {
+    assert!(!running.is_empty());
+    *running
+        .iter()
+        .max_by_key(|id| admit_time(**id))
+        .expect("non-empty running set")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn youngest_is_victim() {
+        let base = Instant::now();
+        let times = [base, base + Duration::from_secs(2), base + Duration::from_secs(1)];
+        let running = vec![10, 20, 30];
+        let victim = pick_victim(&running, |id| times[(id / 10 - 1) as usize]);
+        assert_eq!(victim, 20);
+    }
+
+    #[test]
+    fn single_running_is_victim() {
+        let now = Instant::now();
+        assert_eq!(pick_victim(&[7], |_| now), 7);
+    }
+}

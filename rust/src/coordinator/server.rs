@@ -1,0 +1,170 @@
+//! Threaded serving front-end: a request loop around the engine.
+//!
+//! `Server::spawn` moves the engine onto a worker thread; clients submit
+//! requests through a channel and receive per-request event streams. The
+//! build is offline (no tokio), so concurrency is std::thread + mpsc —
+//! the engine loop itself is single-threaded by design (one device).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::engine::{Backend, Engine, RequestTiming};
+use super::request::{Event, Request, RequestId};
+
+enum Msg {
+    Submit(Request, Sender<Event>),
+    Shutdown,
+}
+
+/// Handle to a running engine thread.
+pub struct Server {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<ServerReport>>,
+}
+
+/// Final statistics returned at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct ServerReport {
+    pub steps: u64,
+    pub tokens_out: u64,
+    pub preemptions: u64,
+    pub timings: Vec<RequestTiming>,
+}
+
+impl Server {
+    /// Spawn the engine loop on a worker thread.
+    pub fn spawn<B: Backend + Send + 'static>(mut engine: Engine<B>) -> Self {
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let handle = std::thread::spawn(move || {
+            let mut subscribers: HashMap<RequestId, Sender<Event>> = HashMap::new();
+            let mut shutdown = false;
+            loop {
+                // drain the mailbox (non-blocking while busy, blocking when idle)
+                loop {
+                    let msg = if engine.idle() && !shutdown {
+                        match rx.recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => {
+                                shutdown = true;
+                                None
+                            }
+                        }
+                    } else {
+                        match rx.try_recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => None,
+                        }
+                    };
+                    match msg {
+                        Some(Msg::Submit(req, events)) => {
+                            subscribers.insert(req.id, events);
+                            engine.submit(req);
+                        }
+                        Some(Msg::Shutdown) => shutdown = true,
+                        None => break,
+                    }
+                }
+                if engine.idle() {
+                    if shutdown {
+                        break;
+                    }
+                    continue;
+                }
+                if let Err(e) = engine.step() {
+                    eprintln!("engine step failed: {e:#}");
+                    break;
+                }
+                for ev in engine.take_events() {
+                    let id = match &ev {
+                        Event::FirstToken { id, .. }
+                        | Event::Token { id, .. }
+                        | Event::Finished { id, .. } => *id,
+                    };
+                    let done = matches!(ev, Event::Finished { .. });
+                    if let Some(tx) = subscribers.get(&id) {
+                        let _ = tx.send(ev); // receiver may have hung up
+                    }
+                    if done {
+                        subscribers.remove(&id);
+                    }
+                }
+            }
+            ServerReport {
+                steps: engine.steps,
+                tokens_out: engine.tokens_out,
+                preemptions: engine.preemptions,
+                timings: engine.timings().to_vec(),
+            }
+        });
+        Self { tx, handle: Some(handle) }
+    }
+
+    /// Submit a request; returns the event stream receiver.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Event>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("server thread gone"))?;
+        Ok(rx)
+    }
+
+    /// Finish outstanding work and join the engine thread.
+    pub fn shutdown(mut self) -> Result<ServerReport> {
+        let _ = self.tx.send(Msg::Shutdown);
+        let handle = self.handle.take().expect("shutdown called once");
+        handle.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockBackend;
+    use crate::coordinator::request::FinishReason;
+
+    #[test]
+    fn serves_concurrent_clients() {
+        let engine = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
+        let server = Server::spawn(engine);
+        let rx1 = server.submit(Request::new(1, vec![3, 5], 3)).unwrap();
+        let rx2 = server.submit(Request::new(2, vec![1], 2)).unwrap();
+
+        let evs1: Vec<Event> = rx1.iter().collect();
+        let evs2: Vec<Event> = rx2.iter().collect();
+        assert!(matches!(
+            evs1.last().unwrap(),
+            Event::Finished { reason: FinishReason::Length, .. }
+        ));
+        assert_eq!(
+            evs2.iter().filter(|e| matches!(e, Event::Token { .. } | Event::FirstToken { .. })).count(),
+            2
+        );
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.tokens_out, 5);
+        assert_eq!(report.timings.len(), 2);
+    }
+
+    #[test]
+    fn shutdown_waits_for_inflight_work() {
+        let engine = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
+        let server = Server::spawn(engine);
+        let rx = server.submit(Request::new(7, vec![2, 2], 4)).unwrap();
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.tokens_out, 4);
+        // events were still delivered
+        let evs: Vec<Event> = rx.iter().collect();
+        assert!(matches!(evs.last().unwrap(), Event::Finished { .. }));
+    }
+}

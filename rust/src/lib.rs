@@ -1,0 +1,24 @@
+//! # ClusterFusion
+//!
+//! Reproduction of *"ClusterFusion: Expanding Operator Fusion Scope for LLM
+//! Inference via Cluster-Level Collective Primitive"* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — the paper's fused decode dataflows as
+//!   Pallas kernels inside a JAX decoder model, AOT-lowered to HLO text
+//!   (`python/compile/`, `make artifacts`).
+//! * **Layer 3 (this crate)** — a serving coordinator (router, continuous
+//!   batcher, paged KV cache, decode engine) that executes the AOT
+//!   artifacts through PJRT ([`runtime`]), plus the H100 substitute
+//!   substrate ([`clustersim`]) that reproduces every table and figure of
+//!   the paper's evaluation (see `DESIGN.md`).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `clusterfusion` binary is self-contained.
+pub mod clustersim;
+pub mod util;
+pub mod coordinator;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod workload;

@@ -1,0 +1,223 @@
+//! `clusterfusion` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   serve              run the serving engine on a synthetic trace
+//!   simulate           TPOT estimate for a model/framework/seq grid
+//!   inspect-artifacts  list AOT executables from the manifest
+//!   bench --figure ID  hint to the cargo-bench target for a paper figure
+//!
+//! Hand-rolled argument parsing (offline build; no clap).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use clusterfusion::clustersim::e2e::{decode_step, Engine as SimEngine};
+use clusterfusion::clustersim::frameworks::FrameworkProfile;
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::coordinator::config::ServeConfig;
+use clusterfusion::coordinator::engine::{Backend, Engine};
+use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
+use clusterfusion::coordinator::request::Request;
+use clusterfusion::coordinator::server::Server;
+use clusterfusion::metrics::{LatencyRecorder, Table};
+use clusterfusion::models::ModelConfig;
+use clusterfusion::runtime::ArtifactManifest;
+use clusterfusion::util::rng::Rng;
+use clusterfusion::workload::{SeqlenDist, Trace};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    (positional, flags)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: clusterfusion <command> [flags]\n\
+         \n\
+         commands:\n\
+         \x20 serve             --model NAME --requests N --rps R [--config FILE] [--set k=v]\n\
+         \x20 simulate          --model NAME [--seq N] [--batch N] [--cluster N]\n\
+         \x20 inspect-artifacts [--artifacts DIR]\n\
+         \x20 bench             --figure fig17|table1|... (prints the cargo command)\n"
+    );
+    std::process::exit(2);
+}
+
+fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let m = ArtifactManifest::load(format!("{dir}/manifest.json"))?;
+    let mut t = Table::new(vec!["file", "model", "batch", "serving", "inputs", "params(M)"]);
+    for e in &m.executables {
+        t.row(vec![
+            e.file.clone(),
+            e.model.clone(),
+            e.batch.to_string(),
+            e.serving.to_string(),
+            e.inputs.len().to_string(),
+            format!("{:.1}", e.param_elems() as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("llama2-7b");
+    let model = ModelConfig::by_name(model_name)
+        .with_context(|| format!("unknown model {model_name}"))?;
+    let seq: usize = flags.get("seq").map(|s| s.parse()).transpose()?.unwrap_or(4096);
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let cluster: usize = flags.get("cluster").map(|s| s.parse()).transpose()?.unwrap_or(4);
+
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let mut t = Table::new(vec!["framework", "TPOT(ms)", "core(ms)", "launches", "HBM(GB)"]);
+    for p in FrameworkProfile::baselines() {
+        let e = decode_step(&model, batch, seq, SimEngine::BlockIsolated, &p, &hw, &noc);
+        t.row(vec![
+            p.name.to_string(),
+            format!("{:.3}", e.tpot * 1e3),
+            format!("{:.3}", e.core_modules * 1e3),
+            e.launches.to_string(),
+            format!("{:.2}", e.hbm_bytes / 1e9),
+        ]);
+    }
+    let cf = decode_step(
+        &model,
+        batch,
+        seq,
+        SimEngine::ClusterFusion { cluster_size: cluster },
+        &FrameworkProfile::clusterfusion(),
+        &hw,
+        &noc,
+    );
+    t.row(vec![
+        format!("ClusterFusion(N={cluster})"),
+        format!("{:.3}", cf.tpot * 1e3),
+        format!("{:.3}", cf.core_modules * 1e3),
+        cf.launches.to_string(),
+        format!("{:.2}", cf.hbm_bytes / 1e9),
+    ]);
+    println!("model={} batch={batch} seq={seq}", model.name);
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ServeConfig::from_file(path)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.clone();
+    }
+    if let Some(sets) = flags.get("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv.split_once('=').context("--set expects k=v[,k=v...]")?;
+            cfg.set(k, v)?;
+        }
+    }
+    cfg.validate()?;
+    let n_requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let rps: f64 = flags.get("rps").map(|s| s.parse()).transpose()?.unwrap_or(4.0);
+
+    eprintln!("loading {} from {} ...", cfg.model, cfg.artifacts);
+    let backend = PjrtBackend::load(&cfg.artifacts, &cfg.model, cfg.seed)?;
+    eprintln!("platform: {}", backend.platform());
+    let max_seq = backend.geom().max_seq;
+    let engine = Engine::new(backend, cfg.pool_pages, cfg.page_tokens, cfg.admit_fraction);
+    let server = Server::spawn(engine);
+
+    let trace = Trace::poisson(n_requests, rps, SeqlenDist::ShareGpt, (8, 24), max_seq / 4, 42);
+    let mut rng = Rng::seed_from_u64(7);
+    let mut receivers = Vec::new();
+    let t0 = std::time::Instant::now();
+    for r in &trace.requests {
+        let prompt: Vec<i32> =
+            (0..r.prompt_len.min(64)).map(|_| rng.below(16384) as i32).collect();
+        let mut req = Request::new(r.id, prompt, r.gen_len.min(24));
+        req.arrival_us = r.arrival_us;
+        receivers.push(server.submit(req)?);
+    }
+    let mut lat = LatencyRecorder::new();
+    let mut tokens = 0u64;
+    for rx in receivers {
+        for ev in rx.iter() {
+            if matches!(
+                ev,
+                clusterfusion::coordinator::request::Event::Token { .. }
+                    | clusterfusion::coordinator::request::Event::FirstToken { .. }
+            ) {
+                tokens += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = server.shutdown()?;
+    for t in &report.timings {
+        lat.record(t.total);
+    }
+    println!(
+        "served {} requests, {tokens} tokens in {wall:.2}s ({:.2} tok/s), {} engine steps, {} preemptions",
+        report.timings.len(),
+        tokens as f64 / wall,
+        report.steps,
+        report.preemptions
+    );
+    println!("request latency: {}", lat.summary().fmt_ms());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let (pos, flags) = parse_flags(&args[1..]);
+    let _ = pos;
+    match args[0].as_str() {
+        "serve" => cmd_serve(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "inspect-artifacts" => cmd_inspect(&flags),
+        "bench" => {
+            let fig = flags.get("figure").map(String::as_str).unwrap_or("fig17");
+            println!(
+                "run: cargo bench --bench {}",
+                match fig {
+                    "fig2" | "fig02" => "fig02_prefill_decode",
+                    "fig5" | "fig05" => "fig05_dsmem_profile",
+                    "fig10" => "fig10_seqlen_dist",
+                    "fig11" => "fig11_cluster_sweep",
+                    "fig12" | "fig19" => "fig12_traffic_launch",
+                    "fig13" => "fig13_dsmem_ablation",
+                    "table1" => "table1_collectives",
+                    "fig17" => "fig17_e2e_tpot",
+                    "fig18" => "fig18_core_modules",
+                    "fig20" => "fig20_splithead",
+                    other => bail!("unknown figure {other}"),
+                }
+            );
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

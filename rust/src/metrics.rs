@@ -1,0 +1,202 @@
+//! Serving metrics: latency recorders, percentile summaries, and the
+//! paper-style table printer used by every figure bench.
+
+use std::time::Duration;
+
+
+/// Online latency recorder (stores all samples; decode-scale cardinality).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        debug_assert!(seconds.is_finite() && seconds >= 0.0);
+        self.samples.push(seconds);
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Nearest-rank percentile, `q` in [0, 1].
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(f64::total_cmp);
+        let idx = ((q * s.len() as f64).ceil() as usize).clamp(1, s.len()) - 1;
+        s[idx]
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary {
+            count: self.len(),
+            mean: self.mean(),
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p99: self.percentile(0.99),
+            max: self.samples.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+/// Summary statistics of a latency distribution (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count,
+            self.mean * 1e3,
+            self.p50 * 1e3,
+            self.p90 * 1e3,
+            self.p99 * 1e3,
+            self.max * 1e3
+        )
+    }
+}
+
+/// Fixed-width table printer for the paper-figure benches: prints a header
+/// and rows like the paper's tables so runs can be eyeballed against it.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Self { headers: headers.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Throughput helper: tokens emitted over a wall-clock window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Throughput {
+    pub tokens: u64,
+    pub seconds: f64,
+}
+
+impl Throughput {
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.seconds <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.seconds
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.percentile(0.50), 50.0);
+        assert_eq!(r.percentile(0.99), 99.0);
+        assert_eq!(r.percentile(1.0), 100.0);
+        assert_eq!(r.summary().count, 100);
+    }
+
+    #[test]
+    fn empty_recorder_is_zeroes() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.percentile(0.9), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["seq", "tpot"]);
+        t.row(vec!["1024", "5.1"]);
+        t.row(vec!["16384", "12.3"]);
+        let s = t.render();
+        assert!(s.contains("seq"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn throughput() {
+        let t = Throughput { tokens: 500, seconds: 2.0 };
+        assert_eq!(t.tokens_per_second(), 250.0);
+    }
+}

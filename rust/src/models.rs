@@ -1,0 +1,189 @@
+//! Model architecture descriptions.
+//!
+//! Two kinds of model are used in this repository, mirroring the paper:
+//!
+//! * the paper's **evaluation models** (Llama2-7B with standard MHA,
+//!   DeepSeek-V2-Lite with MLA) — used by [`crate::clustersim`] for cost
+//!   modelling of every table/figure; their weights are never materialised;
+//! * the **live demo models** (`tiny-llama-100m`, `tiny-mla-100m`) — ~100 M
+//!   parameter architectures whose decode step is AOT-compiled from JAX
+//!   (see `python/compile/aot.py`) and actually executed through PJRT by
+//!   the serving engine.
+
+
+/// Attention mechanism family (paper §2.1 / Appendix B.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnKind {
+    /// Standard multi-head attention (Llama-style).
+    Mha,
+    /// DeepSeek multi-head latent attention, weight-absorbed decode form.
+    Mla,
+}
+
+/// Architectural hyper-parameters of a decoder-only transformer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub max_seq: usize,
+    pub attn: AttnKind,
+    /// Latent dimension (kv_lora_rank); only meaningful for [`AttnKind::Mla`].
+    pub kv_lora_rank: usize,
+}
+
+impl ModelConfig {
+    /// Total head dimension H = n_heads * head_dim.
+    pub fn total_head_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Parameter count (must agree with `python/compile/model.py`).
+    pub fn param_count(&self) -> usize {
+        let (d, f, v, l) = (self.d_model, self.ffn_dim, self.vocab, self.n_layers);
+        let h = self.total_head_dim();
+        let attn = match self.attn {
+            AttnKind::Mha => d * h * 3 + h * d,
+            AttnKind::Mla => {
+                let r = self.kv_lora_rank;
+                d * self.n_heads * r + d * r + self.n_heads * r * self.head_dim + h * d
+            }
+        };
+        v * d + l * (attn + 3 * d * f + 2 * d) + d
+    }
+
+    /// Bytes of KV cache per token per layer (fp16 on the paper's H100,
+    /// element size passed in for generality).
+    pub fn kv_bytes_per_token_layer(&self, elem: usize) -> usize {
+        match self.attn {
+            AttnKind::Mha => 2 * self.total_head_dim() * elem,
+            AttnKind::Mla => self.kv_lora_rank * elem,
+        }
+    }
+
+    /// Llama2-7B — the paper's MHA evaluation model (§4 Models).
+    pub fn llama2_7b() -> Self {
+        Self {
+            name: "llama2-7b".into(),
+            vocab: 32000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            head_dim: 128,
+            ffn_dim: 11008,
+            max_seq: 16384,
+            attn: AttnKind::Mha,
+            kv_lora_rank: 0,
+        }
+    }
+
+    /// DeepSeek-V2-Lite — the paper's MLA evaluation model (§4 Models,
+    /// kv_lora_rank = 512 per Appendix B.1).
+    pub fn deepseek_v2_lite() -> Self {
+        Self {
+            name: "deepseek-v2-lite".into(),
+            vocab: 102400,
+            d_model: 2048,
+            n_layers: 27,
+            n_heads: 16,
+            head_dim: 128,
+            ffn_dim: 10944,
+            attn: AttnKind::Mla,
+            kv_lora_rank: 512,
+            max_seq: 16384,
+        }
+    }
+
+    /// ~100 M-parameter Llama-style model executed live through PJRT by
+    /// the end-to-end example (DESIGN.md "End-to-end validation").
+    pub fn tiny_llama_100m() -> Self {
+        Self {
+            name: "tiny-llama-100m".into(),
+            vocab: 16384,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            head_dim: 64,
+            ffn_dim: 2048,
+            max_seq: 512,
+            attn: AttnKind::Mha,
+            kv_lora_rank: 0,
+        }
+    }
+
+    /// MLA twin of [`Self::tiny_llama_100m`].
+    pub fn tiny_mla_100m() -> Self {
+        Self {
+            name: "tiny-mla-100m".into(),
+            attn: AttnKind::Mla,
+            kv_lora_rank: 128,
+            ..Self::tiny_llama_100m()
+        }
+    }
+
+    /// Fig. 11 head-count sweep variants: same per-head dim, varying head
+    /// count (the paper sweeps 32 / 64 / 128 heads).
+    pub fn head_sweep_variant(n_heads: usize) -> Self {
+        Self {
+            name: format!("sweep-{n_heads}h"),
+            d_model: n_heads * 128,
+            n_heads,
+            ..Self::llama2_7b()
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama2-7b" => Some(Self::llama2_7b()),
+            "deepseek-v2-lite" => Some(Self::deepseek_v2_lite()),
+            "tiny-llama-100m" => Some(Self::tiny_llama_100m()),
+            "tiny-mla-100m" => Some(Self::tiny_mla_100m()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_7b_param_count_in_range() {
+        let c = ModelConfig::llama2_7b();
+        let p = c.param_count();
+        assert!((6_000_000_000..7_500_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn tiny_llama_is_about_100m() {
+        let p = ModelConfig::tiny_llama_100m().param_count();
+        assert!((90_000_000..110_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn mla_cache_is_compressed() {
+        let mha = ModelConfig::llama2_7b();
+        let mla = ModelConfig::deepseek_v2_lite();
+        // The latent cache must be far smaller per token than MHA's K+V.
+        assert!(mla.kv_bytes_per_token_layer(2) < mha.kv_bytes_per_token_layer(2) / 4);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["llama2-7b", "deepseek-v2-lite", "tiny-llama-100m", "tiny-mla-100m"] {
+            assert_eq!(ModelConfig::by_name(n).unwrap().name, n);
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn head_sweep_scales_d_model() {
+        let v = ModelConfig::head_sweep_variant(128);
+        assert_eq!(v.n_heads, 128);
+        assert_eq!(v.d_model, 128 * 128);
+    }
+}

@@ -1,0 +1,269 @@
+//! Artifact manifest: the JSON contract between `python/compile/aot.py`
+//! and the Rust runtime. The manifest fully describes each executable's
+//! flat input/output interface so the runtime never needs Python.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor in the flat interface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.get("name").and_then(Json::as_str).context("tensor name")?.to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor shape")?
+            .iter()
+            .map(|d| d.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.get("dtype").and_then(Json::as_str).context("tensor dtype")?.to_string();
+        Ok(Self { name, shape, dtype })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled decode-step executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutableInterface {
+    pub model: String,
+    pub batch: usize,
+    pub attn: String,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub kv_lora_rank: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub serving: bool,
+    pub n_cache: usize,
+    pub n_params: usize,
+    pub file: String,
+    pub sha256: String,
+}
+
+impl ExecutableInterface {
+    fn from_json(j: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k).and_then(Json::as_str).with_context(|| format!("field {k}"))?.into())
+        };
+        let u = |k: &str| -> Result<usize> {
+            j.get(k).and_then(Json::as_usize).with_context(|| format!("field {k}"))
+        };
+        let tensors = |k: &str| -> Result<Vec<TensorSpec>> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("field {k}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            model: s("model")?,
+            batch: u("batch")?,
+            attn: s("attn")?,
+            max_seq: u("max_seq")?,
+            vocab: u("vocab")?,
+            n_layers: u("n_layers")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            kv_lora_rank: u("kv_lora_rank").unwrap_or(0),
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+            serving: j.get("serving").and_then(Json::as_bool).unwrap_or(false),
+            n_cache: u("n_cache")?,
+            n_params: u("n_params")?,
+            file: s("file")?,
+            sha256: s("sha256").unwrap_or_default(),
+        })
+    }
+
+    /// Input specs for the cache tensors (after tokens and pos).
+    pub fn cache_specs(&self) -> &[TensorSpec] {
+        &self.inputs[2..2 + self.n_cache]
+    }
+
+    /// Input specs for the parameter tensors.
+    pub fn param_specs(&self) -> &[TensorSpec] {
+        &self.inputs[2 + self.n_cache..]
+    }
+
+    /// Bytes of one full cache upload (f32 host-side).
+    pub fn cache_bytes(&self) -> usize {
+        self.cache_specs().iter().map(|s| s.elems() * 4).sum()
+    }
+
+    /// Total parameter element count (sanity vs the model config).
+    pub fn param_elems(&self) -> usize {
+        self.param_specs().iter().map(TensorSpec::elems).sum()
+    }
+}
+
+/// The whole `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub format: usize,
+    pub executables: Vec<ExecutableInterface>,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let format = j.get("format").and_then(Json::as_usize).context("format")?;
+        ensure!(format == 1, "unsupported manifest format {format}");
+        let executables = j
+            .get("executables")
+            .and_then(Json::as_arr)
+            .context("executables")?
+            .iter()
+            .map(ExecutableInterface::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        for e in &executables {
+            if e.inputs.len() != 2 + e.n_cache + e.n_params {
+                bail!("{}: inconsistent input arity", e.file);
+            }
+        }
+        Ok(Self { format, executables })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn find(&self, model: &str, batch: usize, serving: bool) -> Option<&ExecutableInterface> {
+        self.executables
+            .iter()
+            .find(|e| e.model == model && e.batch == batch && e.serving == serving)
+    }
+
+    /// Batch buckets available for a model's serving executables, sorted.
+    pub fn serving_buckets(&self, model: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .executables
+            .iter()
+            .filter(|e| e.model == model && e.serving)
+            .map(|e| e.batch)
+            .collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut m: Vec<String> = self.executables.iter().map(|e| e.model.clone()).collect();
+        m.sort();
+        m.dedup();
+        m
+    }
+
+    /// Lookup failing with a helpful error.
+    pub fn require(&self, model: &str, batch: usize, serving: bool) -> Result<&ExecutableInterface> {
+        self.find(model, batch, serving).with_context(|| {
+            format!(
+                "no artifact for model={model} batch={batch} serving={serving}; available: {:?}",
+                self.executables
+                    .iter()
+                    .map(|e| (e.model.clone(), e.batch, e.serving))
+                    .collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ArtifactManifest {
+        let json = r#"{
+          "format": 1,
+          "executables": [{
+            "model": "m", "batch": 2, "attn": "mha", "max_seq": 16,
+            "vocab": 64, "n_layers": 2, "d_model": 32, "n_heads": 2,
+            "head_dim": 8, "kv_lora_rank": 0,
+            "inputs": [
+              {"name": "tokens", "shape": [2], "dtype": "int32"},
+              {"name": "pos", "shape": [2], "dtype": "int32"},
+              {"name": "cache_k", "shape": [2,2,16,2,8], "dtype": "float32"},
+              {"name": "cache_v", "shape": [2,2,16,2,8], "dtype": "float32"},
+              {"name": "param_emb", "shape": [64,32], "dtype": "float32"}
+            ],
+            "outputs": [{"name": "logits", "shape": [2,64], "dtype": "float32"}],
+            "serving": true, "n_cache": 2, "n_params": 1,
+            "file": "x.hlo.txt", "sha256": "ab"
+          }]
+        }"#;
+        ArtifactManifest::parse(json).unwrap()
+    }
+
+    #[test]
+    fn specs_partition_inputs() {
+        let m = sample();
+        let e = &m.executables[0];
+        assert_eq!(e.cache_specs().len(), 2);
+        assert_eq!(e.param_specs().len(), 1);
+        assert_eq!(e.cache_specs()[0].name, "cache_k");
+        assert_eq!(e.param_specs()[0].name, "param_emb");
+        assert_eq!(e.cache_bytes(), 2 * 2 * 2 * 16 * 2 * 8 * 4);
+        assert_eq!(e.param_elems(), 64 * 32);
+    }
+
+    #[test]
+    fn find_and_buckets() {
+        let m = sample();
+        assert!(m.find("m", 2, true).is_some());
+        assert!(m.find("m", 2, false).is_none());
+        assert!(m.find("m", 4, true).is_none());
+        assert_eq!(m.serving_buckets("m"), vec![2]);
+        assert_eq!(m.models(), vec!["m"]);
+        assert!(m.require("nope", 1, true).is_err());
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let bad = r#"{"format":1,"executables":[{
+            "model":"m","batch":1,"attn":"mha","max_seq":4,"vocab":8,
+            "n_layers":1,"d_model":4,"n_heads":1,"head_dim":4,
+            "inputs":[{"name":"tokens","shape":[1],"dtype":"int32"}],
+            "outputs":[],"n_cache":2,"n_params":3,"file":"f"}]}"#;
+        assert!(ArtifactManifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let p = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if std::path::Path::new(p).exists() {
+            let m = ArtifactManifest::load(p).unwrap();
+            assert!(!m.executables.is_empty());
+            for e in &m.executables {
+                assert_eq!(e.inputs.len(), 2 + e.n_cache + e.n_params);
+                assert_eq!(e.inputs[0].name, "tokens");
+                assert_eq!(e.outputs[0].name, "logits");
+            }
+            // serving + full variants for every model at batch 1
+            for model in m.models() {
+                assert!(m.find(&model, 1, true).is_some());
+                assert!(m.find(&model, 1, false).is_some());
+            }
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! PJRT runtime: load AOT artifacts (HLO text produced by
+//! `python/compile/aot.py`) and execute them from the serving hot path.
+//!
+//! Interchange format is **HLO text**, not a serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the `xla`
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Python never runs here — the manifest fully describes every
+//! executable's flat input/output interface, and parameters are
+//! re-materialised from a seeded RNG on the Rust side (the demo models are
+//! random-weight by design, DESIGN.md §2).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+pub use manifest::{ArtifactManifest, ExecutableInterface, TensorSpec};
+
+/// A loaded, compiled decode-step executable plus its interface.
+pub struct LoadedDecode {
+    pub iface: ExecutableInterface,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client and a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: ArtifactManifest,
+    loaded: HashMap<String, LoadedDecode>,
+}
+
+/// Host-side tensor (f32) with shape, the runtime's lingua franca.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `<dir>/manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(dir.join("manifest.json"))
+            .context("reading artifact manifest (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, loaded: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the executable for `(model, batch,
+    /// serving)`. Compilation is cached for the life of the runtime.
+    pub fn load(&mut self, model: &str, batch: usize, serving: bool) -> Result<&LoadedDecode> {
+        let iface = self
+            .manifest
+            .find(model, batch, serving)
+            .ok_or_else(|| eyre!("no artifact for model={model} batch={batch} serving={serving}"))?
+            .clone();
+        let key = iface.file.clone();
+        if !self.loaded.contains_key(&key) {
+            let path = self.dir.join(&iface.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| eyre!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| eyre!("compiling {}: {e:?}", iface.file))?;
+            self.loaded.insert(key.clone(), LoadedDecode { iface, exe });
+        }
+        Ok(&self.loaded[&key])
+    }
+
+    /// Immutable lookup of an already-[`Self::load`]ed executable.
+    pub fn get(&self, model: &str, batch: usize, serving: bool) -> Result<&LoadedDecode> {
+        let iface = self
+            .manifest
+            .find(model, batch, serving)
+            .ok_or_else(|| eyre!("no artifact for model={model} batch={batch}"))?;
+        self.loaded
+            .get(&iface.file)
+            .ok_or_else(|| eyre!("{} not loaded; call load() first", iface.file))
+    }
+
+    /// Upload an f32 host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| eyre!("upload f32 {:?}: {e:?}", t.shape))
+    }
+
+    /// Upload an i32 host tensor (tokens / positions).
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, shape, None)
+            .map_err(|e| eyre!("upload i32 {shape:?}: {e:?}"))
+    }
+
+    /// Generate the model's parameter buffers from a seed, per the
+    /// manifest's `param_*` specs (1/sqrt(fan_in) scaling like
+    /// `python/compile/model.py`; values differ — only shapes matter for
+    /// the latency demo, and norms must be ~1 for numerical stability).
+    pub fn random_params(
+        &self,
+        iface: &ExecutableInterface,
+        seed: u64,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut bufs = Vec::new();
+        for spec in iface.param_specs() {
+            let n: usize = spec.shape.iter().product();
+            let data: Vec<f32> = if spec.name.contains("norm") {
+                vec![1.0; n]
+            } else {
+                // fan_in = second-to-last dim product heuristic: use the
+                // first axis after any layer-stack axis.
+                let fan_in = *spec.shape.get(spec.shape.len().saturating_sub(2)).unwrap_or(&1);
+                let scale = 1.0 / (fan_in as f32).sqrt();
+                (0..n).map(|_| (rng.f32() - 0.5) * 2.0 * scale).collect()
+            };
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&data, &spec.shape, None)
+                    .map_err(|e| eyre!("param {}: {e:?}", spec.name))?,
+            );
+        }
+        Ok(bufs)
+    }
+
+    /// Execute one decode step.
+    ///
+    /// `caches` are the padded per-model cache tensors (uploaded fresh each
+    /// step — the host is authoritative, see `coordinator::kv_cache`);
+    /// `params` were uploaded once via [`Self::random_params`]. Returns the
+    /// flat outputs (logits first) as host tensors.
+    pub fn decode_step(
+        &self,
+        exe: &LoadedDecode,
+        tokens: &[i32],
+        pos: &[i32],
+        caches: &[HostTensor],
+        params: &[xla::PjRtBuffer],
+    ) -> Result<Vec<HostTensor>> {
+        let iface = &exe.iface;
+        anyhow::ensure!(tokens.len() == iface.batch, "token count != batch");
+        anyhow::ensure!(pos.len() == iface.batch, "pos count != batch");
+        anyhow::ensure!(caches.len() == iface.n_cache, "cache count mismatch");
+        anyhow::ensure!(params.len() == iface.n_params, "param count mismatch");
+
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(2 + caches.len());
+        args.push(self.upload_i32(tokens, &[iface.batch])?);
+        args.push(self.upload_i32(pos, &[iface.batch])?);
+        for (c, spec) in caches.iter().zip(iface.cache_specs()) {
+            anyhow::ensure!(c.shape == spec.shape, "cache shape {:?} != {:?}", c.shape, spec.shape);
+            args.push(self.upload(c)?);
+        }
+        let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().chain(params.iter()).collect();
+
+        let results = exe
+            .exe
+            .execute_b(&arg_refs)
+            .map_err(|e| eyre!("execute {}: {e:?}", iface.file))?;
+        let tuple = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetch result: {e:?}"))?;
+        let leaves = tuple.to_tuple().map_err(|e| eyre!("untuple: {e:?}"))?;
+        anyhow::ensure!(
+            leaves.len() == iface.outputs.len(),
+            "expected {} outputs, got {}",
+            iface.outputs.len(),
+            leaves.len()
+        );
+        leaves
+            .into_iter()
+            .zip(&iface.outputs)
+            .map(|(lit, spec)| {
+                let data = lit.to_vec::<f32>().map_err(|e| eyre!("{}: {e:?}", spec.name))?;
+                anyhow::ensure!(
+                    data.len() == spec.shape.iter().product::<usize>(),
+                    "{}: wrong element count",
+                    spec.name
+                );
+                Ok(HostTensor { shape: spec.shape.clone(), data })
+            })
+            .collect()
+    }
+}
+
+/// Greedy (argmax) sampling from a logits row.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 2.9]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn host_tensor_zeros() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.elems(), 6);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,95 @@
+//! Tiny in-tree micro-benchmark harness (offline substitute for
+//! criterion): warmup + timed iterations + mean/p50/min report. Used by
+//! `rust/benches/hotpath.rs` for the §Perf pass.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.0} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.2} s", ns / 1e9)
+            }
+        }
+        format!(
+            "{:<44} {:>10}/iter (p50 {:>10}, min {:>10}, {} iters)",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.p50_ns),
+            fmt(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly for ~`budget_ms` after warmup; report per-iteration
+/// stats. `f` should return something observable to keep the optimiser
+/// honest; we black-box it via `std::hint::black_box`.
+pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup: a few iterations or 10% of budget
+    let warm_deadline = Instant::now() + std::time::Duration::from_millis(budget_ms / 10 + 1);
+    let mut warm_iters = 0u64;
+    while Instant::now() < warm_deadline || warm_iters < 3 {
+        std::hint::black_box(f());
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+
+    let deadline = Instant::now() + std::time::Duration::from_millis(budget_ms);
+    let mut samples = Vec::new();
+    while Instant::now() < deadline {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples.sort_by(f64::total_cmp);
+    let n = samples.len().max(1);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p50_ns: samples.get(n / 2).copied().unwrap_or(0.0),
+        min_ns: samples.first().copied().unwrap_or(0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 20, || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.iters > 10);
+        assert!(r.min_ns <= r.mean_ns);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.report().contains("noop-ish"));
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree utility substrate (the build is fully offline, so RNG, JSON,
+//! CLI parsing and the bench harness are implemented here rather than
+//! pulled from crates.io — DESIGN.md §2 substitution table).
+
+pub mod bench;
+pub mod json;
+pub mod rng;

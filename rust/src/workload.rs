@@ -1,0 +1,175 @@
+//! Workload generation: sequence-length distributions and request traces.
+//!
+//! The paper motivates its evaluation range with the ShareGPT and
+//! Splitwise datasets (Fig. 10: "sequence lengths in real datasets are
+//! predominantly under 8K"). Those corpora are not redistributable here,
+//! so we generate synthetic samples from log-normal fits matching the
+//! published distribution shapes (heavy mass < 2K for ShareGPT chat,
+//! wider conversational/coding mix for Splitwise) — DESIGN.md §2.
+
+use crate::util::rng::Rng;
+
+/// Named sequence-length distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqlenDist {
+    /// Chat-style (ShareGPT-like): median ≈ 600 tokens, long tail.
+    ShareGpt,
+    /// Production mix (Splitwise-like): median ≈ 1.2K, fatter tail.
+    Splitwise,
+    /// Fixed length (controlled experiments).
+    Fixed(usize),
+}
+
+impl SeqlenDist {
+    /// Draw one total sequence length (prompt + generation), clamped to
+    /// `max_seq`.
+    pub fn sample(&self, rng: &mut Rng, max_seq: usize) -> usize {
+        let v = match self {
+            // ln-median 6.4 ≈ 600, sigma 1.0 -> ~77% of mass < 2K, >99% < 8K
+            SeqlenDist::ShareGpt => rng.lognormal(6.4, 1.0),
+            // ln-median 7.1 ≈ 1.2K, sigma 0.9 -> ~95% < 8K
+            SeqlenDist::Splitwise => rng.lognormal(7.1, 0.9),
+            SeqlenDist::Fixed(n) => return (*n).min(max_seq),
+        };
+        (v.round() as usize).clamp(1, max_seq)
+    }
+
+    /// Empirical fraction of sampled lengths below `threshold`.
+    pub fn fraction_below(&self, threshold: usize, samples: usize, seed: u64) -> f64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let below = (0..samples)
+            .filter(|_| self.sample(&mut rng, usize::MAX / 2) < threshold)
+            .count();
+        below as f64 / samples as f64
+    }
+}
+
+/// One inference request in a trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival offset from trace start, microseconds.
+    pub arrival_us: u64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+/// Deterministic Poisson-arrival request trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Generate `n` requests with exponential inter-arrivals at `rps`
+    /// requests/second; prompt lengths from `dist`, generation lengths
+    /// uniform in `gen_range`. Fully determined by `seed`.
+    pub fn poisson(
+        n: usize,
+        rps: f64,
+        dist: SeqlenDist,
+        gen_range: (usize, usize),
+        max_seq: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(rps > 0.0 && gen_range.0 >= 1 && gen_range.0 <= gen_range.1);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut t_us = 0u64;
+        // Poisson process: exponential gaps with mean 1/rps seconds.
+        let requests = (0..n as u64)
+            .map(|id| {
+                let gap: f64 = rng.exponential(rps);
+                t_us += (gap * 1e6) as u64;
+                let gen_len = rng.range(gen_range.0, gen_range.1);
+                let total = dist.sample(&mut rng, max_seq);
+                let prompt_len = total.saturating_sub(gen_len).max(1);
+                TraceRequest { id, arrival_us: t_us, prompt_len, gen_len }
+            })
+            .collect();
+        Self { requests }
+    }
+
+    /// Mean offered request rate over the trace, requests/second.
+    pub fn offered_rps(&self) -> f64 {
+        match (self.requests.first(), self.requests.last()) {
+            (Some(f), Some(l)) if l.arrival_us > f.arrival_us => {
+                (self.requests.len() - 1) as f64 / ((l.arrival_us - f.arrival_us) as f64 / 1e6)
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// Draw `n` samples of a distribution (for the Fig. 10 histogram bench).
+pub fn sample_lengths(dist: SeqlenDist, n: usize, max_seq: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| dist.sample(&mut rng, max_seq)).collect()
+}
+
+/// Histogram with the paper's Fig. 10 bucket edges.
+pub fn histogram(lengths: &[usize], edges: &[usize]) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut lo = 0usize;
+    for &hi in edges {
+        let c = lengths.iter().filter(|&&l| l >= lo && l < hi).count();
+        out.push((format!("[{lo},{hi})"), c));
+        lo = hi;
+    }
+    out.push((format!("[{lo},inf)"), lengths.iter().filter(|&&l| l >= lo).count()));
+    out
+}
+
+/// Poisson sampler reused by load generators (seeded).
+pub fn poisson_count(mean: f64, rng: &mut Rng) -> usize {
+    rng.poisson(mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharegpt_mass_under_8k() {
+        // Fig. 10: sequence lengths predominantly under 8K.
+        let f = SeqlenDist::ShareGpt.fraction_below(8192, 20_000, 1);
+        assert!(f > 0.95, "{f}");
+    }
+
+    #[test]
+    fn splitwise_mass_under_8k_but_longer_than_sharegpt() {
+        let sg = SeqlenDist::ShareGpt.fraction_below(2048, 20_000, 2);
+        let sw = SeqlenDist::Splitwise.fraction_below(2048, 20_000, 2);
+        assert!(sw < sg, "splitwise should skew longer: {sw} vs {sg}");
+        assert!(SeqlenDist::Splitwise.fraction_below(8192, 20_000, 3) > 0.9);
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let a = Trace::poisson(100, 10.0, SeqlenDist::ShareGpt, (8, 64), 4096, 7);
+        let b = Trace::poisson(100, 10.0, SeqlenDist::ShareGpt, (8, 64), 4096, 7);
+        assert_eq!(a.requests, b.requests);
+        assert!(a.requests.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        assert!(a.requests.iter().all(|r| r.prompt_len >= 1 && r.gen_len >= 8));
+    }
+
+    #[test]
+    fn offered_rate_near_target() {
+        let t = Trace::poisson(2000, 50.0, SeqlenDist::Fixed(128), (8, 8), 4096, 11);
+        let r = t.offered_rps();
+        assert!((r - 50.0).abs() / 50.0 < 0.15, "{r}");
+    }
+
+    #[test]
+    fn histogram_partitions_everything() {
+        let lens = sample_lengths(SeqlenDist::ShareGpt, 5000, 16384, 5);
+        let h = histogram(&lens, &[1024, 2048, 4096, 8192, 16384]);
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, lens.len());
+    }
+
+    #[test]
+    fn fixed_dist_clamps() {
+        let mut rng = Rng::seed_from_u64(0);
+        assert_eq!(SeqlenDist::Fixed(9999).sample(&mut rng, 512), 512);
+    }
+}

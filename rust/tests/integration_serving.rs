@@ -1,0 +1,174 @@
+//! Coordinator integration tests over the mock backend: whole-server
+//! behaviour at scales the PJRT tests can't afford, plus trace replay.
+
+use clusterfusion::coordinator::engine::{Engine, MockBackend, ModelGeom};
+use clusterfusion::coordinator::request::{Event, FinishReason, Request, SamplingParams};
+use clusterfusion::coordinator::router::Router;
+use clusterfusion::coordinator::server::Server;
+use clusterfusion::util::rng::Rng;
+use clusterfusion::workload::{SeqlenDist, Trace};
+
+fn big_mock() -> MockBackend {
+    MockBackend::new(
+        ModelGeom { vocab: 512, n_layers: 4, row_elems: 32, planes: 2, max_seq: 256 },
+        vec![1, 4, 8],
+    )
+}
+
+#[test]
+fn hundred_request_trace_completes() {
+    let mut engine = Engine::new(big_mock(), 1024, 16, 0.5);
+    let trace = Trace::poisson(100, 50.0, SeqlenDist::ShareGpt, (2, 12), 128, 9);
+    let mut rng = Rng::seed_from_u64(1);
+    for r in &trace.requests {
+        let prompt: Vec<i32> =
+            (0..r.prompt_len.clamp(1, 32)).map(|_| rng.below(512) as i32).collect();
+        engine.submit(Request::new(r.id, prompt, r.gen_len));
+    }
+    engine.run_to_completion(100_000).unwrap();
+    let finished = engine
+        .take_events()
+        .iter()
+        .filter(|e| matches!(e, Event::Finished { .. }))
+        .count();
+    assert_eq!(finished, 100);
+    assert_eq!(engine.pool.used_pages(), 0, "no leaked pages");
+    assert_eq!(engine.timings().len(), 100);
+    // batching efficiency: total steps far below sum of per-request steps
+    let serial_steps: usize =
+        engine.timings().iter().map(|t| t.prompt_len.min(32) + t.generated).sum();
+    assert!(
+        (engine.steps as usize) < serial_steps / 2,
+        "batching should at least halve steps: {} vs {serial_steps}",
+        engine.steps
+    );
+}
+
+#[test]
+fn generated_token_counts_match_sampling_params() {
+    let mut engine = Engine::new(big_mock(), 1024, 16, 0.5);
+    for id in 0..20u64 {
+        let gen = 1 + (id as usize % 7);
+        let mut req = Request::new(id, vec![1; 3], gen);
+        req.sampling = SamplingParams { max_new_tokens: gen, ..Default::default() };
+        engine.submit(req);
+    }
+    engine.run_to_completion(10_000).unwrap();
+    for t in engine.timings() {
+        assert_eq!(t.generated, 1 + (t.id as usize % 7), "req {}", t.id);
+    }
+}
+
+#[test]
+fn server_under_concurrent_submitters() {
+    let engine = Engine::new(big_mock(), 1024, 16, 0.5);
+    let server = std::sync::Arc::new(Server::spawn(engine));
+    let mut joins = Vec::new();
+    for thread in 0..4u64 {
+        let server = server.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut done = 0;
+            for i in 0..10u64 {
+                let id = thread * 100 + i;
+                let rx = server.submit(Request::new(id, vec![1, 2, 3], 4)).unwrap();
+                let evs: Vec<Event> = rx.iter().collect();
+                assert!(matches!(evs.last().unwrap(), Event::Finished { .. }));
+                done += 1;
+            }
+            done
+        }));
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, 40);
+    let server = std::sync::Arc::try_unwrap(server).ok().expect("sole owner");
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.timings.len(), 40);
+    assert_eq!(report.tokens_out, 160);
+}
+
+#[test]
+fn router_plus_engines_spread_load() {
+    // simulate a 4-replica deployment: route, then drive each replica
+    let mut router = Router::new(4, 100);
+    let mut engines: Vec<Engine<MockBackend>> =
+        (0..4).map(|_| Engine::new(big_mock(), 512, 16, 0.5)).collect();
+    for id in 0..40u64 {
+        let req = Request::new(id, vec![2; 4], 4);
+        let route = router.route(&req).unwrap();
+        router.on_started(route.replica);
+        engines[route.replica].submit(req);
+    }
+    let mut counts = Vec::new();
+    for (i, e) in engines.iter_mut().enumerate() {
+        e.run_to_completion(10_000).unwrap();
+        let n = e.timings().len();
+        for t in e.timings() {
+            router.on_finished(i, t.id);
+        }
+        counts.push(n);
+    }
+    assert_eq!(counts.iter().sum::<usize>(), 40);
+    assert!(counts.iter().all(|&c| c == 10), "least-loaded spread: {counts:?}");
+    assert_eq!(router.stats().0, 40);
+}
+
+#[test]
+fn preempted_requests_still_produce_correct_token_counts() {
+    // pool deliberately too small: 8 pages x 8 tokens = 64 slots for
+    // 8 requests x up to 24 tokens = 192 worst case
+    let mut engine = Engine::new(big_mock(), 8, 8, 0.2);
+    for id in 0..8u64 {
+        engine.submit(Request::new(id, vec![3; 8], 16));
+    }
+    engine.run_to_completion(100_000).unwrap();
+    assert_eq!(engine.timings().len(), 8, "all requests completed");
+    assert!(engine.preemptions > 0, "pressure must trigger preemption");
+    for t in engine.timings() {
+        assert_eq!(t.generated, 16, "req {} token count intact", t.id);
+    }
+    assert_eq!(engine.pool.used_pages(), 0);
+}
+
+#[test]
+fn determinism_under_identical_seeds() {
+    let run = || {
+        let mut engine = Engine::new(big_mock(), 256, 16, 0.5);
+        for id in 0..10u64 {
+            engine.submit(Request::new(id, vec![(id % 9) as i32 + 1; 4], 6));
+        }
+        engine.run_to_completion(10_000).unwrap();
+        engine
+            .take_events()
+            .iter()
+            .filter_map(|e| match e {
+                Event::Finished { id, generated, .. } => Some((*id, generated.clone())),
+                _ => None,
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn finish_reasons_are_accurate() {
+    let mut engine = Engine::new(big_mock(), 1024, 16, 0.5);
+    // length-bound
+    engine.submit(Request::new(1, vec![1], 2));
+    // eos-bound: mock emits (token + pos) % vocab; prompt [1] at pos 0 ->
+    // first token 1; next input 1 at pos 1 -> 2; set eos = 2
+    let mut r2 = Request::new(2, vec![1], 50);
+    r2.sampling.eos_token = Some(2);
+    engine.submit(r2);
+    // cache-bound: prompt + gen exceed max_seq 256
+    engine.submit(Request::new(3, vec![1; 10], 10_000));
+    engine.run_to_completion(100_000).unwrap();
+    let mut reasons = std::collections::HashMap::new();
+    for ev in engine.take_events() {
+        if let Event::Finished { id, reason, .. } = ev {
+            reasons.insert(id, reason);
+        }
+    }
+    assert_eq!(reasons[&1], FinishReason::Length);
+    assert_eq!(reasons[&2], FinishReason::Eos);
+    assert_eq!(reasons[&3], FinishReason::CacheFull);
+}
