@@ -1,0 +1,25 @@
+# Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
+# what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
+
+.PHONY: tier1 build test bench-compile quickstart artifacts clean
+
+tier1: build test bench-compile quickstart
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q --workspace
+
+bench-compile:
+	cd rust && cargo bench --no-run
+
+quickstart:
+	cd rust && cargo run --release --example quickstart
+
+# AOT-lower the demo models to HLO text + manifest (python/compile/aot.py).
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts
+
+clean:
+	cd rust && cargo clean

@@ -26,8 +26,16 @@ fn main() -> Result<()> {
     let model = args.get(1).map(String::as_str).unwrap_or("tiny-llama-100m");
 
     println!("== serve_trace: end-to-end serving on PJRT ==");
+    // Crate-anchored artifacts dir so the example behaves the same from
+    // any working directory (matches the integration tests' probe).
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !clusterfusion::runtime::artifacts_ready(&artifacts) {
+        println!("skipping: missing {artifacts}/manifest.json (run `make artifacts`) or the");
+        println!("PJRT runtime is unavailable in this build — see DESIGN.md §PJRT");
+        return Ok(());
+    }
     println!("loading {model} ...");
-    let backend = PjrtBackend::load("artifacts", model, 0)?;
+    let backend = PjrtBackend::load(&artifacts, model, 0)?;
     println!(
         "platform {}, buckets {:?}, vocab {}",
         backend.platform(),

@@ -28,6 +28,8 @@ pub mod noc;
 pub mod scope;
 pub mod traffic;
 
-pub use collective::{cluster_gather, cluster_reduce, CollectiveCost, ReduceOp};
+pub use collective::{
+    cluster_gather, cluster_reduce, gather_cost, reduce_cost, CollectiveCost, ReduceOp, Transport,
+};
 pub use hw::Hardware;
 pub use noc::Noc;

@@ -7,6 +7,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::runtime::xla;
 use crate::runtime::{HostTensor, Runtime};
 
 use super::engine::{Backend, ModelGeom, StepOut};

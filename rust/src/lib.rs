@@ -11,10 +11,12 @@
 //!   batcher, paged KV cache, decode engine) that executes the AOT
 //!   artifacts through PJRT ([`runtime`]), plus the H100 substitute
 //!   substrate ([`clustersim`]) that reproduces every table and figure of
-//!   the paper's evaluation (see `DESIGN.md`).
+//!   the paper's evaluation (see `DESIGN.md` at the repository root).
 //!
 //! Python never runs on the request path: after `make artifacts` the
-//! `clusterfusion` binary is self-contained.
+//! `clusterfusion` binary is self-contained. The build itself is fully
+//! offline — the only dependency is the vendored `anyhow` subset, and the
+//! native PJRT runtime is stubbed by [`runtime::xla`] (DESIGN.md §PJRT).
 pub mod clustersim;
 pub mod util;
 pub mod coordinator;

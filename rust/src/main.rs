@@ -213,6 +213,7 @@ fn main() -> Result<()> {
                     "fig17" => "fig17_e2e_tpot",
                     "fig18" => "fig18_core_modules",
                     "fig20" => "fig20_splithead",
+                    "hotpath" => "hotpath",
                     other => bail!("unknown figure {other}"),
                 }
             );

@@ -116,7 +116,7 @@ impl Table {
         let line = |cells: &[String]| {
             cells
                 .iter()
-                .zip(&widths)
+                .zip(widths.iter().copied())
                 .map(|(c, w)| format!("{c:>w$}"))
                 .collect::<Vec<_>>()
                 .join("  ")

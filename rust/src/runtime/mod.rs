@@ -11,6 +11,7 @@
 //! random-weight by design, DESIGN.md §2).
 
 pub mod manifest;
+pub mod xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -201,6 +202,21 @@ impl Runtime {
             })
             .collect()
     }
+}
+
+/// Whether a PJRT client can be constructed in this build. Cached per
+/// process so availability gates (tests, examples) construct at most one
+/// throwaway client; offline builds with the stubbed [`xla`] module
+/// always report `false`.
+pub fn pjrt_available() -> bool {
+    static AVAILABLE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVAILABLE.get_or_init(|| xla::PjRtClient::cpu().is_ok())
+}
+
+/// The standard gate for real-runtime examples/tests: `dir` holds an
+/// artifact manifest *and* the PJRT runtime is available.
+pub fn artifacts_ready(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.json").exists() && pjrt_available()
 }
 
 /// Greedy (argmax) sampling from a logits row.

@@ -1,6 +1,8 @@
 //! In-tree utility substrate (the build is fully offline, so RNG, JSON,
 //! CLI parsing and the bench harness are implemented here rather than
-//! pulled from crates.io — DESIGN.md §2 substitution table).
+//! pulled from crates.io — DESIGN.md §2 substitution table; the lone
+//! external-looking dependency, `anyhow`, is likewise an in-tree subset
+//! vendored at `rust/vendor/anyhow`).
 
 pub mod bench;
 pub mod json;

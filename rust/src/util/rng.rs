@@ -63,14 +63,19 @@ impl Rng {
         (mu + sigma * self.normal()).exp()
     }
 
-    /// Exponential with the given rate (mean 1/rate).
+    /// Exponential with the given **rate** λ (mean 1/λ). Convention audit:
+    /// `Trace::poisson` passes requests-per-second as λ, so inter-arrival
+    /// gaps average 1/rps seconds — asserted by
+    /// `workload::tests::offered_rate_near_target`.
     pub fn exponential(&mut self, rate: f64) -> f64 {
         assert!(rate > 0.0);
         -(1.0 - self.f64()).ln() / rate
     }
 
-    /// Poisson-distributed count (Knuth for small mean, normal
-    /// approximation above 30 — plenty for load generation).
+    /// Poisson-distributed count with the given **mean** (not rate ×
+    /// interval — callers multiply first). Knuth for small mean, normal
+    /// approximation above 30 — plenty for load generation. The seeded
+    /// statistical tests below hold with ≥5σ margin at their tolerances.
     pub fn poisson(&mut self, mean: f64) -> usize {
         if mean <= 0.0 {
             return 0;

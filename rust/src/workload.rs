@@ -64,6 +64,9 @@ impl Trace {
     /// Generate `n` requests with exponential inter-arrivals at `rps`
     /// requests/second; prompt lengths from `dist`, generation lengths
     /// uniform in `gen_range`. Fully determined by `seed`.
+    ///
+    /// Convention: `rps` is passed to [`Rng::exponential`] as the rate λ,
+    /// so gaps average 1/rps seconds (audited — see `offered_rate_near_target`).
     pub fn poisson(
         n: usize,
         rps: f64,

@@ -1,0 +1,100 @@
+//! End-to-end smoke tests over the public API with the mock backend:
+//! the full coordinator lifecycle (admit → decode steps → finish reason →
+//! metrics) plus a snapshot of the quickstart example's deterministic
+//! mock-backend output, so `cargo test` guards what
+//! `cargo run --example quickstart` prints on a fresh checkout.
+
+use clusterfusion::coordinator::engine::{Engine, MockBackend, ModelGeom};
+use clusterfusion::coordinator::request::{Event, FinishReason, Request};
+
+/// The full admit → prefill → decode → finish → metrics lifecycle,
+/// observed step by step from outside the crate.
+#[test]
+fn lifecycle_smoke_admit_decode_finish_metrics() {
+    let mut engine = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
+
+    // Nothing queued: a step is a no-op and reports it.
+    assert!(engine.idle());
+    assert!(!engine.step().unwrap(), "idle engine must do nothing");
+
+    // Admission happens inside the first step after submit.
+    engine.submit(Request::new(42, vec![9, 9, 9], 2));
+    assert!(!engine.idle());
+    assert!(engine.step().unwrap());
+    assert_eq!(engine.pool.seq_len(42), Some(1), "prefill fed one token");
+
+    // Drive to completion; prompt(3) + gen(2) - 1 overlapping step = 4.
+    engine.run_to_completion(16).unwrap();
+    assert_eq!(engine.steps, 4);
+    assert_eq!(engine.tokens_out, 2);
+
+    // Event stream shape: FirstToken, Token, Finished(Length).
+    let events = engine.take_events();
+    assert!(matches!(events.first(), Some(Event::FirstToken { id: 42, .. })));
+    match events.last() {
+        Some(Event::Finished { id: 42, reason, generated }) => {
+            assert_eq!(*reason, FinishReason::Length);
+            assert_eq!(generated.len(), 2);
+        }
+        other => panic!("expected Finished, got {other:?}"),
+    }
+
+    // Metrics recorded, resources returned.
+    let timings = engine.timings();
+    assert_eq!(timings.len(), 1);
+    assert_eq!(timings[0].id, 42);
+    assert_eq!(timings[0].prompt_len, 3);
+    assert_eq!(timings[0].generated, 2);
+    assert!(timings[0].total >= timings[0].ttft && timings[0].ttft >= 0.0);
+    assert_eq!(engine.pool.used_pages(), 0, "pages freed at finish");
+    assert!(engine.idle());
+}
+
+/// Snapshot of the quickstart example's mock path: prompt [3, 5] on
+/// `MockBackend::tiny()` must always generate [6, 8, 11] and finish with
+/// Length. If this changes, update examples/quickstart.rs alongside.
+#[test]
+fn quickstart_mock_snapshot() {
+    let mut engine = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
+    engine.submit(Request::new(1, vec![3, 5], 3));
+    engine.run_to_completion(100).unwrap();
+    let events = engine.take_events();
+    let tokens: Vec<i32> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::FirstToken { token, .. } | Event::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(tokens, vec![6, 8, 11], "quickstart output drifted");
+    assert!(matches!(
+        events.last(),
+        Some(Event::Finished { reason: FinishReason::Length, .. })
+    ));
+    assert_eq!(engine.steps, 4);
+    assert_eq!(engine.tokens_out, 3);
+}
+
+/// A custom-geometry mock exercised through the same public API, checking
+/// that KV rows written by the backend land in the pool where the engine
+/// says they should (plane/layer/position addressing).
+#[test]
+fn kv_rows_land_where_addressed() {
+    let geom = ModelGeom { vocab: 64, n_layers: 3, row_elems: 4, planes: 2, max_seq: 32 };
+    let mut engine = Engine::new(MockBackend::new(geom, vec![1, 2]), 32, 4, 1.0);
+    engine.submit(Request::new(5, vec![11, 13], 30));
+    for _ in 0..4 {
+        engine.step().unwrap();
+    }
+    // 4 tokens appended: prompt 11 @ pos 0, prompt 13 @ pos 1, then two
+    // generated tokens. MockBackend encodes (token, pos, plane) per row.
+    assert_eq!(engine.pool.seq_len(5), Some(4));
+    let row = engine.pool.peek(5, 1, 2, 1).unwrap();
+    assert_eq!(row[0], 13.0, "token at pos 1");
+    assert_eq!(row[1], 1.0, "pos encoded");
+    assert_eq!(row[2], 1.0, "plane encoded");
+    // every layer got the same row for this (token, plane)
+    for layer in 0..3 {
+        assert_eq!(engine.pool.peek(5, 1, layer, 1).unwrap(), row);
+    }
+}
