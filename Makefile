@@ -1,15 +1,21 @@
 # Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
 # what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
 
-.PHONY: tier1 build test bench-compile quickstart artifacts clean
+.PHONY: tier1 build test test-load bench-compile quickstart artifacts clean
 
-tier1: build test bench-compile quickstart
+tier1: build test test-load bench-compile quickstart
 
 build:
 	cd rust && cargo build --release
 
 test:
 	cd rust && cargo test -q --workspace
+
+# Saturation load tests on the virtual clock (also run by `test`; the
+# explicit target keeps the tier-1 intent visible and fails fast on
+# pacing/percentile regressions).
+test-load:
+	cd rust && cargo test -q --test integration_load
 
 bench-compile:
 	cd rust && cargo bench --no-run

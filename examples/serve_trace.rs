@@ -1,23 +1,27 @@
 //! **End-to-end validation driver** (DESIGN.md): serve a ShareGPT-like
-//! request trace against the ~100 M-parameter tiny-llama on the real PJRT
-//! runtime — router → continuous batcher → paged KV cache → fused decode
-//! executable — and report latency/throughput percentiles.
+//! request trace — router → continuous batcher → paged KV cache → fused
+//! decode — with *paced open-loop submission*: each request is submitted
+//! at its trace `arrival_us` on the wall clock (loadgen::pace_submit),
+//! and the run reports queue/TTFT/TPOT/e2e latency percentiles.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_trace -- [n_requests] [model]
 //! ```
 //!
-//! The run recorded in EXPERIMENTS.md §End-to-end used the defaults
-//! (12 requests, tiny-llama-100m).
+//! Without artifacts (or with the PJRT runtime stubbed) the example falls
+//! back to the deterministic `MockBackend`, so the pacing path always
+//! runs on a fresh checkout. The run recorded in EXPERIMENTS.md
+//! §End-to-end used the defaults (12 requests, tiny-llama-100m).
 
 use anyhow::Result;
-use clusterfusion::coordinator::engine::{Backend, Engine};
+use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend, ModelGeom};
 use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
-use clusterfusion::coordinator::request::{Event, Request};
+use clusterfusion::coordinator::request::Event;
 use clusterfusion::coordinator::router::Router;
 use clusterfusion::coordinator::server::Server;
-use clusterfusion::metrics::{LatencyRecorder, Table, Throughput};
-use clusterfusion::util::rng::Rng;
+use clusterfusion::loadgen;
+use clusterfusion::metrics::{Table, Throughput};
+use clusterfusion::util::clock::{Clock, WallClock};
 use clusterfusion::workload::{SeqlenDist, Trace};
 
 fn main() -> Result<()> {
@@ -25,23 +29,29 @@ fn main() -> Result<()> {
     let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(12);
     let model = args.get(1).map(String::as_str).unwrap_or("tiny-llama-100m");
 
-    println!("== serve_trace: end-to-end serving on PJRT ==");
+    println!("== serve_trace: end-to-end serving with paced trace replay ==");
     // Crate-anchored artifacts dir so the example behaves the same from
     // any working directory (matches the integration tests' probe).
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    if !clusterfusion::runtime::artifacts_ready(&artifacts) {
-        println!("skipping: missing {artifacts}/manifest.json (run `make artifacts`) or the");
-        println!("PJRT runtime is unavailable in this build — see DESIGN.md §PJRT");
-        return Ok(());
+    if clusterfusion::runtime::artifacts_ready(&artifacts) {
+        println!("loading {model} ...");
+        let backend = PjrtBackend::load(&artifacts, model, 0)?;
+        println!(
+            "platform {}, buckets {:?}, vocab {}",
+            backend.platform(),
+            backend.buckets(),
+            backend.geom().vocab
+        );
+        run(backend, n_requests)
+    } else {
+        println!("artifacts/PJRT unavailable — falling back to MockBackend");
+        println!("(run `make artifacts` for the real runtime; DESIGN.md §PJRT)");
+        let geom = ModelGeom { vocab: 512, n_layers: 4, row_elems: 32, planes: 2, max_seq: 256 };
+        run(MockBackend::new(geom, vec![1, 4, 8]), n_requests)
     }
-    println!("loading {model} ...");
-    let backend = PjrtBackend::load(&artifacts, model, 0)?;
-    println!(
-        "platform {}, buckets {:?}, vocab {}",
-        backend.platform(),
-        backend.buckets(),
-        backend.geom().vocab
-    );
+}
+
+fn run<B: Backend + Send + 'static>(backend: B, n_requests: usize) -> Result<()> {
     let vocab = backend.geom().vocab;
     let engine = Engine::new(backend, 512, 16, 0.5);
     let server = Server::spawn(engine);
@@ -49,23 +59,25 @@ fn main() -> Result<()> {
 
     // ShareGPT-like trace, scaled to the demo model's context budget
     let trace = Trace::poisson(n_requests, 8.0, SeqlenDist::ShareGpt, (4, 12), 96, 42);
-    println!("trace: {} requests, offered {:.1} rps\n", trace.requests.len(), trace.offered_rps());
-
-    let mut rng = Rng::seed_from_u64(7);
-    let t0 = std::time::Instant::now();
-    let mut receivers = Vec::new();
-    for r in &trace.requests {
-        let prompt: Vec<i32> =
-            (0..r.prompt_len.clamp(1, 16)).map(|_| rng.below(vocab) as i32).collect();
-        let req = Request::new(r.id, prompt, r.gen_len.clamp(4, 12));
-        let route = router.route(&req)?;
+    println!(
+        "trace: {} requests, offered {:.1} rps over {:.2}s\n",
+        trace.requests.len(),
+        trace.achieved_rps(),
+        trace.span_us() as f64 / 1e6
+    );
+    let requests = loadgen::synthesize_requests(&trace, vocab, 16, 12, 7);
+    for req in &requests {
+        let route = router.route(req)?;
         router.on_started(route.replica);
-        receivers.push((r.id, server.submit(req)?));
     }
+
+    // Paced open-loop submission: honours arrival_us on the wall clock.
+    let clock = WallClock::new();
+    let paced = loadgen::pace_submit(&server, &requests, &clock)?;
 
     let mut tokens = 0u64;
     let mut first_tokens = 0u64;
-    for (id, rx) in receivers {
+    for (id, rx) in paced.receivers {
         for ev in rx.iter() {
             match ev {
                 Event::FirstToken { .. } => {
@@ -77,15 +89,11 @@ fn main() -> Result<()> {
             }
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = clock.now_us() as f64 / 1e6;
     let report = server.shutdown()?;
 
-    let mut total_lat = LatencyRecorder::new();
-    let mut ttft = LatencyRecorder::new();
     let mut gen_tokens = 0usize;
     for t in &report.timings {
-        total_lat.record(t.total);
-        ttft.record(t.ttft);
         gen_tokens += t.generated;
     }
     let thr = Throughput { tokens, seconds: wall };
@@ -103,12 +111,31 @@ fn main() -> Result<()> {
         format!("{:.2}", report.tokens_out as f64 / report.steps.max(1) as f64),
     ]);
     t.row(vec!["preemptions".to_string(), report.preemptions.to_string()]);
+    t.row(vec![
+        "first submit (s)".to_string(),
+        format!("{:.3}", paced.first_submit_us as f64 / 1e6),
+    ]);
+    t.row(vec![
+        "last submit (s)".to_string(),
+        format!("{:.3}", paced.last_submit_us as f64 / 1e6),
+    ]);
     t.print();
-    println!("\nrequest latency: {}", total_lat.summary().fmt_ms());
-    println!("ttft:            {}", ttft.summary().fmt_ms());
+    println!("\nlatency percentiles (paced, open-loop):");
+    print!("{}", loadgen::percentiles(&report.timings).render());
 
     assert_eq!(report.timings.len(), n_requests, "every request must finish");
     assert!(tokens > 0 && thr.tokens_per_second() > 0.0);
-    println!("\nserve_trace OK");
+    if n_requests >= 2 {
+        // Pacing acceptance: submissions spread over the trace span
+        // instead of all landing at t=0 (sleeps only overshoot, so the
+        // spread can only shrink by the first submission's jitter).
+        let spread = paced.last_submit_us - paced.first_submit_us;
+        assert!(
+            spread >= trace.span_us() / 2,
+            "submissions not paced: spread {spread}µs vs trace span {}µs",
+            trace.span_us()
+        );
+    }
+    println!("\nserve_trace OK (paced)");
     Ok(())
 }

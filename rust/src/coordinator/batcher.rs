@@ -5,18 +5,37 @@
 //! requests join as long as (a) a batch-bucket slot is free and (b) the
 //! paged KV pool can hold their worst-case footprint. The engine executes
 //! whichever AOT batch bucket is the smallest that fits the running set.
+//!
+//! Queue entries carry the clock timestamp at which they were submitted
+//! (`util::clock` microseconds) so the engine can attribute queue wait to
+//! each request; a preempted request keeps its original timestamp across
+//! the requeue, so its eventual TTFT includes the whole detour.
 
 use std::collections::VecDeque;
 
 use super::kv_cache::KvPool;
 use super::request::{Request, RequestId};
 
+/// A request waiting for admission, stamped with its submission time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueuedRequest {
+    pub req: Request,
+    /// Clock microseconds at submission (first arrival, not requeue).
+    pub submitted_us: u64,
+    /// Clock microseconds this entry was pushed (submission or requeue):
+    /// the start of the *current* wait.
+    pub enqueued_us: u64,
+    /// Queue wait accumulated on earlier admission attempts, microseconds
+    /// (execution time between admission and preemption is not queueing).
+    pub queued_us: u64,
+}
+
 /// Admission + batch composition policy.
 #[derive(Debug)]
 pub struct Batcher {
     /// Available AOT batch buckets, ascending (e.g. [1, 4, 8]).
     buckets: Vec<usize>,
-    waiting: VecDeque<Request>,
+    waiting: VecDeque<QueuedRequest>,
     running: Vec<RequestId>,
     /// Admission headroom: fraction of a request's worst-case pages that
     /// must be free to admit it (1.0 = fully conservative).
@@ -41,8 +60,14 @@ impl Batcher {
         self.buckets.iter().copied().find(|&b| b >= n)
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.waiting.push_back(req);
+    /// Enqueue a request submitted at clock time `now_us`.
+    pub fn submit(&mut self, req: Request, now_us: u64) {
+        self.waiting.push_back(QueuedRequest {
+            req,
+            submitted_us: now_us,
+            enqueued_us: now_us,
+            queued_us: 0,
+        });
     }
 
     pub fn queued(&self) -> usize {
@@ -59,27 +84,34 @@ impl Batcher {
     }
 
     /// Put a preempted request back at the *front* of the queue (it
-    /// re-prefills from scratch — FCFS without starvation).
-    pub fn requeue_front(&mut self, req: Request) {
-        self.waiting.push_front(req);
+    /// re-prefills from scratch — FCFS without starvation). The original
+    /// submission timestamp and the queue wait already accumulated are
+    /// preserved; the current wait restarts at `now_us`.
+    pub fn requeue_front(&mut self, req: Request, submitted_us: u64, queued_us: u64, now_us: u64) {
+        self.waiting.push_front(QueuedRequest {
+            req,
+            submitted_us,
+            enqueued_us: now_us,
+            queued_us,
+        });
     }
 
     /// Admit queued requests while capacity allows; returns newly admitted
-    /// requests (caller must alloc_seq + start prefill).
-    pub fn admit(&mut self, pool: &KvPool) -> Vec<Request> {
+    /// entries (caller must alloc_seq + start prefill).
+    pub fn admit(&mut self, pool: &KvPool) -> Vec<QueuedRequest> {
         let mut admitted = Vec::new();
         let mut reserved = 0usize; // pages promised to requests admitted now
         while self.running.len() < self.max_batch() {
             let Some(front) = self.waiting.front() else { break };
-            let worst_pages = pool.pages_for(front.max_total_len());
+            let worst_pages = pool.pages_for(front.req.max_total_len());
             let need = ((worst_pages as f64) * self.admit_fraction).ceil() as usize;
             if pool.free_pages() < reserved + need.max(1) {
                 break; // FCFS: do not skip ahead of the blocked head
             }
-            let req = self.waiting.pop_front().unwrap();
+            let entry = self.waiting.pop_front().unwrap();
             reserved += need.max(1);
-            self.running.push(req.id);
-            admitted.push(req);
+            self.running.push(entry.req.id);
+            admitted.push(entry);
         }
         admitted
     }
@@ -97,11 +129,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn pool(pages: usize) -> KvPool {
-        KvPool::new(
-            CacheGeometry { n_layers: 1, row_elems: 2, planes: 2, max_seq: 64 },
-            4,
-            pages,
-        )
+        KvPool::new(CacheGeometry { n_layers: 1, row_elems: 2, planes: 2, max_seq: 64 }, 4, pages)
     }
 
     fn req(id: u64, prompt: usize, gen: usize) -> Request {
@@ -123,38 +151,44 @@ mod tests {
         let mut b = Batcher::new(vec![1, 4], 1.0);
         let p = pool(6); // 24 token slots
         for i in 0..6 {
-            b.submit(req(i, 4, 4)); // 8 tokens = 2 pages each
+            b.submit(req(i, 4, 4), i * 10); // 8 tokens = 2 pages each
         }
         let admitted = b.admit(&p);
         // capacity: 6 pages / 2 per req = 3 admitted (bucket would allow 4)
         assert_eq!(admitted.len(), 3);
         assert_eq!(b.running().len(), 3);
         assert_eq!(b.queued(), 3);
+        // submission timestamps ride along
+        assert_eq!(admitted[0].submitted_us, 0);
+        assert_eq!(admitted[2].submitted_us, 20);
     }
 
     #[test]
     fn fcfs_head_blocks_queue() {
         let mut b = Batcher::new(vec![4], 1.0);
         let p = pool(2); // 8 token slots
-        b.submit(req(1, 30, 10)); // 10 pages — can never fit
-        b.submit(req(2, 2, 2)); // would fit, but FCFS must not bypass
+        b.submit(req(1, 30, 10), 0); // 10 pages — can never fit
+        b.submit(req(2, 2, 2), 0); // would fit, but FCFS must not bypass
         assert!(b.admit(&p).is_empty());
         assert_eq!(b.queued(), 2);
     }
 
     #[test]
-    fn release_and_requeue() {
+    fn release_and_requeue_preserves_submit_time() {
         let mut b = Batcher::new(vec![2], 1.0);
         let p = pool(16);
-        b.submit(req(1, 2, 2));
-        b.submit(req(2, 2, 2));
-        b.submit(req(3, 2, 2));
+        b.submit(req(1, 2, 2), 5);
+        b.submit(req(2, 2, 2), 6);
+        b.submit(req(3, 2, 2), 7);
         assert_eq!(b.admit(&p).len(), 2);
         b.release(1);
         assert_eq!(b.running(), &[2]);
-        b.requeue_front(req(1, 2, 2));
+        b.requeue_front(req(1, 2, 2), 5, 40, 100);
         let again = b.admit(&p);
-        assert_eq!(again[0].id, 1, "preempted request resumes first");
+        assert_eq!(again[0].req.id, 1, "preempted request resumes first");
+        assert_eq!(again[0].submitted_us, 5, "original submit time survives requeue");
+        assert_eq!(again[0].queued_us, 40, "accumulated queue wait survives requeue");
+        assert_eq!(again[0].enqueued_us, 100, "current wait restarts at requeue time");
     }
 
     #[test]
@@ -163,11 +197,11 @@ mod tests {
         let mut b = Batcher::new(vec![1, 2, 4], 0.5);
         let p = pool(32);
         let mut next = 0u64;
-        for _ in 0..300 {
+        for step in 0..300 {
             match rng.below(3) {
                 0 => {
                     next += 1;
-                    b.submit(req(next, 1 + rng.below(6), 1 + rng.below(6)));
+                    b.submit(req(next, 1 + rng.below(6), 1 + rng.below(6)), step);
                 }
                 1 => {
                     let _ = b.admit(&p);

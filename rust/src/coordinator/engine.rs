@@ -8,12 +8,16 @@
 //! → emit events. Prefill is fed through the same decode path token by
 //! token (decode-as-prefill; prompt logits are discarded until the last
 //! prompt token).
+//!
+//! All request timing (queue wait, TTFT, TPOT, end-to-end) is measured on
+//! a pluggable [`Clock`]: real runs use the wall clock, load tests inject
+//! a deterministic virtual clock (`util::clock`, `loadgen`).
 
 use std::collections::HashMap;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::util::clock::{SharedClock, WallClock};
 use crate::util::rng::Rng;
 
 use super::batcher::Batcher;
@@ -70,8 +74,15 @@ struct SeqState {
     fed: usize,
     generated: Vec<i32>,
     phase: Phase,
-    t_admit: Instant,
-    t_first: Option<Instant>,
+    /// Clock µs of the original submission (survives preemption requeues).
+    submitted_us: u64,
+    /// Clock µs of (the latest) admission into the running set.
+    admitted_us: u64,
+    /// Total queue wait accumulated across all admission attempts, µs
+    /// (time spent *running* before a preemption is not queueing).
+    queue_us: u64,
+    /// Clock µs of the first generated token, if any.
+    first_us: Option<u64>,
 }
 
 impl SeqState {
@@ -84,16 +95,31 @@ impl SeqState {
     }
 }
 
-/// Per-request timing summary for metrics.
+/// Per-request timing summary for metrics. All timestamps are clock
+/// microseconds; derived latencies are seconds.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestTiming {
     pub id: RequestId,
-    /// Queue + prefill time to the first generated token, seconds.
+    /// Clock µs at submission.
+    pub submitted_us: u64,
+    /// Clock µs at completion.
+    pub finished_us: u64,
+    /// Total time spent waiting for admission, seconds (accumulated
+    /// across preemption requeues; excludes time spent executing).
+    pub queue: f64,
+    /// Submission → first generated token, seconds (includes queue time).
     pub ttft: f64,
-    /// Total latency to completion, seconds.
+    /// Mean time per generated token after the first, seconds
+    /// (0 when fewer than two tokens were generated).
+    pub tpot: f64,
+    /// Submission → completion, seconds.
     pub total: f64,
     pub prompt_len: usize,
     pub generated: usize,
+}
+
+fn us_delta_secs(later: u64, earlier: u64) -> f64 {
+    later.saturating_sub(earlier) as f64 * 1e-6
 }
 
 /// The decode engine.
@@ -101,6 +127,7 @@ pub struct Engine<B: Backend> {
     backend: B,
     pub pool: KvPool,
     pub batcher: Batcher,
+    clock: SharedClock,
     seqs: HashMap<SeqId, SeqState>,
     /// persistent gather buffers per batch bucket (hot-path reuse; never
     /// zeroed — see KvPool::gather_batch_into)
@@ -110,6 +137,9 @@ pub struct Engine<B: Backend> {
     rng: Rng,
     /// decode steps executed (each = one fused kernel invocation batch).
     pub steps: u64,
+    /// live sequences in the most recent executed step (0 if the last
+    /// `step()` was a no-op) — what a service-time model should bill.
+    pub last_batch: usize,
     /// tokens generated in total.
     pub tokens_out: u64,
     /// preemptions performed under cache pressure.
@@ -117,26 +147,46 @@ pub struct Engine<B: Backend> {
 }
 
 impl<B: Backend> Engine<B> {
+    /// Engine on the wall clock (interactive / production path).
     pub fn new(backend: B, pool_pages: usize, page_tokens: usize, admit_fraction: f64) -> Self {
+        Self::with_clock(backend, pool_pages, page_tokens, admit_fraction, WallClock::shared())
+    }
+
+    /// Engine on an explicit clock (load tests inject a `VirtualClock`).
+    pub fn with_clock(
+        backend: B,
+        pool_pages: usize,
+        page_tokens: usize,
+        admit_fraction: f64,
+        clock: SharedClock,
+    ) -> Self {
         let geom = backend.geom().cache_geometry();
         let buckets = backend.buckets();
         Self {
             backend,
             pool: KvPool::new(geom, page_tokens, pool_pages),
             batcher: Batcher::new(buckets, admit_fraction),
+            clock,
             seqs: HashMap::new(),
             plane_bufs: HashMap::new(),
             events: Vec::new(),
             timings: Vec::new(),
             rng: Rng::seed_from_u64(0xC1A5),
             steps: 0,
+            last_batch: 0,
             tokens_out: 0,
             preemptions: 0,
         }
     }
 
+    /// The engine's time source (shared with the load generator).
+    pub fn clock(&self) -> SharedClock {
+        self.clock.clone()
+    }
+
     pub fn submit(&mut self, req: Request) {
-        self.batcher.submit(req);
+        let now = self.clock.now_us();
+        self.batcher.submit(req, now);
     }
 
     /// Drain accumulated events.
@@ -173,16 +223,22 @@ impl<B: Backend> Engine<B> {
     fn finish(&mut self, id: SeqId, reason: FinishReason) {
         if let Some(mut st) = self.seqs.remove(&id) {
             st.phase = Phase::Finished(reason);
-            let now = Instant::now();
+            let now = self.clock.now_us();
+            let generated = st.generated.len();
+            let tpot = match (st.first_us, generated) {
+                (Some(first), n) if n >= 2 => us_delta_secs(now, first) / (n - 1) as f64,
+                _ => 0.0,
+            };
             self.timings.push(RequestTiming {
                 id,
-                ttft: st
-                    .t_first
-                    .map(|t| t.duration_since(st.t_admit).as_secs_f64())
-                    .unwrap_or_default(),
-                total: now.duration_since(st.t_admit).as_secs_f64(),
+                submitted_us: st.submitted_us,
+                finished_us: now,
+                queue: st.queue_us as f64 * 1e-6,
+                ttft: st.first_us.map(|f| us_delta_secs(f, st.submitted_us)).unwrap_or_default(),
+                tpot,
+                total: us_delta_secs(now, st.submitted_us),
                 prompt_len: st.req.prompt.len(),
-                generated: st.generated.len(),
+                generated,
             });
             self.events.push(Event::Finished { id, reason, generated: st.generated.clone() });
         }
@@ -204,8 +260,7 @@ impl<B: Backend> Engine<B> {
         }
         loop {
             let running = self.batcher.running().to_vec();
-            let needed =
-                running.iter().filter(|id| self.pool.needs_new_page(**id)).count();
+            let needed = running.iter().filter(|id| self.pool.needs_new_page(**id)).count();
             if self.pool.free_pages() >= needed {
                 return;
             }
@@ -218,11 +273,12 @@ impl<B: Backend> Engine<B> {
                 return;
             }
             let victim = pick_victim(&running, |id| {
-                self.seqs.get(&id).map(|s| s.t_admit).unwrap_or_else(Instant::now)
+                self.seqs.get(&id).map(|s| s.admitted_us).unwrap_or(u64::MAX)
             });
             self.preemptions += 1;
             if let Some(st) = self.seqs.remove(&victim) {
-                self.batcher.requeue_front(st.req);
+                let now = self.clock.now_us();
+                self.batcher.requeue_front(st.req, st.submitted_us, st.queue_us, now);
             }
             self.pool.free_seq(victim);
             self.batcher.release(victim);
@@ -232,17 +288,20 @@ impl<B: Backend> Engine<B> {
     /// Run one engine iteration. Returns false when there was nothing to do.
     pub fn step(&mut self) -> Result<bool> {
         // 1. admission
-        for req in self.batcher.admit(&self.pool) {
-            self.pool.alloc_seq(req.id).context("alloc admitted seq")?;
+        let now = self.clock.now_us();
+        for entry in self.batcher.admit(&self.pool) {
+            self.pool.alloc_seq(entry.req.id).context("alloc admitted seq")?;
             self.seqs.insert(
-                req.id,
+                entry.req.id,
                 SeqState {
-                    req,
+                    req: entry.req,
                     fed: 0,
                     generated: Vec::new(),
                     phase: Phase::Prefill,
-                    t_admit: Instant::now(),
-                    t_first: None,
+                    submitted_us: entry.submitted_us,
+                    admitted_us: now,
+                    queue_us: entry.queued_us + now.saturating_sub(entry.enqueued_us),
+                    first_us: None,
                 },
             );
         }
@@ -250,8 +309,10 @@ impl<B: Backend> Engine<B> {
         self.relieve_pressure();
         let running = self.batcher.running().to_vec();
         if running.is_empty() {
+            self.last_batch = 0;
             return Ok(false);
         }
+        self.last_batch = running.len();
         let bucket = self
             .batcher
             .bucket_for(running.len())
@@ -267,10 +328,7 @@ impl<B: Backend> Engine<B> {
         }
         let g0 = self.pool.geometry();
         let planes = self.plane_bufs.entry(bucket).or_insert_with(|| {
-            vec![
-                vec![0.0f32; g0.n_layers * bucket * g0.max_seq * g0.row_elems];
-                g0.planes
-            ]
+            vec![vec![0.0f32; g0.n_layers * bucket * g0.max_seq * g0.row_elems]; g0.planes]
         });
         self.pool.gather_batch_into(&running, bucket, planes)?;
 
@@ -312,10 +370,11 @@ impl<B: Backend> Engine<B> {
             let tok = {
                 let st_phase_first = st.generated.is_empty();
                 let t = self.sample(logits_row, temperature);
+                let t_now = self.clock.now_us();
                 let st = self.seqs.get_mut(id).unwrap();
                 st.generated.push(t);
                 if st_phase_first {
-                    st.t_first = Some(Instant::now());
+                    st.first_us = Some(t_now);
                     st.phase = Phase::Decode;
                     self.events.push(Event::FirstToken { id: *id, token: t });
                 } else {
@@ -427,6 +486,8 @@ impl Backend for MockBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::clock::{Clock, VirtualClock};
+    use std::sync::Arc;
 
     fn engine() -> Engine<MockBackend> {
         Engine::new(MockBackend::tiny(), 64, 4, 1.0)
@@ -558,8 +619,49 @@ mod tests {
         let t = e.timings();
         assert_eq!(t.len(), 1);
         assert!(t[0].ttft >= 0.0 && t[0].total >= t[0].ttft);
+        assert!(t[0].queue <= t[0].ttft, "queue wait is part of TTFT");
+        assert!(t[0].finished_us >= t[0].submitted_us);
         assert_eq!(t[0].prompt_len, 2);
         assert_eq!(t[0].generated, 2);
+    }
+
+    #[test]
+    fn virtual_clock_timings_are_exact() {
+        // On a virtual clock the engine's timing fields are fully
+        // determined by when the driver advances time.
+        let clock = VirtualClock::shared();
+        let shared: SharedClock = clock.clone();
+        let mut e = Engine::with_clock(MockBackend::tiny(), 64, 4, 1.0, shared);
+        // prompt 2 + gen 3 -> 4 steps (last prompt step emits first token)
+        e.submit(Request::new(1, vec![3, 5], 3));
+        while !e.idle() {
+            e.step().unwrap();
+            clock.advance_us(1_000); // 1 ms per decode step
+        }
+        let t = e.timings()[0];
+        assert_eq!(t.submitted_us, 0);
+        // events are stamped at the *start* of the step that produced
+        // them: the first token falls in step 2, which begins at 1 ms
+        assert!((t.ttft - 1e-3).abs() < 1e-9, "{}", t.ttft);
+        // tokens 2 and 3 arrive one step (1 ms) apart
+        assert!((t.tpot - 1e-3).abs() < 1e-9, "{}", t.tpot);
+        assert_eq!(t.finished_us, 3_000);
+        assert!((t.total - 3e-3).abs() < 1e-9, "{}", t.total);
+        assert_eq!(t.queue, 0.0);
+    }
+
+    #[test]
+    fn queue_time_measured_on_virtual_clock() {
+        let clock = Arc::new(VirtualClock::new());
+        let shared: SharedClock = clock.clone();
+        let mut e = Engine::with_clock(MockBackend::tiny(), 64, 4, 1.0, shared);
+        clock.advance_us(500);
+        e.submit(Request::new(1, vec![1], 1));
+        clock.advance_us(2_500); // request waits 2.5 ms before first step
+        e.run_to_completion(10).unwrap();
+        let t = e.timings()[0];
+        assert_eq!(t.submitted_us, 500);
+        assert!((t.queue - 2.5e-3).abs() < 1e-9, "{}", t.queue);
     }
 
     #[test]

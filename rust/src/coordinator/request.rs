@@ -76,7 +76,8 @@ pub enum Phase {
 /// Event stream emitted per request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
-    /// Prefill finished; time-to-first-token measured from admission.
+    /// Prefill finished; time-to-first-token is measured from
+    /// *submission* (queue wait included — see `RequestTiming::ttft`).
     FirstToken { id: RequestId, token: i32 },
     /// One generated token.
     Token { id: RequestId, token: i32 },

@@ -6,30 +6,29 @@
 //! re-queued at the front, preserving FCFS completion order for the older
 //! sequences that have already accumulated KV state.
 
-use std::time::Instant;
-
 use super::kv_cache::SeqId;
 
 /// Choose the preemption victim among `running`: the most recently
-/// admitted sequence (`admit_time` accessor avoids borrowing whole
-/// engine state).
-pub fn pick_victim(running: &[SeqId], admit_time: impl Fn(SeqId) -> Instant) -> SeqId {
+/// admitted sequence. `admit_time` returns the admission timestamp in
+/// clock microseconds (see `util::clock`); the accessor form avoids
+/// borrowing whole engine state. Ties (same-step admissions on a virtual
+/// clock) break toward the higher sequence id, which is the later
+/// submission, so the choice stays deterministic.
+pub fn pick_victim(running: &[SeqId], admit_time: impl Fn(SeqId) -> u64) -> SeqId {
     assert!(!running.is_empty());
     *running
         .iter()
-        .max_by_key(|id| admit_time(**id))
+        .max_by_key(|id| (admit_time(**id), **id))
         .expect("non-empty running set")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     #[test]
     fn youngest_is_victim() {
-        let base = Instant::now();
-        let times = [base, base + Duration::from_secs(2), base + Duration::from_secs(1)];
+        let times = [0u64, 2_000_000, 1_000_000];
         let running = vec![10, 20, 30];
         let victim = pick_victim(&running, |id| times[(id / 10 - 1) as usize]);
         assert_eq!(victim, 20);
@@ -37,7 +36,13 @@ mod tests {
 
     #[test]
     fn single_running_is_victim() {
-        let now = Instant::now();
-        assert_eq!(pick_victim(&[7], |_| now), 7);
+        assert_eq!(pick_victim(&[7], |_| 5), 7);
+    }
+
+    #[test]
+    fn ties_break_toward_latest_submission() {
+        // Virtual-clock runs can admit several sequences at the same
+        // microsecond; the victim must still be unique and deterministic.
+        assert_eq!(pick_victim(&[3, 9, 4], |_| 100), 9);
     }
 }

@@ -4,6 +4,12 @@
 //! requests through a channel and receive per-request event streams. The
 //! build is offline (no tokio), so concurrency is std::thread + mpsc —
 //! the engine loop itself is single-threaded by design (one device).
+//!
+//! A client may drop its event `Receiver` at any time ("hang-up"); the
+//! engine still runs the request to completion, but the dead subscriber
+//! entry is pruned on the first failed send so the map cannot accumulate
+//! garbage across long serving runs. `ServerReport` exposes the counters
+//! the hang-up tests assert on.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -31,6 +37,11 @@ pub struct ServerReport {
     pub steps: u64,
     pub tokens_out: u64,
     pub preemptions: u64,
+    /// Event sends that failed because the client dropped its receiver.
+    pub send_failures: u64,
+    /// Subscriber entries still registered when the engine thread exited
+    /// (0 unless the server loop leaked — asserted by tests).
+    pub dangling_subscribers: usize,
     pub timings: Vec<RequestTiming>,
 }
 
@@ -40,6 +51,7 @@ impl Server {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let handle = std::thread::spawn(move || {
             let mut subscribers: HashMap<RequestId, Sender<Event>> = HashMap::new();
+            let mut send_failures = 0u64;
             let mut shutdown = false;
             loop {
                 // drain the mailbox (non-blocking while busy, blocking when idle)
@@ -85,7 +97,12 @@ impl Server {
                     };
                     let done = matches!(ev, Event::Finished { .. });
                     if let Some(tx) = subscribers.get(&id) {
-                        let _ = tx.send(ev); // receiver may have hung up
+                        if tx.send(ev).is_err() {
+                            // receiver hung up: prune immediately so the
+                            // map does not grow with dead senders
+                            send_failures += 1;
+                            subscribers.remove(&id);
+                        }
                     }
                     if done {
                         subscribers.remove(&id);
@@ -96,6 +113,8 @@ impl Server {
                 steps: engine.steps,
                 tokens_out: engine.tokens_out,
                 preemptions: engine.preemptions,
+                send_failures,
+                dangling_subscribers: subscribers.len(),
                 timings: engine.timings().to_vec(),
             }
         });
@@ -131,7 +150,7 @@ impl Drop for Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::MockBackend;
+    use crate::coordinator::engine::{MockBackend, ModelGeom};
     use crate::coordinator::request::FinishReason;
 
     #[test]
@@ -154,6 +173,7 @@ mod tests {
         let report = server.shutdown().unwrap();
         assert_eq!(report.tokens_out, 5);
         assert_eq!(report.timings.len(), 2);
+        assert_eq!(report.dangling_subscribers, 0);
     }
 
     #[test]
@@ -166,5 +186,51 @@ mod tests {
         // events were still delivered
         let evs: Vec<Event> = rx.iter().collect();
         assert!(matches!(evs.last().unwrap(), Event::Finished { .. }));
+    }
+
+    #[test]
+    fn subscriber_hangup_mid_stream_finishes_request_without_leak() {
+        // A client that drops its Receiver mid-stream must not wedge the
+        // engine, lose the request, or leak a subscriber entry. The
+        // dropped request generates 400 tokens so the drop lands while
+        // sends are still outgoing; the outer loop absorbs the (very
+        // unlikely) schedule where the engine outruns the drop.
+        let attempt = || {
+            let geom =
+                ModelGeom { vocab: 32, n_layers: 2, row_elems: 4, planes: 2, max_seq: 512 };
+            let engine = Engine::new(MockBackend::new(geom, vec![1, 2, 4]), 256, 4, 1.0);
+            let server = Server::spawn(engine);
+            let rx_dropped = server.submit(Request::new(1, vec![1, 2], 400)).unwrap();
+            drop(rx_dropped);
+            // a well-behaved client sharing the engine
+            let rx_live = server.submit(Request::new(2, vec![3], 4)).unwrap();
+            let evs: Vec<Event> = rx_live.iter().collect();
+            assert!(matches!(evs.last().unwrap(), Event::Finished { .. }));
+
+            let report = server.shutdown().unwrap();
+            // both requests ran to completion on the engine
+            assert_eq!(report.timings.len(), 2);
+            assert_eq!(report.tokens_out, 400 + 4);
+            // nothing may remain registered at exit, hang-up or not
+            assert_eq!(report.dangling_subscribers, 0, "dead subscriber entry leaked");
+            report.send_failures
+        };
+        let saw_failed_send = (0..5).any(|_| attempt() >= 1);
+        assert!(saw_failed_send, "drop never hit an in-flight send in 5 attempts");
+    }
+
+    #[test]
+    fn hangup_after_finish_is_clean() {
+        // Dropping the receiver after the request already finished must
+        // also leave no dangling entries (Finished prunes the map).
+        let engine = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
+        let server = Server::spawn(engine);
+        let rx = server.submit(Request::new(5, vec![1], 2)).unwrap();
+        let evs: Vec<Event> = rx.iter().collect();
+        assert!(matches!(evs.last().unwrap(), Event::Finished { .. }));
+        drop(evs);
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.send_failures, 0);
+        assert_eq!(report.dangling_subscribers, 0);
     }
 }

@@ -20,6 +20,7 @@
 pub mod clustersim;
 pub mod util;
 pub mod coordinator;
+pub mod loadgen;
 pub mod metrics;
 pub mod models;
 pub mod runtime;

@@ -1,0 +1,373 @@
+//! Open-loop trace replay: the load-generation subsystem.
+//!
+//! Replays a [`Trace`] against the serving stack honouring each request's
+//! `arrival_us` (open-loop: arrivals do not wait for completions, the
+//! standard methodology behind the paper's Fig. 17 latency-under-load
+//! curves). Two drivers share the pacing logic:
+//!
+//! * [`replay`] — drives an [`Engine`] inline on the engine's own
+//!   [`Clock`]. With a `VirtualClock` this is *fully deterministic*: the
+//!   replay loop is the only writer of time, charging a [`ServiceModel`]
+//!   cost per decode step, so two runs at the same seed produce
+//!   byte-identical percentile reports (the `integration_load` contract).
+//!   With a `WallClock` the same loop paces real submissions.
+//! * [`pace_submit`] — paces submissions to a threaded [`Server`] on the
+//!   wall clock (used by `clusterfusion serve` and `examples/serve_trace`).
+//!   Virtual time is never combined with the threaded server: determinism
+//!   requires a single writer of the clock (DESIGN.md §4).
+//!
+//! Timing conventions: events are stamped at the *start* of the decode
+//! step that produced them, and the step's service cost — billed for the
+//! batch that actually executed (`Engine::last_batch`) — is charged
+//! after it completes; a fixed one-step offset that cancels in
+//! comparisons. Submissions are stamped when the engine observes them,
+//! which is at most one step after `arrival_us` when the engine is
+//! mid-step (the same mailbox-drain semantics the threaded server has).
+//! Per-request event streams are discarded during replay (metrics come
+//! from `Engine::timings`).
+//! Per-request queue/TTFT/TPOT/e2e are reduced to p50/p90/p99 summaries
+//! by [`crate::metrics::PercentileReport`].
+
+use std::sync::mpsc::Receiver;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{Backend, Engine, RequestTiming};
+use crate::coordinator::request::{Event, Request, RequestId};
+use crate::coordinator::server::Server;
+use crate::metrics::PercentileReport;
+use crate::util::clock::Clock;
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// Simulated execution cost of one engine step on a virtual clock. On a
+/// wall clock real time passes during the step and `advance_us` is a
+/// no-op, so the model is inert there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceModel {
+    /// Fixed cost per decode step, µs (kernel launch + host loop).
+    pub step_base_us: u64,
+    /// Additional cost per running sequence in the step, µs.
+    pub step_per_seq_us: u64,
+}
+
+impl ServiceModel {
+    /// Cost of one step with `live` running sequences, µs.
+    pub fn step_us(&self, live: usize) -> u64 {
+        self.step_base_us + self.step_per_seq_us * live.max(1) as u64
+    }
+
+    /// Model a backend whose step time is one flat TPOT (e.g. taken from
+    /// `clustersim::e2e::decode_step` — the Fig. 17 under-load bench).
+    pub fn from_tpot_us(tpot_us: u64) -> Self {
+        Self { step_base_us: tpot_us, step_per_seq_us: 0 }
+    }
+}
+
+/// Turn trace rows into engine requests with synthesized prompts
+/// (deterministic in `seed`) and `arrival_us` carried over.
+pub fn synthesize_requests(
+    trace: &Trace,
+    vocab: usize,
+    max_prompt: usize,
+    max_gen: usize,
+    seed: u64,
+) -> Vec<Request> {
+    assert!(vocab > 0 && max_prompt >= 1 && max_gen >= 1);
+    let mut rng = Rng::seed_from_u64(seed);
+    trace
+        .requests
+        .iter()
+        .map(|r| {
+            let prompt: Vec<i32> =
+                (0..r.prompt_len.clamp(1, max_prompt)).map(|_| rng.below(vocab) as i32).collect();
+            let mut req = Request::new(r.id, prompt, r.gen_len.clamp(1, max_gen));
+            req.arrival_us = r.arrival_us;
+            req
+        })
+        .collect()
+}
+
+/// Reduce engine timings to the four percentile summaries. TTFT samples
+/// only exist for requests that emitted a first token, and TPOT samples
+/// for requests that generated ≥ 2 (a single-token request has no
+/// inter-token gap); zero-token placeholders must not drag the tails.
+pub fn percentiles(timings: &[RequestTiming]) -> PercentileReport {
+    let queue: Vec<f64> = timings.iter().map(|t| t.queue).collect();
+    let ttft: Vec<f64> =
+        timings.iter().filter(|t| t.generated >= 1).map(|t| t.ttft).collect();
+    let tpot: Vec<f64> = timings.iter().filter(|t| t.generated >= 2).map(|t| t.tpot).collect();
+    let e2e: Vec<f64> = timings.iter().map(|t| t.total).collect();
+    PercentileReport::from_samples(&queue, &ttft, &tpot, &e2e)
+}
+
+/// Outcome of one [`replay`] run.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub completed: usize,
+    pub steps: u64,
+    pub tokens_out: u64,
+    pub preemptions: u64,
+    /// Clock µs at which the first/last request entered the engine —
+    /// paced replay spreads these over the trace span instead of t=0.
+    pub first_submit_us: u64,
+    pub last_submit_us: u64,
+    /// Clock µs of the last completion.
+    pub last_finish_us: u64,
+    pub percentiles: PercentileReport,
+}
+
+impl ReplayReport {
+    /// Fixed-format render; byte-identical across identically-seeded
+    /// virtual-clock runs (asserted by `integration_load`).
+    pub fn render(&self) -> String {
+        format!(
+            "completed={} steps={} tokens={} preemptions={}\n\
+             submit_span_us=[{}, {}] last_finish_us={}\n{}",
+            self.completed,
+            self.steps,
+            self.tokens_out,
+            self.preemptions,
+            self.first_submit_us,
+            self.last_submit_us,
+            self.last_finish_us,
+            self.percentiles.render()
+        )
+    }
+}
+
+/// Replay `requests` (sorted by `arrival_us`; [`Trace`] guarantees this)
+/// open-loop against an engine, on the engine's own clock. Returns the
+/// percentile report over every completed request.
+pub fn replay<B: Backend>(
+    engine: &mut Engine<B>,
+    requests: &[Request],
+    service: &ServiceModel,
+    max_steps: u64,
+) -> Result<ReplayReport> {
+    debug_assert!(
+        requests.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+        "replay requires arrival-sorted requests"
+    );
+    let clock = engine.clock();
+    // Baselines so a reused engine reports only *this* replay's work.
+    let base_timings = engine.timings().len();
+    let (base_steps, base_tokens, base_preempt) =
+        (engine.steps, engine.tokens_out, engine.preemptions);
+    let mut next = 0usize;
+    let mut first_submit_us = None;
+    let mut last_submit_us = 0u64;
+    let mut steps = 0u64;
+    loop {
+        let now = clock.now_us();
+        while next < requests.len() && requests[next].arrival_us <= now {
+            engine.submit(requests[next].clone());
+            first_submit_us.get_or_insert(now);
+            last_submit_us = now;
+            next += 1;
+        }
+        if engine.idle() {
+            match requests.get(next) {
+                // open-loop: jump (virtual) / sleep (wall) to the next arrival
+                Some(r) => {
+                    clock.sleep_until_us(r.arrival_us);
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let did = engine.step()?;
+        // Metrics come from timings; drop the event stream so a long
+        // saturation sweep does not accumulate O(requests × tokens).
+        engine.take_events();
+        if did {
+            steps += 1;
+            anyhow::ensure!(steps <= max_steps, "replay exceeded {max_steps} steps");
+            // bill the batch that actually executed (engine.last_batch),
+            // not the post-completion running count
+            clock.advance_us(service.step_us(engine.last_batch));
+        } else if engine.batcher.running().is_empty() {
+            // Admission blocked with the whole pool free: the queue head's
+            // worst-case footprint exceeds the pool and can never run.
+            anyhow::bail!("replay wedged: queued request cannot fit the KV pool");
+        }
+    }
+    let timings = &engine.timings()[base_timings..];
+    Ok(ReplayReport {
+        completed: timings.len(),
+        steps: engine.steps - base_steps,
+        tokens_out: engine.tokens_out - base_tokens,
+        preemptions: engine.preemptions - base_preempt,
+        first_submit_us: first_submit_us.unwrap_or(0),
+        last_submit_us,
+        last_finish_us: timings.iter().map(|t| t.finished_us).max().unwrap_or(0),
+        percentiles: percentiles(timings),
+    })
+}
+
+/// Receivers plus the observed submission times of a paced server run.
+pub struct PacedSubmission {
+    pub receivers: Vec<(RequestId, Receiver<Event>)>,
+    /// Clock µs of each submission, parallel to `receivers` (each is
+    /// ≥ its request's `arrival_us`: sleeps only overshoot).
+    pub submit_us: Vec<u64>,
+    pub first_submit_us: u64,
+    pub last_submit_us: u64,
+}
+
+/// Pace `requests` into a running [`Server`] on `clock` (wall clock in
+/// practice), sleeping until each `arrival_us` before submitting — the
+/// open-loop fix for the ROADMAP "whole trace at t=0" item. Returns the
+/// per-request receivers in submission order; the caller drains them and
+/// calls `server.shutdown()` for the timing report.
+pub fn pace_submit(
+    server: &Server,
+    requests: &[Request],
+    clock: &dyn Clock,
+) -> Result<PacedSubmission> {
+    let mut receivers = Vec::with_capacity(requests.len());
+    let mut submit_us = Vec::with_capacity(requests.len());
+    let mut first_submit_us = None;
+    let mut last_submit_us = 0u64;
+    for r in requests {
+        clock.sleep_until_us(r.arrival_us);
+        let now = clock.now_us();
+        receivers.push((r.id, server.submit(r.clone())?));
+        submit_us.push(now);
+        first_submit_us.get_or_insert(now);
+        last_submit_us = now;
+    }
+    Ok(PacedSubmission {
+        receivers,
+        submit_us,
+        first_submit_us: first_submit_us.unwrap_or(0),
+        last_submit_us,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{MockBackend, ModelGeom};
+    use crate::util::clock::{SharedClock, VirtualClock, WallClock};
+    use crate::workload::SeqlenDist;
+
+    fn mock() -> MockBackend {
+        MockBackend::new(
+            ModelGeom { vocab: 64, n_layers: 2, row_elems: 4, planes: 2, max_seq: 64 },
+            vec![1, 2, 4, 8],
+        )
+    }
+
+    fn virtual_engine() -> Engine<MockBackend> {
+        Engine::with_clock(mock(), 64, 4, 0.5, VirtualClock::shared())
+    }
+
+    #[test]
+    fn synthesize_respects_trace_and_clamps() {
+        let trace = Trace::poisson(32, 100.0, SeqlenDist::ShareGpt, (4, 64), 4096, 3);
+        let reqs = synthesize_requests(&trace, 64, 16, 8, 7);
+        assert_eq!(reqs.len(), 32);
+        for (req, row) in reqs.iter().zip(&trace.requests) {
+            assert_eq!(req.arrival_us, row.arrival_us);
+            assert_eq!(req.id, row.id);
+            assert!(req.prompt.len() <= 16 && !req.prompt.is_empty());
+            assert!(req.sampling.max_new_tokens <= 8);
+            assert!(req.prompt.iter().all(|&t| (0..64).contains(&t)));
+        }
+        // deterministic in seed
+        assert_eq!(reqs, synthesize_requests(&trace, 64, 16, 8, 7));
+    }
+
+    #[test]
+    fn replay_honours_arrival_us_on_virtual_clock() {
+        let mut e = virtual_engine();
+        let mut r1 = Request::new(0, vec![1, 2], 2);
+        r1.arrival_us = 5_000;
+        let mut r2 = Request::new(1, vec![3], 2);
+        r2.arrival_us = 9_000;
+        let service = ServiceModel { step_base_us: 100, step_per_seq_us: 0 };
+        let rep = replay(&mut e, &[r1, r2], &service, 1_000).unwrap();
+        assert_eq!(rep.completed, 2);
+        // paced: first submission at its arrival, not t=0
+        assert_eq!(rep.first_submit_us, 5_000);
+        assert!(rep.last_submit_us >= 9_000);
+        let t0 = e.timings().iter().find(|t| t.id == 0).unwrap();
+        assert_eq!(t0.submitted_us, 5_000);
+    }
+
+    #[test]
+    fn replay_is_deterministic_at_fixed_seed() {
+        let run = || {
+            let trace = Trace::poisson(64, 400.0, SeqlenDist::Fixed(24), (8, 8), 64, 11);
+            let reqs = synthesize_requests(&trace, 64, 16, 8, 5);
+            let mut e = virtual_engine();
+            let service = ServiceModel { step_base_us: 200, step_per_seq_us: 50 };
+            replay(&mut e, &reqs, &service, 1_000_000).unwrap().render()
+        };
+        assert_eq!(run(), run(), "virtual-clock replay must be byte-deterministic");
+    }
+
+    #[test]
+    fn replay_charges_service_model_time() {
+        let mut e = virtual_engine();
+        // prompt 2 + gen 3 -> 4 steps at 1000 µs, batch of one
+        let r = Request::new(0, vec![1, 2], 3);
+        let service = ServiceModel { step_base_us: 1_000, step_per_seq_us: 0 };
+        let rep = replay(&mut e, &[r], &service, 100).unwrap();
+        assert_eq!(rep.steps, 4);
+        // finish is stamped at the start of the 4th step (3 advances)
+        assert_eq!(rep.last_finish_us, 3_000);
+        let t = &e.timings()[0];
+        assert!((t.ttft - 1e-3).abs() < 1e-9, "{}", t.ttft);
+        assert!((t.tpot - 1e-3).abs() < 1e-9, "{}", t.tpot);
+    }
+
+    #[test]
+    fn replay_rejects_unadmittable_request() {
+        // pool: 8 pages x 4 tokens = 32 slots; request needs 90 worst-case
+        let mut e = Engine::with_clock(mock(), 8, 4, 1.0, VirtualClock::shared());
+        let r = Request::new(0, vec![1; 30], 60);
+        let service = ServiceModel { step_base_us: 100, step_per_seq_us: 0 };
+        let err = replay(&mut e, &[r], &service, 1_000).unwrap_err();
+        assert!(err.to_string().contains("wedged"), "{err:#}");
+    }
+
+    #[test]
+    fn replay_report_covers_only_the_current_call() {
+        // replay takes &mut Engine, so engines can be reused: the report
+        // must cover this call's work only, not lifetime totals.
+        let mut e = virtual_engine();
+        let service = ServiceModel { step_base_us: 100, step_per_seq_us: 0 };
+        let a = replay(&mut e, &[Request::new(0, vec![1], 2)], &service, 100).unwrap();
+        let b = replay(&mut e, &[Request::new(1, vec![1, 2], 2)], &service, 100).unwrap();
+        assert_eq!(a.completed, 1);
+        assert_eq!(b.completed, 1, "second replay must not double-count");
+        assert_eq!(b.percentiles.e2e.count, 1);
+        assert_eq!(b.steps, 3, "prompt 2 + gen 2 overlap one step");
+        assert_eq!(b.tokens_out, 2);
+    }
+
+    #[test]
+    fn replay_works_on_wall_clock_too() {
+        let clock: SharedClock = WallClock::shared();
+        let mut e = Engine::with_clock(mock(), 64, 4, 0.5, clock);
+        let trace = Trace::poisson(8, 2_000.0, SeqlenDist::Fixed(12), (4, 4), 64, 2);
+        let reqs = synthesize_requests(&trace, 64, 8, 4, 3);
+        let service = ServiceModel { step_base_us: 0, step_per_seq_us: 0 };
+        let rep = replay(&mut e, &reqs, &service, 100_000).unwrap();
+        assert_eq!(rep.completed, 8);
+        assert!(rep.percentiles.e2e.count == 8);
+    }
+
+    #[test]
+    fn percentiles_skip_tpot_for_single_token_requests() {
+        let mut e = virtual_engine();
+        let service = ServiceModel { step_base_us: 500, step_per_seq_us: 0 };
+        let one = Request::new(0, vec![1], 1); // single token: no tpot sample
+        let two = Request::new(1, vec![1], 3);
+        let rep = replay(&mut e, &[one, two], &service, 100).unwrap();
+        assert_eq!(rep.percentiles.e2e.count, 2);
+        assert_eq!(rep.percentiles.tpot.count, 1);
+    }
+}

@@ -18,12 +18,13 @@ use clusterfusion::clustersim::{Hardware, Noc};
 use clusterfusion::coordinator::config::ServeConfig;
 use clusterfusion::coordinator::engine::{Backend, Engine};
 use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
-use clusterfusion::coordinator::request::Request;
+use clusterfusion::coordinator::request::Event;
 use clusterfusion::coordinator::server::Server;
-use clusterfusion::metrics::{LatencyRecorder, Table};
+use clusterfusion::loadgen;
+use clusterfusion::metrics::Table;
 use clusterfusion::models::ModelConfig;
 use clusterfusion::runtime::ArtifactManifest;
-use clusterfusion::util::rng::Rng;
+use clusterfusion::util::clock::{Clock, WallClock};
 use clusterfusion::workload::{SeqlenDist, Trace};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -143,39 +144,33 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     eprintln!("loading {} from {} ...", cfg.model, cfg.artifacts);
     let backend = PjrtBackend::load(&cfg.artifacts, &cfg.model, cfg.seed)?;
     eprintln!("platform: {}", backend.platform());
-    let max_seq = backend.geom().max_seq;
+    let geom = backend.geom();
     let engine = Engine::new(backend, cfg.pool_pages, cfg.page_tokens, cfg.admit_fraction);
     let server = Server::spawn(engine);
 
-    let trace = Trace::poisson(n_requests, rps, SeqlenDist::ShareGpt, (8, 24), max_seq / 4, 42);
-    let mut rng = Rng::seed_from_u64(7);
-    let mut receivers = Vec::new();
-    let t0 = std::time::Instant::now();
-    for r in &trace.requests {
-        let prompt: Vec<i32> =
-            (0..r.prompt_len.min(64)).map(|_| rng.below(16384) as i32).collect();
-        let mut req = Request::new(r.id, prompt, r.gen_len.min(24));
-        req.arrival_us = r.arrival_us;
-        receivers.push(server.submit(req)?);
-    }
-    let mut lat = LatencyRecorder::new();
+    // Open-loop paced replay: submissions honour arrival_us on the wall
+    // clock instead of dumping the whole trace at t=0 (loadgen::pace_submit).
+    let trace =
+        Trace::poisson(n_requests, rps, SeqlenDist::ShareGpt, (8, 24), geom.max_seq / 4, 42);
+    let requests = loadgen::synthesize_requests(&trace, geom.vocab, 64, 24, 7);
+    eprintln!(
+        "replaying {} requests open-loop: offered {:.2} rps over {:.2}s",
+        requests.len(),
+        trace.achieved_rps(),
+        trace.span_us() as f64 / 1e6
+    );
+    let clock = WallClock::new();
+    let paced = loadgen::pace_submit(&server, &requests, &clock)?;
     let mut tokens = 0u64;
-    for rx in receivers {
+    for (_, rx) in paced.receivers {
         for ev in rx.iter() {
-            if matches!(
-                ev,
-                clusterfusion::coordinator::request::Event::Token { .. }
-                    | clusterfusion::coordinator::request::Event::FirstToken { .. }
-            ) {
+            if matches!(ev, Event::Token { .. } | Event::FirstToken { .. }) {
                 tokens += 1;
             }
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = clock.now_us() as f64 / 1e6;
     let report = server.shutdown()?;
-    for t in &report.timings {
-        lat.record(t.total);
-    }
     println!(
         "served {} requests, {tokens} tokens in {wall:.2}s ({:.2} tok/s), {} engine steps, {} preemptions",
         report.timings.len(),
@@ -183,7 +178,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         report.steps,
         report.preemptions
     );
-    println!("request latency: {}", lat.summary().fmt_ms());
+    println!(
+        "submit span: first at {:.3}s, last at {:.3}s (trace span {:.3}s)",
+        paced.first_submit_us as f64 / 1e6,
+        paced.last_submit_us as f64 / 1e6,
+        trace.span_us() as f64 / 1e6
+    );
+    println!("latency percentiles (queue / ttft / tpot / e2e):");
+    print!("{}", loadgen::percentiles(&report.timings).render());
     Ok(())
 }
 

@@ -63,6 +63,16 @@ impl LatencyRecorder {
     }
 }
 
+/// Reduce a sample slice to a [`Summary`] (convenience for callers that
+/// already hold their samples).
+pub fn summarize(samples: &[f64]) -> Summary {
+    let mut r = LatencyRecorder::new();
+    for &s in samples {
+        r.record(s);
+    }
+    r.summary()
+}
+
 /// Summary statistics of a latency distribution (seconds).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Summary {
@@ -85,6 +95,59 @@ impl Summary {
             self.p99 * 1e3,
             self.max * 1e3
         )
+    }
+
+    /// Row cells (milliseconds, fixed 3-decimal format) for
+    /// [`PercentileReport::render`]. The fixed format is part of the
+    /// determinism contract: identical samples yield identical bytes.
+    fn row_ms(&self, metric: &str) -> Vec<String> {
+        vec![
+            metric.to_string(),
+            self.count.to_string(),
+            format!("{:.3}", self.mean * 1e3),
+            format!("{:.3}", self.p50 * 1e3),
+            format!("{:.3}", self.p90 * 1e3),
+            format!("{:.3}", self.p99 * 1e3),
+            format!("{:.3}", self.max * 1e3),
+        ]
+    }
+}
+
+/// Percentile summaries of the four serving latency metrics the load
+/// generator records per request (paper Fig. 17 methodology: latency
+/// percentiles under open-loop traffic). All values in seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PercentileReport {
+    /// Submission → admission wait.
+    pub queue: Summary,
+    /// Submission → first generated token.
+    pub ttft: Summary,
+    /// Mean inter-token time after the first (per request, then
+    /// summarised across requests).
+    pub tpot: Summary,
+    /// Submission → completion.
+    pub e2e: Summary,
+}
+
+impl PercentileReport {
+    pub fn from_samples(queue: &[f64], ttft: &[f64], tpot: &[f64], e2e: &[f64]) -> Self {
+        Self {
+            queue: summarize(queue),
+            ttft: summarize(ttft),
+            tpot: summarize(tpot),
+            e2e: summarize(e2e),
+        }
+    }
+
+    /// Fixed-format table (milliseconds). Byte-identical for identical
+    /// inputs — load tests compare two runs' renders directly.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["metric", "n", "mean", "p50", "p90", "p99", "max"]);
+        t.row(self.queue.row_ms("queue"));
+        t.row(self.ttft.row_ms("ttft"));
+        t.row(self.tpot.row_ms("tpot"));
+        t.row(self.e2e.row_ms("e2e"));
+        t.render()
     }
 }
 
@@ -198,5 +261,40 @@ mod tests {
     fn throughput() {
         let t = Throughput { tokens: 500, seconds: 2.0 };
         assert_eq!(t.tokens_per_second(), 250.0);
+    }
+
+    #[test]
+    fn summarize_matches_recorder() {
+        let xs: Vec<f64> = (1..=50).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert_eq!(s.count, 50);
+        assert_eq!(s.p50, 25.0);
+        assert_eq!(s.max, 50.0);
+    }
+
+    #[test]
+    fn percentile_report_renders_deterministically() {
+        let q = [0.001, 0.002];
+        let f = [0.010, 0.030];
+        let p = [0.002, 0.002];
+        let e = [0.050, 0.090];
+        let a = PercentileReport::from_samples(&q, &f, &p, &e);
+        let b = PercentileReport::from_samples(&q, &f, &p, &e);
+        assert_eq!(a, b);
+        let ra = a.render();
+        assert_eq!(ra, b.render(), "render must be byte-identical");
+        for metric in ["queue", "ttft", "tpot", "e2e"] {
+            assert!(ra.contains(metric), "{metric} row missing:\n{ra}");
+        }
+        // 30 ms p99 TTFT formatted in ms with 3 decimals
+        assert!(ra.contains("30.000"), "{ra}");
+    }
+
+    #[test]
+    fn percentile_report_empty_inputs() {
+        let r = PercentileReport::from_samples(&[], &[], &[], &[]);
+        assert_eq!(r.ttft.count, 0);
+        assert_eq!(r.ttft.p99, 0.0);
+        assert!(r.render().contains("e2e"));
     }
 }

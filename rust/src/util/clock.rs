@@ -1,0 +1,142 @@
+//! Pluggable time source for the serving stack.
+//!
+//! Real runs measure latency on the [`WallClock`]; load tests replace it
+//! with a [`VirtualClock`] whose microsecond counter is advanced
+//! explicitly by the load generator (`loadgen::replay`), making every
+//! queue/TTFT/TPOT measurement — and therefore every percentile report —
+//! bit-for-bit deterministic across runs and machines (DESIGN.md §4).
+//!
+//! Determinism rule: a [`VirtualClock`] run must be single-threaded by
+//! construction. The load generator drives the engine inline and is the
+//! only writer of virtual time; the threaded [`crate::coordinator::server::Server`]
+//! is only ever paced against the wall clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotone microsecond time source.
+pub trait Clock: Send + Sync {
+    /// Microseconds elapsed since the clock's origin.
+    fn now_us(&self) -> u64;
+
+    /// Block (wall) or jump (virtual) until `deadline_us`; a deadline in
+    /// the past returns immediately.
+    fn sleep_until_us(&self, deadline_us: u64);
+
+    /// Advance virtual time by `delta_us`. The wall clock ignores this —
+    /// real time passes on its own while work executes.
+    fn advance_us(&self, _delta_us: u64) {}
+}
+
+/// Shared handle: the engine and the load generator observe one timeline.
+pub type SharedClock = Arc<dyn Clock>;
+
+/// Real time, measured from construction.
+#[derive(Debug)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self { origin: Instant::now() }
+    }
+
+    pub fn shared() -> SharedClock {
+        Arc::new(Self::new())
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    fn sleep_until_us(&self, deadline_us: u64) {
+        let now = self.now_us();
+        if deadline_us > now {
+            std::thread::sleep(Duration::from_micros(deadline_us - now));
+        }
+    }
+}
+
+/// Deterministic simulated time: starts at 0 and moves only when told to.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now_us: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_us(&self) -> u64 {
+        self.now_us.load(Ordering::SeqCst)
+    }
+
+    fn sleep_until_us(&self, deadline_us: u64) {
+        // Monotone jump: never move backwards.
+        self.now_us.fetch_max(deadline_us, Ordering::SeqCst);
+    }
+
+    fn advance_us(&self, delta_us: u64) {
+        self.now_us.fetch_add(delta_us, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_starts_at_zero_and_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance_us(250);
+        assert_eq!(c.now_us(), 250);
+        c.advance_us(1);
+        assert_eq!(c.now_us(), 251);
+    }
+
+    #[test]
+    fn virtual_sleep_jumps_forward_but_never_backward() {
+        let c = VirtualClock::new();
+        c.sleep_until_us(1_000);
+        assert_eq!(c.now_us(), 1_000);
+        c.sleep_until_us(400); // past deadline: no-op
+        assert_eq!(c.now_us(), 1_000);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_sleeps() {
+        let c = WallClock::new();
+        let a = c.now_us();
+        c.sleep_until_us(a + 2_000); // 2 ms
+        let b = c.now_us();
+        assert!(b >= a + 2_000, "{a} -> {b}");
+        c.sleep_until_us(0); // past deadline returns immediately
+        assert!(c.now_us() >= b);
+    }
+
+    #[test]
+    fn shared_virtual_clock_is_one_timeline() {
+        let c: Arc<VirtualClock> = VirtualClock::shared();
+        let view: SharedClock = c.clone();
+        c.advance_us(42);
+        assert_eq!(view.now_us(), 42);
+    }
+}

@@ -5,5 +5,6 @@
 //! vendored at `rust/vendor/anyhow`).
 
 pub mod bench;
+pub mod clock;
 pub mod json;
 pub mod rng;

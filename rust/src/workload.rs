@@ -92,13 +92,26 @@ impl Trace {
         Self { requests }
     }
 
-    /// Mean offered request rate over the trace, requests/second.
-    pub fn offered_rps(&self) -> f64 {
+    /// Mean request rate actually realised by the sampled arrivals,
+    /// requests/second (0 for traces with fewer than two distinct
+    /// arrival times). This is what an open-loop replay of the trace
+    /// offers the server; it differs from the requested `rps` only by
+    /// sampling noise (see `achieved_rps_within_tolerance_across_seeds`).
+    pub fn achieved_rps(&self) -> f64 {
         match (self.requests.first(), self.requests.last()) {
             (Some(f), Some(l)) if l.arrival_us > f.arrival_us => {
                 (self.requests.len() - 1) as f64 / ((l.arrival_us - f.arrival_us) as f64 / 1e6)
             }
             _ => 0.0,
+        }
+    }
+
+    /// Arrival span of the trace, microseconds (0 if < 2 requests;
+    /// saturating, so a hand-built unsorted trace cannot underflow).
+    pub fn span_us(&self) -> u64 {
+        match (self.requests.first(), self.requests.last()) {
+            (Some(f), Some(l)) => l.arrival_us.saturating_sub(f.arrival_us),
+            _ => 0,
         }
     }
 }
@@ -158,7 +171,7 @@ mod tests {
     #[test]
     fn offered_rate_near_target() {
         let t = Trace::poisson(2000, 50.0, SeqlenDist::Fixed(128), (8, 8), 4096, 11);
-        let r = t.offered_rps();
+        let r = t.achieved_rps();
         assert!((r - 50.0).abs() / 50.0 < 0.15, "{r}");
     }
 
@@ -174,5 +187,57 @@ mod tests {
     fn fixed_dist_clamps() {
         let mut rng = Rng::seed_from_u64(0);
         assert_eq!(SeqlenDist::Fixed(9999).sample(&mut rng, 512), 512);
+    }
+
+    // ---- pacing invariants (property-style, many seeds × rates) ----
+
+    #[test]
+    fn property_arrivals_monotone_for_all_seeds_and_rates() {
+        // Open-loop replay requires arrival_us sorted; the generator must
+        // guarantee it for any (seed, rps) including rates high enough
+        // that gaps round to 0 µs.
+        for seed in 0..25u64 {
+            for &rps in &[0.5, 5.0, 50.0, 500.0, 50_000.0] {
+                let t = Trace::poisson(64, rps, SeqlenDist::ShareGpt, (1, 16), 2048, seed);
+                assert!(
+                    t.requests.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+                    "non-monotone arrivals at seed {seed} rps {rps}"
+                );
+                assert!(
+                    t.requests.windows(2).all(|w| w[0].id < w[1].id),
+                    "ids must be strictly increasing"
+                );
+                assert!(t.requests.iter().all(|r| r.prompt_len >= 1));
+                assert!(t.requests.iter().all(|r| (1..=16).contains(&r.gen_len)));
+            }
+        }
+    }
+
+    #[test]
+    fn achieved_rps_within_tolerance_across_seeds() {
+        // n = 3000 gaps: sd of the mean ≈ rate/sqrt(n) ≈ 1.8%, so the 10%
+        // tolerance is a ≥5σ margin at every seed.
+        for seed in [3u64, 17, 99, 2024] {
+            let t = Trace::poisson(3000, 80.0, SeqlenDist::Fixed(64), (4, 4), 4096, seed);
+            let r = t.achieved_rps();
+            assert!((r - 80.0).abs() / 80.0 < 0.10, "seed {seed}: achieved {r}");
+        }
+    }
+
+    #[test]
+    fn empty_trace_edge_case() {
+        let t = Trace::poisson(0, 10.0, SeqlenDist::ShareGpt, (1, 8), 1024, 1);
+        assert!(t.requests.is_empty());
+        assert_eq!(t.achieved_rps(), 0.0);
+        assert_eq!(t.span_us(), 0);
+    }
+
+    #[test]
+    fn single_request_trace_edge_case() {
+        let t = Trace::poisson(1, 10.0, SeqlenDist::ShareGpt, (1, 8), 1024, 1);
+        assert_eq!(t.requests.len(), 1);
+        // one arrival: no measurable rate, zero span — must not divide by 0
+        assert_eq!(t.achieved_rps(), 0.0);
+        assert_eq!(t.span_us(), 0);
     }
 }
