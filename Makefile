@@ -1,9 +1,9 @@
 # Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
 # what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
 
-.PHONY: tier1 build test test-load bench-compile quickstart artifacts clean
+.PHONY: tier1 build test test-load bench-compile bench-smoke quickstart artifacts clean
 
-tier1: build test test-load bench-compile quickstart
+tier1: build test test-load bench-compile bench-smoke quickstart
 
 build:
 	cd rust && cargo build --release
@@ -19,6 +19,13 @@ test-load:
 
 bench-compile:
 	cd rust && cargo bench --no-run
+
+# Execute the hot-path harness with ~20 ms budgets per case: keeps the
+# bench harness (incl. the linalg before/after pair and the 1e5 evals/s
+# advisory) exercised in CI without burning minutes. Numbers from smoke
+# runs are noisy; use `cargo bench --bench hotpath` for EXPERIMENTS.md.
+bench-smoke:
+	cd rust && cargo bench --bench hotpath -- --smoke
 
 quickstart:
 	cd rust && cargo run --release --example quickstart

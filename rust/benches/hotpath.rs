@@ -1,14 +1,26 @@
-//! Coordinator + simulator hot-path micro-benchmarks (§Perf pass).
+//! Coordinator + simulator hot-path micro-benchmarks (§Perf pass) — the
+//! before/after regression harness for the `util::linalg` microkernel
+//! layer.
 //!
 //! Uses the in-tree harness (`util::bench`) — offline build, no criterion.
 //! Targets (DESIGN.md §5): coordinator overhead per decode step must be
 //! negligible next to executable time; the simulator must evaluate fast
-//! enough for dense sweeps (>=1e5 dataflow evals/s).
+//! enough for dense sweeps (>= 1e5 dataflow cost evals/s — an advisory
+//! prints if the measured rate drops below that) and the functional
+//! dataflows must hold their >= 10x win over the pre-refactor scalar
+//! loops (the recorded baseline lives in EXPERIMENTS.md §Perf).
+//!
+//! `--smoke` (the `make bench-smoke` / CI entry) shrinks every budget to
+//! ~20 ms per case so the harness itself cannot bitrot without burning CI
+//! minutes; absolute numbers from a smoke run are noisy — use the default
+//! budgets when recording EXPERIMENTS.md figures.
 
 use clusterfusion::clustersim::collective::{
     cluster_gather, cluster_reduce, ReduceOp, Transport,
 };
-use clusterfusion::clustersim::dataflow::{split_token, AttnProblem, CostEnv};
+use clusterfusion::clustersim::dataflow::{
+    mla, split_head, split_token, AttnProblem, CostEnv, PackedMhaWeights,
+};
 use clusterfusion::clustersim::e2e::{decode_step, Engine as SimEngine};
 use clusterfusion::clustersim::frameworks::FrameworkProfile;
 use clusterfusion::clustersim::{Hardware, Noc};
@@ -16,20 +28,45 @@ use clusterfusion::coordinator::engine::{Engine, MockBackend};
 use clusterfusion::coordinator::kv_cache::{CacheGeometry, KvPool};
 use clusterfusion::coordinator::request::Request;
 use clusterfusion::util::bench::bench;
+use clusterfusion::util::linalg::{self, PackedWeight};
+use clusterfusion::util::rng::Rng;
+
+/// Pre-refactor `split_token::execute` wall time at the Llama-2-7B
+/// geometry below, ms/iter — the seed's column-strided scalar loops,
+/// recorded in EXPERIMENTS.md §Perf (seed commit b63f1d4; measured via
+/// the C mirror of the exact loop structures on the authoring container,
+/// whose DRAM profile — ~2 GB/s streaming, ~20 ns strided loads — is the
+/// *least* favourable to the refactor; see the provenance note there).
+/// The harness prints the live speedup against it; the acceptance bar is
+/// >= 10x on hosts with a conventional latency/bandwidth ratio.
+const PRE_REFACTOR_EXECUTE_MS: f64 = 630.0;
+
+fn randv(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget: u64 = if smoke { 20 } else { 300 };
     let hw = Hardware::h100_sxm5();
     let noc = Noc::h100(&hw);
-    let budget = 300; // ms per case
 
-    println!("== hot-path micro-benchmarks ==");
+    println!("== hot-path micro-benchmarks ({}) ==", if smoke { "smoke" } else { "full" });
 
-    // --- simulator ---
+    // --- simulator cost models (the dense-sweep currency) ---
     let p = AttnProblem {
         batch: 1, d_model: 4096, n_heads: 32, head_dim: 128, seq: 4096, kv_lora_rank: 0,
     };
     let env = CostEnv::clusterfusion(&hw, &noc, 4);
-    println!("{}", bench("sim: split_token::cost", budget, || split_token::cost(&p, &env)).report());
+    let r = bench("sim: split_token::cost", budget, || split_token::cost(&p, &env));
+    println!("{}", r.report_rate("evals"));
+    if r.per_sec() < 1e5 {
+        println!(
+            "ADVISORY: sim: split_token::cost at {:.3e} evals/s is below the 1e5 \
+             evals/s dense-sweep target (DESIGN.md §5)",
+            r.per_sec()
+        );
+    }
 
     let model = clusterfusion::models::ModelConfig::llama2_7b();
     let prof = FrameworkProfile::clusterfusion();
@@ -38,8 +75,140 @@ fn main() {
         bench("sim: e2e decode_step estimate", budget, || decode_step(
             &model, 1, 4096, SimEngine::ClusterFusion { cluster_size: 4 }, &prof, &hw, &noc,
         ))
-        .report()
+        .report_rate("evals")
     );
+
+    // --- linalg microkernels: the before/after pair at the Llama-2-7B
+    // projection shape (one head's 128 columns of a 4096x4096 weight).
+    // This pair is the *same-host* before/after signal: both sides run
+    // here and now, so their ratio is meaningful on any machine (unlike
+    // the recorded cross-host execute baseline below). ---
+    let kernel_speedup = {
+        let (d, h, cols) = (4096usize, 4096usize, 128usize);
+        let mut rng = Rng::seed_from_u64(2024);
+        let x = randv(&mut rng, d, 2.0);
+        let w = randv(&mut rng, d * h, 0.4);
+        let pw = PackedWeight::pack(&w, d, h);
+        let mut out = vec![0f32; cols];
+        let packed = bench("linalg: project 128 cols, packed+tiled", budget, || {
+            linalg::matmul_rows(&x, 1, d, &pw, 0, 1024, cols, &mut out);
+            out[0]
+        });
+        println!("{}", packed.report_rate("tiles"));
+        let strided = bench("linalg: project 128 cols, seed strided", budget, || {
+            linalg::matmul_rows_naive_strided(&x, 1, d, &w, h, 1024, cols, &mut out);
+            out[0]
+        });
+        println!("{}", strided.report_rate("tiles"));
+        println!(
+            "{}",
+            bench("linalg: pack 4096x4096 weight", budget, || PackedWeight::pack(&w, d, h))
+                .report_rate("packs")
+        );
+        strided.mean_ns / packed.mean_ns
+    };
+    println!("     kernel pair same-host speedup (strided/packed): {kernel_speedup:.1}x");
+
+    // --- functional dataflows (the acceptance geometry: Llama-2-7B head
+    // config, cluster 4 — ISSUE 3 / EXPERIMENTS.md §Perf) ---
+    {
+        let (b, d, nh, dh, s, n) = (1usize, 4096usize, 32usize, 128usize, 4096usize, 4usize);
+        let h = nh * dh;
+        let mut rng = Rng::seed_from_u64(7);
+        let hidden = randv(&mut rng, b * d, 2.0);
+        let wq = randv(&mut rng, d * h, 0.4);
+        let wk = randv(&mut rng, d * h, 0.4);
+        let wv = randv(&mut rng, d * h, 0.4);
+        let wo = randv(&mut rng, h * d, 0.4);
+        let k_cache = randv(&mut rng, b * s * h, 2.0);
+        let v_cache = randv(&mut rng, b * s * h, 2.0);
+        let pos = vec![s - 1; b];
+        // The dense-sweep hot path: weights packed ONCE per sweep
+        // (PackedMhaWeights lifetime), every eval runs execute_packed.
+        let packed = PackedMhaWeights::pack(&wq, &wk, &wv, &wo, d, h);
+        let r = bench("sim: split_token::execute_packed b1 d4096 nh32 dh128 s4096 n4", budget, || {
+            split_token::execute_packed(
+                &hidden, &packed, &k_cache, &v_cache, &pos, b, d, nh, dh, s, n,
+                Transport::Dsmem, &hw, &noc,
+            )
+        });
+        println!("{}", r.report_rate("evals"));
+        // Reference comparison against the recorded cross-host baseline
+        // (EXPERIMENTS.md §Perf — informational: different machines).
+        let recorded = PRE_REFACTOR_EXECUTE_MS / (r.mean_ns / 1e6);
+        println!(
+            "     vs recorded pre-refactor baseline ({PRE_REFACTOR_EXECUTE_MS:.0} ms/iter, \
+             EXPERIMENTS.md §Perf, authoring container): {recorded:.1}x (target >= 10x)"
+        );
+        // The regression signal proper is the live same-host kernel pair
+        // measured above — both sides on this machine, this run.
+        if kernel_speedup < 10.0 {
+            println!(
+                "ADVISORY: packed-vs-strided kernel pair at {kernel_speedup:.1}x is below \
+                 the 10x bar on this host (expected only on hosts with unusually cheap \
+                 strided DRAM access — see EXPERIMENTS.md §Perf provenance)"
+            );
+        }
+        // One-shot path (pack inside the call) for the repack-cost story;
+        // skipped in smoke mode (a single iteration blows the budget).
+        if !smoke {
+            println!(
+                "{}",
+                bench("sim: split_token::execute one-shot (packs inside)", budget, || {
+                    split_token::execute(
+                        &hidden, &wq, &wk, &wv, &wo, &k_cache, &v_cache, &pos, b, d, nh, dh, s, n,
+                        Transport::Dsmem, &hw, &noc,
+                    )
+                })
+                .report_rate("evals")
+            );
+        }
+    }
+    {
+        // smaller geometries keep the per-kernel lines cheap enough for smoke
+        let (b, d, nh, dh, s, n) = (1usize, 1024usize, 8usize, 64usize, 512usize, 4usize);
+        let h = nh * dh;
+        let mut rng = Rng::seed_from_u64(8);
+        let hidden = randv(&mut rng, b * d, 2.0);
+        let wq = randv(&mut rng, d * h, 0.4);
+        let wk = randv(&mut rng, d * h, 0.4);
+        let wv = randv(&mut rng, d * h, 0.4);
+        let wo = randv(&mut rng, h * d, 0.4);
+        let k_cache = randv(&mut rng, b * s * h, 2.0);
+        let v_cache = randv(&mut rng, b * s * h, 2.0);
+        let pos = vec![s - 1; b];
+        println!(
+            "{}",
+            bench("sim: split_head::execute b1 d1024 nh8 dh64 s512 n4", budget, || {
+                split_head::execute(
+                    &hidden, &wq, &wk, &wv, &wo, &k_cache, &v_cache, &pos, b, d, nh, dh, s, n,
+                    Transport::Dsmem, &hw, &noc,
+                )
+            })
+            .report_rate("evals")
+        );
+    }
+    {
+        let (b, d, nh, l, dh, s, n) = (1usize, 1024usize, 8usize, 128usize, 64usize, 512usize, 4usize);
+        let mut rng = Rng::seed_from_u64(9);
+        let hidden = randv(&mut rng, b * d, 2.0);
+        let wq = randv(&mut rng, d * nh * l, 0.4);
+        let wkv = randv(&mut rng, d * l, 0.4);
+        let w_down = randv(&mut rng, nh * l * dh, 0.4);
+        let wo = randv(&mut rng, nh * dh * d, 0.4);
+        let kv_cache = randv(&mut rng, b * s * l, 2.0);
+        let pos = vec![s - 1; b];
+        println!(
+            "{}",
+            bench("sim: mla::execute b1 d1024 nh8 l128 dh64 s512 n4", budget, || {
+                mla::execute(
+                    &hidden, &wq, &wkv, &w_down, &wo, &kv_cache, &pos, b, d, nh, l, dh, s, n,
+                    Transport::Dsmem, &hw, &noc,
+                )
+            })
+            .report_rate("evals")
+        );
+    }
 
     // --- functional collectives ---
     println!(
@@ -93,7 +262,7 @@ fn main() {
             vec![vec![0.0f32; g.n_layers * 4 * g.max_seq * g.row_elems]; g.planes];
         println!(
             "{}",
-            bench("kv: gather_into 4 seq x 128 tok -> b4 (hot path)", budget, || {
+            bench("kv: gather_into 4 seq x 128 tok (plan cached)", budget, || {
                 pool.gather_batch_into(&[1, 2, 3, 4], 4, &mut planes).unwrap()
             })
             .report()
@@ -102,6 +271,13 @@ fn main() {
             "{}",
             bench("kv: gather_batch alloc+zero (cold path)", budget, || {
                 pool.gather_batch(&[1, 2, 3, 4], 4).unwrap()
+            })
+            .report()
+        );
+        println!(
+            "{}",
+            bench("kv: gather_plan_runs enumerate", budget, || {
+                pool.gather_plan_runs(&[1, 2, 3, 4], 4).unwrap().len()
             })
             .report()
         );

@@ -17,6 +17,7 @@
 //! fragmentation the paper's Fig. 12 quantifies.
 
 use crate::clustersim::kernelmodel::{kernel_cost, KernelSpec};
+use crate::util::linalg;
 
 use super::reference::{gemm_acc, AttnOut};
 use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM};
@@ -74,22 +75,32 @@ pub fn execute(
                 let qrow = &q_gmem[bi * h + head * dh..bi * h + (head + 1) * dh];
                 let mut m = f32::NEG_INFINITY;
                 let mut scores = Vec::new();
-                for t in lo..hi.max(lo) {
+                // token-tiled score scan (4 in-order chains per step)
+                let row_at = |t: usize| {
                     let base = ((bi * s + t) * nh + head) * dh;
-                    let dot: f32 =
-                        qrow.iter().zip(&k_cache[base..base + dh]).map(|(a, c)| a * c).sum();
-                    let sc = dot * scale;
+                    &k_cache[base..base + dh]
+                };
+                let end = hi.max(lo);
+                let mut t = lo;
+                while t + 4 <= end {
+                    let d4 = linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                    for (k, dv) in d4.iter().enumerate() {
+                        let sc = dv * scale;
+                        m = m.max(sc);
+                        scores.push((t + k, sc));
+                    }
+                    t += 4;
+                }
+                while t < end {
+                    let sc = linalg::dot(qrow, row_at(t)) * scale;
                     m = m.max(sc);
                     scores.push((t, sc));
+                    t += 1;
                 }
                 // the freshly projected token is handled by the last split
                 if sp == FLASH_SPLITS - 1 {
-                    let dot: f32 = qrow
-                        .iter()
-                        .zip(&k_gmem[bi * h + head * dh..bi * h + (head + 1) * dh])
-                        .map(|(a, c)| a * c)
-                        .sum();
-                    let sc = dot * scale;
+                    let sc = linalg::dot(qrow, &k_gmem[bi * h + head * dh..bi * h + (head + 1) * dh])
+                        * scale;
                     m = m.max(sc);
                     scores.push((usize::MAX, sc));
                 }
@@ -106,9 +117,7 @@ pub fn execute(
                     } else {
                         &v_cache[((bi * s + t) * nh + head) * dh..((bi * s + t) * nh + head) * dh + dh]
                     };
-                    for (a, vv) in acc.iter_mut().zip(vrow) {
-                        *a += p * vv;
-                    }
+                    linalg::axpy(p, vrow, acc);
                 }
                 part_m[blk * b + bi] = m;
                 part_l[blk * b + bi] = l;
@@ -136,12 +145,7 @@ pub fn execute(
                 }
                 let alpha = (pm - m).exp();
                 l += part_l[blk * b + bi] * alpha;
-                for (o, a) in out
-                    .iter_mut()
-                    .zip(&part_acc[(blk * b + bi) * dh..(blk * b + bi + 1) * dh])
-                {
-                    *o += a * alpha;
-                }
+                linalg::axpy(alpha, &part_acc[(blk * b + bi) * dh..(blk * b + bi + 1) * dh], out);
             }
             for o in out.iter_mut() {
                 *o /= l;

@@ -24,12 +24,21 @@ use crate::clustersim::collective::{
 };
 use crate::clustersim::hw::Hardware;
 use crate::clustersim::noc::Noc;
+use crate::util::linalg;
 
 use super::reference::AttnOut;
-use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SETUP};
+use super::{
+    occupancy_mem_time, AttnProblem, CostEnv, CostReport, PackedMlaWeights, ELEM, PHASE_SETUP,
+};
 
 /// Functional execution of the fused MLA dataflow. Requires
 /// `l % n == 0`, `s % n == 0`, `d % n == 0`.
+///
+/// Hot path: `wq`/`wkv`/`wo` are packed once ([`PackedMlaWeights`]) and
+/// reused across heads/blocks; `w_down` is already row-contiguous and
+/// stays on `linalg::axpy`. Per-output accumulation order is the seed's,
+/// so the result is byte-identical to the frozen scalar copy
+/// (`tests/integration_bitexact.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn execute(
     hidden: &[f32],
@@ -37,6 +46,33 @@ pub fn execute(
     wkv: &[f32],      // (D, l)
     w_down: &[f32],   // (nh, l, dh)
     wo: &[f32],       // (nh*dh, D)
+    kv_cache: &[f32], // (B, S, l)
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
+    // One-shot convenience; sweeps pack once and call [`execute_packed`].
+    let weights = PackedMlaWeights::pack(wq, wkv, wo, d, nh, l, dh);
+    execute_packed(
+        hidden, &weights, w_down, kv_cache, pos, b, d, nh, l, dh, s, n, transport, hw, noc,
+    )
+}
+
+/// [`execute`] with `wq`/`wkv`/`wo` already packed (`w_down` stays
+/// row-major — its accesses are row-contiguous). Numerics identical.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_packed(
+    hidden: &[f32],
+    weights: &PackedMlaWeights,
+    w_down: &[f32],   // (nh, l, dh)
     kv_cache: &[f32], // (B, S, l)
     pos: &[usize],
     b: usize,
@@ -58,21 +94,19 @@ pub fn execute(
     let mut kv_new_g = vec![0f32; b * l];
     let mut report = CostReport { launches: 1, ..Default::default() };
 
+    let (wq_p, wkv_p, wo_p) = (&weights.wq, &weights.wkv, &weights.wo);
+    assert!(wq_p.n_in() == d && wq_p.n_out() == nh * l && wo_p.n_out() == d);
+
+    // Scratch reused across heads/blocks/batch rows.
+    let mut scores: Vec<(usize, f32)> = Vec::new();
+    let mut attn = vec![0f32; b * l];
+
     // ---- KV Projection segments + gather (shared by all heads; computed
     // by the first cluster, broadcast via the latent cache write) ----
     let kv_segs: Vec<Vec<f32>> = (0..n)
         .map(|r| {
             let mut seg = vec![0f32; b * ls];
-            for bi in 0..b {
-                for (j, sj) in seg[bi * ls..(bi + 1) * ls].iter_mut().enumerate() {
-                    let col = r * ls + j;
-                    let mut acc = 0f32;
-                    for i in 0..d {
-                        acc += hidden[bi * d + i] * wkv[i * l + col];
-                    }
-                    *sj = acc;
-                }
-            }
+            linalg::matmul_rows(hidden, b, d, wkv_p, 0, r * ls, ls, &mut seg);
             seg
         })
         .collect();
@@ -93,16 +127,7 @@ pub fn execute(
         let q_segs: Vec<Vec<f32>> = (0..n)
             .map(|r| {
                 let mut seg = vec![0f32; b * ls];
-                for bi in 0..b {
-                    for (j, sj) in seg[bi * ls..(bi + 1) * ls].iter_mut().enumerate() {
-                        let col = head * l + r * ls + j;
-                        let mut acc = 0f32;
-                        for i in 0..d {
-                            acc += hidden[bi * d + i] * wq[i * nh * l + col];
-                        }
-                        *sj = acc;
-                    }
-                }
+                linalg::matmul_rows(hidden, b, d, wq_p, 0, head * l + r * ls, ls, &mut seg);
                 seg
             })
             .collect();
@@ -127,21 +152,28 @@ pub fn execute(
                 let lo = r * ss;
                 let hi = ((r + 1) * ss).min(valid);
                 let qrow = &q[bi * l..(bi + 1) * l];
-                let mut scores: Vec<(usize, f32)> = Vec::new();
-                for t in lo..hi.max(lo) {
+                scores.clear();
+                // token-tiled score scan (4 independent in-order chains)
+                let row_at = |t: usize| {
                     let base = (bi * s + t) * l;
-                    let dot: f32 =
-                        qrow.iter().zip(&kv_cache[base..base + l]).map(|(a, c)| a * c).sum();
-                    scores.push((t, dot * scale));
+                    &kv_cache[base..base + l]
+                };
+                let end = hi.max(lo);
+                let mut t = lo;
+                while t + 4 <= end {
+                    let d4 = linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                    for (k, dv) in d4.iter().enumerate() {
+                        scores.push((t + k, dv * scale));
+                    }
+                    t += 4;
+                }
+                while t < end {
+                    scores.push((t, linalg::dot(qrow, row_at(t)) * scale));
+                    t += 1;
                 }
                 let self_here = r == n - 1;
                 let self_score = if self_here {
-                    let dot: f32 = qrow
-                        .iter()
-                        .zip(&kv_new[bi * l..(bi + 1) * l])
-                        .map(|(a, c)| a * c)
-                        .sum();
-                    Some(dot * scale)
+                    Some(linalg::dot(qrow, &kv_new[bi * l..(bi + 1) * l]) * scale)
                 } else {
                     None
                 };
@@ -161,16 +193,12 @@ pub fn execute(
                     let p = (sc - m).exp();
                     lsum += p;
                     let base = (bi * s + t) * l;
-                    for (a, kv) in acc.iter_mut().zip(&kv_cache[base..base + l]) {
-                        *a += p * kv;
-                    }
+                    linalg::axpy(p, &kv_cache[base..base + l], acc);
                 }
                 if let Some(sc) = self_score {
                     let p = (sc - m).exp();
                     lsum += p;
-                    for (a, kv) in acc.iter_mut().zip(&kv_new[bi * l..(bi + 1) * l]) {
-                        *a += p * kv;
-                    }
+                    linalg::axpy(p, &kv_new[bi * l..(bi + 1) * l], acc);
                 }
                 m_bufs[r][bi] = m;
                 l_bufs[r][bi] = lsum;
@@ -188,9 +216,7 @@ pub fn execute(
                     (m_local[r][bi] - m_bufs[r][bi]).exp()
                 };
                 l_bufs[r][bi] *= alpha;
-                for a in &mut acc_bufs[r][bi * l..(bi + 1) * l] {
-                    *a *= alpha;
-                }
+                linalg::scale(alpha, &mut acc_bufs[r][bi * l..(bi + 1) * l]);
             }
         }
         let rc2 = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
@@ -198,9 +224,13 @@ pub fn execute(
         report.dsmem_bytes += rc1.traffic_bytes + rc2.traffic_bytes + rc3.traffic_bytes;
 
         // normalised attention output (identical in every block now)
-        let attn: Vec<f32> = (0..b * l)
-            .map(|i| acc_bufs[0][i] / l_bufs[0][i / l])
-            .collect();
+        for bi in 0..b {
+            linalg::scale_div(
+                &acc_bufs[0][bi * l..(bi + 1) * l],
+                l_bufs[0][bi],
+                &mut attn[bi * l..(bi + 1) * l],
+            );
+        }
 
         // ---- Down Projection: blocks partition the lora rank; partial
         // (B, dh) results combined with ClusterReduce(sum) ----
@@ -212,9 +242,7 @@ pub fn execute(
                         let av = attn[bi * l + r * ls + j];
                         let wrow = &w_down
                             [head * l * dh + (r * ls + j) * dh..head * l * dh + (r * ls + j + 1) * dh];
-                        for (zv, wv) in z[bi * dh..(bi + 1) * dh].iter_mut().zip(wrow) {
-                            *zv += av * wv;
-                        }
+                        linalg::axpy(av, wrow, &mut z[bi * dh..(bi + 1) * dh]);
                     }
                 }
                 z
@@ -226,14 +254,17 @@ pub fn execute(
         // ---- Output Projection tiles + atomicAdd ----
         for r in 0..n {
             for bi in 0..b {
-                for c in 0..ds {
-                    let col = r * ds + c;
-                    let mut acc = 0f32;
-                    for j in 0..dh {
-                        acc += z_bufs[r][bi * dh + j] * wo[(head * dh + j) * d + col];
-                    }
-                    out[bi * d + col] += acc;
-                }
+                linalg::matmul_rows_acc(
+                    &z_bufs[r][bi * dh..(bi + 1) * dh],
+                    1,
+                    dh,
+                    wo_p,
+                    head * dh,
+                    r * ds,
+                    ds,
+                    &mut out[bi * d..(bi + 1) * d],
+                    d,
+                );
             }
         }
     }

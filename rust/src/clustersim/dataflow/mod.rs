@@ -33,6 +33,61 @@ pub mod split_token;
 use super::collective::Transport;
 use super::hw::Hardware;
 use super::noc::Noc;
+use crate::util::linalg::PackedWeight;
+
+/// One layer's MHA attention weights packed for column access
+/// (`util::linalg::PackedWeight`), built **once per weight set** and
+/// reused across every `execute_packed` call of a sweep — the §Perf
+/// packed-weight lifetime. `execute()` wrappers pack internally (one-shot
+/// convenience); dense sweeps and the hot-path bench hold one of these.
+#[derive(Debug, Clone)]
+pub struct PackedMhaWeights {
+    /// (D, H) projections, packed.
+    pub wq: PackedWeight,
+    pub wk: PackedWeight,
+    pub wv: PackedWeight,
+    /// (H, D) output projection, packed.
+    pub wo: PackedWeight,
+}
+
+impl PackedMhaWeights {
+    pub fn pack(wq: &[f32], wk: &[f32], wv: &[f32], wo: &[f32], d: usize, h: usize) -> Self {
+        Self {
+            wq: PackedWeight::pack(wq, d, h),
+            wk: PackedWeight::pack(wk, d, h),
+            wv: PackedWeight::pack(wv, d, h),
+            wo: PackedWeight::pack(wo, h, d),
+        }
+    }
+}
+
+/// MLA analogue of [`PackedMhaWeights`]: `wq` (D, nh·l), `wkv` (D, l) and
+/// `wo` (nh·dh, D) packed; `w_down` stays row-major (its accesses are
+/// already row-contiguous).
+#[derive(Debug, Clone)]
+pub struct PackedMlaWeights {
+    pub wq: PackedWeight,
+    pub wkv: PackedWeight,
+    pub wo: PackedWeight,
+}
+
+impl PackedMlaWeights {
+    pub fn pack(
+        wq: &[f32],
+        wkv: &[f32],
+        wo: &[f32],
+        d: usize,
+        nh: usize,
+        l: usize,
+        dh: usize,
+    ) -> Self {
+        Self {
+            wq: PackedWeight::pack(wq, d, nh * l),
+            wkv: PackedWeight::pack(wkv, d, l),
+            wo: PackedWeight::pack(wo, nh * dh, d),
+        }
+    }
+}
 
 /// Element size in bytes on the simulated device (paper: FP16 end-to-end).
 pub const ELEM: f64 = 2.0;

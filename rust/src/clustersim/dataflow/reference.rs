@@ -1,6 +1,10 @@
 //! Plain single-threaded reference for the attention block (the oracle the
 //! simulated dataflows are differentially tested against — the Rust twin
-//! of `python/compile/kernels/ref.py`).
+//! of `python/compile/kernels/ref.py`). Inner loops run on the shared
+//! `util::linalg` row primitives, which keep the same per-element op order
+//! as the original explicit loops (the bit-exactness contract).
+
+use crate::util::linalg;
 
 /// Output of one attention-block decode step.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,10 +26,7 @@ pub fn gemm_acc(x: &[f32], w: &[f32], y: &mut [f32], b: usize, n_in: usize, n_ou
                 continue;
             }
             let wrow = &w[i * n_out..(i + 1) * n_out];
-            let yrow = &mut y[bi * n_out..(bi + 1) * n_out];
-            for (yo, wo) in yrow.iter_mut().zip(wrow) {
-                *yo += xv * wo;
-            }
+            linalg::axpy(xv, wrow, &mut y[bi * n_out..(bi + 1) * n_out]);
         }
     }
 }
@@ -56,12 +57,9 @@ pub fn head_attention(
         let mut scores = Vec::with_capacity(n + 1);
         for t in 0..n {
             let base = ((bi * s + t) * nh + head) * dh;
-            let dot: f32 = qrow.iter().zip(&k_cache[base..base + dh]).map(|(a, b)| a * b).sum();
-            scores.push(dot * scale);
+            scores.push(linalg::dot(qrow, &k_cache[base..base + dh]) * scale);
         }
-        let self_dot: f32 =
-            qrow.iter().zip(&k_new[bi * dh..(bi + 1) * dh]).map(|(a, b)| a * b).sum();
-        scores.push(self_dot * scale);
+        scores.push(linalg::dot(qrow, &k_new[bi * dh..(bi + 1) * dh]) * scale);
 
         let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut l = 0.0;
@@ -70,16 +68,11 @@ pub fn head_attention(
             l += *sc;
         }
         let orow = &mut out[bi * dh..(bi + 1) * dh];
-        for (t, p) in scores[..n].iter().enumerate() {
+        for (t, &p) in scores[..n].iter().enumerate() {
             let base = ((bi * s + t) * nh + head) * dh;
-            for (o, vv) in orow.iter_mut().zip(&v_cache[base..base + dh]) {
-                *o += p * vv;
-            }
+            linalg::axpy(p, &v_cache[base..base + dh], orow);
         }
-        let p_self = scores[n];
-        for (o, vv) in orow.iter_mut().zip(&v_new[bi * dh..(bi + 1) * dh]) {
-            *o += p_self * vv;
-        }
+        linalg::axpy(scores[n], &v_new[bi * dh..(bi + 1) * dh], orow);
         for o in orow.iter_mut() {
             *o /= l;
         }
@@ -166,12 +159,10 @@ pub fn mla_block_ref(
             let mut scores = Vec::with_capacity(n + 1);
             for t in 0..n {
                 let base = (bi * s + t) * l;
-                let dot: f32 =
-                    qrow.iter().zip(&kv_cache[base..base + l]).map(|(a, b)| a * b).sum();
-                scores.push(dot * scale);
+                scores.push(linalg::dot(qrow, &kv_cache[base..base + l]) * scale);
             }
             let kvrow = &kv_new[bi * l..(bi + 1) * l];
-            scores.push(qrow.iter().zip(kvrow).map(|(a, b)| a * b).sum::<f32>() * scale);
+            scores.push(linalg::dot(qrow, kvrow) * scale);
             let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let mut lsum = 0.0;
             for sc in scores.iter_mut() {
@@ -179,15 +170,11 @@ pub fn mla_block_ref(
                 lsum += *sc;
             }
             let arow = &mut attn[bi * l..(bi + 1) * l];
-            for (t, p) in scores[..n].iter().enumerate() {
+            for (t, &p) in scores[..n].iter().enumerate() {
                 let base = (bi * s + t) * l;
-                for (a, kv) in arow.iter_mut().zip(&kv_cache[base..base + l]) {
-                    *a += p * kv;
-                }
+                linalg::axpy(p, &kv_cache[base..base + l], arow);
             }
-            for (a, kv) in arow.iter_mut().zip(kvrow) {
-                *a += scores[n] * kv;
-            }
+            linalg::axpy(scores[n], kvrow, arow);
             for a in arow.iter_mut() {
                 *a /= lsum;
             }

@@ -18,11 +18,19 @@
 use crate::clustersim::collective::{cluster_reduce, reduce_cost, ReduceOp, Transport};
 use crate::clustersim::hw::Hardware;
 use crate::clustersim::noc::Noc;
+use crate::util::linalg::{self, PackedWeight};
 
 use super::reference::AttnOut;
 use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SETUP};
 
 /// Functional execution of Alg. 5. Requires `dh % n == 0`.
+///
+/// Hot path: Q/K/V weights are packed once before the head loop
+/// ([`PackedWeight`]) and the projections run on `linalg::matmul_rows`;
+/// the output projection keeps the seed's row-major `wo` walk (already
+/// contiguous) through `linalg::axpy`. Accumulation order per output is
+/// the seed's, so results are byte-identical to the frozen scalar copy
+/// (`tests/integration_bitexact.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn execute(
     hidden: &[f32],
@@ -53,26 +61,26 @@ pub fn execute(
     let mut v_new_g = vec![0f32; b * h];
     let mut report = CostReport { launches: 1, ..Default::default() };
 
+    // Pack once; sliced per head/block below (no per-head re-pack).
+    let wq_p = PackedWeight::pack(wq, d, h);
+    let wk_p = PackedWeight::pack(wk, d, h);
+    let wv_p = PackedWeight::pack(wv, d, h);
+
+    // Scratch reused across heads/blocks/batch rows.
+    let mut probs: Vec<f32> = Vec::new();
+    let mut a_row = vec![0f32; hs];
+
     for head in 0..nh {
         // ---- per-block register QKV segments (Alg. 5 lines 1-2) ----
         // block r owns head-dim slice [r*hs, (r+1)*hs)
-        let project = |w: &[f32], r: usize| -> Vec<f32> {
+        let project = |pw: &PackedWeight, r: usize| -> Vec<f32> {
             let mut seg = vec![0f32; b * hs];
-            for bi in 0..b {
-                for (j, sj) in seg[bi * hs..(bi + 1) * hs].iter_mut().enumerate() {
-                    let col = head * dh + r * hs + j;
-                    let mut acc = 0f32;
-                    for i in 0..d {
-                        acc += hidden[bi * d + i] * w[i * h + col];
-                    }
-                    *sj = acc;
-                }
-            }
+            linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
             seg
         };
-        let q_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wq, r)).collect();
-        let k_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wk, r)).collect();
-        let v_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wv, r)).collect();
+        let q_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wq_p, r)).collect();
+        let k_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wk_p, r)).collect();
+        let v_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wv_p, r)).collect();
         for r in 0..n {
             for bi in 0..b {
                 let dst = bi * h + head * dh + r * hs;
@@ -87,20 +95,28 @@ pub fn execute(
             .map(|r| {
                 let mut sc = vec![0f32; b * (s + 1)];
                 for bi in 0..b {
-                    for t in 0..pos[bi] {
+                    let qseg = &q_segs[r][bi * hs..(bi + 1) * hs];
+                    // token-tiled score scan (4 in-order chains per step)
+                    let row_at = |t: usize| {
                         let base = ((bi * s + t) * nh + head) * dh + r * hs;
-                        let mut acc = 0f32;
-                        for j in 0..hs {
-                            acc += q_segs[r][bi * hs + j] * k_cache[base + j];
+                        &k_cache[base..base + hs]
+                    };
+                    let valid = pos[bi];
+                    let mut t = 0;
+                    while t + 4 <= valid {
+                        let d4 = linalg::dot4(qseg, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                        for (k, dv) in d4.iter().enumerate() {
+                            sc[bi * (s + 1) + t + k] = dv * scale;
                         }
-                        sc[bi * (s + 1) + t] = acc * scale;
+                        t += 4;
+                    }
+                    while t < valid {
+                        sc[bi * (s + 1) + t] = linalg::dot(qseg, row_at(t)) * scale;
+                        t += 1;
                     }
                     // self token at row index s
-                    let mut acc = 0f32;
-                    for j in 0..hs {
-                        acc += q_segs[r][bi * hs + j] * k_segs[r][bi * hs + j];
-                    }
-                    sc[bi * (s + 1) + s] = acc * scale;
+                    sc[bi * (s + 1) + s] =
+                        linalg::dot(qseg, &k_segs[r][bi * hs..(bi + 1) * hs]) * scale;
                 }
                 sc
             })
@@ -122,7 +138,8 @@ pub fn execute(
                     m = m.max(row[t]);
                 }
                 let mut l = 0f32;
-                let mut probs = vec![0f32; valid + 1];
+                probs.clear();
+                probs.resize(valid + 1, 0.0);
                 for t in 0..valid {
                     probs[t] = (row[t] - m).exp();
                     l += probs[t];
@@ -130,24 +147,19 @@ pub fn execute(
                 probs[valid] = (row[s] - m).exp();
                 l += probs[valid];
                 // A_b: (hs) attention output over this block's V slice
-                let mut a = vec![0f32; hs];
+                a_row.fill(0.0);
                 for t in 0..valid {
                     let base = ((bi * s + t) * nh + head) * dh + r * hs;
-                    for (j, av) in a.iter_mut().enumerate() {
-                        *av += probs[t] * v_cache[base + j];
-                    }
+                    linalg::axpy(probs[t], &v_cache[base..base + hs], &mut a_row);
                 }
-                for (j, av) in a.iter_mut().enumerate() {
+                for (j, av) in a_row.iter_mut().enumerate() {
                     *av += probs[valid] * v_segs[r][bi * hs + j];
                     *av /= l;
                 }
                 // partial output projection over the FULL D columns
-                for (j, av) in a.iter().enumerate() {
+                for (j, &av) in a_row.iter().enumerate() {
                     let wrow = &wo[(head * dh + r * hs + j) * d..(head * dh + r * hs + j + 1) * d];
-                    let orow = &mut o_bufs[r][bi * d..(bi + 1) * d];
-                    for (o, w) in orow.iter_mut().zip(wrow) {
-                        *o += av * w;
-                    }
+                    linalg::axpy(av, wrow, &mut o_bufs[r][bi * d..(bi + 1) * d]);
                 }
             }
         }

@@ -22,9 +22,12 @@ use crate::clustersim::collective::{
 };
 use crate::clustersim::hw::Hardware;
 use crate::clustersim::noc::Noc;
+use crate::util::linalg::{self, PackedWeight};
 
 use super::reference::AttnOut;
-use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SETUP};
+use super::{
+    occupancy_mem_time, AttnProblem, CostEnv, CostReport, PackedMhaWeights, ELEM, PHASE_SETUP,
+};
 
 /// Functional execution of Alg. 3 over simulated per-block buffers.
 ///
@@ -32,6 +35,14 @@ use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SE
 /// `dh % n == 0`, `s % n == 0`, `d % n == 0` (the paper's partitioning
 /// assumption). `transport` selects DSMEM or the global-memory fallback —
 /// numerics are identical (the Fig. 13 ablation changes time, not values).
+///
+/// Hot path: the four weights are packed ([`PackedWeight`], one streaming
+/// transpose each) **before** the head loop and sliced per head/block, and
+/// the projection / output-projection tiles run on the blocked
+/// `linalg::matmul_rows*` kernels. Per-output accumulation order is
+/// unchanged from the seed's scalar loops (i ascending, one accumulator),
+/// so the result is byte-identical — asserted against the frozen scalar
+/// copy by `tests/integration_bitexact.rs`.
 #[allow(clippy::too_many_arguments)]
 pub fn execute(
     hidden: &[f32],
@@ -52,10 +63,40 @@ pub fn execute(
     hw: &Hardware,
     noc: &Noc,
 ) -> (AttnOut, CostReport) {
+    // One-shot convenience: pack here, then run the packed path. Sweeps
+    // re-evaluating with fixed weights should pack once themselves and
+    // call [`execute_packed`] — packing is a full streaming transpose of
+    // every weight and would otherwise dominate repeated evals.
+    let weights = PackedMhaWeights::pack(wq, wk, wv, wo, d, nh * dh);
+    execute_packed(hidden, &weights, k_cache, v_cache, pos, b, d, nh, dh, s, n, transport, hw, noc)
+}
+
+/// [`execute`] with the weights already packed (the dense-sweep hot
+/// path; see [`PackedMhaWeights`] for the lifetime contract). Numerics
+/// are identical to `execute` — packing is pure data movement.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_packed(
+    hidden: &[f32],
+    weights: &PackedMhaWeights,
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
     assert!(dh % n == 0 && s % n == 0 && d % n == 0, "cluster must divide dh, S, D");
     let h = nh * dh;
     let (hs, ss, ds) = (dh / n, s / n, d / n); // per-block slices
     let scale = 1.0 / (dh as f32).sqrt();
+    let (wq_p, wk_p, wv_p, wo_p) = (&weights.wq, &weights.wk, &weights.wv, &weights.wo);
+    assert!(wq_p.n_in() == d && wq_p.n_out() == h && wo_p.n_in() == h && wo_p.n_out() == d);
 
     let mut out = vec![0f32; b * d]; // global-memory output (atomicAdd target)
     let mut k_new_g = vec![0f32; b * h];
@@ -63,30 +104,26 @@ pub fn execute(
     let mut report = CostReport::default();
     report.launches = 1; // the whole block is ONE fused kernel
 
+    // Scratch reused across heads/blocks/batch rows (allocation-free
+    // inner loops).
+    let mut scores: Vec<(usize, f32)> = Vec::new();
+    let mut attn_row = vec![0f32; dh];
+
     for head in 0..nh {
         // ---- Stage 1: per-block QKV projection segments (Alg. 3 line 2) ----
         // Block `r` computes columns [head*dh + r*hs, head*dh + (r+1)*hs).
-        let project = |w: &[f32]| -> Vec<Vec<f32>> {
+        let project = |pw: &PackedWeight| -> Vec<Vec<f32>> {
             (0..n)
                 .map(|r| {
                     let mut seg = vec![0f32; b * hs];
-                    for bi in 0..b {
-                        for (j, sj) in seg[bi * hs..(bi + 1) * hs].iter_mut().enumerate() {
-                            let col = head * dh + r * hs + j;
-                            let mut acc = 0f32;
-                            for i in 0..d {
-                                acc += hidden[bi * d + i] * w[i * h + col];
-                            }
-                            *sj = acc;
-                        }
-                    }
+                    linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
                     seg
                 })
                 .collect()
         };
-        let q_segs = project(wq);
-        let k_segs = project(wk);
-        let v_segs = project(wv);
+        let q_segs = project(wq_p);
+        let k_segs = project(wk_p);
+        let v_segs = project(wv_p);
 
         // ---- ClusterGather of Q/K/V (Alg. 3 line 3): one gather of the
         // concatenated 3h-sized segment per block ----
@@ -145,24 +182,30 @@ pub fn execute(
                 let lo = r * ss;
                 let hi = ((r + 1) * ss).min(valid);
                 let qrow = &q[bi * dh..(bi + 1) * dh];
-                let mut scores: Vec<(usize, f32)> = Vec::new();
-                for t in lo..hi.max(lo) {
-                    if t >= valid {
-                        break;
-                    }
+                scores.clear();
+                // token-tiled score scan: 4 independent in-order dot
+                // chains per step (each score's accumulation order is
+                // unchanged — see linalg::dot4)
+                let row_at = |t: usize| {
                     let base = ((bi * s + t) * nh + head) * dh;
-                    let dot: f32 =
-                        qrow.iter().zip(&k_cache[base..base + dh]).map(|(a, c)| a * c).sum();
-                    scores.push((t, dot * scale));
+                    &k_cache[base..base + dh]
+                };
+                let end = hi.max(lo);
+                let mut t = lo;
+                while t + 4 <= end {
+                    let d4 = linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                    for (k, dv) in d4.iter().enumerate() {
+                        scores.push((t + k, dv * scale));
+                    }
+                    t += 4;
+                }
+                while t < end {
+                    scores.push((t, linalg::dot(qrow, row_at(t)) * scale));
+                    t += 1;
                 }
                 let self_here = r == n - 1;
                 let self_score = if self_here {
-                    let dot: f32 = qrow
-                        .iter()
-                        .zip(&k_new[bi * dh..(bi + 1) * dh])
-                        .map(|(a, c)| a * c)
-                        .sum();
-                    Some(dot * scale)
+                    Some(linalg::dot(qrow, &k_new[bi * dh..(bi + 1) * dh]) * scale)
                 } else {
                     None
                 };
@@ -182,16 +225,12 @@ pub fn execute(
                     let p = (sc - m).exp();
                     l += p;
                     let base = ((bi * s + t) * nh + head) * dh;
-                    for (a, vv) in acc.iter_mut().zip(&v_cache[base..base + dh]) {
-                        *a += p * vv;
-                    }
+                    linalg::axpy(p, &v_cache[base..base + dh], acc);
                 }
                 if let Some(sc) = self_score {
                     let p = (sc - m).exp();
                     l += p;
-                    for (a, vv) in acc.iter_mut().zip(&v_new[bi * dh..(bi + 1) * dh]) {
-                        *a += p * vv;
-                    }
+                    linalg::axpy(p, &v_new[bi * dh..(bi + 1) * dh], acc);
                 }
                 m_bufs[r][bi] = m;
                 l_bufs[r][bi] = l;
@@ -212,9 +251,7 @@ pub fn execute(
                     (m_local[r][bi] - m_bufs[r][bi]).exp()
                 };
                 l_bufs[r][bi] *= alpha;
-                for a in &mut acc_bufs[r][bi * dh..(bi + 1) * dh] {
-                    *a *= alpha;
-                }
+                linalg::scale(alpha, &mut acc_bufs[r][bi * dh..(bi + 1) * dh]);
             }
         }
         let rc2 = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
@@ -227,18 +264,22 @@ pub fn execute(
         // (Alg. 3 line 8): block r computes columns [r*ds, (r+1)*ds) ----
         for r in 0..n {
             for bi in 0..b {
-                let attn: Vec<f32> = acc_bufs[r][bi * dh..(bi + 1) * dh]
-                    .iter()
-                    .map(|a| a / l_bufs[r][bi])
-                    .collect();
-                for c in 0..ds {
-                    let col = r * ds + c;
-                    let mut acc = 0f32;
-                    for (j, av) in attn.iter().enumerate() {
-                        acc += av * wo[(head * dh + j) * d + col];
-                    }
-                    out[bi * d + col] += acc; // atomicAdd
-                }
+                linalg::scale_div(
+                    &acc_bufs[r][bi * dh..(bi + 1) * dh],
+                    l_bufs[r][bi],
+                    &mut attn_row,
+                );
+                linalg::matmul_rows_acc(
+                    &attn_row,
+                    1,
+                    dh,
+                    wo_p,
+                    head * dh,
+                    r * ds,
+                    ds,
+                    &mut out[bi * d..(bi + 1) * d],
+                    d,
+                ); // atomicAdd
             }
         }
     }

@@ -11,7 +11,11 @@
 //! each (layer, plane), so gathering a page into the dense `(L, B, S, re)`
 //! executable layout is a handful of large contiguous memcpys per page
 //! (the §Perf fix that took gather_batch from ~155 ms to the low
-//! milliseconds; see EXPERIMENTS.md §Perf).
+//! milliseconds; see EXPERIMENTS.md §Perf). The per-(layer, plane) offset
+//! arithmetic of those memcpys depends only on `(geometry, page_tokens,
+//! batch)` and is precomputed into a [`GatherPlan`] cached across decode
+//! steps; [`KvPool::gather_plan_runs`] exposes the exact span list so
+//! tests can assert the one-memcpy-per-(page, layer, plane) contract.
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -45,6 +49,48 @@ struct SeqEntry {
     len: usize,
 }
 
+/// One contiguous memcpy span of a gather (see
+/// [`KvPool::gather_plan_runs`]): `plane[dst..dst + len] <-
+/// pool.data[src..src + len]`. Every run stays inside a single page — the
+/// page-contiguity property the §Perf layout buys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CopyRun {
+    pub plane: usize,
+    pub src: usize,
+    pub dst: usize,
+    pub len: usize,
+}
+
+/// Precomputed offset table for [`KvPool::gather_batch_into`]: the
+/// per-(layer, plane) source offset within a page and destination base
+/// offset depend only on `(geometry, page_tokens, batch)`, so the plan is
+/// built once per batch bucket and reused across steps while the actual
+/// page lists churn (the serving engine re-gathers every decode step).
+#[derive(Debug, Clone)]
+struct GatherPlan {
+    batch: usize,
+    /// `per_plane[plane]` = per layer: (src offset within the page,
+    /// destination offset of the layer block in the plane buffer).
+    per_plane: Vec<Vec<(usize, usize)>>,
+}
+
+impl GatherPlan {
+    fn build(geom: &CacheGeometry, page_tokens: usize, batch: usize) -> Self {
+        let per_plane = (0..geom.planes)
+            .map(|plane| {
+                (0..geom.n_layers)
+                    .map(|l| {
+                        let src_off = ((l * geom.planes + plane) * page_tokens) * geom.row_elems;
+                        let dst_off = l * batch * geom.max_seq * geom.row_elems;
+                        (src_off, dst_off)
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { batch, per_plane }
+    }
+}
+
 /// Fixed-capacity paged pool.
 #[derive(Debug)]
 pub struct KvPool {
@@ -54,6 +100,8 @@ pub struct KvPool {
     free: Vec<usize>,
     seqs: HashMap<SeqId, SeqEntry>,
     n_pages: usize,
+    /// Cached gather plan for the last batch bucket (hot-path reuse).
+    plan: Option<GatherPlan>,
 }
 
 impl KvPool {
@@ -67,6 +115,7 @@ impl KvPool {
             free: (0..n_pages).rev().collect(),
             seqs: HashMap::new(),
             n_pages,
+            plan: None,
         }
     }
 
@@ -177,9 +226,10 @@ impl KvPool {
 
     /// Gather a batch of sequences into dense padded cache tensors shaped
     /// `(L, B, S, row_elems)` per plane (the AOT executable's layout).
-    /// Allocates fresh zeroed buffers; the engine hot path uses
-    /// [`Self::gather_batch_into`] with persistent buffers instead.
-    pub fn gather_batch(&self, seq_ids: &[SeqId], batch: usize) -> Result<Vec<Vec<f32>>> {
+    /// Allocates fresh zeroed buffers and delegates to
+    /// [`Self::gather_batch_into`] (single copy path — the engine hot path
+    /// passes persistent buffers instead).
+    pub fn gather_batch(&mut self, seq_ids: &[SeqId], batch: usize) -> Result<Vec<Vec<f32>>> {
         let g = self.geom;
         let mut planes =
             vec![vec![0.0f32; g.n_layers * batch * g.max_seq * g.row_elems]; g.planes];
@@ -192,10 +242,14 @@ impl KvPool {
     /// Padding slots and positions >= the sequence length are left with
     /// whatever they contained — sound because the fused kernels mask all
     /// cache positions >= pos[b], and every value ever written is finite.
-    /// Copies are contiguous (page_tokens * row_elems) runs thanks to the
-    /// page layout.
+    /// Copies execute the cached [`GatherPlan`]: one contiguous
+    /// `(ntok * row_elems)` memcpy per (page, layer, plane), with the
+    /// per-(layer, plane) offsets precomputed per batch bucket and reused
+    /// across steps while batches churn (`&mut self` only refreshes that
+    /// cache). [`Self::gather_plan_runs`] enumerates the same spans for
+    /// inspection.
     pub fn gather_batch_into(
-        &self,
+        &mut self,
         seq_ids: &[SeqId],
         batch: usize,
         planes: &mut [Vec<f32>],
@@ -207,22 +261,72 @@ impl KvPool {
         for p in planes.iter() {
             anyhow::ensure!(p.len() == l_ * batch * s * re, "plane buffer size");
         }
-        let page_elems = self.page_elems();
-        let pt = self.page_tokens;
+        if self.plan.as_ref().map_or(true, |p| p.batch != batch) {
+            self.plan = Some(GatherPlan::build(&g, self.page_tokens, batch));
+        }
+        let plan = self.plan.as_ref().expect("plan built above");
+        let data = &self.data;
+        Self::for_each_run(&self.seqs, self.page_elems(), self.page_tokens, g, plan, seq_ids, |r| {
+            planes[r.plane][r.dst..r.dst + r.len].copy_from_slice(&data[r.src..r.src + r.len]);
+        })
+    }
+
+    /// Enumerate the exact contiguous memcpy spans
+    /// [`Self::gather_batch_into`] executes for this batch composition,
+    /// without copying — both drive the same [`Self::for_each_run`]
+    /// walk, so this inspection surface cannot drift from the copies.
+    /// Test/debug surface for the §Perf contract: the span count equals
+    /// `pages touched × n_layers × planes` (one memcpy per (page, layer,
+    /// plane)) and every span stays inside one page.
+    pub fn gather_plan_runs(&self, seq_ids: &[SeqId], batch: usize) -> Result<Vec<CopyRun>> {
+        anyhow::ensure!(seq_ids.len() <= batch, "batch overflow");
+        let plan = GatherPlan::build(&self.geom, self.page_tokens, batch);
+        let mut runs = Vec::new();
+        Self::for_each_run(
+            &self.seqs,
+            self.page_elems(),
+            self.page_tokens,
+            self.geom,
+            &plan,
+            seq_ids,
+            |r| runs.push(r),
+        )?;
+        Ok(runs)
+    }
+
+    /// The single span walk behind [`Self::gather_batch_into`] and
+    /// [`Self::gather_plan_runs`]: one [`CopyRun`] per (page, layer,
+    /// plane) of every listed sequence, in copy order. Associated fn
+    /// (not `&self`) so callers can hold disjoint borrows of `data`
+    /// alongside the walk.
+    fn for_each_run(
+        seqs: &HashMap<SeqId, SeqEntry>,
+        page_elems: usize,
+        page_tokens: usize,
+        geom: CacheGeometry,
+        plan: &GatherPlan,
+        seq_ids: &[SeqId],
+        mut f: impl FnMut(CopyRun),
+    ) -> Result<()> {
+        let (s, re) = (geom.max_seq, geom.row_elems);
         for (b, id) in seq_ids.iter().enumerate() {
-            let entry = self.seqs.get(id).ok_or_else(|| anyhow::anyhow!("unknown seq {id}"))?;
+            let entry = seqs.get(id).ok_or_else(|| anyhow::anyhow!("unknown seq {id}"))?;
             for (pi, &page) in entry.pages.iter().enumerate() {
-                let tok0 = pi * pt;
-                let ntok = (entry.len - tok0).min(pt);
+                let tok0 = pi * page_tokens;
+                let ntok = (entry.len - tok0).min(page_tokens);
                 if ntok == 0 {
                     break;
                 }
-                for (plane, dst) in planes.iter_mut().enumerate() {
-                    for l in 0..l_ {
-                        let src = page * page_elems + ((l * g.planes + plane) * pt) * re;
-                        let d = ((l * batch + b) * s + tok0) * re;
-                        dst[d..d + ntok * re]
-                            .copy_from_slice(&self.data[src..src + ntok * re]);
+                let page_base = page * page_elems;
+                let dst_row = (b * s + tok0) * re;
+                for (plane, offs) in plan.per_plane.iter().enumerate() {
+                    for &(src_off, dst_off) in offs {
+                        f(CopyRun {
+                            plane,
+                            src: page_base + src_off,
+                            dst: dst_off + dst_row,
+                            len: ntok * re,
+                        });
                     }
                 }
             }
@@ -307,6 +411,76 @@ mod tests {
         let idx = ((0 * batch + 3) * s) * re;
         assert!(planes[0][idx..idx + s * re].iter().all(|&x| x == 0.0));
         let _ = l_;
+    }
+
+    #[test]
+    fn gather_plan_page_contiguous_runs_interleaved_allocation() {
+        // Interleaved appends across three sequences of different lengths,
+        // so their pages alternate through the pool (a non-trivial
+        // allocation pattern): the gather plan must still be exactly one
+        // contiguous memcpy span per (page, layer, plane), each span
+        // confined to a single page.
+        let g = geom(); // 2 layers, 4 row elems, 2 planes, page = 2 tokens
+        let mut pool = KvPool::new(g, 2, 16);
+        let lens = [5usize, 3, 4];
+        for id in [1u64, 2, 3] {
+            pool.alloc_seq(id).unwrap();
+        }
+        for t in 0..5 {
+            for id in [1u64, 2, 3] {
+                if t < lens[(id - 1) as usize] {
+                    let (k, v) = rows(id as f32 * 100.0 + t as f32, &g);
+                    pool.append(id, &[&k, &v]).unwrap();
+                }
+            }
+        }
+        let pages_touched: usize = lens.iter().map(|l| l.div_ceil(2)).sum(); // 3 + 2 + 2
+        assert_eq!(pool.used_pages(), pages_touched);
+
+        let batch = 4;
+        let runs = pool.gather_plan_runs(&[1, 2, 3], batch).unwrap();
+        // count of distinct memcpy spans == pages touched (per layer/plane)
+        assert_eq!(runs.len(), pages_touched * g.n_layers * g.planes);
+        let page_elems = 2 * g.token_elems();
+        for r in &runs {
+            assert_eq!(
+                r.src / page_elems,
+                (r.src + r.len - 1) / page_elems,
+                "run crosses a page boundary: {r:?}"
+            );
+            assert!(r.len % g.row_elems == 0 && r.len <= 2 * g.row_elems);
+        }
+        // executing the plan verbatim reproduces the gather byte-for-byte
+        let mut via_plan =
+            vec![vec![0.0f32; g.n_layers * batch * g.max_seq * g.row_elems]; g.planes];
+        for r in &runs {
+            let src: Vec<f32> = pool.data[r.src..r.src + r.len].to_vec();
+            via_plan[r.plane][r.dst..r.dst + r.len].copy_from_slice(&src);
+        }
+        let direct = pool.gather_batch(&[1, 2, 3], batch).unwrap();
+        assert_eq!(via_plan, direct);
+    }
+
+    #[test]
+    fn gather_plan_cached_across_steps_and_rebuilt_per_bucket() {
+        let g = geom();
+        let mut pool = KvPool::new(g, 2, 8);
+        pool.alloc_seq(1).unwrap();
+        let (k, v) = rows(1.0, &g);
+        pool.append(1, &[&k, &v]).unwrap();
+        let mut planes =
+            vec![vec![0.0f32; g.n_layers * 2 * g.max_seq * g.row_elems]; g.planes];
+        pool.gather_batch_into(&[1], 2, &mut planes).unwrap();
+        assert_eq!(pool.plan.as_ref().unwrap().batch, 2);
+        // same bucket across churned state: plan survives
+        pool.append(1, &[&k, &v]).unwrap();
+        pool.gather_batch_into(&[1], 2, &mut planes).unwrap();
+        assert_eq!(pool.plan.as_ref().unwrap().batch, 2);
+        // bucket change rebuilds
+        let mut planes4 =
+            vec![vec![0.0f32; g.n_layers * 4 * g.max_seq * g.row_elems]; g.planes];
+        pool.gather_batch_into(&[1], 4, &mut planes4).unwrap();
+        assert_eq!(pool.plan.as_ref().unwrap().batch, 4);
     }
 
     #[test]

@@ -15,6 +15,22 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Mean iterations per second (the §Perf throughput figure — e.g.
+    /// dataflow evals/s against the DESIGN.md §5 1e5 target).
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            1e9 / self.mean_ns
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// [`Self::report`] plus a throughput column (`unit`/s), used by the
+    /// hot-path harness's per-kernel throughput lines.
+    pub fn report_rate(&self, unit: &str) -> String {
+        format!("{}  {:>10.3e} {unit}/s", self.report(), self.per_sec())
+    }
+
     pub fn report(&self) -> String {
         fn fmt(ns: f64) -> String {
             if ns < 1e3 {

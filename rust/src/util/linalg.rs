@@ -1,0 +1,401 @@
+//! Blocked microkernel layer for the functional dataflows (§Perf).
+//!
+//! Every functional dataflow (`clustersim::dataflow::*::execute`) spends
+//! its time in three row-oriented primitives: projecting an activation row
+//! against weight *columns*, dotting a query row against cache rows, and
+//! accumulating probability-scaled value rows. The seed code walked weight
+//! columns through row-major storage (`w[i * h + col]`), a stride-`h`
+//! access pattern that touches a fresh cache line per multiply and
+//! re-derives the same columns for every head and every cluster block —
+//! the O(nh·N·B·hs·D) hot spot named in ROADMAP's "simulator perf
+//! headroom" item. This module replaces it with:
+//!
+//! * [`PackedWeight`] — a transposed (column-major-of-original) copy built
+//!   **once per weight per `execute` call** and then sliced per head/block,
+//!   so every projection reads contiguous memory;
+//! * [`matmul_rows`] / [`matmul_rows_acc`] — blocked row-times-columns
+//!   kernels that tile output columns ([`COL_TILE`]-wide register tiles,
+//!   one activation load feeding [`COL_TILE`] accumulator chains);
+//! * fused row primitives [`dot`], [`axpy`], [`scale_div`] for the
+//!   attention inner loops.
+//!
+//! **Bit-exactness contract:** the *accumulation order is part of the
+//! API*. Every output element is produced by one scalar accumulator
+//! summing `x[i] * w[i][col]` for `i = 0..n_in` **in ascending order** —
+//! exactly the order of the seed's scalar loops — so the refactored
+//! dataflows return byte-identical `AttnOut` to the frozen scalar
+//! reference (`tests/integration_bitexact.rs`). Column tiling multiplies
+//! *independent* accumulator chains; it never reassociates a single
+//! output's sum. Do not "optimise" these kernels with multiple partial
+//! accumulators per output, FMA contraction, or SIMD horizontal sums:
+//! that trades the contract for nothing the cache blocking has not
+//! already bought (DESIGN.md §Perf).
+
+/// Output-column tile width of the blocked matmul kernels: one activation
+/// element load feeds this many independent accumulator chains (ILP),
+/// which is where the kernel's speedup beyond mere contiguity comes from.
+pub const COL_TILE: usize = 4;
+
+/// A weight matrix packed for column access: the transpose of a
+/// `(n_in, n_out)` row-major matrix, stored row-major as `(n_out, n_in)`,
+/// so the coefficients of output column `j` are one contiguous `n_in`-run.
+///
+/// Build it **once per weight per dataflow evaluation** (outside any
+/// per-head / per-block loop — the packing cost is one streaming pass,
+/// amortised over `nh × N` reuses) and slice per head with [`Self::col`].
+#[derive(Debug, Clone)]
+pub struct PackedWeight {
+    data: Vec<f32>,
+    n_in: usize,
+    n_out: usize,
+}
+
+/// Transpose tile edge for [`PackedWeight::pack`]: keeps the scattered
+/// writes of the transpose inside a `PACK_TILE × PACK_TILE` window
+/// (cache- and TLB-resident) instead of sweeping a full `n_out`-stride
+/// column per source row — at model scale (`n_out` ≥ 4K) the naive sweep
+/// touches one page per write and pack time becomes the hot spot.
+const PACK_TILE: usize = 64;
+
+impl PackedWeight {
+    /// Pack a `(n_in, n_out)` row-major weight: a `PACK_TILE`-blocked
+    /// transpose (pure data movement — no arithmetic, so no bit-exactness
+    /// concern).
+    pub fn pack(w: &[f32], n_in: usize, n_out: usize) -> Self {
+        assert_eq!(w.len(), n_in * n_out, "weight shape mismatch");
+        let mut data = vec![0f32; n_in * n_out];
+        let mut i0 = 0;
+        while i0 < n_in {
+            let i1 = (i0 + PACK_TILE).min(n_in);
+            let mut j0 = 0;
+            while j0 < n_out {
+                let j1 = (j0 + PACK_TILE).min(n_out);
+                for i in i0..i1 {
+                    for j in j0..j1 {
+                        data[j * n_in + i] = w[i * n_out + j];
+                    }
+                }
+                j0 = j1;
+            }
+            i0 = i1;
+        }
+        Self { data, n_in, n_out }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    /// The contiguous coefficient run of output column `j`
+    /// (`= w[0..n_in, j]` of the original matrix).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.data[j * self.n_in..(j + 1) * self.n_in]
+    }
+}
+
+/// Strictly in-order dot product: `Σ a[i] * b[i]`, `i` ascending, one
+/// accumulator — the same reduction order as `zip().map().sum()` over the
+/// same slices (the seed's idiom), kept as a named primitive so the
+/// contract is visible at call sites.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Four independent strictly in-order dot products of one row against
+/// four (typically strided) cache rows: the attention-score tile. Each
+/// output is its own single-accumulator chain over `i = 0..len` — the
+/// same bits as four [`dot`] calls — but the four chains interleave in
+/// the FP pipeline (ILP) and share each `x[i]` load, which is what makes
+/// the sequence-scan phase fast without reassociating any sum.
+#[inline]
+pub fn dot4(x: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> [f32; 4] {
+    let k = x.len();
+    debug_assert!(r0.len() == k && r1.len() == k && r2.len() == k && r3.len() == k);
+    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..k {
+        let xv = x[i];
+        a0 += xv * r0[i];
+        a1 += xv * r1[i];
+        a2 += xv * r2[i];
+        a3 += xv * r3[i];
+    }
+    [a0, a1, a2, a3]
+}
+
+/// `y[i] += alpha * x[i]`, `i` ascending (the attention accumulate /
+/// output-tile update). Same per-element op order as the seed's explicit
+/// loops.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// `y[i] *= alpha` (online-softmax rescale).
+#[inline]
+pub fn scale(alpha: f32, y: &mut [f32]) {
+    for yv in y.iter_mut() {
+        *yv *= alpha;
+    }
+}
+
+/// `out[i] = x[i] / denom` (softmax normalisation into a reused buffer).
+#[inline]
+pub fn scale_div(x: &[f32], denom: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, v) in out.iter_mut().zip(x) {
+        *o = v / denom;
+    }
+}
+
+/// Inner register tile: dot `x_row` against `COL_TILE`-grouped packed
+/// columns, each output owning a single in-order accumulator. The
+/// 4-chain body is [`dot4`] — one copy of the load-sharing kernel keeps
+/// the bit-exactness contract in one place.
+#[inline]
+fn col_tile_dots(
+    x_row: &[f32],
+    pw: &PackedWeight,
+    in0: usize,
+    col0: usize,
+    ncols: usize,
+    mut emit: impl FnMut(usize, f32),
+) {
+    let k = x_row.len();
+    let mut j = 0;
+    while j + COL_TILE <= ncols {
+        let [a0, a1, a2, a3] = dot4(
+            x_row,
+            &pw.col(col0 + j)[in0..in0 + k],
+            &pw.col(col0 + j + 1)[in0..in0 + k],
+            &pw.col(col0 + j + 2)[in0..in0 + k],
+            &pw.col(col0 + j + 3)[in0..in0 + k],
+        );
+        emit(j, a0);
+        emit(j + 1, a1);
+        emit(j + 2, a2);
+        emit(j + 3, a3);
+        j += COL_TILE;
+    }
+    while j < ncols {
+        emit(j, dot(x_row, &pw.col(col0 + j)[in0..in0 + k]));
+        j += 1;
+    }
+}
+
+/// Blocked row-major matmul against a packed weight slice:
+///
+/// `out[bi * ncols + j] = Σ_{i=0..n_in} x[bi * n_in + i] *
+///  pw.col(col0 + j)[in0 + i]`  (i ascending, fresh accumulator).
+///
+/// `x` is `(b, n_in)` row-major; writes a dense `(b, ncols)` block. This
+/// is the QKV-projection kernel: a head/cluster segment is just a
+/// `(col0, ncols)` window over the packed weight — no per-head re-pack.
+pub fn matmul_rows(
+    x: &[f32],
+    b: usize,
+    n_in: usize,
+    pw: &PackedWeight,
+    in0: usize,
+    col0: usize,
+    ncols: usize,
+    out: &mut [f32],
+) {
+    assert!(x.len() >= b * n_in && out.len() >= b * ncols);
+    assert!(in0 + n_in <= pw.n_in && col0 + ncols <= pw.n_out);
+    for bi in 0..b {
+        let x_row = &x[bi * n_in..(bi + 1) * n_in];
+        let out_row = &mut out[bi * ncols..(bi + 1) * ncols];
+        col_tile_dots(x_row, pw, in0, col0, ncols, |j, v| out_row[j] = v);
+    }
+}
+
+/// Accumulating variant for output-projection tiles (the dataflows'
+/// atomicAdd): `out[bi * out_stride + col0 + j] += Σ_i x_row · col` with
+/// the same in-order contract. `x` is `(b, n_in)` row-major, `out` rows
+/// are `out_stride` wide and indexed by absolute column.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_rows_acc(
+    x: &[f32],
+    b: usize,
+    n_in: usize,
+    pw: &PackedWeight,
+    in0: usize,
+    col0: usize,
+    ncols: usize,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    assert!(x.len() >= b * n_in && out.len() >= b * out_stride);
+    assert!(in0 + n_in <= pw.n_in && col0 + ncols <= pw.n_out);
+    for bi in 0..b {
+        let x_row = &x[bi * n_in..(bi + 1) * n_in];
+        let out_row = &mut out[bi * out_stride..(bi + 1) * out_stride];
+        col_tile_dots(x_row, pw, in0, col0, ncols, |j, v| out_row[col0 + j] += v);
+    }
+}
+
+/// The seed's column-strided projection loop, kept verbatim as the
+/// regression baseline for `benches/hotpath.rs` (before/after pair) and
+/// the unit tests below. `w` is `(n_in, ld)` row-major; output column
+/// `col0 + j` reads `w[i * ld + col0 + j]` — one cache line per multiply
+/// at model-scale `ld`. Never call this from a dataflow.
+pub fn matmul_rows_naive_strided(
+    x: &[f32],
+    b: usize,
+    n_in: usize,
+    w: &[f32],
+    ld: usize,
+    col0: usize,
+    ncols: usize,
+    out: &mut [f32],
+) {
+    for bi in 0..b {
+        for j in 0..ncols {
+            let col = col0 + j;
+            let mut acc = 0f32;
+            for i in 0..n_in {
+                acc += x[bi * n_in + i] * w[i * ld + col];
+            }
+            out[bi * ncols + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+    }
+
+    /// Bit-exactness of the packed/tiled kernel vs the seed's strided
+    /// loop, across shapes that hit every tile remainder (ncols mod
+    /// COL_TILE in 0..COL_TILE) and offset windows.
+    #[test]
+    fn matmul_rows_bitexact_vs_naive_strided() {
+        let mut rng = Rng::seed_from_u64(17);
+        for &(b, n_in, n_out) in
+            &[(1usize, 7usize, 5usize), (2, 16, 12), (3, 33, 9), (2, 64, 31), (1, 128, 4)]
+        {
+            let x = randv(&mut rng, b * n_in, 2.0);
+            let w = randv(&mut rng, n_in * n_out, 0.5);
+            let pw = PackedWeight::pack(&w, n_in, n_out);
+            for &(col0, ncols) in &[(0usize, n_out), (1, n_out - 1), (n_out / 2, n_out / 2)] {
+                let mut got = vec![0f32; b * ncols];
+                let mut want = vec![0f32; b * ncols];
+                matmul_rows(&x, b, n_in, &pw, 0, col0, ncols, &mut got);
+                matmul_rows_naive_strided(&x, b, n_in, &w, n_out, col0, ncols, &mut want);
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "b={b} n_in={n_in} n_out={n_out} col0={col0}");
+            }
+        }
+    }
+
+    /// The accumulating variant must add exactly `dot(x_row, col)` on top
+    /// of whatever the output held — same bits as a manual strided loop
+    /// with `+=`.
+    #[test]
+    fn matmul_rows_acc_bitexact_with_offset_window() {
+        let mut rng = Rng::seed_from_u64(23);
+        let (b, n_in_full, sub, n_out) = (2usize, 24usize, 8usize, 13usize);
+        let x = randv(&mut rng, b * sub, 1.0);
+        let w = randv(&mut rng, n_in_full * n_out, 0.5);
+        let pw = PackedWeight::pack(&w, n_in_full, n_out);
+        let in0 = 16; // dot over rows [16, 24) of the original weight
+        let init = randv(&mut rng, b * n_out, 1.0);
+        let (col0, ncols) = (3usize, 9usize);
+
+        let mut got = init.clone();
+        matmul_rows_acc(&x, b, sub, &pw, in0, col0, ncols, &mut got, n_out);
+
+        let mut want = init;
+        for bi in 0..b {
+            for j in 0..ncols {
+                let mut acc = 0f32;
+                for i in 0..sub {
+                    acc += x[bi * sub + i] * w[(in0 + i) * n_out + col0 + j];
+                }
+                want[bi * n_out + col0 + j] += acc;
+            }
+        }
+        let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb);
+    }
+
+    #[test]
+    fn pack_round_trips_columns() {
+        let (n_in, n_out) = (5usize, 3usize);
+        let w: Vec<f32> = (0..n_in * n_out).map(|i| i as f32).collect();
+        let pw = PackedWeight::pack(&w, n_in, n_out);
+        assert_eq!(pw.n_in(), n_in);
+        assert_eq!(pw.n_out(), n_out);
+        for j in 0..n_out {
+            let col: Vec<f32> = (0..n_in).map(|i| w[i * n_out + j]).collect();
+            assert_eq!(pw.col(j), &col[..], "column {j}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_zip_sum_order() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = randv(&mut rng, 97, 2.0);
+        let b = randv(&mut rng, 97, 2.0);
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn dot4_matches_four_dots_bitwise() {
+        let mut rng = Rng::seed_from_u64(7);
+        let x = randv(&mut rng, 61, 2.0);
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut rng, 61, 2.0)).collect();
+        let got = dot4(&x, &rows[0], &rows[1], &rows[2], &rows[3]);
+        for (g, r) in got.iter().zip(&rows) {
+            assert_eq!(g.to_bits(), dot(&x, r).to_bits());
+        }
+    }
+
+    #[test]
+    fn axpy_scale_div_elementwise() {
+        let mut rng = Rng::seed_from_u64(5);
+        let x = randv(&mut rng, 31, 2.0);
+        let mut y = randv(&mut rng, 31, 2.0);
+        let mut want = y.clone();
+        for (w, xv) in want.iter_mut().zip(&x) {
+            *w += 0.37 * xv;
+        }
+        axpy(0.37, &x, &mut y);
+        assert_eq!(
+            y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let mut out = vec![0f32; 31];
+        scale_div(&y, 1.7, &mut out);
+        for (o, v) in out.iter().zip(&y) {
+            assert_eq!(o.to_bits(), (v / 1.7).to_bits());
+        }
+        let mut z = y.clone();
+        scale(0.25, &mut z);
+        for (a, b) in z.iter().zip(&y) {
+            assert_eq!(a.to_bits(), (b * 0.25).to_bits());
+        }
+    }
+}

@@ -7,4 +7,5 @@
 pub mod bench;
 pub mod clock;
 pub mod json;
+pub mod linalg;
 pub mod rng;

@@ -1,0 +1,992 @@
+//! Bit-exactness suite for the `util::linalg` microkernel refactor.
+//!
+//! The blocked/packed dataflow kernels promise **byte-identical**
+//! `AttnOut` to the seed's scalar triple loops (DESIGN.md §Perf: the
+//! per-output accumulation order — `i = 0..d`, ascending, one accumulator
+//! — is part of the contract). This suite keeps *frozen verbatim copies*
+//! of the pre-refactor `execute` bodies (and the pre-refactor reference
+//! oracle) and asserts `f32::to_bits` equality against the live
+//! implementations across geometries varying every shape parameter
+//! (b, d, nh, dh, s, n; plus the MLA latent path), at every legal cluster
+//! size.
+//!
+//! If a future change to `linalg` or a dataflow trips this suite, it
+//! reassociated a sum. Fix the kernel, not the test: tolerance-based
+//! comparisons live in the unit tests; this file is the exact contract.
+
+use clusterfusion::clustersim::collective::{
+    cluster_gather, cluster_reduce, gathered_segment, ReduceOp, Transport,
+};
+use clusterfusion::clustersim::dataflow::reference::AttnOut;
+use clusterfusion::clustersim::dataflow::{block_isolated, mla, reference, split_head, split_token};
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Seeded cases (mirrors the in-crate `dataflow::testutil` generators, which
+// are not exported to integration tests).
+// ---------------------------------------------------------------------------
+
+struct MhaCase {
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    hidden: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+    pos: Vec<usize>,
+}
+
+fn mha_case(seed: u64, b: usize, nh: usize, dh: usize, s: usize, d: usize) -> MhaCase {
+    let mut rng = Rng::seed_from_u64(seed);
+    let h = nh * dh;
+    let mut v = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+    };
+    let hidden = v(b * d, 2.0);
+    let wq = v(d * h, 0.4);
+    let wk = v(d * h, 0.4);
+    let wv = v(d * h, 0.4);
+    let wo = v(h * d, 0.4);
+    let k_cache = v(b * s * h, 2.0);
+    let v_cache = v(b * s * h, 2.0);
+    let mut rng2 = Rng::seed_from_u64(seed ^ 0xdead);
+    let pos = (0..b).map(|_| rng2.range(0, s)).collect();
+    MhaCase { b, d, nh, dh, s, hidden, wq, wk, wv, wo, k_cache, v_cache, pos }
+}
+
+struct MlaCase {
+    b: usize,
+    d: usize,
+    nh: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+    hidden: Vec<f32>,
+    wq: Vec<f32>,
+    wkv: Vec<f32>,
+    w_down: Vec<f32>,
+    wo: Vec<f32>,
+    kv_cache: Vec<f32>,
+    pos: Vec<usize>,
+}
+
+fn mla_case(seed: u64, b: usize, nh: usize, l: usize, dh: usize, s: usize, d: usize) -> MlaCase {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut v = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+    };
+    let hidden = v(b * d, 2.0);
+    let wq = v(d * nh * l, 0.4);
+    let wkv = v(d * l, 0.4);
+    let w_down = v(nh * l * dh, 0.4);
+    let wo = v(nh * dh * d, 0.4);
+    let kv_cache = v(b * s * l, 2.0);
+    let mut rng2 = Rng::seed_from_u64(seed ^ 0xbeef);
+    let pos = (0..b).map(|_| rng2.range(0, s)).collect();
+    MlaCase { b, d, nh, l, dh, s, hidden, wq, wkv, w_down, wo, kv_cache, pos }
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}]: {x:?} ({:#010x}) vs {y:?} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+fn assert_out_bits(got: &AttnOut, want: &AttnOut, what: &str) {
+    assert_bits(&got.out, &want.out, &format!("{what}.out"));
+    assert_bits(&got.k_new, &want.k_new, &format!("{what}.k_new"));
+    assert_bits(&got.v_new, &want.v_new, &format!("{what}.v_new"));
+}
+
+// ---------------------------------------------------------------------------
+// Frozen pre-refactor scalar implementations (seed commit b63f1d4).
+// Verbatim copies minus the cost bookkeeping they shared with the live
+// code; every arithmetic statement and loop order is untouched.
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn frozen_split_token(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> AttnOut {
+    assert!(dh % n == 0 && s % n == 0 && d % n == 0, "cluster must divide dh, S, D");
+    let h = nh * dh;
+    let (hs, ss, ds) = (dh / n, s / n, d / n);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut out = vec![0f32; b * d];
+    let mut k_new_g = vec![0f32; b * h];
+    let mut v_new_g = vec![0f32; b * h];
+
+    for head in 0..nh {
+        let project = |w: &[f32]| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|r| {
+                    let mut seg = vec![0f32; b * hs];
+                    for bi in 0..b {
+                        for (j, sj) in seg[bi * hs..(bi + 1) * hs].iter_mut().enumerate() {
+                            let col = head * dh + r * hs + j;
+                            let mut acc = 0f32;
+                            for i in 0..d {
+                                acc += hidden[bi * d + i] * w[i * h + col];
+                            }
+                            *sj = acc;
+                        }
+                    }
+                    seg
+                })
+                .collect()
+        };
+        let q_segs = project(wq);
+        let k_segs = project(wk);
+        let v_segs = project(wv);
+
+        let cat: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut c = Vec::with_capacity(3 * b * hs);
+                c.extend_from_slice(&q_segs[r]);
+                c.extend_from_slice(&k_segs[r]);
+                c.extend_from_slice(&v_segs[r]);
+                c
+            })
+            .collect();
+        let (gathered, _gc) = cluster_gather(&cat, transport, hw, noc);
+
+        let assemble = |owner: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let seg_len = 3 * b * hs;
+            let mut q = vec![0f32; b * dh];
+            let mut kn = vec![0f32; b * dh];
+            let mut vn = vec![0f32; b * dh];
+            for r in 0..n {
+                let seg = gathered_segment(&gathered[owner], owner, r, n, seg_len);
+                for bi in 0..b {
+                    q[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[bi * hs..(bi + 1) * hs]);
+                    kn[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[b * hs + bi * hs..b * hs + (bi + 1) * hs]);
+                    vn[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[2 * b * hs + bi * hs..2 * b * hs + (bi + 1) * hs]);
+                }
+            }
+            (q, kn, vn)
+        };
+        let (q, k_new, v_new) = assemble(0);
+
+        for bi in 0..b {
+            k_new_g[bi * h + head * dh..bi * h + (head + 1) * dh]
+                .copy_from_slice(&k_new[bi * dh..(bi + 1) * dh]);
+            v_new_g[bi * h + head * dh..bi * h + (head + 1) * dh]
+                .copy_from_slice(&v_new[bi * dh..(bi + 1) * dh]);
+        }
+
+        let mut m_bufs: Vec<Vec<f32>> = vec![vec![f32::NEG_INFINITY; b]; n];
+        let mut l_bufs: Vec<Vec<f32>> = vec![vec![0f32; b]; n];
+        let mut acc_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * dh]; n];
+        for r in 0..n {
+            for bi in 0..b {
+                let valid = pos[bi];
+                let lo = r * ss;
+                let hi = ((r + 1) * ss).min(valid);
+                let qrow = &q[bi * dh..(bi + 1) * dh];
+                let mut scores: Vec<(usize, f32)> = Vec::new();
+                for t in lo..hi.max(lo) {
+                    if t >= valid {
+                        break;
+                    }
+                    let base = ((bi * s + t) * nh + head) * dh;
+                    let dot: f32 =
+                        qrow.iter().zip(&k_cache[base..base + dh]).map(|(a, c)| a * c).sum();
+                    scores.push((t, dot * scale));
+                }
+                let self_here = r == n - 1;
+                let self_score = if self_here {
+                    let dot: f32 = qrow
+                        .iter()
+                        .zip(&k_new[bi * dh..(bi + 1) * dh])
+                        .map(|(a, c)| a * c)
+                        .sum();
+                    Some(dot * scale)
+                } else {
+                    None
+                };
+                let mut m = f32::NEG_INFINITY;
+                for (_, sc) in &scores {
+                    m = m.max(*sc);
+                }
+                if let Some(sc) = self_score {
+                    m = m.max(sc);
+                }
+                if m == f32::NEG_INFINITY {
+                    continue;
+                }
+                let mut l = 0f32;
+                let acc = &mut acc_bufs[r][bi * dh..(bi + 1) * dh];
+                for (t, sc) in &scores {
+                    let p = (sc - m).exp();
+                    l += p;
+                    let base = ((bi * s + t) * nh + head) * dh;
+                    for (a, vv) in acc.iter_mut().zip(&v_cache[base..base + dh]) {
+                        *a += p * vv;
+                    }
+                }
+                if let Some(sc) = self_score {
+                    let p = (sc - m).exp();
+                    l += p;
+                    for (a, vv) in acc.iter_mut().zip(&v_new[bi * dh..(bi + 1) * dh]) {
+                        *a += p * vv;
+                    }
+                }
+                m_bufs[r][bi] = m;
+                l_bufs[r][bi] = l;
+            }
+        }
+
+        let m_local: Vec<Vec<f32>> = m_bufs.clone();
+        let _ = cluster_reduce(&mut m_bufs, ReduceOp::Max, transport, hw, noc);
+        for r in 0..n {
+            for bi in 0..b {
+                let alpha = if m_local[r][bi] == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    (m_local[r][bi] - m_bufs[r][bi]).exp()
+                };
+                l_bufs[r][bi] *= alpha;
+                for a in &mut acc_bufs[r][bi * dh..(bi + 1) * dh] {
+                    *a *= alpha;
+                }
+            }
+        }
+        let _ = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
+        let _ = cluster_reduce(&mut acc_bufs, ReduceOp::Sum, transport, hw, noc);
+
+        for r in 0..n {
+            for bi in 0..b {
+                let attn: Vec<f32> = acc_bufs[r][bi * dh..(bi + 1) * dh]
+                    .iter()
+                    .map(|a| a / l_bufs[r][bi])
+                    .collect();
+                for c in 0..ds {
+                    let col = r * ds + c;
+                    let mut acc = 0f32;
+                    for (j, av) in attn.iter().enumerate() {
+                        acc += av * wo[(head * dh + j) * d + col];
+                    }
+                    out[bi * d + col] += acc;
+                }
+            }
+        }
+    }
+
+    AttnOut { out, k_new: k_new_g, v_new: v_new_g }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn frozen_split_head(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> AttnOut {
+    assert!(dh % n == 0, "cluster must divide head_dim");
+    let h = nh * dh;
+    let hs = dh / n;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let mut out = vec![0f32; b * d];
+    let mut k_new_g = vec![0f32; b * h];
+    let mut v_new_g = vec![0f32; b * h];
+
+    for head in 0..nh {
+        let project = |w: &[f32], r: usize| -> Vec<f32> {
+            let mut seg = vec![0f32; b * hs];
+            for bi in 0..b {
+                for (j, sj) in seg[bi * hs..(bi + 1) * hs].iter_mut().enumerate() {
+                    let col = head * dh + r * hs + j;
+                    let mut acc = 0f32;
+                    for i in 0..d {
+                        acc += hidden[bi * d + i] * w[i * h + col];
+                    }
+                    *sj = acc;
+                }
+            }
+            seg
+        };
+        let q_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wq, r)).collect();
+        let k_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wk, r)).collect();
+        let v_segs: Vec<Vec<f32>> = (0..n).map(|r| project(wv, r)).collect();
+        for r in 0..n {
+            for bi in 0..b {
+                let dst = bi * h + head * dh + r * hs;
+                k_new_g[dst..dst + hs].copy_from_slice(&k_segs[r][bi * hs..(bi + 1) * hs]);
+                v_new_g[dst..dst + hs].copy_from_slice(&v_segs[r][bi * hs..(bi + 1) * hs]);
+            }
+        }
+
+        let mut score_bufs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut sc = vec![0f32; b * (s + 1)];
+                for bi in 0..b {
+                    for t in 0..pos[bi] {
+                        let base = ((bi * s + t) * nh + head) * dh + r * hs;
+                        let mut acc = 0f32;
+                        for j in 0..hs {
+                            acc += q_segs[r][bi * hs + j] * k_cache[base + j];
+                        }
+                        sc[bi * (s + 1) + t] = acc * scale;
+                    }
+                    let mut acc = 0f32;
+                    for j in 0..hs {
+                        acc += q_segs[r][bi * hs + j] * k_segs[r][bi * hs + j];
+                    }
+                    sc[bi * (s + 1) + s] = acc * scale;
+                }
+                sc
+            })
+            .collect();
+
+        let _ = cluster_reduce(&mut score_bufs, ReduceOp::Sum, transport, hw, noc);
+
+        let mut o_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * d]; n];
+        for r in 0..n {
+            for bi in 0..b {
+                let valid = pos[bi];
+                let row = &score_bufs[r][bi * (s + 1)..(bi + 1) * (s + 1)];
+                let mut m = row[s];
+                for t in 0..valid {
+                    m = m.max(row[t]);
+                }
+                let mut l = 0f32;
+                let mut probs = vec![0f32; valid + 1];
+                for t in 0..valid {
+                    probs[t] = (row[t] - m).exp();
+                    l += probs[t];
+                }
+                probs[valid] = (row[s] - m).exp();
+                l += probs[valid];
+                let mut a = vec![0f32; hs];
+                for t in 0..valid {
+                    let base = ((bi * s + t) * nh + head) * dh + r * hs;
+                    for (j, av) in a.iter_mut().enumerate() {
+                        *av += probs[t] * v_cache[base + j];
+                    }
+                }
+                for (j, av) in a.iter_mut().enumerate() {
+                    *av += probs[valid] * v_segs[r][bi * hs + j];
+                    *av /= l;
+                }
+                for (j, av) in a.iter().enumerate() {
+                    let wrow = &wo[(head * dh + r * hs + j) * d..(head * dh + r * hs + j + 1) * d];
+                    let orow = &mut o_bufs[r][bi * d..(bi + 1) * d];
+                    for (o, w) in orow.iter_mut().zip(wrow) {
+                        *o += av * w;
+                    }
+                }
+            }
+        }
+
+        let _ = cluster_reduce(&mut o_bufs, ReduceOp::Sum, transport, hw, noc);
+
+        for bi in 0..b * d {
+            out[bi] += o_bufs[0][bi];
+        }
+    }
+
+    AttnOut { out, k_new: k_new_g, v_new: v_new_g }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn frozen_mla(
+    hidden: &[f32],
+    wq: &[f32],
+    wkv: &[f32],
+    w_down: &[f32],
+    wo: &[f32],
+    kv_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> AttnOut {
+    assert!(l % n == 0 && s % n == 0 && d % n == 0, "cluster must divide l, S, D");
+    let (ls, ss, ds) = (l / n, s / n, d / n);
+    let scale = 1.0 / (l as f32).sqrt();
+
+    let mut out = vec![0f32; b * d];
+    let mut kv_new_g = vec![0f32; b * l];
+
+    let kv_segs: Vec<Vec<f32>> = (0..n)
+        .map(|r| {
+            let mut seg = vec![0f32; b * ls];
+            for bi in 0..b {
+                for (j, sj) in seg[bi * ls..(bi + 1) * ls].iter_mut().enumerate() {
+                    let col = r * ls + j;
+                    let mut acc = 0f32;
+                    for i in 0..d {
+                        acc += hidden[bi * d + i] * wkv[i * l + col];
+                    }
+                    *sj = acc;
+                }
+            }
+            seg
+        })
+        .collect();
+    let (kv_gathered, _) = cluster_gather(&kv_segs, transport, hw, noc);
+    let mut kv_new = vec![0f32; b * l];
+    for r in 0..n {
+        let seg = gathered_segment(&kv_gathered[0], 0, r, n, b * ls);
+        for bi in 0..b {
+            kv_new[bi * l + r * ls..bi * l + (r + 1) * ls]
+                .copy_from_slice(&seg[bi * ls..(bi + 1) * ls]);
+        }
+    }
+    kv_new_g.copy_from_slice(&kv_new);
+
+    for head in 0..nh {
+        let q_segs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut seg = vec![0f32; b * ls];
+                for bi in 0..b {
+                    for (j, sj) in seg[bi * ls..(bi + 1) * ls].iter_mut().enumerate() {
+                        let col = head * l + r * ls + j;
+                        let mut acc = 0f32;
+                        for i in 0..d {
+                            acc += hidden[bi * d + i] * wq[i * nh * l + col];
+                        }
+                        *sj = acc;
+                    }
+                }
+                seg
+            })
+            .collect();
+        let (q_gathered, _) = cluster_gather(&q_segs, transport, hw, noc);
+        let mut q = vec![0f32; b * l];
+        for r in 0..n {
+            let seg = gathered_segment(&q_gathered[0], 0, r, n, b * ls);
+            for bi in 0..b {
+                q[bi * l + r * ls..bi * l + (r + 1) * ls]
+                    .copy_from_slice(&seg[bi * ls..(bi + 1) * ls]);
+            }
+        }
+
+        let mut m_bufs: Vec<Vec<f32>> = vec![vec![f32::NEG_INFINITY; b]; n];
+        let mut l_bufs: Vec<Vec<f32>> = vec![vec![0f32; b]; n];
+        let mut acc_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * l]; n];
+        for r in 0..n {
+            for bi in 0..b {
+                let valid = pos[bi];
+                let lo = r * ss;
+                let hi = ((r + 1) * ss).min(valid);
+                let qrow = &q[bi * l..(bi + 1) * l];
+                let mut scores: Vec<(usize, f32)> = Vec::new();
+                for t in lo..hi.max(lo) {
+                    let base = (bi * s + t) * l;
+                    let dot: f32 =
+                        qrow.iter().zip(&kv_cache[base..base + l]).map(|(a, c)| a * c).sum();
+                    scores.push((t, dot * scale));
+                }
+                let self_here = r == n - 1;
+                let self_score = if self_here {
+                    let dot: f32 = qrow
+                        .iter()
+                        .zip(&kv_new[bi * l..(bi + 1) * l])
+                        .map(|(a, c)| a * c)
+                        .sum();
+                    Some(dot * scale)
+                } else {
+                    None
+                };
+                let mut m = f32::NEG_INFINITY;
+                for (_, sc) in &scores {
+                    m = m.max(*sc);
+                }
+                if let Some(sc) = self_score {
+                    m = m.max(sc);
+                }
+                if m == f32::NEG_INFINITY {
+                    continue;
+                }
+                let mut lsum = 0f32;
+                let acc = &mut acc_bufs[r][bi * l..(bi + 1) * l];
+                for (t, sc) in &scores {
+                    let p = (sc - m).exp();
+                    lsum += p;
+                    let base = (bi * s + t) * l;
+                    for (a, kv) in acc.iter_mut().zip(&kv_cache[base..base + l]) {
+                        *a += p * kv;
+                    }
+                }
+                if let Some(sc) = self_score {
+                    let p = (sc - m).exp();
+                    lsum += p;
+                    for (a, kv) in acc.iter_mut().zip(&kv_new[bi * l..(bi + 1) * l]) {
+                        *a += p * kv;
+                    }
+                }
+                m_bufs[r][bi] = m;
+                l_bufs[r][bi] = lsum;
+            }
+        }
+
+        let m_local = m_bufs.clone();
+        let _ = cluster_reduce(&mut m_bufs, ReduceOp::Max, transport, hw, noc);
+        for r in 0..n {
+            for bi in 0..b {
+                let alpha = if m_local[r][bi] == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    (m_local[r][bi] - m_bufs[r][bi]).exp()
+                };
+                l_bufs[r][bi] *= alpha;
+                for a in &mut acc_bufs[r][bi * l..(bi + 1) * l] {
+                    *a *= alpha;
+                }
+            }
+        }
+        let _ = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
+        let _ = cluster_reduce(&mut acc_bufs, ReduceOp::Sum, transport, hw, noc);
+
+        let attn: Vec<f32> = (0..b * l).map(|i| acc_bufs[0][i] / l_bufs[0][i / l]).collect();
+
+        let mut z_bufs: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let mut z = vec![0f32; b * dh];
+                for bi in 0..b {
+                    for j in 0..ls {
+                        let av = attn[bi * l + r * ls + j];
+                        let wrow = &w_down[head * l * dh + (r * ls + j) * dh
+                            ..head * l * dh + (r * ls + j + 1) * dh];
+                        for (zv, wv) in z[bi * dh..(bi + 1) * dh].iter_mut().zip(wrow) {
+                            *zv += av * wv;
+                        }
+                    }
+                }
+                z
+            })
+            .collect();
+        let _ = cluster_reduce(&mut z_bufs, ReduceOp::Sum, transport, hw, noc);
+
+        for r in 0..n {
+            for bi in 0..b {
+                for c in 0..ds {
+                    let col = r * ds + c;
+                    let mut acc = 0f32;
+                    for j in 0..dh {
+                        acc += z_bufs[r][bi * dh + j] * wo[(head * dh + j) * d + col];
+                    }
+                    out[bi * d + col] += acc;
+                }
+            }
+        }
+    }
+
+    AttnOut { out, k_new: kv_new_g, v_new: vec![] }
+}
+
+/// Frozen pre-refactor reference oracle (gemm_acc + zip-sum attention).
+#[allow(clippy::too_many_arguments)]
+fn frozen_attention_block_ref(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+) -> AttnOut {
+    fn gemm_acc(x: &[f32], w: &[f32], y: &mut [f32], b: usize, n_in: usize, n_out: usize) {
+        for bi in 0..b {
+            for i in 0..n_in {
+                let xv = x[bi * n_in + i];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * n_out..(i + 1) * n_out];
+                let yrow = &mut y[bi * n_out..(bi + 1) * n_out];
+                for (yo, wo) in yrow.iter_mut().zip(wrow) {
+                    *yo += xv * wo;
+                }
+            }
+        }
+    }
+    let h = nh * dh;
+    let mut q = vec![0f32; b * h];
+    let mut k_new = vec![0f32; b * h];
+    let mut v_new = vec![0f32; b * h];
+    gemm_acc(hidden, wq, &mut q, b, d, h);
+    gemm_acc(hidden, wk, &mut k_new, b, d, h);
+    gemm_acc(hidden, wv, &mut v_new, b, d, h);
+
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0f32; b * d];
+    for head in 0..nh {
+        let take = |src: &[f32]| -> Vec<f32> {
+            let mut t = vec![0f32; b * dh];
+            for bi in 0..b {
+                t[bi * dh..(bi + 1) * dh]
+                    .copy_from_slice(&src[bi * h + head * dh..bi * h + (head + 1) * dh]);
+            }
+            t
+        };
+        let (qh, knh, vnh) = (take(&q), take(&k_new), take(&v_new));
+        let mut attn = vec![0f32; b * dh];
+        for bi in 0..b {
+            let qrow = &qh[bi * dh..(bi + 1) * dh];
+            let nvalid = pos[bi];
+            let mut scores = Vec::with_capacity(nvalid + 1);
+            for t in 0..nvalid {
+                let base = ((bi * s + t) * nh + head) * dh;
+                let dot: f32 =
+                    qrow.iter().zip(&k_cache[base..base + dh]).map(|(a, c)| a * c).sum();
+                scores.push(dot * scale);
+            }
+            let self_dot: f32 =
+                qrow.iter().zip(&knh[bi * dh..(bi + 1) * dh]).map(|(a, c)| a * c).sum();
+            scores.push(self_dot * scale);
+
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut l = 0.0;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - m).exp();
+                l += *sc;
+            }
+            let orow = &mut attn[bi * dh..(bi + 1) * dh];
+            for (t, p) in scores[..nvalid].iter().enumerate() {
+                let base = ((bi * s + t) * nh + head) * dh;
+                for (o, vv) in orow.iter_mut().zip(&v_cache[base..base + dh]) {
+                    *o += p * vv;
+                }
+            }
+            let p_self = scores[nvalid];
+            for (o, vv) in orow.iter_mut().zip(&vnh[bi * dh..(bi + 1) * dh]) {
+                *o += p_self * vv;
+            }
+            for o in orow.iter_mut() {
+                *o /= l;
+            }
+        }
+        let wo_head = &wo[head * dh * d..(head + 1) * dh * d];
+        gemm_acc(&attn, wo_head, &mut out, b, dh, d);
+    }
+    AttnOut { out, k_new, v_new }
+}
+
+/// Frozen pre-refactor block-isolated baseline pipeline.
+#[allow(clippy::too_many_arguments)]
+fn frozen_block_isolated(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+) -> AttnOut {
+    const FLASH_SPLITS: usize = 4;
+    fn gemm_acc(x: &[f32], w: &[f32], y: &mut [f32], b: usize, n_in: usize, n_out: usize) {
+        for bi in 0..b {
+            for i in 0..n_in {
+                let xv = x[bi * n_in + i];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * n_out..(i + 1) * n_out];
+                let yrow = &mut y[bi * n_out..(bi + 1) * n_out];
+                for (yo, wo) in yrow.iter_mut().zip(wrow) {
+                    *yo += xv * wo;
+                }
+            }
+        }
+    }
+    let h = nh * dh;
+    let mut q_gmem = vec![0f32; b * h];
+    let mut k_gmem = vec![0f32; b * h];
+    let mut v_gmem = vec![0f32; b * h];
+    gemm_acc(hidden, wq, &mut q_gmem, b, d, h);
+    gemm_acc(hidden, wk, &mut k_gmem, b, d, h);
+    gemm_acc(hidden, wv, &mut v_gmem, b, d, h);
+
+    let scale = 1.0 / (dh as f32).sqrt();
+    let seg = s.div_ceil(FLASH_SPLITS);
+    let mut part_acc = vec![0f32; nh * FLASH_SPLITS * b * dh];
+    let mut part_m = vec![f32::NEG_INFINITY; nh * FLASH_SPLITS * b];
+    let mut part_l = vec![0f32; nh * FLASH_SPLITS * b];
+    for head in 0..nh {
+        for sp in 0..FLASH_SPLITS {
+            let blk = head * FLASH_SPLITS + sp;
+            for bi in 0..b {
+                let valid = pos[bi];
+                let lo = sp * seg;
+                let hi = ((sp + 1) * seg).min(valid);
+                let qrow = &q_gmem[bi * h + head * dh..bi * h + (head + 1) * dh];
+                let mut m = f32::NEG_INFINITY;
+                let mut scores = Vec::new();
+                for t in lo..hi.max(lo) {
+                    let base = ((bi * s + t) * nh + head) * dh;
+                    let dot: f32 =
+                        qrow.iter().zip(&k_cache[base..base + dh]).map(|(a, c)| a * c).sum();
+                    let sc = dot * scale;
+                    m = m.max(sc);
+                    scores.push((t, sc));
+                }
+                if sp == FLASH_SPLITS - 1 {
+                    let dot: f32 = qrow
+                        .iter()
+                        .zip(&k_gmem[bi * h + head * dh..bi * h + (head + 1) * dh])
+                        .map(|(a, c)| a * c)
+                        .sum();
+                    let sc = dot * scale;
+                    m = m.max(sc);
+                    scores.push((usize::MAX, sc));
+                }
+                if m == f32::NEG_INFINITY {
+                    continue;
+                }
+                let mut l = 0f32;
+                let acc = &mut part_acc[(blk * b + bi) * dh..(blk * b + bi + 1) * dh];
+                for (t, sc) in scores {
+                    let p = (sc - m).exp();
+                    l += p;
+                    let vrow = if t == usize::MAX {
+                        &v_gmem[bi * h + head * dh..bi * h + (head + 1) * dh]
+                    } else {
+                        &v_cache
+                            [((bi * s + t) * nh + head) * dh..((bi * s + t) * nh + head) * dh + dh]
+                    };
+                    for (a, vv) in acc.iter_mut().zip(vrow) {
+                        *a += p * vv;
+                    }
+                }
+                part_m[blk * b + bi] = m;
+                part_l[blk * b + bi] = l;
+            }
+        }
+    }
+
+    let mut attn_gmem = vec![0f32; b * h];
+    for head in 0..nh {
+        for bi in 0..b {
+            let mut m = f32::NEG_INFINITY;
+            for sp in 0..FLASH_SPLITS {
+                m = m.max(part_m[(head * FLASH_SPLITS + sp) * b + bi]);
+            }
+            let mut l = 0f32;
+            let out = &mut attn_gmem[bi * h + head * dh..bi * h + (head + 1) * dh];
+            for sp in 0..FLASH_SPLITS {
+                let blk = head * FLASH_SPLITS + sp;
+                let pm = part_m[blk * b + bi];
+                if pm == f32::NEG_INFINITY {
+                    continue;
+                }
+                let alpha = (pm - m).exp();
+                l += part_l[blk * b + bi] * alpha;
+                for (o, a) in out
+                    .iter_mut()
+                    .zip(&part_acc[(blk * b + bi) * dh..(blk * b + bi + 1) * dh])
+                {
+                    *o += a * alpha;
+                }
+            }
+            for o in out.iter_mut() {
+                *o /= l;
+            }
+        }
+    }
+
+    let mut out = vec![0f32; b * d];
+    gemm_acc(&attn_gmem, wo, &mut out, b, h, d);
+    AttnOut { out, k_new: k_gmem, v_new: v_gmem }
+}
+
+// ---------------------------------------------------------------------------
+// The suite: ≥6 geometries varying every parameter, all legal cluster
+// sizes, both transports where numerics could plausibly diverge.
+// ---------------------------------------------------------------------------
+
+/// (seed, b, nh, dh, s, d, cluster sizes) — every n divides dh, s and d.
+const MHA_GEOMETRIES: &[(u64, usize, usize, usize, usize, usize, &[usize])] = &[
+    (7, 1, 1, 4, 8, 8, &[1, 2, 4]),
+    (11, 2, 2, 8, 16, 16, &[1, 2, 4, 8]),
+    (13, 3, 2, 8, 12, 24, &[1, 2, 4]),
+    (17, 1, 4, 16, 32, 32, &[1, 2, 4, 8]),
+    (19, 2, 3, 8, 24, 48, &[1, 2, 4]),
+    (23, 2, 2, 4, 8, 16, &[1, 2, 4]),
+];
+
+/// (seed, b, nh, l, dh, s, d, cluster sizes) — every n divides l, s and d.
+const MLA_GEOMETRIES: &[(u64, usize, usize, usize, usize, usize, usize, &[usize])] = &[
+    (29, 2, 2, 16, 8, 16, 16, &[1, 2, 4, 8]),
+    (31, 1, 3, 8, 4, 8, 8, &[1, 2, 4]),
+    (37, 2, 1, 4, 8, 12, 4, &[1, 2, 4]),
+];
+
+fn env() -> (Hardware, Noc) {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    (hw, noc)
+}
+
+#[test]
+fn split_token_bitexact_vs_frozen_scalar() {
+    let (hw, noc) = env();
+    for &(seed, b, nh, dh, s, d, ns) in MHA_GEOMETRIES {
+        let c = mha_case(seed, b, nh, dh, s, d);
+        for &n in ns {
+            for transport in [Transport::Dsmem, Transport::GlobalMemory] {
+                let want = frozen_split_token(
+                    &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                    b, d, nh, dh, s, n, transport, &hw, &noc,
+                );
+                let (got, rep) = split_token::execute(
+                    &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                    b, d, nh, dh, s, n, transport, &hw, &noc,
+                );
+                assert_out_bits(&got, &want, &format!("split_token seed={seed} n={n}"));
+                assert_eq!(rep.launches, 1, "schedule unchanged");
+            }
+        }
+    }
+}
+
+#[test]
+fn split_head_bitexact_vs_frozen_scalar() {
+    let (hw, noc) = env();
+    for &(seed, b, nh, dh, s, d, ns) in MHA_GEOMETRIES {
+        let c = mha_case(seed, b, nh, dh, s, d);
+        for &n in ns {
+            let want = frozen_split_head(
+                &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                b, d, nh, dh, s, n, Transport::Dsmem, &hw, &noc,
+            );
+            let (got, _) = split_head::execute(
+                &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                b, d, nh, dh, s, n, Transport::Dsmem, &hw, &noc,
+            );
+            assert_out_bits(&got, &want, &format!("split_head seed={seed} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn mla_bitexact_vs_frozen_scalar() {
+    let (hw, noc) = env();
+    for &(seed, b, nh, l, dh, s, d, ns) in MLA_GEOMETRIES {
+        let c = mla_case(seed, b, nh, l, dh, s, d);
+        for &n in ns {
+            let want = frozen_mla(
+                &c.hidden, &c.wq, &c.wkv, &c.w_down, &c.wo, &c.kv_cache, &c.pos,
+                b, d, nh, l, dh, s, n, Transport::Dsmem, &hw, &noc,
+            );
+            let (got, _) = mla::execute(
+                &c.hidden, &c.wq, &c.wkv, &c.w_down, &c.wo, &c.kv_cache, &c.pos,
+                b, d, nh, l, dh, s, n, Transport::Dsmem, &hw, &noc,
+            );
+            assert_out_bits(&got, &want, &format!("mla seed={seed} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn reference_and_block_isolated_bitexact_vs_frozen_scalar() {
+    for &(seed, b, nh, dh, s, d, _) in MHA_GEOMETRIES {
+        let c = mha_case(seed, b, nh, dh, s, d);
+        let want = frozen_attention_block_ref(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+            b, d, nh, dh, s,
+        );
+        let got = reference::attention_block_ref(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+            b, d, nh, dh, s,
+        );
+        assert_out_bits(&got, &want, &format!("reference seed={seed}"));
+
+        let want_bi = frozen_block_isolated(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+            b, d, nh, dh, s,
+        );
+        let (got_bi, _) = block_isolated::execute(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+            b, d, nh, dh, s,
+        );
+        assert_out_bits(&got_bi, &want_bi, &format!("block_isolated seed={seed}"));
+    }
+}
+
+#[test]
+fn transports_agree_bit_for_bit() {
+    // The Fig. 13 ablation changes time, never values: DSMEM and the
+    // global-memory fallback must produce identical bytes now that both
+    // run through the packed kernels.
+    let (hw, noc) = env();
+    let c = mha_case(41, 2, 2, 8, 16, 16);
+    let run = |t| {
+        split_token::execute(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+            c.b, c.d, c.nh, c.dh, c.s, 4, t, &hw, &noc,
+        )
+        .0
+    };
+    let a = run(Transport::Dsmem);
+    let b = run(Transport::GlobalMemory);
+    assert_out_bits(&a, &b, "transport");
+}
