@@ -1,21 +1,27 @@
 //! Quickstart: the smallest possible end-to-end check that the stack
 //! composes — submit a prompt, run decode steps, print the tokens.
 //!
-//! With AOT artifacts present (`make artifacts`), this loads the real
-//! PJRT runtime and runs one decode step of the compiled tiny-llama.
-//! On a fresh checkout (no `artifacts/manifest.json`) it falls back to
-//! the deterministic in-memory [`MockBackend`], driving the identical
-//! coordinator path: admission → continuous batch → paged KV cache →
-//! decode loop → finish reason → metrics.
+//! Default path: the **functional backend** — real full-block decoding
+//! (RMSNorm → fused attention dataflow with rotary → residual → SwiGLU
+//! MLP → tied-embedding greedy head) of the seeded `micro-llama` through
+//! the identical coordinator path: admission → continuous batch → paged
+//! KV cache → decode loop → finish reason → metrics. Real numerics, no
+//! artifacts, no PJRT.
+//!
+//! With AOT artifacts present (`make artifacts`) it first tries the PJRT
+//! runtime on the compiled tiny-llama. `--mock` forces the deterministic
+//! echo backend (demo of the coordinator alone — not real decoding).
 //!
 //! ```bash
-//! cargo run --release --example quickstart          # mock backend
+//! cargo run --release --example quickstart            # functional backend
+//! cargo run --release --example quickstart -- --mock  # mock coordinator demo
 //! make artifacts && cargo run --release --example quickstart   # PJRT
 //! ```
 
 use anyhow::Result;
-use clusterfusion::coordinator::engine::{Engine, MockBackend};
+use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend};
 use clusterfusion::coordinator::request::{Event, Request};
+use clusterfusion::coordinator::FunctionalBackend;
 use clusterfusion::runtime::{argmax, HostTensor, Runtime};
 
 /// Crate-anchored artifacts dir so the example behaves the same from any
@@ -64,14 +70,15 @@ fn pjrt_quickstart() -> Result<()> {
     Ok(())
 }
 
-fn mock_quickstart() -> Result<()> {
-    println!("using the deterministic in-memory MockBackend");
-    println!("(run `make artifacts` with a PJRT-enabled build for the real path)\n");
-
-    let mut engine = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
-    engine.submit(Request::new(1, vec![3, 5], 3));
-    engine.run_to_completion(100)?;
-
+/// Drive a full greedy decode through the engine and return the token
+/// stream (shared by the functional and mock paths).
+fn decode_once<B: Backend>(
+    engine: &mut Engine<B>,
+    prompt: Vec<i32>,
+    gen: usize,
+) -> Result<Vec<i32>> {
+    engine.submit(Request::new(1, prompt, gen));
+    engine.run_to_completion(256)?;
     let events = engine.take_events();
     let tokens: Vec<i32> = events
         .iter()
@@ -80,11 +87,47 @@ fn mock_quickstart() -> Result<()> {
             _ => None,
         })
         .collect();
-    println!("prompt [3, 5] -> generated tokens {tokens:?}");
     match events.last() {
         Some(Event::Finished { reason, .. }) => println!("finish reason: {reason:?}"),
         other => anyhow::bail!("expected a Finished event, got {other:?}"),
     }
+    Ok(tokens)
+}
+
+fn functional_quickstart() -> Result<()> {
+    let backend = FunctionalBackend::from_model_name("micro-llama", 42, 2)?;
+    println!("backend: {}", backend.describe());
+    println!("(real numerics — greedy decode over seeded weights; --mock for the echo demo)\n");
+
+    let prompt = vec![3, 5, 11];
+    let t0 = std::time::Instant::now();
+    let mut engine = Engine::new(backend, 64, 8, 1.0);
+    let tokens = decode_once(&mut engine, prompt.clone(), 8)?;
+    let dt = t0.elapsed();
+    println!("prompt {prompt:?} -> generated tokens {tokens:?}");
+    println!(
+        "engine: {} decode steps, {} tokens out in {:.1} ms, {} pages still held",
+        engine.steps,
+        engine.tokens_out,
+        dt.as_secs_f64() * 1e3,
+        engine.pool.used_pages()
+    );
+
+    // Determinism check: a fresh engine from the same seed must replay
+    // the identical stream (the integration_block contract).
+    let backend2 = FunctionalBackend::from_model_name("micro-llama", 42, 2)?;
+    let mut engine2 = Engine::new(backend2, 64, 8, 1.0);
+    let again = decode_once(&mut engine2, prompt, 8)?;
+    anyhow::ensure!(tokens == again, "functional decode must be seed-deterministic");
+    println!("re-decode from the same seed: byte-identical ✓");
+    Ok(())
+}
+
+fn mock_quickstart() -> Result<()> {
+    println!("backend: MOCK (deterministic echo — coordinator demo, not real decoding)\n");
+    let mut engine = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
+    let tokens = decode_once(&mut engine, vec![3, 5], 3)?;
+    println!("prompt [3, 5] -> generated tokens {tokens:?}");
     println!(
         "engine: {} decode steps, {} tokens out, {} pages still held",
         engine.steps,
@@ -96,20 +139,28 @@ fn mock_quickstart() -> Result<()> {
 }
 
 fn main() -> Result<()> {
+    let mock = std::env::args().any(|a| a == "--mock");
+    if mock {
+        mock_quickstart()?;
+        println!("quickstart OK (mock)");
+        return Ok(());
+    }
     // Prefer the real PJRT path when artifacts exist and the runtime is
     // available (offline builds stub the `xla` crate — DESIGN.md §PJRT);
-    // degrade to the mock backend otherwise so the quickstart always
-    // demonstrates a working end-to-end path.
+    // otherwise the functional backend decodes for real — the quickstart
+    // never silently demos the mock.
     if clusterfusion::runtime::artifacts_ready(artifacts_dir()) {
         match pjrt_quickstart() {
             Ok(()) => {
                 println!("quickstart OK");
                 return Ok(());
             }
-            Err(e) => eprintln!("PJRT path failed ({e:#}); falling back to the mock backend\n"),
+            Err(e) => {
+                eprintln!("PJRT path failed ({e:#}); using the functional backend instead\n")
+            }
         }
     }
-    mock_quickstart()?;
+    functional_quickstart()?;
     println!("quickstart OK");
     Ok(())
 }

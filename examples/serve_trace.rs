@@ -8,10 +8,12 @@
 //! make artifacts && cargo run --release --example serve_trace -- [n_requests] [model]
 //! ```
 //!
-//! Without artifacts (or with the PJRT runtime stubbed) the example falls
-//! back to the deterministic `MockBackend`, so the pacing path always
-//! runs on a fresh checkout. The run recorded in EXPERIMENTS.md
-//! §End-to-end used the defaults (12 requests, tiny-llama-100m).
+//! Without artifacts (or with the PJRT runtime stubbed) the example
+//! decodes through the **functional backend** — real full-block numerics
+//! over seeded weights (`coordinator::FunctionalBackend`) — so the
+//! pacing path always serves genuine tokens on a fresh checkout; the
+//! deterministic `MockBackend` echo hides behind `--mock`. The run
+//! recorded in EXPERIMENTS.md §End-to-end used the defaults.
 
 use anyhow::Result;
 use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend, ModelGeom};
@@ -19,35 +21,51 @@ use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
 use clusterfusion::coordinator::request::Event;
 use clusterfusion::coordinator::router::Router;
 use clusterfusion::coordinator::server::Server;
+use clusterfusion::coordinator::FunctionalBackend;
 use clusterfusion::loadgen;
 use clusterfusion::metrics::{Table, Throughput};
 use clusterfusion::util::clock::{Clock, WallClock};
 use clusterfusion::workload::{SeqlenDist, Trace};
 
 fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--mock").collect();
+    let mock = std::env::args().any(|a| a == "--mock");
     let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(12);
-    let model = args.get(1).map(String::as_str).unwrap_or("tiny-llama-100m");
 
     println!("== serve_trace: end-to-end serving with paced trace replay ==");
+    if mock {
+        println!("backend: MOCK (deterministic echo — demo only, not real decoding)");
+        let geom = ModelGeom { vocab: 512, n_layers: 4, row_elems: 32, planes: 2, max_seq: 256 };
+        return run(MockBackend::new(geom, vec![1, 4, 8]), n_requests);
+    }
     // Crate-anchored artifacts dir so the example behaves the same from
     // any working directory (matches the integration tests' probe).
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     if clusterfusion::runtime::artifacts_ready(&artifacts) {
+        let model = args.get(1).map(String::as_str).unwrap_or("tiny-llama-100m");
         println!("loading {model} ...");
         let backend = PjrtBackend::load(&artifacts, model, 0)?;
         println!(
-            "platform {}, buckets {:?}, vocab {}",
+            "backend: PJRT, platform {}, buckets {:?}, vocab {}",
             backend.platform(),
             backend.buckets(),
             backend.geom().vocab
         );
         run(backend, n_requests)
     } else {
-        println!("artifacts/PJRT unavailable — falling back to MockBackend");
-        println!("(run `make artifacts` for the real runtime; DESIGN.md §PJRT)");
-        let geom = ModelGeom { vocab: 512, n_layers: 4, row_elems: 32, planes: 2, max_seq: 256 };
-        run(MockBackend::new(geom, vec![1, 4, 8]), n_requests)
+        let model = args.get(1).map(String::as_str).unwrap_or("micro-llama");
+        let backend = FunctionalBackend::from_model_name(model, 0, 2)?;
+        println!("backend: {}", backend.describe());
+        println!("(no artifacts found — functional decoding; `make artifacts` enables PJRT)");
+        let params = backend.config().param_count();
+        if params > 20_000_000 {
+            println!(
+                "note: {model} has {:.0} M params — every decode step runs them through \
+                 scalar kernels, expect minutes; the PJRT path is the fast one at this size",
+                params as f64 / 1e6
+            );
+        }
+        run(backend, n_requests)
     }
 }
 

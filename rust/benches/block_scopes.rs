@@ -1,0 +1,95 @@
+//! Fusion-scope expansion table (the ClusterFusion++ comparison behind
+//! EXPERIMENTS.md §Block): one transformer layer's decode cost under the
+//! three [`FusionScope`]s — per-op kernels (baseline), attention-scope
+//! fusion (the paper), full-block fusion — at the Llama2-7B and
+//! DeepSeek-V2-Lite geometries, plus the end-to-end TPOT composition.
+//!
+//! Also times the *functional* full-block pipeline (the serving
+//! backend's real numerics) on the micro models so the decode throughput
+//! of `FunctionalBackend` has a recorded number.
+
+use clusterfusion::clustersim::block::{self, BlockProblem, FusionScope};
+use clusterfusion::clustersim::dataflow::CostEnv;
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::metrics::Table;
+use clusterfusion::models::ModelConfig;
+use clusterfusion::util::bench::bench;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget_ms = if smoke { 20 } else { 300 };
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let cluster = 4usize;
+
+    println!("== fusion-scope expansion: per-layer block cost (batch 1, N={cluster}) ==\n");
+    let mut t = Table::new(vec![
+        "model", "seq", "scope", "lat(us)", "HBM(MB)", "DSMEM(KB)", "launches", "GFLOP",
+    ]);
+    for model in [ModelConfig::llama2_7b(), ModelConfig::deepseek_v2_lite()] {
+        for seq in [1024usize, 4096, 16384] {
+            let p = BlockProblem::from_model(&model, 1, seq);
+            let env = CostEnv::clusterfusion(&hw, &noc, cluster);
+            for scope in FusionScope::all() {
+                let c = block::cost(&p, scope, &env);
+                t.row(vec![
+                    model.name.clone(),
+                    seq.to_string(),
+                    scope.name().to_string(),
+                    format!("{:.2}", c.latency * 1e6),
+                    format!("{:.2}", c.hbm_bytes / 1e6),
+                    format!("{:.1}", c.dsmem_bytes / 1e3),
+                    c.launches.to_string(),
+                    format!("{:.3}", c.flops / 1e9),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    println!("\n== end-to-end decode TPOT (ms), batch 1, N={cluster} ==\n");
+    let mut t = Table::new(vec![
+        "model", "seq", "isolated", "attn-fused", "full-block", "attn speedup", "full speedup",
+    ]);
+    for model in [ModelConfig::llama2_7b(), ModelConfig::deepseek_v2_lite()] {
+        for seq in [1024usize, 4096, 16384] {
+            let tpot = |s| block::decode_tpot(&model, 1, seq, s, cluster, &hw, &noc);
+            let (iso, att, ful) = (
+                tpot(FusionScope::BlockIsolated),
+                tpot(FusionScope::AttentionFused),
+                tpot(FusionScope::FullBlockFused),
+            );
+            assert!(
+                ful <= att && att <= iso,
+                "{} seq {seq}: fusion-scope ordering violated",
+                model.name
+            );
+            t.row(vec![
+                model.name.clone(),
+                seq.to_string(),
+                format!("{iso:.3}"),
+                format!("{att:.3}"),
+                format!("{ful:.3}"),
+                format!("{:.2}x", iso / att),
+                format!("{:.2}x", iso / ful),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== functional full-block decode step (the serving backend's numerics) ==\n");
+    for cfg in [ModelConfig::micro_llama(), ModelConfig::micro_mla()] {
+        let model = block::BlockModel::from_config(&cfg, 42, 2);
+        let b = 4usize;
+        let (s, re, planes) = (cfg.max_seq, model.row_elems(), model.planes());
+        let cache = vec![vec![0f32; cfg.n_layers * b * s * re]; planes];
+        let tokens: Vec<i32> = (0..b as i32).collect();
+        let pos = vec![0i32; b];
+        let r = bench(&format!("decode_step {} (batch {b})", cfg.name), budget_ms, || {
+            model.decode_step(&tokens, &pos, &cache, b)
+        });
+        println!("{}", r.report());
+        println!("{}", r.report_rate("steps"));
+    }
+    println!("\nblock_scopes OK (full <= attn <= isolated at N={cluster} everywhere tested)");
+}

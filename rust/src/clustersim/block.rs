@@ -1,0 +1,725 @@
+//! Full transformer-block decode pipeline — the ClusterFusion++ scope
+//! (PAPERS.md): RMSNorm → (QKV + rotary + attention + output projection)
+//! → residual → RMSNorm → SwiGLU MLP → residual, multi-layer, with a
+//! tied-embedding greedy logits head on top.
+//!
+//! Like the attention dataflows, the block is implemented **twice over
+//! one schedule**:
+//!
+//! * **functionally** — [`BlockModel::decode_step`] runs real numerics:
+//!   the attention sub-block *is* the existing fused dataflow
+//!   ([`split_token::execute_packed_rope`] for MHA,
+//!   [`mla::execute_packed`] for MLA) composed with the `util::linalg`
+//!   row primitives (`rmsnorm`, `rope_rotate`, `silu_mul`, blocked
+//!   matmuls) that obey the PR 3 in-order-accumulation contract. Token
+//!   ids in, token logits out: this is the engine behind
+//!   [`crate::coordinator::FunctionalBackend`].
+//! * **as a cost model** — [`cost`] charges the same block under three
+//!   [`FusionScope`]s: per-op kernels (the SGLang/vLLM-style baseline),
+//!   attention-scope fusion (the paper), and full-block fusion
+//!   (ClusterFusion++). The scopes agree on FLOPs *by construction*
+//!   ([`flops`] is shared) and differ only in HBM traffic, kernel
+//!   launches, and collective schedule — the tested invariant of
+//!   `tests/integration_block.rs`.
+//!
+//! Scope-ordering guarantee: at a geometry's *tuned* cluster size (the
+//! Fig. 11 optimum — N=4 for the paper models) latency obeys
+//! `FullBlockFused ≤ AttentionFused ≤ BlockIsolated`. At unsuitable
+//! cluster sizes the attention-fused kernel itself can lose to the
+//! baseline (too few blocks at N=1–2 with 32 heads, wave quantisation at
+//! N=8 with 128 heads) — that is the paper's occupancy cliff, modelled,
+//! not a bug. HBM/launch/FLOP monotonicity holds at *every* cluster
+//! size. See DESIGN.md §Block.
+
+use crate::models::{AttnKind, AttnWeights, MaterializedWeights, ModelConfig};
+use crate::util::linalg::{self, PackedWeight};
+
+use super::collective::{gather_cost, reduce_cost, Transport};
+use super::dataflow::{
+    block_isolated, mla, occupancy_mem_time, split_token, AttnProblem, CostEnv, CostReport, ELEM,
+    PHASE_SETUP,
+};
+use super::dataflow::{PackedMhaWeights, PackedMlaWeights};
+use super::hw::Hardware;
+use super::noc::Noc;
+
+/// RMSNorm epsilon of the functional pipeline (matches the frozen scalar
+/// reference in `tests/integration_block.rs`).
+pub const EPS: f32 = 1e-5;
+
+/// Default rotary base of the MHA functional pipeline.
+pub const ROPE_BASE: f32 = 10000.0;
+
+/// How much of the transformer block one kernel covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionScope {
+    /// Every op its own kernel, intermediates through HBM (the baseline
+    /// frameworks' execution model, §2.2): 4 attention kernels + 8
+    /// norm/residual/MLP kernels per layer.
+    BlockIsolated,
+    /// QKV + attention + output projection fused into one cluster kernel
+    /// (the paper's ClusterFusion); everything else stays per-op.
+    AttentionFused,
+    /// The whole block — norms, rotary, attention, residuals, SwiGLU MLP
+    /// — under one fused cluster schedule (ClusterFusion++).
+    FullBlockFused,
+}
+
+impl FusionScope {
+    pub fn name(self) -> &'static str {
+        match self {
+            FusionScope::BlockIsolated => "block_isolated",
+            FusionScope::AttentionFused => "attention_fused",
+            FusionScope::FullBlockFused => "full_block_fused",
+        }
+    }
+
+    pub fn all() -> [FusionScope; 3] {
+        [FusionScope::BlockIsolated, FusionScope::AttentionFused, FusionScope::FullBlockFused]
+    }
+}
+
+/// One layer's full-block decode problem: the attention sub-problem plus
+/// the MLP width and the attention family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockProblem {
+    pub attn: AttnProblem,
+    pub attn_kind: AttnKind,
+    pub ffn_dim: usize,
+}
+
+impl BlockProblem {
+    pub fn from_model(model: &ModelConfig, batch: usize, seq: usize) -> Self {
+        Self {
+            attn: AttnProblem {
+                batch,
+                d_model: model.d_model,
+                n_heads: model.n_heads,
+                head_dim: model.head_dim,
+                seq,
+                kv_lora_rank: model.kv_lora_rank,
+            },
+            attn_kind: model.attn,
+            ffn_dim: model.ffn_dim,
+        }
+    }
+
+    fn attn_mandatory_bytes(&self) -> f64 {
+        match self.attn_kind {
+            AttnKind::Mha => self.attn.mandatory_bytes_mha(),
+            AttnKind::Mla => self.attn.mandatory_bytes_mla(),
+        }
+    }
+
+    /// MLP + norm weight bytes a block decode must stream regardless of
+    /// fusion scope.
+    fn mlp_weight_bytes(&self) -> f64 {
+        let (d, f) = (self.attn.d_model as f64, self.ffn_dim as f64);
+        (3.0 * d * f + 2.0 * d) * ELEM
+    }
+}
+
+/// Arithmetic work of one layer's full block, FLOPs — *identical across
+/// fusion scopes* (fusion moves bytes and launches, never arithmetic).
+/// Attention + rotary (MHA only) + 2 RMSNorms + 2 residual adds + SwiGLU
+/// MLP (gate/up/down GEMMs + the elementwise gate).
+pub fn flops(p: &BlockProblem) -> f64 {
+    let (b, d, f) = (p.attn.batch as f64, p.attn.d_model as f64, p.ffn_dim as f64);
+    let attn = match p.attn_kind {
+        AttnKind::Mha => p.attn.flops_mha(),
+        AttnKind::Mla => p.attn.flops_mla(),
+    };
+    let rope = match p.attn_kind {
+        AttnKind::Mha => 6.0 * b * p.attn.total_head_dim() as f64,
+        AttnKind::Mla => 0.0,
+    };
+    let norms = 2.0 * 4.0 * b * d;
+    let resid = 2.0 * b * d;
+    let mlp = 6.0 * b * d * f + 4.0 * b * f;
+    attn + rope + norms + resid + mlp
+}
+
+/// The per-op kernels *outside* the attention scope — 2 RMSNorms, 2
+/// residual adds, gate/up GEMMs, SwiGLU gate, down GEMM — shared by the
+/// `BlockIsolated` and `AttentionFused` scopes (the paper fuses only the
+/// attention scope; §3.2 last paragraph).
+fn rest_ops_cost(p: &BlockProblem, env: &CostEnv) -> CostReport {
+    let (b, d, f) = (p.attn.batch as f64, p.attn.d_model as f64, p.ffn_dim as f64);
+    let hw = env.hw;
+    let active = env.noc.active_sms(1);
+    let eff = env.bw_efficiency.max(0.55);
+    let mut rep = CostReport::default();
+    let ops: [(&str, f64, f64, usize); 8] = [
+        ("rmsnorm-attn", (2.0 * b * d + d) * ELEM, 4.0 * b * d, 32),
+        ("residual-attn", 3.0 * b * d * ELEM, b * d, 32),
+        ("rmsnorm-mlp", (2.0 * b * d + d) * ELEM, 4.0 * b * d, 32),
+        ("gate-gemm", (d * f + b * d + b * f) * ELEM, 2.0 * b * d * f, 128),
+        ("up-gemm", (d * f + b * d + b * f) * ELEM, 2.0 * b * d * f, 128),
+        ("silu-mul", 3.0 * b * f * ELEM, 4.0 * b * f, 32),
+        ("down-gemm", (f * d + b * f + b * d) * ELEM, 2.0 * b * f * d, 128),
+        ("residual-mlp", 3.0 * b * d * ELEM, b * d, 32),
+    ];
+    for (name, bytes, flops, blocks) in ops {
+        let t = occupancy_mem_time(bytes, blocks, active, hw) / eff;
+        rep.stage(
+            name,
+            t.max(hw.compute_time(flops)) + hw.graph_kernel_launch + hw.kernel_boundary_sync,
+        );
+        rep.hbm_bytes += bytes;
+        rep.launches += 1;
+    }
+    rep
+}
+
+/// Cost of one layer's full transformer block under `scope`.
+///
+/// All three scopes report the same [`flops`]; the baseline and
+/// attention-fused scopes share [`rest_ops_cost`] verbatim, so their
+/// latency difference is exactly the attention sub-block's (the already
+/// tested `block_isolated` vs `split_token`/`mla` gap).
+pub fn cost(p: &BlockProblem, scope: FusionScope, env: &CostEnv) -> CostReport {
+    let total_flops = flops(p);
+    let attn = match (scope, p.attn_kind) {
+        (FusionScope::FullBlockFused, _) => return cost_full_block(p, env, total_flops),
+        (FusionScope::BlockIsolated, AttnKind::Mha) => block_isolated::cost(&p.attn, env),
+        (FusionScope::BlockIsolated, AttnKind::Mla) => mla::cost_block_isolated(&p.attn, env),
+        (FusionScope::AttentionFused, AttnKind::Mha) => split_token::cost(&p.attn, env),
+        (FusionScope::AttentionFused, AttnKind::Mla) => mla::cost(&p.attn, env),
+    };
+    let rest = rest_ops_cost(p, env);
+    let mut rep = attn;
+    rep.latency += rest.latency;
+    rep.hbm_bytes += rest.hbm_bytes;
+    rep.dsmem_bytes += rest.dsmem_bytes; // 0 today; carried for symmetry
+    rep.launches += rest.launches;
+    rep.stages.extend(rest.stages);
+    rep.flops = total_flops;
+    rep
+}
+
+/// The ClusterFusion++ kernel: one launch for the whole block. HBM is the
+/// mandatory stream only (attention weights + KV + MLP/norm weights +
+/// activation i/o — no intermediates). The MLP phase gives the kernel
+/// device-filling parallelism, so the grid is at least one block per
+/// schedulable SM (unlike the attention-only kernel, whose grid is
+/// pinned to `n_heads × N` by the one-cluster-per-head mapping).
+fn cost_full_block(p: &BlockProblem, env: &CostEnv, total_flops: f64) -> CostReport {
+    let n = env.cluster_size;
+    let (hw, noc) = (env.hw, env.noc);
+    let a = &p.attn;
+    let (b, d) = (a.batch as f64, a.d_model as f64);
+    let active = noc.active_sms(n);
+    let blocks = (a.n_heads * n).max(active);
+    let mut rep = CostReport { launches: 1, flops: total_flops, ..Default::default() };
+
+    let bytes = p.attn_mandatory_bytes() + p.mlp_weight_bytes();
+    rep.hbm_bytes = bytes;
+    let t_mem = occupancy_mem_time(bytes, blocks, active, hw) / env.bw_efficiency;
+    rep.stage("fused-block-mem/compute", t_mem.max(hw.compute_time(total_flops)));
+
+    // Attention-phase collectives: the same schedule the attention-scope
+    // kernel charges (per head-cluster, all clusters concurrent).
+    let (mut coll_lat, attn_cluster_traffic, mut rounds, phases) = match p.attn_kind {
+        AttnKind::Mha => {
+            let g = gather_cost(
+                3.0 * (a.head_dim / n) as f64 * b * ELEM,
+                n,
+                env.transport,
+                hw,
+                noc,
+            );
+            let rs = reduce_cost(2.0 * b * 4.0, n, env.transport, hw, noc);
+            let ro = reduce_cost(a.head_dim as f64 * b * ELEM, n, env.transport, hw, noc);
+            (
+                g.latency + rs.latency + ro.latency,
+                g.traffic_bytes + rs.traffic_bytes + ro.traffic_bytes,
+                g.rounds + rs.rounds + ro.rounds,
+                5.0,
+            )
+        }
+        AttnKind::Mla => {
+            let l = a.kv_lora_rank as f64;
+            let g_h = gather_cost((a.head_dim / n) as f64 * b * ELEM, n, env.transport, hw, noc);
+            let g_l = gather_cost(l / n as f64 * b * ELEM, n, env.transport, hw, noc);
+            let r_l = reduce_cost(l * b * ELEM, n, env.transport, hw, noc);
+            let r_h = reduce_cost(a.head_dim as f64 * b * ELEM, n, env.transport, hw, noc);
+            let r_s = reduce_cost(2.0 * b * 4.0, n, env.transport, hw, noc);
+            (
+                g_h.latency + 2.0 * g_l.latency + r_l.latency + r_h.latency + r_s.latency,
+                g_h.traffic_bytes
+                    + 2.0 * g_l.traffic_bytes
+                    + r_l.traffic_bytes
+                    + r_h.traffic_bytes
+                    + r_s.traffic_bytes,
+                g_h.rounds + 2 * g_l.rounds + r_l.rounds + r_h.rounds + r_s.rounds,
+                6.0,
+            )
+        }
+    };
+    rep.dsmem_bytes = attn_cluster_traffic * a.n_heads as f64;
+
+    // Block-scope extras, charged once device-wide: the MLP's gate/up
+    // columns are partitioned across all clusters; each cluster owns a
+    // disjoint f-slice, applies the SwiGLU gate locally, reduces its
+    // down-projection partial intra-cluster, and atomicAdds the result
+    // row (the HBM side of that is already in the activation i/o bytes).
+    // Plus the two RMSNorm statistic reduces (d partitioned per cluster).
+    let r_down = reduce_cost(b * d * ELEM, n, env.transport, hw, noc);
+    let r_norm = reduce_cost(b * 4.0, n, env.transport, hw, noc);
+    coll_lat += r_down.latency + 2.0 * r_norm.latency;
+    rounds += r_down.rounds + 2 * r_norm.rounds;
+    rep.dsmem_bytes += r_down.traffic_bytes + 2.0 * r_norm.traffic_bytes;
+    rep.stage("collectives", coll_lat);
+
+    match env.transport {
+        Transport::Dsmem => {
+            rep.stage("dsmem-contention", rep.dsmem_bytes / noc.bandwidth(n));
+        }
+        Transport::GlobalMemory => {
+            rep.stage(
+                "gmem-grid-barriers",
+                rounds as f64 * super::dataflow::GMEM_BARRIER_PER_BLOCK * blocks as f64,
+            );
+        }
+    }
+
+    // More phases than the attention kernel (norms + MLP up/down join the
+    // pipeline), still amortised over two in-flight phases per cluster.
+    rep.stage("phase-setup", (phases + 2.0) * PHASE_SETUP / (n.min(2) as f64));
+    rep.stage("launch", hw.graph_kernel_launch);
+    rep
+}
+
+/// End-to-end decode TPOT estimate: `n_layers` blocks under `scope` plus
+/// the LM head (always a separate library kernel, as in `e2e`). No
+/// framework host overhead — this is the kernel-side model the serving
+/// `ServiceModel` consumes (`loadgen::ServiceModel::from_block`).
+pub fn decode_tpot(
+    model: &ModelConfig,
+    batch: usize,
+    seq: usize,
+    scope: FusionScope,
+    cluster_size: usize,
+    hw: &Hardware,
+    noc: &Noc,
+) -> f64 {
+    let p = BlockProblem::from_model(model, batch, seq);
+    let env = CostEnv::clusterfusion(hw, noc, cluster_size);
+    let block = cost(&p, scope, &env);
+    let head = super::e2e::lm_head_cost(model, batch, hw, noc);
+    block.latency * model.n_layers as f64 + head.latency
+}
+
+/// Can the functional pipeline run `model` at cluster size `n`? (The
+/// dataflows partition `head_dim`/`d_model`/`max_seq` — and the latent
+/// rank for MLA — evenly across the cluster.)
+pub fn supports_cluster(model: &ModelConfig, n: usize) -> bool {
+    n.is_power_of_two()
+        && (1..=16).contains(&n)
+        && model.head_dim % n == 0
+        && model.d_model % n == 0
+        && model.max_seq % n == 0
+        && (model.attn == AttnKind::Mha || model.kv_lora_rank % n == 0)
+}
+
+/// One layer's weights packed for the functional pipeline.
+enum PackedAttn {
+    Mha(PackedMhaWeights),
+    /// `w_down` stays row-major (its accesses are row-contiguous).
+    Mla { w: PackedMlaWeights, w_down: Vec<f32> },
+}
+
+struct PackedLayer {
+    attn_norm: Vec<f32>,
+    attn: PackedAttn,
+    mlp_norm: Vec<f32>,
+    gate: PackedWeight,
+    up: PackedWeight,
+    down: PackedWeight,
+}
+
+/// The functional full-block decoder: materialized weights packed once
+/// (the §Perf packed-weight lifetime — one `BlockModel` serves every
+/// decode step of a serving run), token ids in, greedy-ready logits out.
+pub struct BlockModel {
+    cfg: ModelConfig,
+    /// `(vocab, D)` row-major; also the tied logits head.
+    embedding: Vec<f32>,
+    final_norm: Vec<f32>,
+    layers: Vec<PackedLayer>,
+    pub cluster_size: usize,
+    pub transport: Transport,
+    /// Rotary base for MHA; `None` disables rotary. MLA is always NoPE
+    /// here: the weight-absorbed latent path of Alg. 4 carries no
+    /// separate rope dims in this reproduction (DESIGN.md §Block).
+    pub rope_base: Option<f32>,
+    hw: Hardware,
+    noc: Noc,
+}
+
+impl BlockModel {
+    /// Pack `weights` for decoding with the given cluster size. Takes the
+    /// weights **by value**: the embedding, norm gains and the MLA down
+    /// projection are moved (not copied), and each layer's raw GEMM
+    /// tensors are dropped right after packing — peak memory is one raw
+    /// copy plus one packed copy plus a single in-flight layer, which
+    /// matters near `coordinator::functional_backend::MAX_FUNCTIONAL_PARAMS`.
+    /// Callers that also need the raw weights (the differential tests)
+    /// clone explicitly. Panics if the geometry does not divide by
+    /// `cluster_size` (see [`supports_cluster`]).
+    pub fn new(weights: MaterializedWeights, cluster_size: usize, transport: Transport) -> Self {
+        let MaterializedWeights { config: cfg, embedding, layers: raw_layers, final_norm } =
+            weights;
+        assert!(
+            supports_cluster(&cfg, cluster_size),
+            "{}: cluster size {cluster_size} must divide head_dim/d_model/max_seq (and the MLA \
+             latent rank)",
+            cfg.name
+        );
+        let (d, f, h) = (cfg.d_model, cfg.ffn_dim, cfg.total_head_dim());
+        let layers = raw_layers
+            .into_iter()
+            .map(|lw| PackedLayer {
+                attn_norm: lw.attn_norm,
+                attn: match lw.attn {
+                    AttnWeights::Mha { wq, wk, wv, wo } => {
+                        PackedAttn::Mha(PackedMhaWeights::pack(&wq, &wk, &wv, &wo, d, h))
+                    }
+                    AttnWeights::Mla { wq, wkv, w_down, wo } => PackedAttn::Mla {
+                        w: PackedMlaWeights::pack(
+                            &wq,
+                            &wkv,
+                            &wo,
+                            d,
+                            cfg.n_heads,
+                            cfg.kv_lora_rank,
+                            cfg.head_dim,
+                        ),
+                        w_down,
+                    },
+                },
+                mlp_norm: lw.mlp_norm,
+                gate: PackedWeight::pack(&lw.w_gate, d, f),
+                up: PackedWeight::pack(&lw.w_up, d, f),
+                down: PackedWeight::pack(&lw.w_down, f, d),
+            })
+            .collect();
+        let hw = Hardware::h100_sxm5();
+        let noc = Noc::h100(&hw);
+        let rope_base = match cfg.attn {
+            AttnKind::Mha => Some(ROPE_BASE),
+            AttnKind::Mla => None,
+        };
+        Self {
+            cfg,
+            embedding,
+            final_norm,
+            layers,
+            cluster_size,
+            transport,
+            rope_base,
+            hw,
+            noc,
+        }
+    }
+
+    /// Materialize-and-pack in one step (seeded; see
+    /// [`MaterializedWeights::materialize`]).
+    pub fn from_config(cfg: &ModelConfig, seed: u64, cluster_size: usize) -> Self {
+        Self::new(MaterializedWeights::materialize(cfg, seed), cluster_size, Transport::Dsmem)
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Cache planes (K and V for MHA; one latent plane for MLA).
+    pub fn planes(&self) -> usize {
+        match self.cfg.attn {
+            AttnKind::Mha => 2,
+            AttnKind::Mla => 1,
+        }
+    }
+
+    /// Elements of one token's cache row per (layer, plane).
+    pub fn row_elems(&self) -> usize {
+        match self.cfg.attn {
+            AttnKind::Mha => self.cfg.total_head_dim(),
+            AttnKind::Mla => self.cfg.kv_lora_rank,
+        }
+    }
+
+    /// One full-block decode step for a padded batch of `bucket` slots.
+    ///
+    /// `tokens`/`pos` are per-slot (padded slots compute garbage that the
+    /// caller ignores — same contract as the AOT executables);
+    /// `cache_planes[plane]` is the dense `(L, bucket, max_seq,
+    /// row_elems)` gather the serving engine builds
+    /// (`KvPool::gather_batch_into`). Returns `(logits, new_rows)` in the
+    /// engine's `StepOut` layout: logits `(bucket, vocab)`, per plane
+    /// `(L, bucket, row_elems)` new cache rows.
+    pub fn decode_step(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        cache_planes: &[Vec<f32>],
+        bucket: usize,
+    ) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let cfg = &self.cfg;
+        let (b, d, f, v) = (bucket, cfg.d_model, cfg.ffn_dim, cfg.vocab);
+        let (nl, s, re) = (cfg.n_layers, cfg.max_seq, self.row_elems());
+        let planes = self.planes();
+        assert!(tokens.len() == b && pos.len() == b, "padded batch inputs");
+        assert_eq!(cache_planes.len(), planes, "cache plane count");
+        let plane_len = b * s * re;
+        for p in cache_planes {
+            assert_eq!(p.len(), nl * plane_len, "cache plane size");
+        }
+        let pos_us: Vec<usize> =
+            pos.iter().map(|&p| (p.max(0) as usize).min(s)).collect();
+
+        // Residual stream: h = embedding[token].
+        let mut h = vec![0f32; b * d];
+        for bi in 0..b {
+            let t = tokens[bi].rem_euclid(v as i32) as usize;
+            h[bi * d..(bi + 1) * d].copy_from_slice(&self.embedding[t * d..(t + 1) * d]);
+        }
+
+        let mut new_rows = vec![vec![0f32; nl * b * re]; planes];
+        // Scratch reused across layers (allocation-free layer loop).
+        let mut x = vec![0f32; b * d];
+        let mut gate = vec![0f32; b * f];
+        let mut up = vec![0f32; b * f];
+        let mut act = vec![0f32; b * f];
+        let mut down = vec![0f32; b * d];
+
+        for (l, layer) in self.layers.iter().enumerate() {
+            // -- attention sub-block (pre-norm) --
+            for bi in 0..b {
+                linalg::rmsnorm(
+                    &h[bi * d..(bi + 1) * d],
+                    &layer.attn_norm,
+                    EPS,
+                    &mut x[bi * d..(bi + 1) * d],
+                );
+            }
+            let attn_out = match &layer.attn {
+                PackedAttn::Mha(w) => {
+                    let k = &cache_planes[0][l * plane_len..(l + 1) * plane_len];
+                    let vc = &cache_planes[1][l * plane_len..(l + 1) * plane_len];
+                    split_token::execute_packed_rope(
+                        &x,
+                        w,
+                        k,
+                        vc,
+                        &pos_us,
+                        b,
+                        d,
+                        cfg.n_heads,
+                        cfg.head_dim,
+                        s,
+                        self.cluster_size,
+                        self.transport,
+                        &self.hw,
+                        &self.noc,
+                        self.rope_base,
+                    )
+                    .0
+                }
+                PackedAttn::Mla { w, w_down } => {
+                    let kv = &cache_planes[0][l * plane_len..(l + 1) * plane_len];
+                    mla::execute_packed(
+                        &x,
+                        w,
+                        w_down,
+                        kv,
+                        &pos_us,
+                        b,
+                        d,
+                        cfg.n_heads,
+                        cfg.kv_lora_rank,
+                        cfg.head_dim,
+                        s,
+                        self.cluster_size,
+                        self.transport,
+                        &self.hw,
+                        &self.noc,
+                    )
+                    .0
+                }
+            };
+            linalg::axpy(1.0, &attn_out.out, &mut h); // residual
+
+            // New cache rows for this layer: k_new/v_new are (bucket,
+            // row_elems) contiguous — exactly the (L, bucket, re) slice.
+            new_rows[0][l * b * re..(l + 1) * b * re].copy_from_slice(&attn_out.k_new);
+            if planes == 2 {
+                new_rows[1][l * b * re..(l + 1) * b * re].copy_from_slice(&attn_out.v_new);
+            }
+
+            // -- SwiGLU MLP sub-block (pre-norm) --
+            for bi in 0..b {
+                linalg::rmsnorm(
+                    &h[bi * d..(bi + 1) * d],
+                    &layer.mlp_norm,
+                    EPS,
+                    &mut x[bi * d..(bi + 1) * d],
+                );
+            }
+            linalg::matmul_rows(&x, b, d, &layer.gate, 0, 0, f, &mut gate);
+            linalg::matmul_rows(&x, b, d, &layer.up, 0, 0, f, &mut up);
+            linalg::silu_mul(&gate, &up, &mut act);
+            linalg::matmul_rows(&act, b, f, &layer.down, 0, 0, d, &mut down);
+            linalg::axpy(1.0, &down, &mut h); // residual
+        }
+
+        // -- tied-embedding logits head (final norm, then h · Eᵀ): the
+        // embedding rows are already column-contiguous for this product,
+        // so the dot4 row tile applies directly --
+        let mut logits = vec![0f32; b * v];
+        for bi in 0..b {
+            linalg::rmsnorm(
+                &h[bi * d..(bi + 1) * d],
+                &self.final_norm,
+                EPS,
+                &mut x[bi * d..(bi + 1) * d],
+            );
+            let hn = &x[bi * d..(bi + 1) * d];
+            let row = |t: usize| &self.embedding[t * d..(t + 1) * d];
+            let out = &mut logits[bi * v..(bi + 1) * v];
+            let mut t = 0;
+            while t + 4 <= v {
+                let d4 = linalg::dot4(hn, row(t), row(t + 1), row(t + 2), row(t + 3));
+                out[t..t + 4].copy_from_slice(&d4);
+                t += 4;
+            }
+            while t < v {
+                out[t] = linalg::dot(hn, row(t));
+                t += 1;
+            }
+        }
+        (logits, new_rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Hardware, Noc) {
+        let hw = Hardware::h100_sxm5();
+        let noc = Noc::h100(&hw);
+        (hw, noc)
+    }
+
+    #[test]
+    fn scopes_agree_on_flops_and_are_traffic_monotone() {
+        let (hw, noc) = env();
+        for model in [
+            ModelConfig::llama2_7b(),
+            ModelConfig::deepseek_v2_lite(),
+            ModelConfig::micro_llama(),
+            ModelConfig::micro_mla(),
+        ] {
+            for n in [1usize, 2, 4] {
+                if !supports_cluster(&model, n) {
+                    continue;
+                }
+                let seq = model.max_seq.min(4096);
+                let p = BlockProblem::from_model(&model, 1, seq);
+                let e = CostEnv::clusterfusion(&hw, &noc, n);
+                let iso = cost(&p, FusionScope::BlockIsolated, &e);
+                let att = cost(&p, FusionScope::AttentionFused, &e);
+                let ful = cost(&p, FusionScope::FullBlockFused, &e);
+                assert_eq!(iso.flops, att.flops, "{} n={n}", model.name);
+                assert_eq!(att.flops, ful.flops, "{} n={n}", model.name);
+                assert!(ful.hbm_bytes <= att.hbm_bytes, "{} n={n}", model.name);
+                assert!(att.hbm_bytes <= iso.hbm_bytes, "{} n={n}", model.name);
+                assert!(ful.launches < att.launches && att.launches < iso.launches);
+            }
+        }
+    }
+
+    #[test]
+    fn latency_monotone_at_tuned_cluster_size() {
+        let (hw, noc) = env();
+        for (model, n) in [
+            (ModelConfig::llama2_7b(), 4usize),
+            (ModelConfig::deepseek_v2_lite(), 4),
+            (ModelConfig::micro_llama(), 2),
+            (ModelConfig::micro_mla(), 2),
+        ] {
+            let seq = model.max_seq.min(4096);
+            let p = BlockProblem::from_model(&model, 1, seq);
+            let e = CostEnv::clusterfusion(&hw, &noc, n);
+            let iso = cost(&p, FusionScope::BlockIsolated, &e).latency;
+            let att = cost(&p, FusionScope::AttentionFused, &e).latency;
+            let ful = cost(&p, FusionScope::FullBlockFused, &e).latency;
+            assert!(ful <= att && att <= iso, "{}: {ful} / {att} / {iso}", model.name);
+        }
+    }
+
+    #[test]
+    fn decode_tpot_sane_and_ordered_for_llama() {
+        let (hw, noc) = env();
+        let m = ModelConfig::llama2_7b();
+        let iso = decode_tpot(&m, 1, 4096, FusionScope::BlockIsolated, 4, &hw, &noc);
+        let ful = decode_tpot(&m, 1, 4096, FusionScope::FullBlockFused, 4, &hw, &noc);
+        assert!(ful < iso, "{ful} vs {iso}");
+        assert!(ful > 2e-3 && ful < 30e-3, "{ful}");
+    }
+
+    #[test]
+    fn functional_step_is_deterministic_and_shaped() {
+        let cfg = ModelConfig::micro_llama();
+        let model = BlockModel::from_config(&cfg, 42, 2);
+        let (b, s, re) = (2usize, cfg.max_seq, model.row_elems());
+        let planes = vec![vec![0f32; cfg.n_layers * b * s * re]; model.planes()];
+        let (logits, rows) = model.decode_step(&[3, 7], &[0, 0], &planes, b);
+        assert_eq!(logits.len(), b * cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), cfg.n_layers * b * re);
+        let (logits2, rows2) = model.decode_step(&[3, 7], &[0, 0], &planes, b);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&logits), bits(&logits2), "same inputs -> same bits");
+        assert_eq!(bits(&rows[0]), bits(&rows2[0]));
+        // different tokens in the two slots -> different logits rows
+        assert_ne!(
+            bits(&logits[..cfg.vocab]),
+            bits(&logits[cfg.vocab..]),
+            "distinct tokens must not collide"
+        );
+    }
+
+    #[test]
+    fn functional_mla_single_plane() {
+        let cfg = ModelConfig::micro_mla();
+        let model = BlockModel::from_config(&cfg, 42, 2);
+        assert_eq!(model.planes(), 1);
+        assert_eq!(model.row_elems(), cfg.kv_lora_rank);
+        let (b, s, re) = (1usize, cfg.max_seq, model.row_elems());
+        let planes = vec![vec![0f32; cfg.n_layers * b * s * re]];
+        let (logits, rows) = model.decode_step(&[11], &[0], &planes, b);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].iter().any(|&v| v != 0.0), "latent rows must be written");
+    }
+
+    #[test]
+    fn cluster_size_does_not_change_greedy_token() {
+        // The functional dataflows agree across cluster sizes to fp32
+        // tolerance; greedy argmax over well-separated random logits must
+        // therefore agree exactly.
+        let cfg = ModelConfig::micro_llama();
+        let (b, s) = (1usize, cfg.max_seq);
+        let mut toks = Vec::new();
+        for n in [1usize, 2, 4] {
+            let model = BlockModel::from_config(&cfg, 42, n);
+            let planes = vec![vec![0f32; cfg.n_layers * b * s * model.row_elems()]; 2];
+            let (logits, _) = model.decode_step(&[5], &[0], &planes, b);
+            toks.push(crate::runtime::argmax(&logits));
+        }
+        assert!(toks.windows(2).all(|w| w[0] == w[1]), "{toks:?}");
+    }
+}

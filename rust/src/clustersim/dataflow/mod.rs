@@ -182,6 +182,11 @@ pub struct CostReport {
     pub dsmem_bytes: f64,
     /// Kernel launches issued.
     pub launches: usize,
+    /// Arithmetic work of the modelled computation, FLOPs. Filled by the
+    /// block-scope cost models (`clustersim::block`), where the invariant
+    /// "fusion changes traffic and launches, never arithmetic" is a
+    /// tested property; the attention-only dataflow costs leave it 0.
+    pub flops: f64,
     /// (stage name, seconds) breakdown.
     pub stages: Vec<(String, f64)>,
 }

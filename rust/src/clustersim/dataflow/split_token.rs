@@ -91,6 +91,37 @@ pub fn execute_packed(
     hw: &Hardware,
     noc: &Noc,
 ) -> (AttnOut, CostReport) {
+    execute_packed_rope(
+        hidden, weights, k_cache, v_cache, pos, b, d, nh, dh, s, n, transport, hw, noc, None,
+    )
+}
+
+/// [`execute_packed`] with optional rotary position embedding — the
+/// dataflow glue the block pipeline (`clustersim::block`) composes with:
+/// after the cluster gather assembles the full per-head Q and the new K
+/// row, both are rotated in place by `linalg::rope_rotate` at each batch
+/// row's position before the score scan and the cache write-back (the
+/// cache therefore holds *rotated* K rows, the standard decode layout).
+/// `rope_base = None` is bit-identical to [`execute_packed`] — the frozen
+/// scalar suite (`tests/integration_bitexact.rs`) pins that path.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_packed_rope(
+    hidden: &[f32],
+    weights: &PackedMhaWeights,
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+    rope_base: Option<f32>,
+) -> (AttnOut, CostReport) {
     assert!(dh % n == 0 && s % n == 0 && d % n == 0, "cluster must divide dh, S, D");
     let h = nh * dh;
     let (hs, ss, ds) = (dh / n, s / n, d / n); // per-block slices
@@ -160,8 +191,18 @@ pub fn execute_packed(
             }
             (q, kn, vn)
         };
-        let (q, k_new, v_new) = assemble(0);
+        let (mut q, mut k_new, v_new) = assemble(0);
         debug_assert_eq!(assemble(n - 1), (q.clone(), k_new.clone(), v_new.clone()));
+
+        // Rotary embedding (block-pipeline glue): every cluster block
+        // holds the full per-head Q/K after the gather, so each rotates
+        // its copy redundantly — no extra collective traffic.
+        if let Some(base) = rope_base {
+            for bi in 0..b {
+                linalg::rope_rotate(&mut q[bi * dh..(bi + 1) * dh], pos[bi], base);
+                linalg::rope_rotate(&mut k_new[bi * dh..(bi + 1) * dh], pos[bi], base);
+            }
+        }
 
         // write-back of the new K/V rows (cache append goes to HBM anyway)
         for bi in 0..b {
@@ -376,6 +417,46 @@ mod tests {
                 assert!(rep.dsmem_bytes > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn rope_none_is_bit_identical_and_pos_zero_is_identity() {
+        let (hw, noc) = env();
+        let c = mha_case(21, 2, 2, 8, 16, 16);
+        let w = crate::clustersim::dataflow::PackedMhaWeights::pack(
+            &c.wq, &c.wk, &c.wv, &c.wo, c.d_model, c.n_heads * c.head_dim,
+        );
+        let run = |rope: Option<f32>, pos: &[usize]| {
+            execute_packed_rope(
+                &c.hidden, &w, &c.k_cache, &c.v_cache, pos, c.batch, c.d_model, c.n_heads,
+                c.head_dim, c.seq, 2, Transport::Dsmem, &hw, &noc, rope,
+            )
+            .0
+        };
+        let bits = |o: &AttnOut| -> Vec<u32> {
+            o.out.iter().chain(&o.k_new).chain(&o.v_new).map(|v| v.to_bits()).collect()
+        };
+        // rope = None must be the exact execute_packed path
+        let plain = run(None, &c.pos);
+        let (direct, _) = execute(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+            c.batch, c.d_model, c.n_heads, c.head_dim, c.seq, 2, Transport::Dsmem, &hw, &noc,
+        );
+        assert_eq!(bits(&plain), bits(&direct));
+        // position 0 rotates by theta = 0: identity on Q/K, so the whole
+        // output is bit-identical to the un-roped run at the same pos
+        let zeros = vec![0usize; c.batch];
+        assert_eq!(bits(&run(Some(10000.0), &zeros)), bits(&run(None, &zeros)));
+        // nonzero positions must actually change the new K row
+        let roped = run(Some(10000.0), &c.pos);
+        if c.pos.iter().any(|&p| p > 0) {
+            assert_ne!(bits(&roped), bits(&plain));
+        }
+        // v is untouched by rope
+        assert_eq!(
+            roped.v_new.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            plain.v_new.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

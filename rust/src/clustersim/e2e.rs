@@ -128,8 +128,15 @@ fn ffn_cost(model: &ModelConfig, batch: usize, hw: &Hardware, noc: &Noc, eff: f6
     rep
 }
 
-/// LM head (vocab projection) cost.
-fn lm_head_cost(model: &ModelConfig, batch: usize, hw: &Hardware, noc: &Noc) -> CostReport {
+/// LM head (vocab projection) cost. Shared with the block-scope TPOT
+/// composition (`clustersim::block::decode_tpot`) so the Fig. 17 e2e
+/// numbers and the §Block tables can never disagree on the head charge.
+pub(crate) fn lm_head_cost(
+    model: &ModelConfig,
+    batch: usize,
+    hw: &Hardware,
+    noc: &Noc,
+) -> CostReport {
     let (b, d, v) = (batch as f64, model.d_model as f64, model.vocab as f64);
     let mut rep = CostReport::default();
     let bytes = d * v * ELEM + b * (d + v) * ELEM;

@@ -18,6 +18,7 @@
 //! The two facets share the same schedule: the cost model charges exactly
 //! the rounds/messages the functional collectives perform.
 
+pub mod block;
 pub mod collective;
 pub mod dataflow;
 pub mod e2e;

@@ -12,6 +12,32 @@
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+/// Which executable backs the serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Real functional decoding through the full-block pipeline
+    /// (`coordinator::FunctionalBackend`) — the default: runs on a fresh
+    /// checkout with no artifacts and no PJRT.
+    Functional,
+    /// AOT executables through PJRT (needs `make artifacts` + the native
+    /// runtime; DESIGN.md §PJRT).
+    Pjrt,
+    /// The deterministic in-memory mock (tests / demos only; kept behind
+    /// an explicit flag so it is never silently the thing being served).
+    Mock,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "functional" => Ok(Self::Functional),
+            "pjrt" => Ok(Self::Pjrt),
+            "mock" => Ok(Self::Mock),
+            other => bail!("unknown backend '{other}' (functional | pjrt | mock)"),
+        }
+    }
+}
+
 /// Engine + server configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
@@ -27,18 +53,28 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Router queue bound per replica.
     pub max_queue: usize,
+    /// Backend selection (`functional` default; `pjrt` needs artifacts,
+    /// `mock` is demo-only).
+    pub backend: BackendKind,
+    /// Cluster size of the functional full-block pipeline (must divide
+    /// the model geometry; `clustersim::block::supports_cluster`).
+    pub cluster_size: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
-            model: "tiny-llama-100m".into(),
+            // micro-llama decodes functionally at interactive speed on a
+            // fresh checkout; PJRT runs pass --model tiny-llama-100m.
+            model: "micro-llama".into(),
             artifacts: "artifacts".into(),
             pool_pages: 256,
             page_tokens: 16,
             admit_fraction: 0.5,
             seed: 0,
             max_queue: 1024,
+            backend: BackendKind::Functional,
+            cluster_size: 2,
         }
     }
 }
@@ -56,6 +92,8 @@ impl ServeConfig {
             "admit_fraction" => self.admit_fraction = v.parse().context("admit_fraction")?,
             "seed" => self.seed = v.parse().context("seed")?,
             "max_queue" => self.max_queue = v.parse().context("max_queue")?,
+            "backend" => self.backend = BackendKind::parse(v)?,
+            "cluster_size" => self.cluster_size = v.parse().context("cluster_size")?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -90,6 +128,10 @@ impl ServeConfig {
         anyhow::ensure!(
             self.admit_fraction > 0.0 && self.admit_fraction <= 1.0,
             "admit_fraction in (0, 1]"
+        );
+        anyhow::ensure!(
+            self.cluster_size.is_power_of_two() && (1..=16).contains(&self.cluster_size),
+            "cluster_size must be a power of two in 1..=16"
         );
         Ok(())
     }
@@ -132,5 +174,20 @@ mod tests {
         c.admit_fraction = 0.5;
         c.pool_pages = 0;
         assert!(c.validate().is_err());
+        c.pool_pages = 16;
+        c.cluster_size = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_and_cluster_keys() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.backend, BackendKind::Functional, "functional is the default");
+        c.apply_text("backend = pjrt\ncluster_size = 4\n").unwrap();
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        assert_eq!(c.cluster_size, 4);
+        c.set("backend", "mock").unwrap();
+        assert_eq!(c.backend, BackendKind::Mock);
+        assert!(c.set("backend", "tpu").is_err());
     }
 }

@@ -9,6 +9,8 @@
 //! * [`kv_cache`] — paged, host-authoritative KV-cache pool;
 //! * [`scheduler`] — preemption policy under cache pressure;
 //! * [`engine`] — the decode-step loop (generic over [`engine::Backend`]);
+//! * [`functional_backend`] — the artifact-free backend decoding real
+//!   numerics through the full-block pipeline (`clustersim::block`);
 //! * [`pjrt_backend`] — the real backend executing AOT artifacts on PJRT;
 //! * [`server`] — threaded front-end with per-request event streams;
 //! * [`config`] — the serving configuration system.
@@ -18,9 +20,12 @@
 pub mod batcher;
 pub mod config;
 pub mod engine;
+pub mod functional_backend;
 pub mod kv_cache;
 pub mod pjrt_backend;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+
+pub use functional_backend::FunctionalBackend;

@@ -15,11 +15,12 @@ use anyhow::{bail, Context, Result};
 use clusterfusion::clustersim::e2e::{decode_step, Engine as SimEngine};
 use clusterfusion::clustersim::frameworks::FrameworkProfile;
 use clusterfusion::clustersim::{Hardware, Noc};
-use clusterfusion::coordinator::config::ServeConfig;
-use clusterfusion::coordinator::engine::{Backend, Engine};
+use clusterfusion::coordinator::config::{BackendKind, ServeConfig};
+use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend};
 use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
 use clusterfusion::coordinator::request::Event;
 use clusterfusion::coordinator::server::Server;
+use clusterfusion::coordinator::FunctionalBackend;
 use clusterfusion::loadgen;
 use clusterfusion::metrics::Table;
 use clusterfusion::models::ModelConfig;
@@ -55,7 +56,9 @@ fn usage() -> ! {
         "usage: clusterfusion <command> [flags]\n\
          \n\
          commands:\n\
-         \x20 serve             --model NAME --requests N --rps R [--config FILE] [--set k=v]\n\
+         \x20 serve             --model NAME --requests N --rps R\n\
+         \x20                   [--backend functional|pjrt|mock] [--mock]\n\
+         \x20                   [--config FILE] [--set k=v]  (default: functional)\n\
          \x20 simulate          --model NAME [--seq N] [--batch N] [--cluster N]\n\
          \x20 inspect-artifacts [--artifacts DIR]\n\
          \x20 bench             --figure fig17|table1|... (prints the cargo command)\n"
@@ -131,6 +134,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(m) = flags.get("model") {
         cfg.model = m.clone();
     }
+    if let Some(b) = flags.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    if flags.contains_key("mock") {
+        cfg.backend = BackendKind::Mock;
+    }
     if let Some(sets) = flags.get("set") {
         for kv in sets.split(',') {
             let (k, v) = kv.split_once('=').context("--set expects k=v[,k=v...]")?;
@@ -141,9 +150,47 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let n_requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let rps: f64 = flags.get("rps").map(|s| s.parse()).transpose()?.unwrap_or(4.0);
 
-    eprintln!("loading {} from {} ...", cfg.model, cfg.artifacts);
-    let backend = PjrtBackend::load(&cfg.artifacts, &cfg.model, cfg.seed)?;
-    eprintln!("platform: {}", backend.platform());
+    // Backend selection is explicit and announced — nothing silently
+    // degrades to the mock (it hides behind --mock / --backend mock).
+    match cfg.backend {
+        BackendKind::Functional => {
+            let backend =
+                FunctionalBackend::from_model_name(&cfg.model, cfg.seed, cfg.cluster_size)?;
+            eprintln!("backend: {}", backend.describe());
+            serve_backend(backend, &cfg, n_requests, rps)
+        }
+        BackendKind::Pjrt => {
+            // The config default (micro-llama) is a functional-path model
+            // with no AOT artifacts; a PJRT run that never chose a model
+            // (not via --model, --set, or a config file) gets the
+            // compiled demo model instead of an unknown-model error.
+            let model_chosen = flags.contains_key("model")
+                || flags.contains_key("config")
+                || flags
+                    .get("set")
+                    .is_some_and(|s| s.split(',').any(|kv| kv.trim().starts_with("model=")));
+            if !model_chosen {
+                eprintln!("backend pjrt: no --model given, using tiny-llama-100m");
+                cfg.model = "tiny-llama-100m".into();
+            }
+            eprintln!("loading {} from {} ...", cfg.model, cfg.artifacts);
+            let backend = PjrtBackend::load(&cfg.artifacts, &cfg.model, cfg.seed)?;
+            eprintln!("backend: PJRT, platform {}", backend.platform());
+            serve_backend(backend, &cfg, n_requests, rps)
+        }
+        BackendKind::Mock => {
+            eprintln!("backend: MOCK (deterministic echo — demo only, not real decoding)");
+            serve_backend(MockBackend::tiny(), &cfg, n_requests, rps)
+        }
+    }
+}
+
+fn serve_backend<B: Backend + Send + 'static>(
+    backend: B,
+    cfg: &ServeConfig,
+    n_requests: usize,
+    rps: f64,
+) -> Result<()> {
     let geom = backend.geom();
     let engine = Engine::new(backend, cfg.pool_pages, cfg.page_tokens, cfg.admit_fraction);
     let server = Server::spawn(engine);

@@ -8,8 +8,14 @@
 //! * the **live demo models** (`tiny-llama-100m`, `tiny-mla-100m`) — ~100 M
 //!   parameter architectures whose decode step is AOT-compiled from JAX
 //!   (see `python/compile/aot.py`) and actually executed through PJRT by
-//!   the serving engine.
+//!   the serving engine;
+//! * the **micro models** (`micro-llama`, `micro-mla`) — sub-M-parameter
+//!   architectures whose weights are [materialized][MaterializedWeights]
+//!   from a seeded RNG and decoded *functionally* by the full-block
+//!   pipeline (`clustersim::block` + `coordinator::FunctionalBackend`),
+//!   so serving runs real numerics with no artifacts and no PJRT.
 
+use crate::util::rng::Rng;
 
 /// Attention mechanism family (paper §2.1 / Appendix B.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -125,6 +131,38 @@ impl ModelConfig {
         }
     }
 
+    /// ~0.2 M-parameter Llama-style model small enough to decode
+    /// *functionally* (full block pipeline, `clustersim::block`) at
+    /// interactive speed — the default model of `clusterfusion serve` and
+    /// `examples/quickstart.rs` when no AOT artifacts are present. Every
+    /// dimension divides cleanly by cluster sizes 1/2/4 (the functional
+    /// dataflows' partitioning requirement).
+    pub fn micro_llama() -> Self {
+        Self {
+            name: "micro-llama".into(),
+            vocab: 256,
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 16,
+            ffn_dim: 160,
+            max_seq: 128,
+            attn: AttnKind::Mha,
+            kv_lora_rank: 0,
+        }
+    }
+
+    /// MLA twin of [`Self::micro_llama`] (latent rank 32 divides by
+    /// cluster sizes 1/2/4 too).
+    pub fn micro_mla() -> Self {
+        Self {
+            name: "micro-mla".into(),
+            attn: AttnKind::Mla,
+            kv_lora_rank: 32,
+            ..Self::micro_llama()
+        }
+    }
+
     /// Fig. 11 head-count sweep variants: same per-head dim, varying head
     /// count (the paper sweeps 32 / 64 / 128 heads).
     pub fn head_sweep_variant(n_heads: usize) -> Self {
@@ -142,8 +180,110 @@ impl ModelConfig {
             "deepseek-v2-lite" => Some(Self::deepseek_v2_lite()),
             "tiny-llama-100m" => Some(Self::tiny_llama_100m()),
             "tiny-mla-100m" => Some(Self::tiny_mla_100m()),
+            "micro-llama" => Some(Self::micro_llama()),
+            "micro-mla" => Some(Self::micro_mla()),
             _ => None,
         }
+    }
+}
+
+/// One layer's attention weights, raw row-major `f32` (layouts match the
+/// functional dataflows; see `clustersim::dataflow`).
+#[derive(Debug, Clone)]
+pub enum AttnWeights {
+    /// `wq`/`wk`/`wv` are `(D, nh·dh)`, `wo` is `(nh·dh, D)`.
+    Mha { wq: Vec<f32>, wk: Vec<f32>, wv: Vec<f32>, wo: Vec<f32> },
+    /// Weight-absorbed MLA: `wq` `(D, nh·l)`, `wkv` `(D, l)`,
+    /// `w_down` `(nh, l, dh)`, `wo` `(nh·dh, D)`.
+    Mla { wq: Vec<f32>, wkv: Vec<f32>, w_down: Vec<f32>, wo: Vec<f32> },
+}
+
+/// One transformer layer's full weight set.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// RMSNorm gain before attention, `(D,)`.
+    pub attn_norm: Vec<f32>,
+    pub attn: AttnWeights,
+    /// RMSNorm gain before the MLP, `(D,)`.
+    pub mlp_norm: Vec<f32>,
+    /// SwiGLU MLP: `w_gate`/`w_up` `(D, F)`, `w_down` `(F, D)`.
+    pub w_gate: Vec<f32>,
+    pub w_up: Vec<f32>,
+    pub w_down: Vec<f32>,
+}
+
+/// A model's weights materialized from a seeded RNG — the functional
+/// serving path's parameter store (`coordinator::FunctionalBackend`).
+/// The logits head is tied to the embedding (`logits = h_norm · Eᵀ`), so
+/// no separate LM-head matrix exists.
+///
+/// Deterministic in `(config, seed)`: the same pair always yields
+/// byte-identical tensors (SplitMix64 stream, fixed draw order), which is
+/// what makes greedy functional decoding reproducible end to end.
+#[derive(Debug, Clone)]
+pub struct MaterializedWeights {
+    pub config: ModelConfig,
+    /// Token embedding `(vocab, D)` row-major; also the tied logits head.
+    pub embedding: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    /// Final RMSNorm gain, `(D,)`.
+    pub final_norm: Vec<f32>,
+}
+
+impl MaterializedWeights {
+    /// Draw every tensor from one SplitMix64 stream seeded with `seed`.
+    /// Projection scales shrink like `1/sqrt(n_in)` so the residual
+    /// stream stays O(1) across layers (greedy decode then explores a
+    /// nontrivial token distribution instead of saturating).
+    pub fn materialize(config: &ModelConfig, seed: u64) -> Self {
+        fn tensor(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+            (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+        }
+        fn norm_gain(rng: &mut Rng, n: usize) -> Vec<f32> {
+            (0..n).map(|_| 1.0 + (rng.f32() - 0.5) * 0.2).collect()
+        }
+        let proj_scale = |n_in: usize| 2.0 / (n_in as f32).sqrt();
+
+        let mut rng = Rng::seed_from_u64(seed);
+        let (d, f, v) = (config.d_model, config.ffn_dim, config.vocab);
+        let h = config.total_head_dim();
+        let embedding = tensor(&mut rng, v * d, 1.0);
+        let mut layers = Vec::with_capacity(config.n_layers);
+        for _ in 0..config.n_layers {
+            let attn_norm = norm_gain(&mut rng, d);
+            let attn = match config.attn {
+                AttnKind::Mha => AttnWeights::Mha {
+                    wq: tensor(&mut rng, d * h, proj_scale(d)),
+                    wk: tensor(&mut rng, d * h, proj_scale(d)),
+                    wv: tensor(&mut rng, d * h, proj_scale(d)),
+                    wo: tensor(&mut rng, h * d, proj_scale(h)),
+                },
+                AttnKind::Mla => {
+                    let l = config.kv_lora_rank;
+                    AttnWeights::Mla {
+                        wq: tensor(&mut rng, d * config.n_heads * l, proj_scale(d)),
+                        wkv: tensor(&mut rng, d * l, proj_scale(d)),
+                        w_down: tensor(
+                            &mut rng,
+                            config.n_heads * l * config.head_dim,
+                            proj_scale(l),
+                        ),
+                        wo: tensor(&mut rng, h * d, proj_scale(h)),
+                    }
+                }
+            };
+            let mlp_norm = norm_gain(&mut rng, d);
+            layers.push(LayerWeights {
+                attn_norm,
+                attn,
+                mlp_norm,
+                w_gate: tensor(&mut rng, d * f, proj_scale(d)),
+                w_up: tensor(&mut rng, d * f, proj_scale(d)),
+                w_down: tensor(&mut rng, f * d, proj_scale(f)),
+            });
+        }
+        let final_norm = norm_gain(&mut rng, d);
+        Self { config: config.clone(), embedding, layers, final_norm }
     }
 }
 
@@ -174,10 +314,66 @@ mod tests {
 
     #[test]
     fn by_name_roundtrip() {
-        for n in ["llama2-7b", "deepseek-v2-lite", "tiny-llama-100m", "tiny-mla-100m"] {
+        for n in [
+            "llama2-7b",
+            "deepseek-v2-lite",
+            "tiny-llama-100m",
+            "tiny-mla-100m",
+            "micro-llama",
+            "micro-mla",
+        ] {
             assert_eq!(ModelConfig::by_name(n).unwrap().name, n);
         }
         assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn micro_models_divide_by_small_cluster_sizes() {
+        for c in [ModelConfig::micro_llama(), ModelConfig::micro_mla()] {
+            for n in [1usize, 2, 4] {
+                assert_eq!(c.head_dim % n, 0, "{}", c.name);
+                assert_eq!(c.d_model % n, 0, "{}", c.name);
+                assert_eq!(c.max_seq % n, 0, "{}", c.name);
+                if c.attn == AttnKind::Mla {
+                    assert_eq!(c.kv_lora_rank % n, 0, "{}", c.name);
+                }
+            }
+            assert!(c.param_count() < 1_000_000, "{}: {}", c.name, c.param_count());
+        }
+    }
+
+    #[test]
+    fn materialized_weights_deterministic_and_shaped() {
+        let cfg = ModelConfig::micro_llama();
+        let a = MaterializedWeights::materialize(&cfg, 7);
+        let b = MaterializedWeights::materialize(&cfg, 7);
+        let c = MaterializedWeights::materialize(&cfg, 8);
+        assert_eq!(a.embedding, b.embedding, "same seed -> identical tensors");
+        assert_ne!(a.embedding, c.embedding, "different seed -> different tensors");
+        assert_eq!(a.embedding.len(), cfg.vocab * cfg.d_model);
+        assert_eq!(a.layers.len(), cfg.n_layers);
+        assert_eq!(a.final_norm.len(), cfg.d_model);
+        let l0 = &a.layers[0];
+        assert_eq!(l0.w_gate.len(), cfg.d_model * cfg.ffn_dim);
+        assert_eq!(l0.w_down.len(), cfg.ffn_dim * cfg.d_model);
+        match &l0.attn {
+            AttnWeights::Mha { wq, wo, .. } => {
+                assert_eq!(wq.len(), cfg.d_model * cfg.total_head_dim());
+                assert_eq!(wo.len(), cfg.total_head_dim() * cfg.d_model);
+            }
+            other => panic!("micro-llama must be MHA, got {other:?}"),
+        }
+        // MLA shapes too
+        let mla = MaterializedWeights::materialize(&ModelConfig::micro_mla(), 7);
+        match &mla.layers[0].attn {
+            AttnWeights::Mla { wq, wkv, w_down, .. } => {
+                let (cfg, l) = (&mla.config, mla.config.kv_lora_rank);
+                assert_eq!(wq.len(), cfg.d_model * cfg.n_heads * l);
+                assert_eq!(wkv.len(), cfg.d_model * l);
+                assert_eq!(w_down.len(), cfg.n_heads * l * cfg.head_dim);
+            }
+            other => panic!("micro-mla must be MLA, got {other:?}"),
+        }
     }
 
     #[test]

@@ -248,6 +248,61 @@ pub fn matmul_rows_acc(
     }
 }
 
+/// RMSNorm of one activation row into `out`:
+/// `out[i] = x[i] / sqrt(mean(x²) + eps) * w[i]`.
+///
+/// Bit-exactness contract (same as the matmul kernels): the sum of
+/// squares is **one scalar accumulator over `i = 0..n` ascending** — the
+/// block pipeline's frozen scalar reference uses the identical order, so
+/// the normalised row is reproducible bit-for-bit. Do not parallelise or
+/// pairwise-tree this reduction.
+#[inline]
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert!(x.len() == w.len() && x.len() == out.len());
+    let mut ss = 0f32;
+    for v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / x.len() as f32 + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// Rotary position embedding of one head row (length `dh`, even), in
+/// place, half-split pair convention (Llama/GPT-NeoX): element `i` pairs
+/// with `i + dh/2`, rotated by `theta_i = pos · base^(-i/(dh/2))`.
+///
+/// Pure per-pair 2×2 rotation — no accumulation, so the only
+/// reproducibility requirement is the fixed `sin_cos` evaluation, which
+/// is deterministic within a build (the block tests compare against a
+/// scalar reference using the same call).
+#[inline]
+pub fn rope_rotate(row: &mut [f32], pos: usize, base: f32) {
+    let half = row.len() / 2;
+    debug_assert_eq!(row.len(), 2 * half, "rope needs an even head dim");
+    for i in 0..half {
+        let theta = pos as f32 * base.powf(-(i as f32) / half as f32);
+        let (sin, cos) = theta.sin_cos();
+        let (a, b) = (row[i], row[half + i]);
+        row[i] = a * cos - b * sin;
+        row[half + i] = a * sin + b * cos;
+    }
+}
+
+/// SwiGLU elementwise gate: `out[i] = silu(gate[i]) * up[i]` with
+/// `silu(g) = g / (1 + e^(-g))`. Elementwise — no accumulation order to
+/// preserve, but kept here so the block pipeline's nonlinearity has one
+/// authoritative definition.
+#[inline]
+pub fn silu_mul(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    debug_assert!(gate.len() == up.len() && gate.len() == out.len());
+    for i in 0..gate.len() {
+        let g = gate[i];
+        out[i] = g / (1.0 + (-g).exp()) * up[i];
+    }
+}
+
 /// The seed's column-strided projection loop, kept verbatim as the
 /// regression baseline for `benches/hotpath.rs` (before/after pair) and
 /// the unit tests below. `w` is `(n_in, ld)` row-major; output column
@@ -371,6 +426,93 @@ mod tests {
         for (g, r) in got.iter().zip(&rows) {
             assert_eq!(g.to_bits(), dot(&x, r).to_bits());
         }
+    }
+
+    #[test]
+    fn rmsnorm_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::seed_from_u64(11);
+        for n in [4usize, 31, 64, 97] {
+            let x = randv(&mut rng, n, 2.0);
+            let w: Vec<f32> = (0..n).map(|_| 1.0 + (rng.f32() - 0.5) * 0.2).collect();
+            let mut got = vec![0f32; n];
+            rmsnorm(&x, &w, 1e-5, &mut got);
+            // scalar reference: same in-order sum of squares
+            let mut ss = 0f32;
+            for v in &x {
+                ss += v * v;
+            }
+            let inv = 1.0 / (ss / n as f32 + 1e-5).sqrt();
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), (x[i] * inv * w[i]).to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_weights_normalise_rms_to_one() {
+        let mut rng = Rng::seed_from_u64(13);
+        let x = randv(&mut rng, 64, 4.0);
+        let w = vec![1.0f32; 64];
+        let mut y = vec![0f32; 64];
+        rmsnorm(&x, &w, 0.0, &mut y);
+        let rms = (y.iter().map(|v| v * v).sum::<f32>() / 64.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-4, "{rms}");
+    }
+
+    #[test]
+    fn rope_at_position_zero_is_identity() {
+        let mut rng = Rng::seed_from_u64(17);
+        let orig = randv(&mut rng, 16, 2.0);
+        let mut row = orig.clone();
+        rope_rotate(&mut row, 0, 10000.0);
+        // theta = 0 -> cos 1, sin 0: exact identity in f32
+        assert_eq!(
+            row.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            orig.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn rope_preserves_pair_norms_and_relative_angles() {
+        let mut rng = Rng::seed_from_u64(19);
+        let orig = randv(&mut rng, 32, 2.0);
+        let mut row = orig.clone();
+        rope_rotate(&mut row, 7, 10000.0);
+        let half = 16;
+        for i in 0..half {
+            let n0 = orig[i].hypot(orig[half + i]);
+            let n1 = row[i].hypot(row[half + i]);
+            assert!((n0 - n1).abs() < 1e-4, "pair {i}: {n0} vs {n1}");
+        }
+        // relative-position property: rotating q by p and k by p leaves
+        // their dot product equal to rotating both by any common shift
+        let (mut q1, mut k1) = (orig.clone(), orig.clone());
+        k1.reverse();
+        let (mut q2, mut k2) = (q1.clone(), k1.clone());
+        rope_rotate(&mut q1, 3, 10000.0);
+        rope_rotate(&mut k1, 3, 10000.0);
+        rope_rotate(&mut q2, 11, 10000.0);
+        rope_rotate(&mut k2, 11, 10000.0);
+        let d1 = dot(&q1, &k1);
+        let d2 = dot(&q2, &k2);
+        assert!((d1 - d2).abs() / d1.abs().max(1.0) < 1e-4, "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn silu_mul_matches_definition_and_saturates() {
+        let mut rng = Rng::seed_from_u64(23);
+        let gate = randv(&mut rng, 41, 8.0);
+        let up = randv(&mut rng, 41, 2.0);
+        let mut out = vec![0f32; 41];
+        silu_mul(&gate, &up, &mut out);
+        for i in 0..41 {
+            let want = gate[i] / (1.0 + (-gate[i]).exp()) * up[i];
+            assert_eq!(out[i].to_bits(), want.to_bits());
+        }
+        // silu(g) -> g for large g, -> 0 for very negative g
+        let mut o = [0f32; 2];
+        silu_mul(&[30.0, -30.0], &[1.0, 1.0], &mut o);
+        assert!((o[0] - 30.0).abs() < 1e-3 && o[1].abs() < 1e-3, "{o:?}");
     }
 
     #[test]

@@ -1,0 +1,567 @@
+//! Full-block subsystem suite (tier-1).
+//!
+//! * **Scalar differential** — the functional block pipeline
+//!   (`clustersim::block::BlockModel`, which composes the fused
+//!   attention dataflows with the linalg row primitives) must match a
+//!   FROZEN plain-loop scalar reference of the whole transformer block
+//!   (RMSNorm → QKV → rotary → attention → output projection → residual
+//!   → SwiGLU MLP → residual → tied logits head) to fp32 tolerance,
+//!   multi-layer and multi-step, across MHA + MLA geometries and cluster
+//!   sizes. The reference below is self-contained on purpose: if these
+//!   tests trip, the pipeline changed semantics — fix the pipeline, not
+//!   the reference.
+//! * **Greedy determinism** — the same seed must produce byte-identical
+//!   token streams across two independent engine runs on the virtual
+//!   clock.
+//! * **Fusion-scope properties** — the three cost scopes agree on FLOPs
+//!   and are monotone in HBM traffic and kernel launches at *every*
+//!   cluster size; latency obeys full ≤ attn ≤ isolated at the tuned
+//!   cluster size of every tested geometry.
+//! * **Replay acceptance** — `loadgen::replay` drives an
+//!   `Engine<FunctionalBackend>` through a Poisson trace on the virtual
+//!   clock, billing `ServiceModel::from_block` costs, and renders a
+//!   byte-stable percentile report.
+
+use clusterfusion::clustersim::block::{
+    self, BlockModel, BlockProblem, FusionScope, EPS, ROPE_BASE,
+};
+use clusterfusion::clustersim::collective::Transport;
+use clusterfusion::clustersim::dataflow::CostEnv;
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::coordinator::engine::Engine;
+use clusterfusion::coordinator::request::{Event, Request};
+use clusterfusion::coordinator::FunctionalBackend;
+use clusterfusion::loadgen::{self, ServiceModel};
+use clusterfusion::models::{AttnKind, AttnWeights, MaterializedWeights, ModelConfig};
+use clusterfusion::util::clock::VirtualClock;
+use clusterfusion::workload::{SeqlenDist, Trace};
+
+// ---------------------------------------------------------------------------
+// Frozen scalar reference (plain loops; no linalg, no dataflows).
+// ---------------------------------------------------------------------------
+
+fn ref_rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let mut ss = 0f32;
+    for v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / x.len() as f32 + EPS).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// `y[col] += Σ_i x[i] · w[i*n_out + col]`, one slot.
+fn ref_gemm(x: &[f32], w: &[f32], n_in: usize, n_out: usize, y: &mut [f32]) {
+    for col in 0..n_out {
+        let mut acc = 0f32;
+        for i in 0..n_in {
+            acc += x[i] * w[i * n_out + col];
+        }
+        y[col] += acc;
+    }
+}
+
+fn ref_rope(row: &mut [f32], pos: usize) {
+    let half = row.len() / 2;
+    for i in 0..half {
+        let theta = pos as f32 * ROPE_BASE.powf(-(i as f32) / half as f32);
+        let (sin, cos) = theta.sin_cos();
+        let (a, b) = (row[i], row[half + i]);
+        row[i] = a * cos - b * sin;
+        row[half + i] = a * sin + b * cos;
+    }
+}
+
+/// Softmax attention of one head over `n` cached rows plus the self row.
+/// `cache_row(t)` yields the `dh`-sized key/value rows.
+fn ref_attend(
+    q: &[f32],
+    n: usize,
+    scale: f32,
+    key_at: impl Fn(usize) -> Vec<f32>,
+    val_at: impl Fn(usize) -> Vec<f32>,
+    k_self: &[f32],
+    v_self: &[f32],
+    out: &mut [f32],
+) {
+    let dot = |a: &[f32], b: &[f32]| -> f32 {
+        let mut s = 0f32;
+        for i in 0..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    };
+    let mut scores: Vec<f32> = (0..n).map(|t| dot(q, &key_at(t)) * scale).collect();
+    scores.push(dot(q, k_self) * scale);
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut l = 0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        l += *s;
+    }
+    for (t, &p) in scores[..n].iter().enumerate() {
+        let v = val_at(t);
+        for (o, vv) in out.iter_mut().zip(&v) {
+            *o += p * vv;
+        }
+    }
+    for (o, vv) in out.iter_mut().zip(v_self) {
+        *o += scores[n] * vv;
+    }
+    for o in out.iter_mut() {
+        *o /= l;
+    }
+}
+
+/// One full-block decode step of the frozen scalar model. Layouts match
+/// the serving engine: `caches[plane]` is dense `(L, B, S, re)`; returns
+/// `(logits (B, vocab), new_rows per plane (L, B, re))`.
+#[allow(clippy::too_many_arguments)]
+fn ref_decode_step(
+    w: &MaterializedWeights,
+    tokens: &[i32],
+    pos: &[usize],
+    caches: &[Vec<f32>],
+    b: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let cfg = &w.config;
+    let (d, f, v, s) = (cfg.d_model, cfg.ffn_dim, cfg.vocab, cfg.max_seq);
+    let (nh, dh, nl) = (cfg.n_heads, cfg.head_dim, cfg.n_layers);
+    let h = nh * dh;
+    let (re, planes) = match cfg.attn {
+        AttnKind::Mha => (h, 2),
+        AttnKind::Mla => (cfg.kv_lora_rank, 1),
+    };
+    let plane_len = b * s * re;
+    let mut logits = vec![0f32; b * v];
+    let mut new_rows = vec![vec![0f32; nl * b * re]; planes];
+
+    for bi in 0..b {
+        let tok = tokens[bi].rem_euclid(v as i32) as usize;
+        let mut hid: Vec<f32> = w.embedding[tok * d..(tok + 1) * d].to_vec();
+        let mut x = vec![0f32; d];
+        for (l, lw) in w.layers.iter().enumerate() {
+            ref_rmsnorm(&hid, &lw.attn_norm, &mut x);
+            let mut attn_out = vec![0f32; d];
+            match &lw.attn {
+                AttnWeights::Mha { wq, wk, wv, wo } => {
+                    let mut q = vec![0f32; h];
+                    let mut kn = vec![0f32; h];
+                    let mut vn = vec![0f32; h];
+                    ref_gemm(&x, wq, d, h, &mut q);
+                    ref_gemm(&x, wk, d, h, &mut kn);
+                    ref_gemm(&x, wv, d, h, &mut vn);
+                    for head in 0..nh {
+                        ref_rope(&mut q[head * dh..(head + 1) * dh], pos[bi]);
+                        ref_rope(&mut kn[head * dh..(head + 1) * dh], pos[bi]);
+                    }
+                    let scale = 1.0 / (dh as f32).sqrt();
+                    for head in 0..nh {
+                        let row = |plane: usize, t: usize| -> Vec<f32> {
+                            let base = l * plane_len + (bi * s + t) * h + head * dh;
+                            caches[plane][base..base + dh].to_vec()
+                        };
+                        let mut acc = vec![0f32; dh];
+                        ref_attend(
+                            &q[head * dh..(head + 1) * dh],
+                            pos[bi],
+                            scale,
+                            |t| row(0, t),
+                            |t| row(1, t),
+                            &kn[head * dh..(head + 1) * dh],
+                            &vn[head * dh..(head + 1) * dh],
+                            &mut acc,
+                        );
+                        // out += acc @ wo[head*dh.., :]
+                        for col in 0..d {
+                            let mut a = 0f32;
+                            for i in 0..dh {
+                                a += acc[i] * wo[(head * dh + i) * d + col];
+                            }
+                            attn_out[col] += a;
+                        }
+                    }
+                    new_rows[0][(l * b + bi) * re..(l * b + bi + 1) * re].copy_from_slice(&kn);
+                    new_rows[1][(l * b + bi) * re..(l * b + bi + 1) * re].copy_from_slice(&vn);
+                }
+                AttnWeights::Mla { wq, wkv, w_down, wo } => {
+                    let lr = cfg.kv_lora_rank;
+                    let mut q = vec![0f32; nh * lr];
+                    let mut kvn = vec![0f32; lr];
+                    ref_gemm(&x, wq, d, nh * lr, &mut q);
+                    ref_gemm(&x, wkv, d, lr, &mut kvn);
+                    let scale = 1.0 / (lr as f32).sqrt();
+                    for head in 0..nh {
+                        let row = |t: usize| -> Vec<f32> {
+                            let base = l * plane_len + (bi * s + t) * lr;
+                            caches[0][base..base + lr].to_vec()
+                        };
+                        let mut attn = vec![0f32; lr];
+                        ref_attend(
+                            &q[head * lr..(head + 1) * lr],
+                            pos[bi],
+                            scale,
+                            &row,
+                            &row,
+                            &kvn,
+                            &kvn,
+                            &mut attn,
+                        );
+                        let mut z = vec![0f32; dh];
+                        ref_gemm(
+                            &attn,
+                            &w_down[head * lr * dh..(head + 1) * lr * dh],
+                            lr,
+                            dh,
+                            &mut z,
+                        );
+                        for col in 0..d {
+                            let mut a = 0f32;
+                            for i in 0..dh {
+                                a += z[i] * wo[(head * dh + i) * d + col];
+                            }
+                            attn_out[col] += a;
+                        }
+                    }
+                    new_rows[0][(l * b + bi) * re..(l * b + bi + 1) * re].copy_from_slice(&kvn);
+                }
+            }
+            for i in 0..d {
+                hid[i] += attn_out[i];
+            }
+            // SwiGLU MLP
+            ref_rmsnorm(&hid, &lw.mlp_norm, &mut x);
+            let mut gate = vec![0f32; f];
+            let mut up = vec![0f32; f];
+            ref_gemm(&x, &lw.w_gate, d, f, &mut gate);
+            ref_gemm(&x, &lw.w_up, d, f, &mut up);
+            let mut act = vec![0f32; f];
+            for i in 0..f {
+                act[i] = gate[i] / (1.0 + (-gate[i]).exp()) * up[i];
+            }
+            let mut down = vec![0f32; d];
+            ref_gemm(&act, &lw.w_down, f, d, &mut down);
+            for i in 0..d {
+                hid[i] += down[i];
+            }
+        }
+        ref_rmsnorm(&hid, &w.final_norm, &mut x);
+        for t in 0..v {
+            let mut a = 0f32;
+            for i in 0..d {
+                a += x[i] * w.embedding[t * d + i];
+            }
+            logits[bi * v + t] = a;
+        }
+    }
+    (logits, new_rows)
+}
+
+// ---------------------------------------------------------------------------
+// Differential harness
+// ---------------------------------------------------------------------------
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0f32.max(x.abs()).max(y.abs());
+        assert!((x - y).abs() / denom < tol, "{what}[{i}]: {x} vs {y} (tol {tol})");
+    }
+}
+
+/// Append one step's new rows into a dense `(L, B, S, re)` plane set at
+/// position `t` (what `KvPool::append` + `gather_batch_into` produce).
+fn append_rows(
+    caches: &mut [Vec<f32>],
+    rows: &[Vec<f32>],
+    cfg: &ModelConfig,
+    re: usize,
+    b: usize,
+    t: usize,
+) {
+    let s = cfg.max_seq;
+    for (plane, cache) in caches.iter_mut().enumerate() {
+        for l in 0..cfg.n_layers {
+            for bi in 0..b {
+                let src = (l * b + bi) * re;
+                let dst = ((l * b + bi) * s + t) * re;
+                cache[dst..dst + re].copy_from_slice(&rows[plane][src..src + re]);
+            }
+        }
+    }
+}
+
+/// Drive `steps` greedy decode steps of the functional pipeline against
+/// the frozen scalar reference, each maintaining its own cache, and
+/// compare logits every step. Returns the functional greedy stream.
+fn differential_decode(cfg: &ModelConfig, seed: u64, cluster: usize, steps: usize) -> Vec<usize> {
+    let weights = MaterializedWeights::materialize(cfg, seed);
+    // the scalar reference below needs the raw tensors too: clone for
+    // the packed model (BlockModel::new moves its input by design)
+    let model = BlockModel::new(weights.clone(), cluster, Transport::Dsmem);
+    let (b, re, planes) = (2usize, model.row_elems(), model.planes());
+    let s = cfg.max_seq;
+    let plane_elems = cfg.n_layers * b * s * re;
+    let mut fun_cache = vec![vec![0f32; plane_elems]; planes];
+    let mut ref_cache = vec![vec![0f32; plane_elems]; planes];
+    // two slots decode different prompts in one padded batch
+    let mut tokens = [3i32, 7i32];
+    let mut stream = Vec::new();
+    for t in 0..steps {
+        let pos = [t as i32, t as i32];
+        let pos_us = [t, t];
+        let (logits, rows) = model.decode_step(&tokens, &pos, &fun_cache, b);
+        let (ref_logits, ref_rows) = ref_decode_step(&weights, &tokens, &pos_us, &ref_cache, b);
+        assert_close(
+            &logits,
+            &ref_logits,
+            2e-3,
+            &format!("{} n={cluster} step {t} logits", cfg.name),
+        );
+        append_rows(&mut fun_cache, &rows, cfg, re, b, t);
+        append_rows(&mut ref_cache, &ref_rows, cfg, re, b, t);
+        // greedy-continue both slots from the functional argmax; the
+        // reference must agree wherever its top-2 margin is decisive
+        let v = cfg.vocab;
+        for bi in 0..b {
+            let row = &logits[bi * v..(bi + 1) * v];
+            let next = clusterfusion::runtime::argmax(row);
+            let ref_next = clusterfusion::runtime::argmax(&ref_logits[bi * v..(bi + 1) * v]);
+            if ref_next != next {
+                let rrow = &ref_logits[bi * v..(bi + 1) * v];
+                let mut sorted: Vec<f32> = rrow.to_vec();
+                sorted.sort_by(|a, b| b.total_cmp(a));
+                assert!(
+                    sorted[0] - sorted[1] < 1e-2,
+                    "{} n={cluster} step {t}: argmax diverged ({next} vs {ref_next}) with \
+                     decisive margin {}",
+                    cfg.name,
+                    sorted[0] - sorted[1]
+                );
+            }
+            tokens[bi] = next as i32;
+            if bi == 0 {
+                stream.push(next);
+            }
+        }
+    }
+    stream
+}
+
+fn tiny_mha() -> ModelConfig {
+    ModelConfig {
+        name: "tiny-mha-test".into(),
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 16,
+        ffn_dim: 48,
+        max_seq: 32,
+        attn: AttnKind::Mha,
+        kv_lora_rank: 0,
+    }
+}
+
+fn tiny_mla() -> ModelConfig {
+    ModelConfig {
+        name: "tiny-mla-test".into(),
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 8,
+        ffn_dim: 48,
+        max_seq: 16,
+        attn: AttnKind::Mla,
+        kv_lora_rank: 16,
+    }
+}
+
+#[test]
+fn mha_block_matches_scalar_reference_across_cluster_sizes() {
+    for cluster in [1usize, 2, 4] {
+        let a = differential_decode(&tiny_mha(), 42, cluster, 6);
+        // cluster size is an execution detail: the greedy stream at one
+        // seed must not depend on it
+        let b = differential_decode(&tiny_mha(), 42, 1, 6);
+        assert_eq!(a, b, "cluster {cluster} changed the greedy stream");
+    }
+}
+
+#[test]
+fn micro_llama_block_matches_scalar_reference() {
+    let s = differential_decode(&ModelConfig::micro_llama(), 7, 2, 5);
+    assert_eq!(s.len(), 5);
+}
+
+#[test]
+fn mla_block_matches_scalar_reference_across_cluster_sizes() {
+    for cluster in [1usize, 2, 4] {
+        differential_decode(&tiny_mla(), 42, cluster, 6);
+    }
+    differential_decode(&ModelConfig::micro_mla(), 7, 2, 4);
+}
+
+// ---------------------------------------------------------------------------
+// Greedy determinism through the serving engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn greedy_engine_decode_is_seed_stable_across_runs() {
+    let run = || -> Vec<(u64, Vec<i32>)> {
+        let backend = FunctionalBackend::from_model_name("micro-llama", 42, 2).unwrap();
+        let clock = VirtualClock::shared();
+        let mut engine = Engine::with_clock(backend, 64, 8, 1.0, clock.clone());
+        // prompts end in distinct tokens: a random tied-embedding
+        // transformer parrots its final prompt token, so this guarantees
+        // the four streams cannot trivially coincide
+        for id in 0..4u64 {
+            engine.submit(Request::new(id, vec![5, 9, 1 + id as i32], 6));
+        }
+        let mut streams = Vec::new();
+        while !engine.idle() {
+            engine.step().unwrap();
+            clock.advance_us(1_000);
+            for ev in engine.take_events() {
+                if let Event::Finished { id, generated, .. } = ev {
+                    streams.push((id, generated));
+                }
+            }
+        }
+        streams.sort();
+        streams
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.len(), 4);
+    assert_eq!(a, b, "same seed must replay byte-identical token streams");
+    // distinct prompts must not all collapse onto one stream
+    assert!(a.iter().any(|(_, s)| s != &a[0].1), "streams suspiciously identical");
+}
+
+// ---------------------------------------------------------------------------
+// Fusion-scope cost properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fusion_scopes_agree_on_flops_and_are_traffic_monotone_everywhere() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let models = [
+        ModelConfig::llama2_7b(),
+        ModelConfig::deepseek_v2_lite(),
+        ModelConfig::head_sweep_variant(128),
+        ModelConfig::micro_llama(),
+        ModelConfig::micro_mla(),
+    ];
+    for model in &models {
+        for &seq in &[1024usize, 4096, 16384] {
+            let seq = seq.min(model.max_seq);
+            for &batch in &[1usize, 8] {
+                for n in [1usize, 2, 4, 8] {
+                    if !block::supports_cluster(model, n) {
+                        continue;
+                    }
+                    let p = BlockProblem::from_model(model, batch, seq);
+                    let env = CostEnv::clusterfusion(&hw, &noc, n);
+                    let iso = block::cost(&p, FusionScope::BlockIsolated, &env);
+                    let att = block::cost(&p, FusionScope::AttentionFused, &env);
+                    let ful = block::cost(&p, FusionScope::FullBlockFused, &env);
+                    let tag = format!("{} seq={seq} b={batch} n={n}", model.name);
+                    // fusion never changes arithmetic
+                    assert_eq!(iso.flops, att.flops, "{tag}");
+                    assert_eq!(att.flops, ful.flops, "{tag}");
+                    assert!(ful.flops > 0.0, "{tag}");
+                    // wider scope -> strictly fewer launches, no more HBM
+                    assert!(ful.hbm_bytes <= att.hbm_bytes, "{tag}");
+                    assert!(att.hbm_bytes <= iso.hbm_bytes, "{tag}");
+                    assert_eq!(ful.launches, 1, "{tag}");
+                    assert!(att.launches < iso.launches, "{tag}");
+                    // the baseline uses no cluster collectives at all
+                    assert_eq!(iso.dsmem_bytes, 0.0, "{tag}");
+                    if n > 1 {
+                        assert!(ful.dsmem_bytes >= att.dsmem_bytes, "{tag}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn latency_ordering_full_leq_attn_leq_isolated_at_tuned_cluster() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    // (model, tuned N): Fig. 11 optima — N=4 for the 32/16-head paper
+    // models, N=2 at 128 heads; the micro models order at every small N.
+    let cases = [
+        (ModelConfig::llama2_7b(), vec![4usize]),
+        (ModelConfig::deepseek_v2_lite(), vec![4]),
+        (ModelConfig::head_sweep_variant(128), vec![1, 2, 4]),
+        (ModelConfig::micro_llama(), vec![1, 2, 4]),
+        (ModelConfig::micro_mla(), vec![1, 2, 4]),
+    ];
+    for (model, clusters) in &cases {
+        for &seq in &[1024usize, 4096, 16384] {
+            let seq = seq.min(model.max_seq);
+            for &batch in &[1usize, 8] {
+                for &n in clusters {
+                    let p = BlockProblem::from_model(model, batch, seq);
+                    let env = CostEnv::clusterfusion(&hw, &noc, n);
+                    let iso = block::cost(&p, FusionScope::BlockIsolated, &env).latency;
+                    let att = block::cost(&p, FusionScope::AttentionFused, &env).latency;
+                    let ful = block::cost(&p, FusionScope::FullBlockFused, &env).latency;
+                    assert!(
+                        ful <= att && att <= iso,
+                        "{} seq={seq} b={batch} n={n}: {ful} / {att} / {iso}",
+                        model.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay acceptance: functional backend + block-model service costs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn functional_replay_on_virtual_clock_is_byte_stable() {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let cfg = ModelConfig::micro_llama();
+    let service =
+        ServiceModel::from_block(&cfg, cfg.max_seq, FusionScope::FullBlockFused, 2, &hw, &noc);
+    assert!(service.step_base_us >= 1);
+
+    let run = || {
+        let backend = FunctionalBackend::from_model_name("micro-llama", 42, 2).unwrap();
+        let mut engine = Engine::with_clock(backend, 128, 8, 0.5, VirtualClock::shared());
+        let trace = Trace::poisson(24, 400.0, SeqlenDist::Fixed(16), (4, 8), 64, 11);
+        let requests = loadgen::synthesize_requests(&trace, cfg.vocab, 12, 8, 5);
+        loadgen::replay(&mut engine, &requests, &service, 1_000_000).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.completed, 24, "every request must finish");
+    assert!(a.tokens_out > 0 && a.steps > 0);
+    assert_eq!(
+        a.render(),
+        b.render(),
+        "virtual-clock replay over the functional backend must be byte-deterministic"
+    );
+    // the block service model must order by fusion scope here too
+    let at = |s| ServiceModel::from_block(&cfg, cfg.max_seq, s, 2, &hw, &noc);
+    let (iso, att, ful) = (
+        at(FusionScope::BlockIsolated),
+        at(FusionScope::AttentionFused),
+        at(FusionScope::FullBlockFused),
+    );
+    for live in [1usize, 8] {
+        assert!(ful.step_us(live) <= att.step_us(live));
+        assert!(att.step_us(live) <= iso.step_us(live));
+    }
+}
