@@ -1,9 +1,9 @@
 # Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
 # what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
 
-.PHONY: tier1 build test test-load test-block bench-compile bench-smoke quickstart artifacts clean
+.PHONY: tier1 build test test-load test-block test-parallel bench-compile bench-smoke quickstart artifacts clean
 
-tier1: build test test-load test-block bench-compile bench-smoke quickstart
+tier1: build test test-load test-block test-parallel bench-compile bench-smoke quickstart
 
 build:
 	cd rust && cargo build --release
@@ -22,6 +22,11 @@ test-load:
 # cost properties, functional-backend replay.
 test-block:
 	cd rust && cargo test -q --test integration_block
+
+# Thread-count invariance suite (also run by `test`): pooled execution
+# byte-identical across pool sizes; util::pool unit semantics.
+test-parallel:
+	cd rust && cargo test -q --test integration_parallel
 
 bench-compile:
 	cd rust && cargo bench --no-run

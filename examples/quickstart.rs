@@ -95,7 +95,12 @@ fn decode_once<B: Backend>(
 }
 
 fn functional_quickstart() -> Result<()> {
-    let backend = FunctionalBackend::from_model_name("micro-llama", 42, 2)?;
+    // auto-sized worker pool (CLUSTERFUSION_THREADS overrides; on
+    // micro-llama the work-size gate resolves to serial — DESIGN.md
+    // §Parallel); when it does go wide, the serial re-decode below
+    // doubles as a live thread-invariance check
+    let backend = FunctionalBackend::from_model_name_on("micro-llama", 42, 2, 0)?;
+    let threads = backend.threads();
     println!("backend: {}", backend.describe());
     println!("(real numerics — greedy decode over seeded weights; --mock for the echo demo)\n");
 
@@ -113,13 +118,15 @@ fn functional_quickstart() -> Result<()> {
         engine.pool.used_pages()
     );
 
-    // Determinism check: a fresh engine from the same seed must replay
-    // the identical stream (the integration_block contract).
+    // Determinism check: a fresh engine from the same seed — on a
+    // *serial* pool — must replay the identical stream (the
+    // integration_block contract plus the §Parallel thread-count
+    // invariance, exercised live when the first run was threaded).
     let backend2 = FunctionalBackend::from_model_name("micro-llama", 42, 2)?;
     let mut engine2 = Engine::new(backend2, 64, 8, 1.0);
     let again = decode_once(&mut engine2, prompt, 8)?;
-    anyhow::ensure!(tokens == again, "functional decode must be seed-deterministic");
-    println!("re-decode from the same seed: byte-identical ✓");
+    anyhow::ensure!(tokens == again, "functional decode must be seed- and thread-deterministic");
+    println!("re-decode, same seed, serial pool ({threads} -> 1 threads): byte-identical ✓");
     Ok(())
 }
 

@@ -54,7 +54,11 @@ fn main() -> Result<()> {
         run(backend, n_requests)
     } else {
         let model = args.get(1).map(String::as_str).unwrap_or("micro-llama");
-        let backend = FunctionalBackend::from_model_name(model, 0, 2)?;
+        // wall-clock pacing: the worker pool auto-sizes (threads = 0 →
+        // CLUSTERFUSION_THREADS, else available parallelism); outputs are
+        // byte-identical at every pool size (DESIGN.md §Parallel)
+        let backend = FunctionalBackend::from_model_name_on(model, 0, 2, 0)?;
+        // describe() announces the active thread count alongside the backend
         println!("backend: {}", backend.describe());
         println!("(no artifacts found — functional decoding; `make artifacts` enables PJRT)");
         let params = backend.config().param_count();

@@ -27,8 +27,9 @@ use clusterfusion::clustersim::{Hardware, Noc};
 use clusterfusion::coordinator::engine::{Engine, MockBackend};
 use clusterfusion::coordinator::kv_cache::{CacheGeometry, KvPool};
 use clusterfusion::coordinator::request::Request;
-use clusterfusion::util::bench::bench;
+use clusterfusion::util::bench::{bench, BenchResult};
 use clusterfusion::util::linalg::{self, PackedWeight};
+use clusterfusion::util::pool::Pool;
 use clusterfusion::util::rng::Rng;
 
 /// Pre-refactor `split_token::execute` wall time at the Llama-2-7B
@@ -43,6 +44,21 @@ const PRE_REFACTOR_EXECUTE_MS: f64 = 630.0;
 
 fn randv(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+}
+
+/// Dense-sweep throughput advisory (DESIGN.md §5). Derives the kernel
+/// name from the measurement itself so a trip is actionable — the
+/// regressing kernel is named, not guessed.
+fn advise_rate(r: &BenchResult) {
+    const TARGET: f64 = 1e5;
+    if r.per_sec() < TARGET {
+        println!(
+            "ADVISORY: kernel `{}` at {:.3e} evals/s is below the {TARGET:.0e} evals/s \
+             dense-sweep target (DESIGN.md §5)",
+            r.name,
+            r.per_sec()
+        );
+    }
 }
 
 fn main() {
@@ -60,23 +76,15 @@ fn main() {
     let env = CostEnv::clusterfusion(&hw, &noc, 4);
     let r = bench("sim: split_token::cost", budget, || split_token::cost(&p, &env));
     println!("{}", r.report_rate("evals"));
-    if r.per_sec() < 1e5 {
-        println!(
-            "ADVISORY: sim: split_token::cost at {:.3e} evals/s is below the 1e5 \
-             evals/s dense-sweep target (DESIGN.md §5)",
-            r.per_sec()
-        );
-    }
+    advise_rate(&r);
 
     let model = clusterfusion::models::ModelConfig::llama2_7b();
     let prof = FrameworkProfile::clusterfusion();
-    println!(
-        "{}",
-        bench("sim: e2e decode_step estimate", budget, || decode_step(
-            &model, 1, 4096, SimEngine::ClusterFusion { cluster_size: 4 }, &prof, &hw, &noc,
-        ))
-        .report_rate("evals")
-    );
+    let r = bench("sim: e2e decode_step estimate", budget, || {
+        decode_step(&model, 1, 4096, SimEngine::ClusterFusion { cluster_size: 4 }, &prof, &hw, &noc)
+    });
+    println!("{}", r.report_rate("evals"));
+    advise_rate(&r);
 
     // --- linalg microkernels: the before/after pair at the Llama-2-7B
     // projection shape (one head's 128 columns of a 4096x4096 weight).
@@ -148,6 +156,38 @@ fn main() {
                  the 10x bar on this host (expected only on hosts with unusually cheap \
                  strided DRAM access — see EXPERIMENTS.md §Perf provenance)"
             );
+        }
+        // Parallel-vs-serial at the acceptance geometry (§Parallel):
+        // the cluster blocks (n=4) fan across the worker pool; outputs
+        // are byte-identical at every pool size, so this sweep measures
+        // wall-clock only. Record the table in EXPERIMENTS.md §Parallel
+        // (full budgets; smoke numbers are noisy).
+        {
+            let mut serial_ns = 0.0f64;
+            for threads in [1usize, 2, 4, 8] {
+                let pool = Pool::new(threads);
+                let r = bench(
+                    &format!("sim: split_token::execute_packed_on t{threads} (acceptance)"),
+                    budget,
+                    || {
+                        split_token::execute_packed_on(
+                            &pool, &hidden, &packed, &k_cache, &v_cache, &pos, b, d, nh, dh, s,
+                            n, Transport::Dsmem, &hw, &noc,
+                        )
+                    },
+                );
+                println!("{}", r.report_rate("evals"));
+                if threads == 1 {
+                    serial_ns = r.mean_ns;
+                } else {
+                    println!(
+                        "     parallel speedup vs 1 thread: {:.2}x at {threads} threads \
+                         ({} cores on this host)",
+                        serial_ns / r.mean_ns,
+                        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+                    );
+                }
+            }
         }
         // One-shot path (pack inside the call) for the repack-cost story;
         // skipped in smoke mode (a single iteration blows the budget).

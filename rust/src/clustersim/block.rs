@@ -33,6 +33,7 @@
 
 use crate::models::{AttnKind, AttnWeights, MaterializedWeights, ModelConfig};
 use crate::util::linalg::{self, PackedWeight};
+use crate::util::pool::Pool;
 
 use super::collective::{gather_cost, reduce_cost, Transport};
 use super::dataflow::{
@@ -465,6 +466,36 @@ impl BlockModel {
         cache_planes: &[Vec<f32>],
         bucket: usize,
     ) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let (logits, new_rows, _) =
+            self.decode_step_on(&Pool::serial(), tokens, pos, cache_planes, bucket);
+        (logits, new_rows)
+    }
+
+    /// [`Self::decode_step`] on a worker [`Pool`] (DESIGN.md §Parallel):
+    /// the attention sub-block fans its cluster blocks across the pool
+    /// (`split_token::execute_packed_rope_on` / `mla::execute_packed_on`),
+    /// the SwiGLU MLP's gate/up/down GEMMs partition their output columns
+    /// (`linalg::matmul_rows_pooled`), and the tied-embedding logits head
+    /// is sharded over contiguous vocab ranges — each shard computing its
+    /// logits window plus a local argmax, merged in ascending-shard order
+    /// with a strictly-greater comparison so the **lowest-index tie-break
+    /// is preserved** (= `runtime::argmax` of the full row).
+    ///
+    /// Returns `(logits, new_rows, greedy)` where `greedy[bi]` is the
+    /// merged per-shard argmax of slot `bi`'s logits row. All outputs are
+    /// byte-identical across pool sizes (`tests/integration_parallel.rs`).
+    /// A serial pool runs every kernel inline with no spawns; its single
+    /// logits shard *becomes* the logits buffer (no extra copy), leaving
+    /// only the O(vocab) argmax scan that powers `greedy` on top of the
+    /// pre-pool serial path.
+    pub fn decode_step_on(
+        &self,
+        pool: &Pool,
+        tokens: &[i32],
+        pos: &[i32],
+        cache_planes: &[Vec<f32>],
+        bucket: usize,
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<usize>) {
         let cfg = &self.cfg;
         let (b, d, f, v) = (bucket, cfg.d_model, cfg.ffn_dim, cfg.vocab);
         let (nl, s, re) = (cfg.n_layers, cfg.max_seq, self.row_elems());
@@ -507,7 +538,8 @@ impl BlockModel {
                 PackedAttn::Mha(w) => {
                     let k = &cache_planes[0][l * plane_len..(l + 1) * plane_len];
                     let vc = &cache_planes[1][l * plane_len..(l + 1) * plane_len];
-                    split_token::execute_packed_rope(
+                    split_token::execute_packed_rope_on(
+                        pool,
                         &x,
                         w,
                         k,
@@ -528,7 +560,8 @@ impl BlockModel {
                 }
                 PackedAttn::Mla { w, w_down } => {
                     let kv = &cache_planes[0][l * plane_len..(l + 1) * plane_len];
-                    mla::execute_packed(
+                    mla::execute_packed_on(
+                        pool,
                         &x,
                         w,
                         w_down,
@@ -566,17 +599,22 @@ impl BlockModel {
                     &mut x[bi * d..(bi + 1) * d],
                 );
             }
-            linalg::matmul_rows(&x, b, d, &layer.gate, 0, 0, f, &mut gate);
-            linalg::matmul_rows(&x, b, d, &layer.up, 0, 0, f, &mut up);
+            linalg::matmul_rows_pooled(pool, &x, b, d, &layer.gate, 0, 0, f, &mut gate);
+            linalg::matmul_rows_pooled(pool, &x, b, d, &layer.up, 0, 0, f, &mut up);
             linalg::silu_mul(&gate, &up, &mut act);
-            linalg::matmul_rows(&act, b, f, &layer.down, 0, 0, d, &mut down);
+            linalg::matmul_rows_pooled(pool, &act, b, f, &layer.down, 0, 0, d, &mut down);
             linalg::axpy(1.0, &down, &mut h); // residual
         }
 
-        // -- tied-embedding logits head (final norm, then h · Eᵀ): the
-        // embedding rows are already column-contiguous for this product,
-        // so the dot4 row tile applies directly --
-        let mut logits = vec![0f32; b * v];
+        // -- tied-embedding logits head (final norm, then h · Eᵀ),
+        // sharded over contiguous vocab ranges: the embedding rows are
+        // already column-contiguous for this product, so each shard runs
+        // the dot4 row tile over its own window (every logit keeps its
+        // single in-order dot chain — shard boundaries only change load
+        // sharing). Each shard also returns its local argmax per slot
+        // (lowest index on ties); the ascending-shard merge below keeps
+        // only strictly greater values, reproducing `runtime::argmax` of
+        // the full row bit-for-bit. --
         for bi in 0..b {
             linalg::rmsnorm(
                 &h[bi * d..(bi + 1) * d],
@@ -584,21 +622,52 @@ impl BlockModel {
                 EPS,
                 &mut x[bi * d..(bi + 1) * d],
             );
-            let hn = &x[bi * d..(bi + 1) * d];
-            let row = |t: usize| &self.embedding[t * d..(t + 1) * d];
-            let out = &mut logits[bi * v..(bi + 1) * v];
-            let mut t = 0;
-            while t + 4 <= v {
-                let d4 = linalg::dot4(hn, row(t), row(t + 1), row(t + 2), row(t + 3));
-                out[t..t + 4].copy_from_slice(&d4);
-                t += 4;
+        }
+        let mut shards: Vec<(usize, Vec<f32>, Vec<usize>)> = pool.run_ranges(v, |t0, t1| {
+            let span = t1 - t0;
+            let mut chunk = vec![0f32; b * span];
+            let mut local_arg = vec![0usize; b];
+            for bi in 0..b {
+                let hn = &x[bi * d..(bi + 1) * d];
+                let row = |t: usize| &self.embedding[t * d..(t + 1) * d];
+                let out = &mut chunk[bi * span..(bi + 1) * span];
+                let mut t = t0;
+                while t + 4 <= t1 {
+                    let d4 = linalg::dot4(hn, row(t), row(t + 1), row(t + 2), row(t + 3));
+                    out[t - t0..t - t0 + 4].copy_from_slice(&d4);
+                    t += 4;
+                }
+                while t < t1 {
+                    out[t - t0] = linalg::dot(hn, row(t));
+                    t += 1;
+                }
+                local_arg[bi] = t0 + crate::runtime::argmax(out);
             }
-            while t < v {
-                out[t] = linalg::dot(hn, row(t));
-                t += 1;
+            (t0, chunk, local_arg)
+        });
+        if shards.len() == 1 {
+            // serial / single-worker: the lone shard IS the (b, vocab)
+            // logits buffer and its local argmaxes the greedy picks
+            let (_, logits, greedy) = shards.pop().expect("one shard");
+            return (logits, new_rows, greedy);
+        }
+        let mut logits = vec![0f32; b * v];
+        let mut greedy = vec![0usize; b];
+        for (si, (t0, chunk, local_arg)) in shards.iter().enumerate() {
+            let span = chunk.len() / b;
+            for bi in 0..b {
+                logits[bi * v + t0..bi * v + t0 + span]
+                    .copy_from_slice(&chunk[bi * span..(bi + 1) * span]);
+                let cand = local_arg[bi];
+                if si == 0
+                    || logits[bi * v + cand].total_cmp(&logits[bi * v + greedy[bi]])
+                        == std::cmp::Ordering::Greater
+                {
+                    greedy[bi] = cand;
+                }
             }
         }
-        (logits, new_rows)
+        (logits, new_rows, greedy)
     }
 }
 

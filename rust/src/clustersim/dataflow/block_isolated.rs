@@ -18,6 +18,7 @@
 
 use crate::clustersim::kernelmodel::{kernel_cost, KernelSpec};
 use crate::util::linalg;
+use crate::util::pool::Pool;
 
 use super::reference::{gemm_acc, AttnOut};
 use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM};
@@ -31,6 +32,48 @@ pub const FLASH_SPLITS: usize = 4;
 /// must equal [`super::reference::attention_block_ref`].
 #[allow(clippy::too_many_arguments)]
 pub fn execute(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+) -> (AttnOut, CostReport) {
+    execute_on(
+        &Pool::serial(),
+        hidden,
+        wq,
+        wk,
+        wv,
+        wo,
+        k_cache,
+        v_cache,
+        pos,
+        b,
+        d,
+        nh,
+        dh,
+        s,
+    )
+}
+
+/// [`execute`] on a worker [`Pool`], parallel over **heads** in the
+/// FlashDecoding (K2) and rescale (K3) kernels — the two per-head
+/// kernels whose outputs are disjoint head regions. The projection
+/// kernels (K1/K4) keep the seed's row-major `gemm_acc` walk serially.
+/// Each head's arithmetic is unchanged and results land by per-head
+/// copy, so the output is byte-identical to the serial path at every
+/// pool size (`tests/integration_parallel.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_on(
+    pool: &Pool,
     hidden: &[f32],
     wq: &[f32],
     wk: &[f32],
@@ -60,14 +103,16 @@ pub fn execute(
 
     // ---- Kernel 2: FlashDecoding partials -> GLOBAL MEMORY ----
     // One block per (head, split); partial accumulators + (m, l) stats.
+    // One pool task per head, owning its FLASH_SPLITS × B contiguous
+    // region of the partial arrays.
     let scale = 1.0 / (dh as f32).sqrt();
     let seg = s.div_ceil(FLASH_SPLITS);
-    let mut part_acc = vec![0f32; nh * FLASH_SPLITS * b * dh];
-    let mut part_m = vec![f32::NEG_INFINITY; nh * FLASH_SPLITS * b];
-    let mut part_l = vec![0f32; nh * FLASH_SPLITS * b];
-    for head in 0..nh {
+    type HeadPartials = (Vec<f32>, Vec<f32>, Vec<f32>);
+    let head_parts: Vec<HeadPartials> = pool.run_map(nh, |head| {
+        let mut acc_h = vec![0f32; FLASH_SPLITS * b * dh];
+        let mut m_h = vec![f32::NEG_INFINITY; FLASH_SPLITS * b];
+        let mut l_h = vec![0f32; FLASH_SPLITS * b];
         for sp in 0..FLASH_SPLITS {
-            let blk = head * FLASH_SPLITS + sp;
             for bi in 0..b {
                 let valid = pos[bi];
                 let lo = sp * seg;
@@ -83,7 +128,8 @@ pub fn execute(
                 let end = hi.max(lo);
                 let mut t = lo;
                 while t + 4 <= end {
-                    let d4 = linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                    let d4 =
+                        linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
                     for (k, dv) in d4.iter().enumerate() {
                         let sc = dv * scale;
                         m = m.max(sc);
@@ -99,8 +145,10 @@ pub fn execute(
                 }
                 // the freshly projected token is handled by the last split
                 if sp == FLASH_SPLITS - 1 {
-                    let sc = linalg::dot(qrow, &k_gmem[bi * h + head * dh..bi * h + (head + 1) * dh])
-                        * scale;
+                    let sc = linalg::dot(
+                        qrow,
+                        &k_gmem[bi * h + head * dh..bi * h + (head + 1) * dh],
+                    ) * scale;
                     m = m.max(sc);
                     scores.push((usize::MAX, sc));
                 }
@@ -108,35 +156,49 @@ pub fn execute(
                     continue;
                 }
                 let mut l = 0f32;
-                let acc = &mut part_acc[(blk * b + bi) * dh..(blk * b + bi + 1) * dh];
+                let acc = &mut acc_h[(sp * b + bi) * dh..(sp * b + bi + 1) * dh];
                 for (t, sc) in scores {
                     let p = (sc - m).exp();
                     l += p;
                     let vrow = if t == usize::MAX {
                         &v_gmem[bi * h + head * dh..bi * h + (head + 1) * dh]
                     } else {
-                        &v_cache[((bi * s + t) * nh + head) * dh..((bi * s + t) * nh + head) * dh + dh]
+                        &v_cache
+                            [((bi * s + t) * nh + head) * dh..((bi * s + t) * nh + head) * dh + dh]
                     };
                     linalg::axpy(p, vrow, acc);
                 }
-                part_m[blk * b + bi] = m;
-                part_l[blk * b + bi] = l;
+                m_h[sp * b + bi] = m;
+                l_h[sp * b + bi] = l;
             }
         }
+        (acc_h, m_h, l_h)
+    });
+    // Assemble the flat global-memory partial arrays (per-head regions
+    // are contiguous: blk = head * FLASH_SPLITS + sp).
+    let mut part_acc = Vec::with_capacity(nh * FLASH_SPLITS * b * dh);
+    let mut part_m = Vec::with_capacity(nh * FLASH_SPLITS * b);
+    let mut part_l = Vec::with_capacity(nh * FLASH_SPLITS * b);
+    for (acc_h, m_h, l_h) in &head_parts {
+        part_acc.extend_from_slice(acc_h);
+        part_m.extend_from_slice(m_h);
+        part_l.extend_from_slice(l_h);
     }
     report.launches += 1;
     report.hbm_bytes += (nh * FLASH_SPLITS * b) as f64 * (dh as f64 * ELEM + 2.0 * 4.0);
 
     // ---- Kernel 3: rescale / combine partials -> GLOBAL MEMORY ----
-    let mut attn_gmem = vec![0f32; b * h];
-    for head in 0..nh {
+    // One pool task per head; results copied into the strided (B, H)
+    // attention layout serially.
+    let attn_heads: Vec<Vec<f32>> = pool.run_map(nh, |head| {
+        let mut attn_h = vec![0f32; b * dh];
         for bi in 0..b {
             let mut m = f32::NEG_INFINITY;
             for sp in 0..FLASH_SPLITS {
                 m = m.max(part_m[(head * FLASH_SPLITS + sp) * b + bi]);
             }
             let mut l = 0f32;
-            let out = &mut attn_gmem[bi * h + head * dh..bi * h + (head + 1) * dh];
+            let out = &mut attn_h[bi * dh..(bi + 1) * dh];
             for sp in 0..FLASH_SPLITS {
                 let blk = head * FLASH_SPLITS + sp;
                 let pm = part_m[blk * b + bi];
@@ -150,6 +212,14 @@ pub fn execute(
             for o in out.iter_mut() {
                 *o /= l;
             }
+        }
+        attn_h
+    });
+    let mut attn_gmem = vec![0f32; b * h];
+    for (head, attn_h) in attn_heads.iter().enumerate() {
+        for bi in 0..b {
+            attn_gmem[bi * h + head * dh..bi * h + (head + 1) * dh]
+                .copy_from_slice(&attn_h[bi * dh..(bi + 1) * dh]);
         }
     }
     report.launches += 1;

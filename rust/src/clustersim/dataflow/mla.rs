@@ -25,6 +25,7 @@ use crate::clustersim::collective::{
 use crate::clustersim::hw::Hardware;
 use crate::clustersim::noc::Noc;
 use crate::util::linalg;
+use crate::util::pool::Pool;
 
 use super::reference::AttnOut;
 use super::{
@@ -86,6 +87,53 @@ pub fn execute_packed(
     hw: &Hardware,
     noc: &Noc,
 ) -> (AttnOut, CostReport) {
+    execute_packed_on(
+        &Pool::serial(),
+        hidden,
+        weights,
+        w_down,
+        kv_cache,
+        pos,
+        b,
+        d,
+        nh,
+        l,
+        dh,
+        s,
+        n,
+        transport,
+        hw,
+        noc,
+    )
+}
+
+/// [`execute_packed`] on a worker [`Pool`]: each block-parallel phase of
+/// Alg. 4 — the KV/Q projection segments, the FlashDecoding partials
+/// over the latent-cache spans, the down-projection partials over the
+/// lora-rank slices and the output-projection column tiles — fans its
+/// `n` cluster blocks across the pool; the collectives and the
+/// atomicAdd merge stay serial, in the serial code's order. Byte-
+/// identical to the serial path at every pool size
+/// (`tests/integration_parallel.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_packed_on(
+    pool: &Pool,
+    hidden: &[f32],
+    weights: &PackedMlaWeights,
+    w_down: &[f32],   // (nh, l, dh)
+    kv_cache: &[f32], // (B, S, l)
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
     assert!(l % n == 0 && s % n == 0 && d % n == 0, "cluster must divide l, S, D");
     let (ls, ss, ds) = (l / n, s / n, d / n);
     let scale = 1.0 / (l as f32).sqrt();
@@ -97,19 +145,17 @@ pub fn execute_packed(
     let (wq_p, wkv_p, wo_p) = (&weights.wq, &weights.wkv, &weights.wo);
     assert!(wq_p.n_in() == d && wq_p.n_out() == nh * l && wo_p.n_out() == d);
 
-    // Scratch reused across heads/blocks/batch rows.
-    let mut scores: Vec<(usize, f32)> = Vec::new();
+    // Scratch reused across heads (serial sections only).
     let mut attn = vec![0f32; b * l];
 
     // ---- KV Projection segments + gather (shared by all heads; computed
-    // by the first cluster, broadcast via the latent cache write) ----
-    let kv_segs: Vec<Vec<f32>> = (0..n)
-        .map(|r| {
-            let mut seg = vec![0f32; b * ls];
-            linalg::matmul_rows(hidden, b, d, wkv_p, 0, r * ls, ls, &mut seg);
-            seg
-        })
-        .collect();
+    // by the first cluster, broadcast via the latent cache write); one
+    // pool task per cluster block ----
+    let kv_segs: Vec<Vec<f32>> = pool.run_map(n, |r| {
+        let mut seg = vec![0f32; b * ls];
+        linalg::matmul_rows(hidden, b, d, wkv_p, 0, r * ls, ls, &mut seg);
+        seg
+    });
     let (kv_gathered, gc_kv) = cluster_gather(&kv_segs, transport, hw, noc);
     report.dsmem_bytes += gc_kv.traffic_bytes;
     let mut kv_new = vec![0f32; b * l];
@@ -123,14 +169,13 @@ pub fn execute_packed(
     kv_new_g.copy_from_slice(&kv_new);
 
     for head in 0..nh {
-        // ---- absorbed Q projection segments + gather ----
-        let q_segs: Vec<Vec<f32>> = (0..n)
-            .map(|r| {
-                let mut seg = vec![0f32; b * ls];
-                linalg::matmul_rows(hidden, b, d, wq_p, 0, head * l + r * ls, ls, &mut seg);
-                seg
-            })
-            .collect();
+        // ---- absorbed Q projection segments + gather (one task per
+        // cluster block) ----
+        let q_segs: Vec<Vec<f32>> = pool.run_map(n, |r| {
+            let mut seg = vec![0f32; b * ls];
+            linalg::matmul_rows(hidden, b, d, wq_p, 0, head * l + r * ls, ls, &mut seg);
+            seg
+        });
         let (q_gathered, gc_q) = cluster_gather(&q_segs, transport, hw, noc);
         report.dsmem_bytes += gc_q.traffic_bytes;
         let mut q = vec![0f32; b * l];
@@ -142,11 +187,13 @@ pub fn execute_packed(
             }
         }
 
-        // ---- FlashDecoding partials over latent-cache spans ----
-        let mut m_bufs: Vec<Vec<f32>> = vec![vec![f32::NEG_INFINITY; b]; n];
-        let mut l_bufs: Vec<Vec<f32>> = vec![vec![0f32; b]; n];
-        let mut acc_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * l]; n];
-        for r in 0..n {
+        // ---- FlashDecoding partials over latent-cache spans, one task
+        // per cluster block ----
+        let partials: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
+            let mut m_row = vec![f32::NEG_INFINITY; b];
+            let mut l_row = vec![0f32; b];
+            let mut acc_row = vec![0f32; b * l];
+            let mut scores: Vec<(usize, f32)> = Vec::new();
             for bi in 0..b {
                 let valid = pos[bi];
                 let lo = r * ss;
@@ -161,7 +208,8 @@ pub fn execute_packed(
                 let end = hi.max(lo);
                 let mut t = lo;
                 while t + 4 <= end {
-                    let d4 = linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                    let d4 =
+                        linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
                     for (k, dv) in d4.iter().enumerate() {
                         scores.push((t + k, dv * scale));
                     }
@@ -188,7 +236,7 @@ pub fn execute_packed(
                     continue;
                 }
                 let mut lsum = 0f32;
-                let acc = &mut acc_bufs[r][bi * l..(bi + 1) * l];
+                let acc = &mut acc_row[bi * l..(bi + 1) * l];
                 for (t, sc) in &scores {
                     let p = (sc - m).exp();
                     lsum += p;
@@ -200,9 +248,18 @@ pub fn execute_packed(
                     lsum += p;
                     linalg::axpy(p, &kv_new[bi * l..(bi + 1) * l], acc);
                 }
-                m_bufs[r][bi] = m;
-                l_bufs[r][bi] = lsum;
+                m_row[bi] = m;
+                l_row[bi] = lsum;
             }
+            (m_row, l_row, acc_row)
+        });
+        let mut m_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut l_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut acc_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for (m_row, l_row, acc_row) in partials {
+            m_bufs.push(m_row);
+            l_bufs.push(l_row);
+            acc_bufs.push(acc_row);
         }
 
         // ---- stats + output reduces ----
@@ -233,28 +290,30 @@ pub fn execute_packed(
         }
 
         // ---- Down Projection: blocks partition the lora rank; partial
-        // (B, dh) results combined with ClusterReduce(sum) ----
-        let mut z_bufs: Vec<Vec<f32>> = (0..n)
-            .map(|r| {
-                let mut z = vec![0f32; b * dh];
-                for bi in 0..b {
-                    for j in 0..ls {
-                        let av = attn[bi * l + r * ls + j];
-                        let wrow = &w_down
-                            [head * l * dh + (r * ls + j) * dh..head * l * dh + (r * ls + j + 1) * dh];
-                        linalg::axpy(av, wrow, &mut z[bi * dh..(bi + 1) * dh]);
-                    }
+        // (B, dh) results combined with ClusterReduce(sum); one task per
+        // cluster block ----
+        let mut z_bufs: Vec<Vec<f32>> = pool.run_map(n, |r| {
+            let mut z = vec![0f32; b * dh];
+            for bi in 0..b {
+                for j in 0..ls {
+                    let av = attn[bi * l + r * ls + j];
+                    let wrow = &w_down
+                        [head * l * dh + (r * ls + j) * dh..head * l * dh + (r * ls + j + 1) * dh];
+                    linalg::axpy(av, wrow, &mut z[bi * dh..(bi + 1) * dh]);
                 }
-                z
-            })
-            .collect();
+            }
+            z
+        });
         let rc4 = cluster_reduce(&mut z_bufs, ReduceOp::Sum, transport, hw, noc);
         report.dsmem_bytes += rc4.traffic_bytes;
 
-        // ---- Output Projection tiles + atomicAdd ----
-        for r in 0..n {
+        // ---- Output Projection tiles + atomicAdd: block r computes its
+        // [r*ds, (r+1)*ds) column tile as a pool task; the merge adds
+        // each tile element once, in the serial (r, bi, j) order ----
+        let tiles: Vec<Vec<f32>> = pool.run_map(n, |r| {
+            let mut tile = vec![0f32; b * ds];
             for bi in 0..b {
-                linalg::matmul_rows_acc(
+                linalg::matmul_rows(
                     &z_bufs[r][bi * dh..(bi + 1) * dh],
                     1,
                     dh,
@@ -262,9 +321,15 @@ pub fn execute_packed(
                     head * dh,
                     r * ds,
                     ds,
-                    &mut out[bi * d..(bi + 1) * d],
-                    d,
+                    &mut tile[bi * ds..(bi + 1) * ds],
                 );
+            }
+            tile
+        });
+        for (r, tile) in tiles.iter().enumerate() {
+            for bi in 0..b {
+                let dst = &mut out[bi * d + r * ds..bi * d + (r + 1) * ds];
+                linalg::axpy(1.0, &tile[bi * ds..(bi + 1) * ds], dst);
             }
         }
     }

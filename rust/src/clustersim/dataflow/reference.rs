@@ -5,6 +5,7 @@
 //! as the original explicit loops (the bit-exactness contract).
 
 use crate::util::linalg;
+use crate::util::pool::Pool;
 
 /// Output of one attention-block decode step.
 #[derive(Debug, Clone, PartialEq)]
@@ -98,6 +99,49 @@ pub fn attention_block_ref(
     dh: usize,
     s: usize,
 ) -> AttnOut {
+    attention_block_ref_on(
+        &Pool::serial(),
+        hidden,
+        wq,
+        wk,
+        wv,
+        wo,
+        k_cache,
+        v_cache,
+        pos,
+        b,
+        d,
+        nh,
+        dh,
+        s,
+    )
+}
+
+/// [`attention_block_ref`] on a worker [`Pool`], parallel over **heads**:
+/// each head's masked-softmax attention ([`head_attention`] — the
+/// dominant cost, the full cache scan) is one pool task; the QKV
+/// projections and the per-head output-projection `gemm_acc` merge stay
+/// serial **in ascending head order**, preserving the serial oracle's
+/// exact `out` accumulation sequence — so this is byte-identical to
+/// [`attention_block_ref`] at every pool size
+/// (`tests/integration_parallel.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_block_ref_on(
+    pool: &Pool,
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+) -> AttnOut {
     let h = nh * dh;
     let mut q = vec![0f32; b * h];
     let mut k_new = vec![0f32; b * h];
@@ -106,8 +150,7 @@ pub fn attention_block_ref(
     gemm_acc(hidden, wk, &mut k_new, b, d, h);
     gemm_acc(hidden, wv, &mut v_new, b, d, h);
 
-    let mut out = vec![0f32; b * d];
-    for head in 0..nh {
+    let attns: Vec<Vec<f32>> = pool.run_map(nh, |head| {
         // slice this head's q / k_new / v_new columns
         let take = |src: &[f32]| -> Vec<f32> {
             let mut t = vec![0f32; b * dh];
@@ -118,10 +161,14 @@ pub fn attention_block_ref(
             t
         };
         let (qh, knh, vnh) = (take(&q), take(&k_new), take(&v_new));
-        let attn = head_attention(&qh, k_cache, v_cache, &knh, &vnh, pos, b, s, nh, dh, head);
+        head_attention(&qh, k_cache, v_cache, &knh, &vnh, pos, b, s, nh, dh, head)
+    });
+
+    let mut out = vec![0f32; b * d];
+    for (head, attn) in attns.iter().enumerate() {
         // out += attn_h @ wo[head*dh .. (head+1)*dh, :]
         let wo_head = &wo[head * dh * d..(head + 1) * dh * d];
-        gemm_acc(&attn, wo_head, &mut out, b, dh, d);
+        gemm_acc(attn, wo_head, &mut out, b, dh, d);
     }
     AttnOut { out, k_new, v_new }
 }

@@ -19,6 +19,7 @@ use crate::clustersim::collective::{cluster_reduce, reduce_cost, ReduceOp, Trans
 use crate::clustersim::hw::Hardware;
 use crate::clustersim::noc::Noc;
 use crate::util::linalg::{self, PackedWeight};
+use crate::util::pool::Pool;
 
 use super::reference::AttnOut;
 use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SETUP};
@@ -33,6 +34,58 @@ use super::{occupancy_mem_time, AttnProblem, CostEnv, CostReport, ELEM, PHASE_SE
 /// (`tests/integration_bitexact.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn execute(
+    hidden: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
+    execute_on(
+        &Pool::serial(),
+        hidden,
+        wq,
+        wk,
+        wv,
+        wo,
+        k_cache,
+        v_cache,
+        pos,
+        b,
+        d,
+        nh,
+        dh,
+        s,
+        n,
+        transport,
+        hw,
+        noc,
+    )
+}
+
+/// [`execute`] on a worker [`Pool`], parallel over **heads**: each
+/// head-cluster of Alg. 5 (register QKV segments → score reduce → local
+/// softmax + partial output projection → output reduce) is one
+/// independent pool task returning its new-K/V rows, its reduced
+/// (B, D) output partial and its two collectives' traffic; the main
+/// thread merges them in ascending head order — one f32 add per output
+/// element per head and the exact serial `dsmem_bytes` accumulation
+/// sequence — so the result is byte-identical to the serial path at
+/// every pool size (`tests/integration_parallel.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_on(
+    pool: &Pool,
     hidden: &[f32],
     wq: &[f32],
     wk: &[f32],
@@ -66,11 +119,10 @@ pub fn execute(
     let wk_p = PackedWeight::pack(wk, d, h);
     let wv_p = PackedWeight::pack(wv, d, h);
 
-    // Scratch reused across heads/blocks/batch rows.
-    let mut probs: Vec<f32> = Vec::new();
-    let mut a_row = vec![0f32; hs];
-
-    for head in 0..nh {
+    // One task per head-cluster: (k_rows, v_rows, o0, score-reduce
+    // bytes, output-reduce bytes).
+    type HeadOut = (Vec<f32>, Vec<f32>, Vec<f32>, f64, f64);
+    let heads: Vec<HeadOut> = pool.run_map(nh, |head| {
         // ---- per-block register QKV segments (Alg. 5 lines 1-2) ----
         // block r owns head-dim slice [r*hs, (r+1)*hs)
         let project = |pw: &PackedWeight, r: usize| -> Vec<f32> {
@@ -81,11 +133,15 @@ pub fn execute(
         let q_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wq_p, r)).collect();
         let k_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wk_p, r)).collect();
         let v_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wv_p, r)).collect();
+        // this head's new K/V rows, (B, dh) — merged into the global
+        // (B, H) layout by the caller
+        let mut k_rows = vec![0f32; b * dh];
+        let mut v_rows = vec![0f32; b * dh];
         for r in 0..n {
             for bi in 0..b {
-                let dst = bi * h + head * dh + r * hs;
-                k_new_g[dst..dst + hs].copy_from_slice(&k_segs[r][bi * hs..(bi + 1) * hs]);
-                v_new_g[dst..dst + hs].copy_from_slice(&v_segs[r][bi * hs..(bi + 1) * hs]);
+                let dst = bi * dh + r * hs;
+                k_rows[dst..dst + hs].copy_from_slice(&k_segs[r][bi * hs..(bi + 1) * hs]);
+                v_rows[dst..dst + hs].copy_from_slice(&v_segs[r][bi * hs..(bi + 1) * hs]);
             }
         }
 
@@ -104,7 +160,13 @@ pub fn execute(
                     let valid = pos[bi];
                     let mut t = 0;
                     while t + 4 <= valid {
-                        let d4 = linalg::dot4(qseg, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                        let d4 = linalg::dot4(
+                            qseg,
+                            row_at(t),
+                            row_at(t + 1),
+                            row_at(t + 2),
+                            row_at(t + 3),
+                        );
                         for (k, dv) in d4.iter().enumerate() {
                             sc[bi * (s + 1) + t + k] = dv * scale;
                         }
@@ -124,10 +186,11 @@ pub fn execute(
 
         // ---- ClusterReduce(sum) of the S-sized score row ----
         let rc = cluster_reduce(&mut score_bufs, ReduceOp::Sum, transport, hw, noc);
-        report.dsmem_bytes += rc.traffic_bytes;
 
         // ---- local softmax (identical in every block), A_b over the
         // block's V slice, partial output projection (lines 3-4) ----
+        let mut probs: Vec<f32> = Vec::new();
+        let mut a_row = vec![0f32; hs];
         let mut o_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * d]; n];
         for r in 0..n {
             for bi in 0..b {
@@ -166,12 +229,22 @@ pub fn execute(
 
         // ---- ClusterReduce(sum) of the D-sized partial output (line 5) ----
         let rc2 = cluster_reduce(&mut o_bufs, ReduceOp::Sum, transport, hw, noc);
-        report.dsmem_bytes += rc2.traffic_bytes;
+        let o0 = std::mem::take(&mut o_bufs[0]);
+        (k_rows, v_rows, o0, rc.traffic_bytes, rc2.traffic_bytes)
+    });
 
-        // atomicAdd into global output (line 6); rank 0 writes
-        for bi in 0..b * d {
-            out[bi] += o_bufs[0][bi];
+    // Serial merge in ascending head order — the serial loop's exact
+    // accumulation sequence for out and dsmem_bytes.
+    for (head, (k_rows, v_rows, o0, sc_bytes, out_bytes)) in heads.iter().enumerate() {
+        for bi in 0..b {
+            let dst = bi * h + head * dh;
+            k_new_g[dst..dst + dh].copy_from_slice(&k_rows[bi * dh..(bi + 1) * dh]);
+            v_new_g[dst..dst + dh].copy_from_slice(&v_rows[bi * dh..(bi + 1) * dh]);
         }
+        report.dsmem_bytes += sc_bytes;
+        report.dsmem_bytes += out_bytes;
+        // atomicAdd into global output (line 6); rank 0 writes
+        linalg::axpy(1.0, o0, &mut out);
     }
 
     (AttnOut { out, k_new: k_new_g, v_new: v_new_g }, report)

@@ -23,6 +23,7 @@ use crate::clustersim::collective::{
 use crate::clustersim::hw::Hardware;
 use crate::clustersim::noc::Noc;
 use crate::util::linalg::{self, PackedWeight};
+use crate::util::pool::Pool;
 
 use super::reference::AttnOut;
 use super::{
@@ -96,6 +97,32 @@ pub fn execute_packed(
     )
 }
 
+/// [`execute_packed`] on a worker [`Pool`]: the cluster blocks — the
+/// paper's unit of independent work — map onto host threads (DESIGN.md
+/// §Parallel). Byte-identical to the serial path at every pool size.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_packed_on(
+    pool: &Pool,
+    hidden: &[f32],
+    weights: &PackedMhaWeights,
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
+    execute_packed_rope_on(
+        pool, hidden, weights, k_cache, v_cache, pos, b, d, nh, dh, s, n, transport, hw, noc, None,
+    )
+}
+
 /// [`execute_packed`] with optional rotary position embedding — the
 /// dataflow glue the block pipeline (`clustersim::block`) composes with:
 /// after the cluster gather assembles the full per-head Q and the new K
@@ -106,6 +133,56 @@ pub fn execute_packed(
 /// scalar suite (`tests/integration_bitexact.rs`) pins that path.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_packed_rope(
+    hidden: &[f32],
+    weights: &PackedMhaWeights,
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+    rope_base: Option<f32>,
+) -> (AttnOut, CostReport) {
+    execute_packed_rope_on(
+        &Pool::serial(),
+        hidden,
+        weights,
+        k_cache,
+        v_cache,
+        pos,
+        b,
+        d,
+        nh,
+        dh,
+        s,
+        n,
+        transport,
+        hw,
+        noc,
+        rope_base,
+    )
+}
+
+/// [`execute_packed_rope`] on a worker [`Pool`]. Within each head's
+/// cluster, the three block-parallel phases — QKV projection segments,
+/// FlashDecoding partials over the KV spans, and the output-projection
+/// column tiles — fan their `n` cluster blocks across the pool
+/// ([`Pool::run_map`], results in block order); the collectives between
+/// them (gather, the three reduces) and the atomicAdd merge stay on the
+/// calling thread, in the serial code's exact order. Every output
+/// element keeps its single in-order accumulation chain, so the result
+/// is **byte-identical** to the serial path at every pool size
+/// (`tests/integration_parallel.rs`); a serial pool runs the identical
+/// loops inline.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_packed_rope_on(
+    pool: &Pool,
     hidden: &[f32],
     weights: &PackedMhaWeights,
     k_cache: &[f32],
@@ -135,35 +212,28 @@ pub fn execute_packed_rope(
     let mut report = CostReport::default();
     report.launches = 1; // the whole block is ONE fused kernel
 
-    // Scratch reused across heads/blocks/batch rows (allocation-free
-    // inner loops).
-    let mut scores: Vec<(usize, f32)> = Vec::new();
-    let mut attn_row = vec![0f32; dh];
-
     for head in 0..nh {
-        // ---- Stage 1: per-block QKV projection segments (Alg. 3 line 2) ----
-        // Block `r` computes columns [head*dh + r*hs, head*dh + (r+1)*hs).
-        let project = |pw: &PackedWeight| -> Vec<Vec<f32>> {
-            (0..n)
-                .map(|r| {
-                    let mut seg = vec![0f32; b * hs];
-                    linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
-                    seg
-                })
-                .collect()
-        };
-        let q_segs = project(wq_p);
-        let k_segs = project(wk_p);
-        let v_segs = project(wv_p);
+        // ---- Stage 1: per-block QKV projection segments (Alg. 3 line 2),
+        // one pool task per cluster block r, which computes columns
+        // [head*dh + r*hs, head*dh + (r+1)*hs) of all three projections ----
+        let segs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
+            let project = |pw: &PackedWeight| -> Vec<f32> {
+                let mut seg = vec![0f32; b * hs];
+                linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
+                seg
+            };
+            (project(wq_p), project(wk_p), project(wv_p))
+        });
 
         // ---- ClusterGather of Q/K/V (Alg. 3 line 3): one gather of the
         // concatenated 3h-sized segment per block ----
         let cat: Vec<Vec<f32>> = (0..n)
             .map(|r| {
+                let (q_seg, k_seg, v_seg) = &segs[r];
                 let mut c = Vec::with_capacity(3 * b * hs);
-                c.extend_from_slice(&q_segs[r]);
-                c.extend_from_slice(&k_segs[r]);
-                c.extend_from_slice(&v_segs[r]);
+                c.extend_from_slice(q_seg);
+                c.extend_from_slice(k_seg);
+                c.extend_from_slice(v_seg);
                 c
             })
             .collect();
@@ -213,11 +283,13 @@ pub fn execute_packed_rope(
         }
 
         // ---- Stage 2: FlashDecoding partials over each block's KV span
-        // (Alg. 3 line 4), block n-1 also owns the self token ----
-        let mut m_bufs: Vec<Vec<f32>> = vec![vec![f32::NEG_INFINITY; b]; n];
-        let mut l_bufs: Vec<Vec<f32>> = vec![vec![0f32; b]; n];
-        let mut acc_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * dh]; n];
-        for r in 0..n {
+        // (Alg. 3 line 4), one pool task per cluster block; block n-1
+        // also owns the self token ----
+        let partials: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
+            let mut m_row = vec![f32::NEG_INFINITY; b];
+            let mut l_row = vec![0f32; b];
+            let mut acc_row = vec![0f32; b * dh];
+            let mut scores: Vec<(usize, f32)> = Vec::new();
             for bi in 0..b {
                 let valid = pos[bi];
                 let lo = r * ss;
@@ -234,7 +306,8 @@ pub fn execute_packed_rope(
                 let end = hi.max(lo);
                 let mut t = lo;
                 while t + 4 <= end {
-                    let d4 = linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                    let d4 =
+                        linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
                     for (k, dv) in d4.iter().enumerate() {
                         scores.push((t + k, dv * scale));
                     }
@@ -261,7 +334,7 @@ pub fn execute_packed_rope(
                     continue; // nothing valid in this span
                 }
                 let mut l = 0f32;
-                let acc = &mut acc_bufs[r][bi * dh..(bi + 1) * dh];
+                let acc = &mut acc_row[bi * dh..(bi + 1) * dh];
                 for (t, sc) in &scores {
                     let p = (sc - m).exp();
                     l += p;
@@ -273,9 +346,18 @@ pub fn execute_packed_rope(
                     l += p;
                     linalg::axpy(p, &v_new[bi * dh..(bi + 1) * dh], acc);
                 }
-                m_bufs[r][bi] = m;
-                l_bufs[r][bi] = l;
+                m_row[bi] = m;
+                l_row[bi] = l;
             }
+            (m_row, l_row, acc_row)
+        });
+        let mut m_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut l_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut acc_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for (m_row, l_row, acc_row) in partials {
+            m_bufs.push(m_row);
+            l_bufs.push(l_row);
+            acc_bufs.push(acc_row);
         }
 
         // ---- ClusterReduce of softmax stats (Alg. 3 lines 5-6) ----
@@ -302,15 +384,21 @@ pub fn execute_packed_rope(
         report.dsmem_bytes += rc3.traffic_bytes;
 
         // ---- Stage 3: per-block Output Projection tile + atomicAdd
-        // (Alg. 3 line 8): block r computes columns [r*ds, (r+1)*ds) ----
-        for r in 0..n {
+        // (Alg. 3 line 8): block r computes columns [r*ds, (r+1)*ds) as a
+        // pool task into a private tile; the atomicAdd merge below adds
+        // each tile element once, in the serial (r, bi, j ascending)
+        // order — the same single f32 add per output the serial
+        // matmul_rows_acc performed ----
+        let tiles: Vec<Vec<f32>> = pool.run_map(n, |r| {
+            let mut tile = vec![0f32; b * ds];
+            let mut attn_row = vec![0f32; dh];
             for bi in 0..b {
                 linalg::scale_div(
                     &acc_bufs[r][bi * dh..(bi + 1) * dh],
                     l_bufs[r][bi],
                     &mut attn_row,
                 );
-                linalg::matmul_rows_acc(
+                linalg::matmul_rows(
                     &attn_row,
                     1,
                     dh,
@@ -318,9 +406,15 @@ pub fn execute_packed_rope(
                     head * dh,
                     r * ds,
                     ds,
-                    &mut out[bi * d..(bi + 1) * d],
-                    d,
-                ); // atomicAdd
+                    &mut tile[bi * ds..(bi + 1) * ds],
+                );
+            }
+            tile
+        });
+        for (r, tile) in tiles.iter().enumerate() {
+            for bi in 0..b {
+                let dst = &mut out[bi * d + r * ds..bi * d + (r + 1) * ds];
+                linalg::axpy(1.0, &tile[bi * ds..(bi + 1) * ds], dst); // atomicAdd
             }
         }
     }

@@ -59,6 +59,12 @@ pub struct ServeConfig {
     /// Cluster size of the functional full-block pipeline (must divide
     /// the model geometry; `clustersim::block::supports_cluster`).
     pub cluster_size: usize,
+    /// Host worker threads of the functional pipeline's pool
+    /// (DESIGN.md §Parallel). `0` = auto: the `CLUSTERFUSION_THREADS`
+    /// override, else the host's available parallelism. Token streams
+    /// are byte-identical at every value — this is a wall-clock knob.
+    /// Virtual-clock replay runs pin 1 (the §4 determinism rule).
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -75,6 +81,7 @@ impl Default for ServeConfig {
             max_queue: 1024,
             backend: BackendKind::Functional,
             cluster_size: 2,
+            threads: 0,
         }
     }
 }
@@ -94,6 +101,7 @@ impl ServeConfig {
             "max_queue" => self.max_queue = v.parse().context("max_queue")?,
             "backend" => self.backend = BackendKind::parse(v)?,
             "cluster_size" => self.cluster_size = v.parse().context("cluster_size")?,
+            "threads" => self.threads = v.parse().context("threads")?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -132,6 +140,13 @@ impl ServeConfig {
         anyhow::ensure!(
             self.cluster_size.is_power_of_two() && (1..=16).contains(&self.cluster_size),
             "cluster_size must be a power of two in 1..=16"
+        );
+        // the pool spawns per call; an absurd width would ask the OS for
+        // thousands of threads per kernel (Pool::new also clamps)
+        anyhow::ensure!(
+            self.threads <= crate::util::pool::MAX_THREADS,
+            "threads must be 0 (auto) or at most {}",
+            crate::util::pool::MAX_THREADS
         );
         Ok(())
     }
@@ -176,6 +191,29 @@ mod tests {
         assert!(c.validate().is_err());
         c.pool_pages = 16;
         c.cluster_size = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn threads_key_round_trips_and_flags_take_precedence() {
+        // default is auto (0)
+        assert_eq!(ServeConfig::default().threads, 0);
+        // config-file text sets it ...
+        let mut c = ServeConfig::default();
+        c.apply_text("threads = 2\n").unwrap();
+        assert_eq!(c.threads, 2);
+        c.validate().unwrap();
+        // ... and a later CLI-style assignment (the serve flag path
+        // applies file first, then flags) overrides the file value.
+        c.set("threads", "8").unwrap();
+        assert_eq!(c.threads, 8);
+        assert!(c.set("threads", "not-a-number").is_err());
+        // 0 stays valid: auto-sizing
+        c.set("threads", "0").unwrap();
+        c.validate().unwrap();
+        // absurd widths are rejected with a readable error, not by
+        // exhausting OS threads mid-serve
+        c.threads = 500_000;
         assert!(c.validate().is_err());
     }
 

@@ -19,6 +19,7 @@ use anyhow::{Context, Result};
 use crate::clustersim::block::{supports_cluster, BlockModel};
 use crate::clustersim::collective::Transport;
 use crate::models::{MaterializedWeights, ModelConfig};
+use crate::util::pool::Pool;
 
 use super::engine::{Backend, ModelGeom, StepOut};
 
@@ -38,19 +39,31 @@ pub const MAX_FUNCTIONAL_PARAMS: usize = 250_000_000;
 pub struct FunctionalBackend {
     model: BlockModel,
     buckets: Vec<usize>,
+    /// The worker pool every decode step runs on (DESIGN.md §Parallel).
+    /// Serial by default; sized via [`Self::from_model_name_on`] /
+    /// [`Self::set_threads`]. All functional outputs are byte-identical
+    /// at every pool size, so threading changes wall-clock only.
+    pool: Pool,
     /// Decode steps executed (observability parity with `MockBackend`).
     pub steps: u64,
+    /// Per-slot merged per-shard argmax of the last step's logits
+    /// (`BlockModel::decode_step_on`): what a greedy sampler will pick,
+    /// exposed for observability and the speculative-decode direction.
+    pub last_greedy: Vec<usize>,
 }
 
 impl FunctionalBackend {
+    /// Serial-pool backend — the deterministic default. Virtual-clock
+    /// replay (`loadgen::replay`) constructs its backends through this
+    /// path: the DESIGN.md §4 determinism rule pins `threads = 1` there.
     pub fn new(model: BlockModel, buckets: Vec<usize>) -> Self {
         assert!(!buckets.is_empty(), "need at least one batch bucket");
-        Self { model, buckets, steps: 0 }
+        Self { model, buckets, pool: Pool::serial(), steps: 0, last_greedy: Vec::new() }
     }
 
     /// Materialize `model_name`'s weights from `seed` and pack them for
     /// `cluster_size` (must divide the model's geometry —
-    /// [`supports_cluster`]). Default buckets 1/2/4/8.
+    /// [`supports_cluster`]). Default buckets 1/2/4/8, serial pool.
     pub fn from_model_name(model_name: &str, seed: u64, cluster_size: usize) -> Result<Self> {
         let cfg = ModelConfig::by_name(model_name)
             .with_context(|| format!("unknown model '{model_name}'"))?;
@@ -71,6 +84,59 @@ impl FunctionalBackend {
         Ok(Self::new(model, DEFAULT_BUCKETS.to_vec()))
     }
 
+    /// [`Self::from_model_name`] with an explicit worker count: the
+    /// `serve --threads` path. `threads == 0` means auto
+    /// ([`Pool::auto_threads`]: the `CLUSTERFUSION_THREADS` override,
+    /// else the host's available parallelism).
+    pub fn from_model_name_on(
+        model_name: &str,
+        seed: u64,
+        cluster_size: usize,
+        threads: usize,
+    ) -> Result<Self> {
+        let mut backend = Self::from_model_name(model_name, seed, cluster_size)?;
+        backend.set_threads(threads);
+        Ok(backend)
+    }
+
+    /// Resize the worker pool (`0` = auto). Purely a wall-clock knob:
+    /// token streams are byte-identical at every size.
+    ///
+    /// Auto-sizing gates on the model's per-task work
+    /// (`pool::MIN_TASK_MACS`): the micro models' cluster-block tasks
+    /// are a few thousand MACs, far below the cost of a thread spawn,
+    /// so a default `serve`/quickstart on them stays serial instead of
+    /// regressing behind spawn overhead. Both explicit widths win over
+    /// the gate: `--threads N` and a set `CLUSTERFUSION_THREADS` are
+    /// honoured verbatim (the CI matrix legs rely on the latter).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.pool = if threads == 0 {
+            match Pool::env_threads() {
+                Some(n) => Pool::new(n),
+                None if self.parallel_worthwhile() => Pool::auto(),
+                None => Pool::serial(),
+            }
+        } else {
+            Pool::new(threads)
+        };
+    }
+
+    /// Whether one cluster-block task of this model's attention fan-out
+    /// (projection + cache-span scan + output tile, batch 1 — the
+    /// worst case) carries enough work to amortise a spawn.
+    fn parallel_worthwhile(&self) -> bool {
+        let cfg = self.model.config();
+        let n = self.model.cluster_size;
+        let (d, dh, s) = (cfg.d_model, cfg.head_dim, cfg.max_seq);
+        let per_block = 3 * d * (dh / n) + 2 * (s / n) * self.model.row_elems() + dh * (d / n);
+        per_block >= crate::util::pool::MIN_TASK_MACS
+    }
+
+    /// Active host worker threads (what serve/quickstart banners report).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
     pub fn config(&self) -> &ModelConfig {
         self.model.config()
     }
@@ -81,7 +147,7 @@ impl FunctionalBackend {
         let cfg = self.model.config();
         format!(
             "functional full-block pipeline: {} ({:?}, {} layers, d_model {}, vocab {}, \
-             cluster {}, {})",
+             cluster {}, {}, {} host thread{})",
             cfg.name,
             cfg.attn,
             cfg.n_layers,
@@ -89,6 +155,8 @@ impl FunctionalBackend {
             cfg.vocab,
             self.model.cluster_size,
             if self.model.rope_base.is_some() { "rope" } else { "nope" },
+            self.pool.threads(),
+            if self.pool.threads() == 1 { "" } else { "s" },
         )
     }
 }
@@ -117,8 +185,10 @@ impl Backend for FunctionalBackend {
         cache_planes: &[Vec<f32>],
     ) -> Result<StepOut> {
         anyhow::ensure!(tokens.len() == bucket && pos.len() == bucket, "padded batch inputs");
-        let (logits, new_rows) = self.model.decode_step(tokens, pos, cache_planes, bucket);
+        let (logits, new_rows, greedy) =
+            self.model.decode_step_on(&self.pool, tokens, pos, cache_planes, bucket);
         self.steps += 1;
+        self.last_greedy = greedy;
         Ok(StepOut { logits, new_rows })
     }
 }
@@ -177,6 +247,52 @@ mod tests {
         engine.submit(Request::new(1, vec![1, 2], 3));
         engine.run_to_completion(64).unwrap();
         assert_eq!(engine.tokens_out, 3);
+    }
+
+    #[test]
+    fn step_exposes_sharded_greedy_matching_argmax_at_every_pool_size() {
+        let geom_of = |b: &FunctionalBackend| b.geom();
+        let mut want: Option<(Vec<u32>, Vec<usize>)> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let mut backend = FunctionalBackend::from_model_name_on("micro-llama", 7, 2, threads)
+                .unwrap();
+            assert_eq!(backend.threads(), threads);
+            let g = geom_of(&backend);
+            let bucket = 2usize;
+            let planes =
+                vec![vec![0f32; g.n_layers * bucket * g.max_seq * g.row_elems]; g.planes];
+            let out = backend.step(bucket, &[3, 9], &[0, 0], &planes).unwrap();
+            // last_greedy is the sharded-argmax merge — must equal the
+            // full-row argmax, and both must be pool-size invariant
+            let greedy: Vec<usize> = (0..bucket)
+                .map(|bi| crate::runtime::argmax(&out.logits[bi * g.vocab..(bi + 1) * g.vocab]))
+                .collect();
+            assert_eq!(backend.last_greedy, greedy, "threads={threads}");
+            let bits: Vec<u32> = out.logits.iter().map(|v| v.to_bits()).collect();
+            match &want {
+                None => want = Some((bits, greedy)),
+                Some((wb, wg)) => {
+                    assert_eq!(&bits, wb, "logits must be byte-identical, threads={threads}");
+                    assert_eq!(&greedy, wg, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_threads_stay_serial_on_micro_models_but_explicit_wins() {
+        // micro-llama's cluster-block tasks are ~KMACs — far below a
+        // spawn's cost — so auto (0) resolves to the serial pool,
+        // unless CLUSTERFUSION_THREADS explicitly asks for a width
+        // (the CI matrix legs do; both overrides beat the gate).
+        let auto = FunctionalBackend::from_model_name_on("micro-llama", 42, 2, 0).unwrap();
+        match crate::util::pool::Pool::env_threads() {
+            None => assert_eq!(auto.threads(), 1, "auto must not pool a micro model"),
+            Some(n) => assert_eq!(auto.threads(), n, "env width must win over the gate"),
+        }
+        // ... and an explicit width is honoured verbatim.
+        let forced = FunctionalBackend::from_model_name_on("micro-llama", 42, 2, 4).unwrap();
+        assert_eq!(forced.threads(), 4);
     }
 
     #[test]

@@ -10,7 +10,14 @@
 //!   replay loop is the only writer of time, charging a [`ServiceModel`]
 //!   cost per decode step, so two runs at the same seed produce
 //!   byte-identical percentile reports (the `integration_load` contract).
-//!   With a `WallClock` the same loop paces real submissions.
+//!   With a `WallClock` the same loop paces real submissions. The
+//!   DESIGN.md §4 rule — virtual-clock runs are single-threaded by
+//!   construction — extends to the backend's worker pool: a
+//!   `FunctionalBackend` driven by virtual-clock replay keeps its
+//!   default **serial** pool (`threads = 1`; `FunctionalBackend::new` /
+//!   `from_model_name`). Functional outputs are byte-identical at every
+//!   pool size (§Parallel), so this costs nothing but keeps the rule
+//!   auditable: one thread, one writer of time.
 //! * [`pace_submit`] — paces submissions to a threaded [`Server`] on the
 //!   wall clock (used by `clusterfusion serve` and `examples/serve_trace`).
 //!   Virtual time is never combined with the threaded server: determinism

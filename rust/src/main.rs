@@ -58,6 +58,7 @@ fn usage() -> ! {
          commands:\n\
          \x20 serve             --model NAME --requests N --rps R\n\
          \x20                   [--backend functional|pjrt|mock] [--mock]\n\
+         \x20                   [--threads N]  (0 = auto; functional backend)\n\
          \x20                   [--config FILE] [--set k=v]  (default: functional)\n\
          \x20 simulate          --model NAME [--seq N] [--batch N] [--cluster N]\n\
          \x20 inspect-artifacts [--artifacts DIR]\n\
@@ -137,6 +138,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(b) = flags.get("backend") {
         cfg.backend = BackendKind::parse(b)?;
     }
+    if let Some(t) = flags.get("threads") {
+        cfg.threads = t.parse().context("--threads expects an integer (0 = auto)")?;
+    }
     if flags.contains_key("mock") {
         cfg.backend = BackendKind::Mock;
     }
@@ -154,8 +158,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // degrades to the mock (it hides behind --mock / --backend mock).
     match cfg.backend {
         BackendKind::Functional => {
-            let backend =
-                FunctionalBackend::from_model_name(&cfg.model, cfg.seed, cfg.cluster_size)?;
+            let backend = FunctionalBackend::from_model_name_on(
+                &cfg.model,
+                cfg.seed,
+                cfg.cluster_size,
+                cfg.threads,
+            )?;
+            // describe() carries the active thread count (--threads N /
+            // threads=N, 0 = auto; outputs byte-identical at every size)
             eprintln!("backend: {}", backend.describe());
             serve_backend(backend, &cfg, n_requests, rps)
         }

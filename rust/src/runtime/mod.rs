@@ -219,14 +219,19 @@ pub fn artifacts_ready(dir: impl AsRef<Path>) -> bool {
     dir.as_ref().join("manifest.json").exists() && pjrt_available()
 }
 
-/// Greedy (argmax) sampling from a logits row.
+/// Greedy (argmax) sampling from a logits row. Ties break to the
+/// **lowest index** (numpy convention) under `f32::total_cmp`, so the
+/// result matches the sharded logits head's per-shard argmax merge
+/// (`clustersim::block`) exactly — shards scan ascending vocab windows
+/// and only a *strictly greater* value displaces the running best.
 pub fn argmax(logits: &[f32]) -> usize {
-    logits
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.total_cmp(b.1))
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+    let mut best = 0usize;
+    for (i, v) in logits.iter().enumerate().skip(1) {
+        if v.total_cmp(&logits[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -238,6 +243,14 @@ mod tests {
         assert_eq!(argmax(&[0.1, 3.0, -2.0, 2.9]), 1);
         assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
         assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_ties_break_to_lowest_index() {
+        assert_eq!(argmax(&[1.0, 2.0, 2.0, 2.0, 0.5]), 1);
+        assert_eq!(argmax(&[3.0, 3.0]), 0);
+        // total_cmp: -0.0 < +0.0, so +0.0 at a later index still wins
+        assert_eq!(argmax(&[-0.0, 0.0]), 1);
     }
 
     #[test]

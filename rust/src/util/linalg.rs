@@ -223,10 +223,18 @@ pub fn matmul_rows(
     }
 }
 
-/// Accumulating variant for output-projection tiles (the dataflows'
-/// atomicAdd): `out[bi * out_stride + col0 + j] += Σ_i x_row · col` with
-/// the same in-order contract. `x` is `(b, n_in)` row-major, `out` rows
-/// are `out_stride` wide and indexed by absolute column.
+/// Accumulating variant: `out[bi * out_stride + col0 + j] += Σ_i x_row ·
+/// col` with the same in-order contract. `x` is `(b, n_in)` row-major,
+/// `out` rows are `out_stride` wide and indexed by absolute column.
+///
+/// Since the §Parallel refactor the dataflows' output-projection
+/// atomicAdd no longer calls this directly — they compute per-block
+/// tiles with [`matmul_rows`] and merge with one `axpy(1.0, …)` add per
+/// element, which is bit-identical (each output received exactly one add
+/// of a completed dot here too). Kept as the reference accumulating
+/// kernel: its unit test is the executable statement of that
+/// equivalence, and one-shot callers that want fused accumulate-in-place
+/// still have it.
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_rows_acc(
     x: &[f32],
@@ -300,6 +308,53 @@ pub fn silu_mul(gate: &[f32], up: &[f32], out: &mut [f32]) {
     for i in 0..gate.len() {
         let g = gate[i];
         out[i] = g / (1.0 + (-g).exp()) * up[i];
+    }
+}
+
+/// [`matmul_rows`] distributed over a worker pool: output columns are
+/// partitioned into one contiguous window per worker (the §Parallel
+/// independent-output axis), each window computed by the identical
+/// [`col_tile_dots`] kernel into a private block, and the blocks are
+/// scattered into `out` serially.
+///
+/// Bit-exactness: every output column is the same single in-order
+/// accumulator chain as in [`matmul_rows`] — window boundaries only
+/// change which columns *share activation loads*, never any column's
+/// sum — so the result is byte-identical to the serial kernel at every
+/// pool size (pinned by `tests/integration_parallel.rs`). A serial pool
+/// (or a single worker) takes the inline [`matmul_rows`] path directly.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_rows_pooled(
+    pool: &crate::util::pool::Pool,
+    x: &[f32],
+    b: usize,
+    n_in: usize,
+    pw: &PackedWeight,
+    in0: usize,
+    col0: usize,
+    ncols: usize,
+    out: &mut [f32],
+) {
+    if pool.threads() == 1 || ncols <= 1 {
+        matmul_rows(x, b, n_in, pw, in0, col0, ncols, out);
+        return;
+    }
+    assert!(out.len() >= b * ncols);
+    // Each worker runs the one serial kernel on its column sub-window —
+    // a (col0 + c0, span) view is just a narrower matmul_rows call, so
+    // there is exactly one copy of the tiled loop to keep correct.
+    let blocks = pool.run_ranges(ncols, |c0, c1| {
+        let span = c1 - c0;
+        let mut block = vec![0f32; b * span];
+        matmul_rows(x, b, n_in, pw, in0, col0 + c0, span, &mut block);
+        (c0, block)
+    });
+    for (c0, block) in blocks {
+        let span = block.len() / b;
+        for bi in 0..b {
+            out[bi * ncols + c0..bi * ncols + c0 + span]
+                .copy_from_slice(&block[bi * span..(bi + 1) * span]);
+        }
     }
 }
 
@@ -393,6 +448,28 @@ mod tests {
         let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
         let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
         assert_eq!(gb, wb);
+    }
+
+    #[test]
+    fn matmul_rows_pooled_bitexact_at_every_pool_size() {
+        use crate::util::pool::Pool;
+        let mut rng = Rng::seed_from_u64(29);
+        for &(b, n_in, n_out) in &[(1usize, 16usize, 9usize), (2, 33, 21), (3, 64, 5)] {
+            let x = randv(&mut rng, b * n_in, 2.0);
+            let w = randv(&mut rng, n_in * n_out, 0.5);
+            let pw = PackedWeight::pack(&w, n_in, n_out);
+            let (col0, ncols) = (1usize, n_out - 1);
+            let mut want = vec![0f32; b * ncols];
+            matmul_rows(&x, b, n_in, &pw, 0, col0, ncols, &mut want);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            for threads in [1usize, 2, 4, 8] {
+                let pool = Pool::new(threads);
+                let mut got = vec![0f32; b * ncols];
+                matmul_rows_pooled(&pool, &x, b, n_in, &pw, 0, col0, ncols, &mut got);
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "b={b} n_in={n_in} n_out={n_out} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -8,4 +8,5 @@ pub mod bench;
 pub mod clock;
 pub mod json;
 pub mod linalg;
+pub mod pool;
 pub mod rng;

@@ -1,0 +1,301 @@
+//! Deterministic scoped worker pool — the host-side analogue of the
+//! paper's cluster blocks (§Parallel in DESIGN.md).
+//!
+//! The functional stack has exactly one parallelism story: *independent
+//! output ranges* (cluster blocks over KV partitions, heads, MLP/logits
+//! columns) are distributed across host threads, while every individual
+//! output keeps its single in-order accumulation chain (the PR 3
+//! bit-exactness contract). This module is the one place that
+//! distribution is implemented; call sites only say *which axis* is
+//! independent:
+//!
+//! * [`Pool::run`] — `ParallelFor` over `0..n_items` for side effects;
+//! * [`Pool::run_map`] — the same, collecting one result per item **in
+//!   item order** (how the dataflows return per-block/per-head partials
+//!   that the caller merges in the serial code's order);
+//! * [`Pool::run_ranges`] — one contiguous `[lo, hi)` range per worker
+//!   (how the matmul/logits kernels keep their column-tile loops).
+//!
+//! **Determinism contract.** The partition of `0..n_items` into worker
+//! ranges depends only on `(n_items, threads)` — never on scheduling —
+//! and results are collected in item order, so any merge the caller
+//! performs happens in the same order at every pool size. Workers never
+//! share mutable state; a task that needs scratch allocates its own.
+//! Consequently `f32`/`f64` results are byte-identical across pool sizes
+//! 1/2/4/8/… (pinned by `tests/integration_parallel.rs`).
+//!
+//! **Panics** in any task propagate to the caller (the scope joins every
+//! worker, then re-raises the first payload). At `threads == 1` — or
+//! when `n_items` is 0 or 1 — everything runs inline on the caller's
+//! thread: no spawns, the exact serial code path.
+//!
+//! Workers are scoped `std::thread`s spawned per call (dependency-free,
+//! borrows allowed in tasks). Spawn cost is ~tens of µs per worker, so
+//! parallelise work units of ≥ ~100 µs; a persistent-worker pool is the
+//! documented upgrade path if profiles ever show spawn overhead
+//! dominating (DESIGN.md §Parallel).
+
+/// Per-task work (multiply-accumulates, ~50–100 µs scalar) below which
+/// a scoped spawn (~10–20 µs on conventional hosts, far more on some
+/// virtualised ones) cannot pay for itself. Owners that *auto*-size
+/// their pool check their workload against this before going wide
+/// (`FunctionalBackend::set_threads`); explicitly sized pools are never
+/// second-guessed — benches and the invariance tests pick their own
+/// widths.
+pub const MIN_TASK_MACS: usize = 1 << 16;
+
+/// Hard ceiling on pool width. Spawning is per `run*` call, so an
+/// absurd width would attempt thousands of OS threads per kernel call
+/// and abort the process when the OS refuses one; no machine this
+/// simulator targets benefits beyond this. `ServeConfig::validate`
+/// rejects larger `threads` values with a readable error; the
+/// constructor clamps as the last line of defence.
+pub const MAX_THREADS: usize = 512;
+
+/// A fixed-width worker pool. Cheap to construct; holds no threads
+/// between calls.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool of exactly `threads` workers (clamped to
+    /// `1..=`[`MAX_THREADS`]).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.clamp(1, MAX_THREADS) }
+    }
+
+    /// The inline pool: every `run*` degrades to the serial loop.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Pool sized by [`Self::auto_threads`] (the `CLUSTERFUSION_THREADS`
+    /// override, else the host's available parallelism).
+    pub fn auto() -> Self {
+        Self::new(Self::auto_threads())
+    }
+
+    /// The explicit `CLUSTERFUSION_THREADS` override, when set to a
+    /// positive integer (the CI matrix legs set it). An explicit env
+    /// width wins over every auto heuristic, including the
+    /// [`MIN_TASK_MACS`] work-size gate.
+    pub fn env_threads() -> Option<usize> {
+        std::env::var("CLUSTERFUSION_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    }
+
+    /// Default worker count: [`Self::env_threads`] if set, otherwise
+    /// `std::thread::available_parallelism()`, otherwise 1.
+    pub fn auto_threads() -> usize {
+        Self::env_threads()
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Deterministic contiguous partition: worker `w` of `workers` owns
+    /// `[w·n/workers, (w+1)·n/workers)` — a pure function of the inputs.
+    #[inline]
+    fn chunk(w: usize, workers: usize, n: usize) -> (usize, usize) {
+        (w * n / workers, (w + 1) * n / workers)
+    }
+
+    /// Partition `0..n_items` into one contiguous range per worker and
+    /// run `f(lo, hi)` on each; returns the per-worker results **in
+    /// worker (= ascending range) order**. Worker 0's range runs on the
+    /// calling thread, so `threads == 1` (or `n_items ≤ 1`) is the exact
+    /// inline path with zero spawns.
+    pub fn run_ranges<T, F>(&self, n_items: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
+    {
+        if n_items == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n_items);
+        if workers == 1 {
+            return vec![f(0, n_items)];
+        }
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = (1..workers)
+                .map(|w| {
+                    let (lo, hi) = Self::chunk(w, workers, n_items);
+                    s.spawn(move || f(lo, hi))
+                })
+                .collect();
+            let (lo0, hi0) = Self::chunk(0, workers, n_items);
+            let mut out = Vec::with_capacity(workers);
+            out.push(f(lo0, hi0));
+            for h in handles {
+                match h.join() {
+                    Ok(v) => out.push(v),
+                    // first panicking worker wins; the scope joins the
+                    // rest during unwind
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+            out
+        })
+    }
+
+    /// `ParallelFor` with per-item results, collected **in item order**:
+    /// `run_map(n, f)[i] == f(i)` for every `i`, at any pool size.
+    pub fn run_map<T, F>(&self, n_items: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let chunks = self.run_ranges(n_items, |lo, hi| (lo..hi).map(&f).collect::<Vec<T>>());
+        let mut out = Vec::with_capacity(n_items);
+        for c in chunks {
+            out.extend(c);
+        }
+        out
+    }
+
+    /// `ParallelFor` for side effects: run `f(i)` once for each `i` in
+    /// `0..n_items`, distributed across the pool. The caller is
+    /// responsible for item independence (tasks must not race on shared
+    /// state); prefer [`Self::run_map`] + a serial merge when items
+    /// produce data.
+    pub fn run<F>(&self, n_items: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run_map(n_items, |i| f(i));
+    }
+}
+
+impl Default for Pool {
+    /// Defaults to the serial pool — parallelism is always an explicit
+    /// opt-in at the owner (`FunctionalBackend`, benches, tests).
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_map_preserves_item_order_at_every_pool_size() {
+        for threads in [1usize, 2, 3, 4, 8, 16] {
+            let pool = Pool::new(threads);
+            let got = pool.run_map(13, |i| i * i);
+            let want: Vec<usize> = (0..13).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_range_is_a_no_op() {
+        let pool = Pool::new(8);
+        let calls = AtomicUsize::new(0);
+        pool.run(0, |_| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+        assert!(pool.run_map(0, |i| i).is_empty());
+        assert!(pool.run_ranges(0, |lo, hi| (lo, hi)).is_empty());
+    }
+
+    #[test]
+    fn fewer_items_than_threads_runs_each_exactly_once() {
+        let pool = Pool::new(8);
+        let calls = AtomicUsize::new(0);
+        let got = pool.run_map(3, |i| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            i + 100
+        });
+        assert_eq!(got, vec![100, 101, 102]);
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn ranges_partition_exactly_and_deterministically() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            for n in [1usize, 2, 5, 16, 33] {
+                let pool = Pool::new(threads);
+                let ranges = pool.run_ranges(n, |lo, hi| (lo, hi));
+                // contiguous, ascending, covering 0..n exactly
+                assert_eq!(ranges.first().unwrap().0, 0);
+                assert_eq!(ranges.last().unwrap().1, n);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "threads={threads} n={n}");
+                }
+                // pure function of (n, threads)
+                assert_eq!(ranges, pool.run_ranges(n, |lo, hi| (lo, hi)));
+            }
+        }
+    }
+
+    #[test]
+    fn threads_one_runs_inline() {
+        let pool = Pool::serial();
+        let here = std::thread::current().id();
+        let ids = pool.run_map(5, |_| std::thread::current().id());
+        assert!(ids.iter().all(|id| *id == here), "serial pool must not spawn");
+    }
+
+    #[test]
+    fn panic_in_a_task_propagates() {
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(8, |i| {
+                    if i == 5 {
+                        panic!("task 5 exploded");
+                    }
+                });
+            }));
+            let err = r.expect_err("panic must propagate to the caller");
+            let msg = err
+                .downcast_ref::<&str>()
+                .copied()
+                .or_else(|| err.downcast_ref::<String>().map(String::as_str))
+                .unwrap_or("");
+            assert!(msg.contains("task 5 exploded"), "threads={threads}: {msg}");
+        }
+    }
+
+    #[test]
+    fn auto_threads_is_at_least_one_and_width_is_capped() {
+        assert!(Pool::auto_threads() >= 1);
+        assert!(Pool::auto().threads() >= 1);
+        assert_eq!(Pool::new(0).threads(), 1, "zero clamps to serial");
+        assert_eq!(Pool::default().threads(), 1);
+        assert_eq!(Pool::new(usize::MAX).threads(), MAX_THREADS, "width is capped");
+    }
+
+    #[test]
+    fn f32_sums_are_byte_identical_across_pool_sizes() {
+        // each item's sum is its own in-order chain; pool size must not
+        // change a single bit of any item's result
+        let data: Vec<f32> = (0..4096).map(|i| ((i * 2654435761usize) as f32).sin()).collect();
+        let per_item = |i: usize| -> f32 {
+            let mut acc = 0f32;
+            for v in &data[i * 256..(i + 1) * 256] {
+                acc += *v;
+            }
+            acc
+        };
+        let want: Vec<u32> =
+            Pool::serial().run_map(16, per_item).iter().map(|v| v.to_bits()).collect();
+        for threads in [2usize, 4, 8] {
+            let got: Vec<u32> =
+                Pool::new(threads).run_map(16, per_item).iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+}

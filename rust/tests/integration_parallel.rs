@@ -1,0 +1,397 @@
+//! Thread-count invariance suite for the `util::pool` execution layer
+//! (tier-1, DESIGN.md §Parallel).
+//!
+//! The worker pool promises that parallelism is a **wall-clock knob
+//! only**: every functional output — dataflow `AttnOut`s, full-block
+//! decode logits/cache rows, greedy token streams through the serving
+//! engine — is `f32::to_bits`-identical at every pool size, because the
+//! pool only distributes *independent outputs* across threads and every
+//! merge runs on the calling thread in the serial code's order. This
+//! suite pins that contract across pool sizes 1/2/4/8, for MHA and MLA
+//! geometries, on both transports, plus the pool's own unit semantics
+//! (empty ranges, more threads than items, panic propagation).
+//!
+//! If this suite trips, a kernel raced on shared state or a merge left
+//! the serial order. Fix the kernel/merge, not the test.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use clusterfusion::clustersim::block::BlockModel;
+use clusterfusion::clustersim::collective::Transport;
+use clusterfusion::clustersim::dataflow::reference::AttnOut;
+use clusterfusion::clustersim::dataflow::{
+    block_isolated, mla, reference, split_head, split_token, PackedMhaWeights, PackedMlaWeights,
+};
+use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::coordinator::engine::Engine;
+use clusterfusion::coordinator::request::{Event, Request};
+use clusterfusion::coordinator::FunctionalBackend;
+use clusterfusion::models::ModelConfig;
+use clusterfusion::util::pool::Pool;
+use clusterfusion::util::rng::Rng;
+
+const POOL_SIZES: [usize; 4] = [1, 2, 4, 8];
+const TRANSPORTS: [Transport; 2] = [Transport::Dsmem, Transport::GlobalMemory];
+
+// ---------------------------------------------------------------------------
+// Seeded cases (mirrors the in-crate `dataflow::testutil` generators,
+// which are not exported to integration tests).
+// ---------------------------------------------------------------------------
+
+struct MhaCase {
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    hidden: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+    pos: Vec<usize>,
+}
+
+fn mha_case(seed: u64, b: usize, nh: usize, dh: usize, s: usize, d: usize) -> MhaCase {
+    let mut rng = Rng::seed_from_u64(seed);
+    let h = nh * dh;
+    let mut v = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+    };
+    let hidden = v(b * d, 2.0);
+    let wq = v(d * h, 0.4);
+    let wk = v(d * h, 0.4);
+    let wv = v(d * h, 0.4);
+    let wo = v(h * d, 0.4);
+    let k_cache = v(b * s * h, 2.0);
+    let v_cache = v(b * s * h, 2.0);
+    let mut rng2 = Rng::seed_from_u64(seed ^ 0xdead);
+    let pos = (0..b).map(|_| rng2.range(0, s)).collect();
+    MhaCase { b, d, nh, dh, s, hidden, wq, wk, wv, wo, k_cache, v_cache, pos }
+}
+
+struct MlaCase {
+    b: usize,
+    d: usize,
+    nh: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+    hidden: Vec<f32>,
+    wq: Vec<f32>,
+    wkv: Vec<f32>,
+    w_down: Vec<f32>,
+    wo: Vec<f32>,
+    kv_cache: Vec<f32>,
+    pos: Vec<usize>,
+}
+
+fn mla_case(seed: u64, b: usize, nh: usize, l: usize, dh: usize, s: usize, d: usize) -> MlaCase {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut v = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
+    };
+    let hidden = v(b * d, 2.0);
+    let wq = v(d * nh * l, 0.4);
+    let wkv = v(d * l, 0.4);
+    let w_down = v(nh * l * dh, 0.4);
+    let wo = v(nh * dh * d, 0.4);
+    let kv_cache = v(b * s * l, 2.0);
+    let mut rng2 = Rng::seed_from_u64(seed ^ 0xbeef);
+    let pos = (0..b).map(|_| rng2.range(0, s)).collect();
+    MlaCase { b, d, nh, l, dh, s, hidden, wq, wkv, w_down, wo, kv_cache, pos }
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x:?} vs {y:?}");
+    }
+}
+
+fn assert_out_bits(got: &AttnOut, want: &AttnOut, what: &str) {
+    assert_bits(&got.out, &want.out, &format!("{what}.out"));
+    assert_bits(&got.k_new, &want.k_new, &format!("{what}.k_new"));
+    assert_bits(&got.v_new, &want.v_new, &format!("{what}.v_new"));
+}
+
+fn env() -> (Hardware, Noc) {
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    (hw, noc)
+}
+
+// ---------------------------------------------------------------------------
+// Pool unit semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_empty_range_and_single_item_run_inline() {
+    let pool = Pool::new(8);
+    assert!(pool.run_map(0, |i| i).is_empty());
+    assert!(pool.run_ranges(0, |lo, hi| (lo, hi)).is_empty());
+    // a single item runs on the calling thread even on a wide pool
+    let here = std::thread::current().id();
+    let ids = pool.run_map(1, |_| std::thread::current().id());
+    assert_eq!(ids, vec![here]);
+}
+
+#[test]
+fn pool_handles_fewer_items_than_threads() {
+    let pool = Pool::new(16);
+    let got = pool.run_map(5, |i| 10 * i);
+    assert_eq!(got, vec![0, 10, 20, 30, 40]);
+    let ranges = pool.run_ranges(3, |lo, hi| (lo, hi));
+    assert_eq!(ranges, vec![(0, 1), (1, 2), (2, 3)]);
+}
+
+#[test]
+fn pool_propagates_task_panics() {
+    for threads in POOL_SIZES {
+        let pool = Pool::new(threads);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, |i| {
+                if i == 11 {
+                    panic!("boom at 11");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the caller at threads={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dataflow AttnOut invariance across pool sizes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_token_bitexact_across_pool_sizes() {
+    let (hw, noc) = env();
+    // (seed, b, nh, dh, s, d, n): cluster sizes that give the block axis
+    // 2–8 parallel items, batch > 1, both rope states below
+    for &(seed, b, nh, dh, s, d, n) in &[
+        (101u64, 2usize, 2usize, 8usize, 16usize, 16usize, 4usize),
+        (102, 1, 3, 16, 32, 24, 8),
+        (103, 2, 2, 8, 16, 16, 2),
+    ] {
+        let c = mha_case(seed, b, nh, dh, s, d);
+        let w = PackedMhaWeights::pack(&c.wq, &c.wk, &c.wv, &c.wo, c.d, c.nh * c.dh);
+        for transport in TRANSPORTS {
+            for rope in [None, Some(10000.0f32)] {
+                let run = |pool: &Pool| {
+                    split_token::execute_packed_rope_on(
+                        pool, &c.hidden, &w, &c.k_cache, &c.v_cache, &c.pos, c.b, c.d, c.nh,
+                        c.dh, c.s, n, transport, &hw, &noc, rope,
+                    )
+                    .0
+                };
+                // the serial wrapper is the reference
+                let want = split_token::execute_packed_rope(
+                    &c.hidden, &w, &c.k_cache, &c.v_cache, &c.pos, c.b, c.d, c.nh, c.dh, c.s,
+                    n, transport, &hw, &noc, rope,
+                )
+                .0;
+                for threads in POOL_SIZES {
+                    let got = run(&Pool::new(threads));
+                    let what = format!(
+                        "split_token seed={seed} n={n} t={threads} {transport:?} rope={rope:?}"
+                    );
+                    assert_out_bits(&got, &want, &what);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mla_bitexact_across_pool_sizes() {
+    let (hw, noc) = env();
+    for &(seed, b, nh, l, dh, s, d, n) in &[
+        (201u64, 2usize, 2usize, 16usize, 8usize, 16usize, 16usize, 4usize),
+        (202, 1, 2, 32, 8, 32, 32, 8),
+    ] {
+        let c = mla_case(seed, b, nh, l, dh, s, d);
+        let w = PackedMlaWeights::pack(&c.wq, &c.wkv, &c.wo, c.d, c.nh, c.l, c.dh);
+        for transport in TRANSPORTS {
+            let want = mla::execute_packed(
+                &c.hidden, &w, &c.w_down, &c.kv_cache, &c.pos, c.b, c.d, c.nh, c.l, c.dh, c.s,
+                n, transport, &hw, &noc,
+            )
+            .0;
+            for threads in POOL_SIZES {
+                let got = mla::execute_packed_on(
+                    &Pool::new(threads), &c.hidden, &w, &c.w_down, &c.kv_cache, &c.pos, c.b,
+                    c.d, c.nh, c.l, c.dh, c.s, n, transport, &hw, &noc,
+                )
+                .0;
+                let what = format!("mla seed={seed} n={n} t={threads} {transport:?}");
+                assert_bits(&got.out, &want.out, &format!("{what}.out"));
+                assert_bits(&got.k_new, &want.k_new, &format!("{what}.kv_new"));
+            }
+        }
+    }
+}
+
+#[test]
+fn split_head_bitexact_across_pool_sizes() {
+    let (hw, noc) = env();
+    for &(seed, b, nh, dh, s, d, n) in
+        &[(301u64, 2usize, 3usize, 8usize, 12usize, 16usize, 4usize), (302, 1, 5, 16, 20, 24, 2)]
+    {
+        let c = mha_case(seed, b, nh, dh, s, d);
+        for transport in TRANSPORTS {
+            let run = |pool: &Pool| {
+                split_head::execute_on(
+                    pool, &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache,
+                    &c.pos, c.b, c.d, c.nh, c.dh, c.s, n, transport, &hw, &noc,
+                )
+            };
+            let (want, want_rep) = split_head::execute(
+                &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos, c.b,
+                c.d, c.nh, c.dh, c.s, n, transport, &hw, &noc,
+            );
+            for threads in POOL_SIZES {
+                let (got, rep) = run(&Pool::new(threads));
+                let what = format!("split_head seed={seed} n={n} t={threads} {transport:?}");
+                assert_out_bits(&got, &want, &what);
+                // the per-head dsmem accounting must keep the serial f64
+                // accumulation sequence, bit for bit
+                assert_eq!(rep.dsmem_bytes.to_bits(), want_rep.dsmem_bytes.to_bits(), "{what}");
+            }
+        }
+    }
+}
+
+#[test]
+fn block_isolated_and_reference_bitexact_across_pool_sizes() {
+    for &(seed, b, nh, dh, s, d) in
+        &[(401u64, 2usize, 3usize, 8usize, 20usize, 24usize), (402, 1, 6, 4, 12, 16)]
+    {
+        let c = mha_case(seed, b, nh, dh, s, d);
+        let (want_bi, _) = block_isolated::execute(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos, c.b, c.d,
+            c.nh, c.dh, c.s,
+        );
+        let want_ref = reference::attention_block_ref(
+            &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos, c.b, c.d,
+            c.nh, c.dh, c.s,
+        );
+        for threads in POOL_SIZES {
+            let pool = Pool::new(threads);
+            let (got_bi, _) = block_isolated::execute_on(
+                &pool, &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                c.b, c.d, c.nh, c.dh, c.s,
+            );
+            assert_out_bits(&got_bi, &want_bi, &format!("block_isolated seed={seed} t={threads}"));
+            let got_ref = reference::attention_block_ref_on(
+                &pool, &c.hidden, &c.wq, &c.wk, &c.wv, &c.wo, &c.k_cache, &c.v_cache, &c.pos,
+                c.b, c.d, c.nh, c.dh, c.s,
+            );
+            assert_out_bits(&got_ref, &want_ref, &format!("reference seed={seed} t={threads}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full-block decode and greedy streams
+// ---------------------------------------------------------------------------
+
+/// Seeded non-trivial cache planes in the engine's (L, bucket, S, re)
+/// gather layout, with per-slot positions inside the cache.
+fn seeded_planes(model: &BlockModel, bucket: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<i32>) {
+    let cfg = model.config();
+    let mut rng = Rng::seed_from_u64(seed);
+    let plane_len = cfg.n_layers * bucket * cfg.max_seq * model.row_elems();
+    let planes = (0..model.planes())
+        .map(|_| (0..plane_len).map(|_| (rng.f32() - 0.5) * 2.0).collect())
+        .collect();
+    let pos = (0..bucket).map(|bi| ((bi * 3 + 2) % cfg.max_seq) as i32).collect();
+    (planes, pos)
+}
+
+#[test]
+fn block_decode_step_bitexact_across_pool_sizes() {
+    for cfg in [ModelConfig::micro_llama(), ModelConfig::micro_mla()] {
+        let model = BlockModel::from_config(&cfg, 42, 2);
+        let bucket = 2usize;
+        let (planes, pos) = seeded_planes(&model, bucket, 9);
+        let tokens = [7i32, 13];
+        let (want_logits, want_rows) = model.decode_step(&tokens, &pos, &planes, bucket);
+        for threads in POOL_SIZES {
+            let pool = Pool::new(threads);
+            let (logits, rows, greedy) =
+                model.decode_step_on(&pool, &tokens, &pos, &planes, bucket);
+            let what = format!("{} t={threads}", cfg.name);
+            assert_bits(&logits, &want_logits, &format!("{what}.logits"));
+            assert_eq!(rows.len(), want_rows.len());
+            for (p, (got, want)) in rows.iter().zip(&want_rows).enumerate() {
+                assert_bits(got, want, &format!("{what}.plane{p}"));
+            }
+            // sharded-argmax merge == full-row argmax, at every pool size
+            for bi in 0..bucket {
+                let row = &logits[bi * cfg.vocab..(bi + 1) * cfg.vocab];
+                assert_eq!(greedy[bi], clusterfusion::runtime::argmax(row), "{what} slot {bi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_token_streams_identical_across_thread_counts() {
+    for model_name in ["micro-llama", "micro-mla"] {
+        let run = |threads: usize| -> Vec<(u64, Vec<i32>)> {
+            let backend =
+                FunctionalBackend::from_model_name_on(model_name, 42, 2, threads).unwrap();
+            let mut engine = Engine::new(backend, 64, 8, 1.0);
+            // prompts end in distinct tokens so streams cannot trivially
+            // coincide (a random tied-embedding transformer parrots)
+            for id in 0..3u64 {
+                engine.submit(Request::new(id, vec![5, 9, 1 + id as i32], 5));
+            }
+            engine.run_to_completion(256).unwrap();
+            let mut streams: Vec<(u64, Vec<i32>)> = engine
+                .take_events()
+                .into_iter()
+                .filter_map(|e| match e {
+                    Event::Finished { id, generated, .. } => Some((id, generated)),
+                    _ => None,
+                })
+                .collect();
+            streams.sort();
+            streams
+        };
+        let want = run(1);
+        assert_eq!(want.len(), 3, "{model_name}: every request must finish");
+        for threads in [2usize, 4, 8] {
+            assert_eq!(
+                run(threads),
+                want,
+                "{model_name}: greedy streams must be identical at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_pool_matches_serial_on_a_dataflow() {
+    // Pool::auto() honours CLUSTERFUSION_THREADS (the CI matrix leg) or
+    // the host width — whatever it resolves to, outputs match serial.
+    let (hw, noc) = env();
+    let c = mha_case(777, 2, 2, 8, 16, 16);
+    let w = PackedMhaWeights::pack(&c.wq, &c.wk, &c.wv, &c.wo, c.d, c.nh * c.dh);
+    let auto = Pool::auto();
+    assert!(auto.threads() >= 1);
+    let got = split_token::execute_packed_on(
+        &auto, &c.hidden, &w, &c.k_cache, &c.v_cache, &c.pos, c.b, c.d, c.nh, c.dh, c.s, 4,
+        Transport::Dsmem, &hw, &noc,
+    )
+    .0;
+    let want = split_token::execute_packed(
+        &c.hidden, &w, &c.k_cache, &c.v_cache, &c.pos, c.b, c.d, c.nh, c.dh, c.s, 4,
+        Transport::Dsmem, &hw, &noc,
+    )
+    .0;
+    assert_out_bits(&got, &want, &format!("auto pool ({} threads)", auto.threads()));
+}
