@@ -1,9 +1,9 @@
 # Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
 # what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
 
-.PHONY: tier1 build test test-load test-block test-parallel bench-compile bench-smoke quickstart artifacts clean
+.PHONY: tier1 build test test-load test-block test-prefill test-parallel bench-compile bench-smoke quickstart artifacts clean
 
-tier1: build test test-load test-block test-parallel bench-compile bench-smoke quickstart
+tier1: build test test-load test-block test-prefill test-parallel bench-compile bench-smoke quickstart
 
 build:
 	cd rust && cargo build --release
@@ -22,6 +22,12 @@ test-load:
 # cost properties, functional-backend replay.
 test-block:
 	cd rust && cargo test -q --test integration_block
+
+# Prefill differential suite (also run by `test`): chunked/one-shot
+# prefill byte-identical to the decode-as-prefill baseline, recompute
+# preemption discards fed progress.
+test-prefill:
+	cd rust && cargo test -q --test integration_prefill
 
 # Thread-count invariance suite (also run by `test`): pooled execution
 # byte-identical across pool sizes; util::pool unit semantics.

@@ -311,6 +311,46 @@ pub fn decode_tpot(
     block.latency * model.n_layers as f64 + head.latency
 }
 
+/// Cost of one layer's block processing a `rows`-position prefill chunk
+/// under `scope`: the same kernel schedule as decode with `rows`
+/// activation rows in flight — weights stream **once** per chunk while
+/// compute and attention traffic scale with `rows`, which is exactly the
+/// weight amortisation chunked prefill buys (the prefill regime of
+/// Fig. 2). `rows == 1` is [`cost`] itself, so the scope orderings and
+/// FLOP/traffic monotonicity carry over to every chunk size.
+pub fn prefill_cost(
+    p: &BlockProblem,
+    rows: usize,
+    scope: FusionScope,
+    env: &CostEnv,
+) -> CostReport {
+    assert!(rows >= 1, "a prefill chunk has at least one row");
+    let mut rp = *p;
+    rp.attn.batch = p.attn.batch * rows;
+    cost(&rp, scope, env)
+}
+
+/// Whole-model prefill-step latency for a `rows`-position chunk at KV
+/// length `seq` — the prefill analogue of [`decode_tpot`]. The LM head
+/// prices one logits row per slot (the engine samples only when a prompt
+/// completes), not one per prompt row. Feeds
+/// `loadgen::ServiceModel::from_block`'s per-prefill-row slope.
+pub fn prefill_tpot(
+    model: &ModelConfig,
+    rows: usize,
+    seq: usize,
+    scope: FusionScope,
+    cluster_size: usize,
+    hw: &Hardware,
+    noc: &Noc,
+) -> f64 {
+    let p = BlockProblem::from_model(model, rows.max(1), seq);
+    let env = CostEnv::clusterfusion(hw, noc, cluster_size);
+    let block = cost(&p, scope, &env);
+    let head = super::e2e::lm_head_cost(model, 1, hw, noc);
+    block.latency * model.n_layers as f64 + head.latency
+}
+
 /// Can the functional pipeline run `model` at cluster size `n`? (The
 /// dataflows partition `head_dim`/`d_model`/`max_seq` — and the latent
 /// rank for MLA — evenly across the cluster.)
@@ -606,15 +646,7 @@ impl BlockModel {
             linalg::axpy(1.0, &down, &mut h); // residual
         }
 
-        // -- tied-embedding logits head (final norm, then h · Eᵀ),
-        // sharded over contiguous vocab ranges: the embedding rows are
-        // already column-contiguous for this product, so each shard runs
-        // the dot4 row tile over its own window (every logit keeps its
-        // single in-order dot chain — shard boundaries only change load
-        // sharing). Each shard also returns its local argmax per slot
-        // (lowest index on ties); the ascending-shard merge below keeps
-        // only strictly greater values, reproducing `runtime::argmax` of
-        // the full row bit-for-bit. --
+        // -- tied-embedding logits head on the final-normed rows --
         for bi in 0..b {
             linalg::rmsnorm(
                 &h[bi * d..(bi + 1) * d],
@@ -623,6 +655,22 @@ impl BlockModel {
                 &mut x[bi * d..(bi + 1) * d],
             );
         }
+        let (logits, greedy) = self.logits_head_on(pool, &x, b);
+        (logits, new_rows, greedy)
+    }
+
+    /// The tied-embedding logits head (`x · Eᵀ` over final-normed rows),
+    /// sharded over contiguous vocab ranges: the embedding rows are
+    /// already column-contiguous for this product, so each shard runs
+    /// the dot4 row tile over its own window (every logit keeps its
+    /// single in-order dot chain — shard boundaries only change load
+    /// sharing). Each shard also returns its local argmax per slot
+    /// (lowest index on ties); the ascending-shard merge below keeps
+    /// only strictly greater values, reproducing `runtime::argmax` of
+    /// the full row bit-for-bit. Per-slot bits depend only on that
+    /// slot's row, so decode batches and prefill last-row batches agree.
+    fn logits_head_on(&self, pool: &Pool, x: &[f32], b: usize) -> (Vec<f32>, Vec<usize>) {
+        let (d, v) = (self.cfg.d_model, self.cfg.vocab);
         let mut shards: Vec<(usize, Vec<f32>, Vec<usize>)> = pool.run_ranges(v, |t0, t1| {
             let span = t1 - t0;
             let mut chunk = vec![0f32; b * span];
@@ -649,7 +697,7 @@ impl BlockModel {
             // serial / single-worker: the lone shard IS the (b, vocab)
             // logits buffer and its local argmaxes the greedy picks
             let (_, logits, greedy) = shards.pop().expect("one shard");
-            return (logits, new_rows, greedy);
+            return (logits, greedy);
         }
         let mut logits = vec![0f32; b * v];
         let mut greedy = vec![0usize; b];
@@ -667,6 +715,182 @@ impl BlockModel {
                 }
             }
         }
+        (logits, greedy)
+    }
+
+    /// One multi-position step over `slots`: slot `i` feeds
+    /// `slots[i].0` (its token rows) starting at absolute position
+    /// `slots[i].1`, all slots flattened into one `T`-row chunk. Every
+    /// GEMM stage — embeddings, QKV, gate/up/down — batches the whole
+    /// chunk through the packed-weight kernels (one weight stream per
+    /// step, the amortisation chunked prefill exists for), while
+    /// attention runs causally per row through the *decode* per-head
+    /// core (`attend_head_on`, `b == 1`), writing each roped row into
+    /// the mutable planes so later rows of the chunk attend to earlier
+    /// ones.
+    ///
+    /// Per-slot outputs are byte-identical to feeding the same rows one
+    /// per step through [`Self::decode_step_on`] (the retired
+    /// decode-as-prefill path): every stage is row- or slot-local, the
+    /// per-row accumulation orders are unchanged, and the plane writes
+    /// carry the same bits the decode path round-trips through the paged
+    /// pool — pinned by `tests/integration_prefill.rs`. Decode slots are
+    /// simply single-row entries, so one call serves a mixed
+    /// prefill/decode batch.
+    ///
+    /// `cache_planes[plane]` is the dense `(L, bucket, max_seq,
+    /// row_elems)` gather, mutated in place with the chunk's roped rows.
+    /// Returns `(logits, new_rows, greedy)`: logits `(slots.len(),
+    /// vocab)` from each slot's **last** fed row, per plane `(L, T,
+    /// row_elems)` new cache rows in feed order.
+    pub fn prefill_on(
+        &self,
+        pool: &Pool,
+        slots: &[(&[i32], usize)],
+        cache_planes: &mut [Vec<f32>],
+        bucket: usize,
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<usize>) {
+        let cfg = &self.cfg;
+        let (d, f, v) = (cfg.d_model, cfg.ffn_dim, cfg.vocab);
+        let (nl, s, re) = (cfg.n_layers, cfg.max_seq, self.row_elems());
+        let planes = self.planes();
+        let n_slots = slots.len();
+        assert!(n_slots >= 1 && n_slots <= bucket, "1..=bucket live slots");
+        assert_eq!(cache_planes.len(), planes, "cache plane count");
+        let plane_len = bucket * s * re;
+        for p in cache_planes.iter() {
+            assert_eq!(p.len(), nl * plane_len, "cache plane size");
+        }
+        // Row maps: flattened-chunk row j lives in plane slot
+        // `row_slot[j]` at absolute position `row_pos[j]` (slot-major,
+        // feed order).
+        let mut row_slot = Vec::new();
+        let mut row_pos = Vec::new();
+        for (i, (toks, pos0)) in slots.iter().enumerate() {
+            assert!(!toks.is_empty(), "slot {i}: at least one row per step");
+            assert!(pos0 + toks.len() <= s, "slot {i}: rows past max_seq");
+            for j in 0..toks.len() {
+                row_slot.push(i);
+                row_pos.push(pos0 + j);
+            }
+        }
+        let t_rows = row_slot.len();
+
+        // Residual stream: h = embedding[token], all chunk rows at once.
+        let mut h = vec![0f32; t_rows * d];
+        let mut r = 0usize;
+        for (toks, _) in slots {
+            for &tok in *toks {
+                let t = tok.rem_euclid(v as i32) as usize;
+                h[r * d..(r + 1) * d].copy_from_slice(&self.embedding[t * d..(t + 1) * d]);
+                r += 1;
+            }
+        }
+
+        let mut new_rows = vec![vec![0f32; nl * t_rows * re]; planes];
+        // Scratch reused across layers (allocation-free layer loop).
+        let mut x = vec![0f32; t_rows * d];
+        let mut gate = vec![0f32; t_rows * f];
+        let mut up = vec![0f32; t_rows * f];
+        let mut act = vec![0f32; t_rows * f];
+        let mut down = vec![0f32; t_rows * d];
+
+        for (l, layer) in self.layers.iter().enumerate() {
+            // -- attention sub-block (pre-norm), whole chunk --
+            for r in 0..t_rows {
+                linalg::rmsnorm(
+                    &h[r * d..(r + 1) * d],
+                    &layer.attn_norm,
+                    EPS,
+                    &mut x[r * d..(r + 1) * d],
+                );
+            }
+            let attn_out = match &layer.attn {
+                PackedAttn::Mha(w) => {
+                    let (k_all, rest) = cache_planes.split_first_mut().expect("two planes");
+                    split_token::prefill_packed_rope_on(
+                        pool,
+                        &x,
+                        w,
+                        &mut k_all[l * plane_len..(l + 1) * plane_len],
+                        &mut rest[0][l * plane_len..(l + 1) * plane_len],
+                        &row_slot,
+                        &row_pos,
+                        d,
+                        cfg.n_heads,
+                        cfg.head_dim,
+                        s,
+                        self.cluster_size,
+                        self.transport,
+                        &self.hw,
+                        &self.noc,
+                        self.rope_base,
+                    )
+                    .0
+                }
+                PackedAttn::Mla { w, w_down } => mla::prefill_packed_on(
+                    pool,
+                    &x,
+                    w,
+                    w_down,
+                    &mut cache_planes[0][l * plane_len..(l + 1) * plane_len],
+                    &row_slot,
+                    &row_pos,
+                    d,
+                    cfg.n_heads,
+                    cfg.kv_lora_rank,
+                    cfg.head_dim,
+                    s,
+                    self.cluster_size,
+                    self.transport,
+                    &self.hw,
+                    &self.noc,
+                )
+                .0,
+            };
+            linalg::axpy(1.0, &attn_out.out, &mut h); // residual
+
+            // New cache rows: k_new/v_new are (T, row_elems) in feed
+            // order — exactly the (L, T, re) slice.
+            new_rows[0][l * t_rows * re..(l + 1) * t_rows * re]
+                .copy_from_slice(&attn_out.k_new);
+            if planes == 2 {
+                new_rows[1][l * t_rows * re..(l + 1) * t_rows * re]
+                    .copy_from_slice(&attn_out.v_new);
+            }
+
+            // -- SwiGLU MLP sub-block (pre-norm), whole chunk --
+            for r in 0..t_rows {
+                linalg::rmsnorm(
+                    &h[r * d..(r + 1) * d],
+                    &layer.mlp_norm,
+                    EPS,
+                    &mut x[r * d..(r + 1) * d],
+                );
+            }
+            linalg::matmul_rows_pooled(pool, &x, t_rows, d, &layer.gate, 0, 0, f, &mut gate);
+            linalg::matmul_rows_pooled(pool, &x, t_rows, d, &layer.up, 0, 0, f, &mut up);
+            linalg::silu_mul(&gate, &up, &mut act);
+            linalg::matmul_rows_pooled(pool, &act, t_rows, f, &layer.down, 0, 0, d, &mut down);
+            linalg::axpy(1.0, &down, &mut h); // residual
+        }
+
+        // -- logits only for each slot's LAST fed row (the engine
+        // samples the moment a prompt completes; intermediate prompt
+        // rows never needed logits in the decode-as-prefill path either) --
+        let mut xl = vec![0f32; n_slots * d];
+        let mut base = 0usize;
+        for (i, (toks, _)) in slots.iter().enumerate() {
+            let last = base + toks.len() - 1;
+            linalg::rmsnorm(
+                &h[last * d..(last + 1) * d],
+                &self.final_norm,
+                EPS,
+                &mut xl[i * d..(i + 1) * d],
+            );
+            base += toks.len();
+        }
+        let (logits, greedy) = self.logits_head_on(pool, &xl, n_slots);
         (logits, new_rows, greedy)
     }
 }

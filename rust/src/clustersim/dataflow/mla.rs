@@ -135,7 +135,7 @@ pub fn execute_packed_on(
     noc: &Noc,
 ) -> (AttnOut, CostReport) {
     assert!(l % n == 0 && s % n == 0 && d % n == 0, "cluster must divide l, S, D");
-    let (ls, ss, ds) = (l / n, s / n, d / n);
+    let ls = l / n; // per-block lora-rank slice
     let scale = 1.0 / (l as f32).sqrt();
 
     let mut out = vec![0f32; b * d];
@@ -187,6 +187,54 @@ pub fn execute_packed_on(
             }
         }
 
+        // ---- FlashDecoding partials through the output merge: the
+        // shared per-head attention core ----
+        attend_head_on(
+            pool, &q, &kv_new, kv_cache, pos, b, d, l, dh, s, n, head, w_down, wo_p, scale,
+            &mut attn, transport, hw, noc, &mut out, &mut report,
+        );
+    }
+
+    (AttnOut { out, k_new: kv_new_g, v_new: vec![] }, report)
+}
+
+/// The post-gather attention core of one MLA head's cluster schedule —
+/// FlashDecoding partials over the latent-cache spans, the three stat
+/// reduces with the online-softmax rescale, the down-projection partials
+/// over the lora-rank slices with their `ClusterReduce(sum)`, and the
+/// output-projection tiles merged into `out` in the serial `(r, bi)`
+/// order. Extracted verbatim from [`execute_packed_on`]'s per-head loop
+/// (see `split_token::attend_head_on` for the bit-exactness argument);
+/// the multi-position prefill path calls it with `b == 1` per prompt row.
+///
+/// `q`/`kv_new` are the assembled `(b, l)` per-head rows; `kv_cache` is
+/// the `(b, s, l)` dense latent plane; `attn` is `(b, l)` scratch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_head_on(
+    pool: &Pool,
+    q: &[f32],
+    kv_new: &[f32],
+    kv_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    head: usize,
+    w_down: &[f32],
+    wo_p: &linalg::PackedWeight,
+    scale: f32,
+    attn: &mut [f32],
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+    out: &mut [f32],
+    report: &mut CostReport,
+) {
+    let (ls, ss, ds) = (l / n, s / n, d / n);
+    {
         // ---- FlashDecoding partials over latent-cache spans, one task
         // per cluster block ----
         let partials: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
@@ -333,8 +381,122 @@ pub fn execute_packed_on(
             }
         }
     }
+}
 
-    (AttnOut { out, k_new: kv_new_g, v_new: vec![] }, report)
+/// Multi-position (prefill) execution of the fused MLA schedule: `hidden`
+/// holds `T` prompt rows, row `j` belonging to latent-plane slot
+/// `row_slot[j]` at absolute position `row_pos[j]`. The shared KV
+/// projection batches all `T` rows and **writes the new latent rows into
+/// the mutable plane** at their positions (so later chunk rows attend to
+/// earlier ones); each head then batches its absorbed Q projection over
+/// the chunk and runs causal attention per row through
+/// [`attend_head_on`] with `b == 1` and `valid = row_pos[j]` — the
+/// byte-identical decode core. `kv_plane` is `(bucket, s, l)`. Returns
+/// `(T, d)` output and the `(T, l)` latent rows in feed order (`k_new`;
+/// `v_new` stays empty, the latent cache is single-plane).
+#[allow(clippy::too_many_arguments)]
+pub fn prefill_packed_on(
+    pool: &Pool,
+    hidden: &[f32],
+    weights: &PackedMlaWeights,
+    w_down: &[f32], // (nh, l, dh)
+    kv_plane: &mut [f32],
+    row_slot: &[usize],
+    row_pos: &[usize],
+    d: usize,
+    nh: usize,
+    l: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+) -> (AttnOut, CostReport) {
+    assert!(l % n == 0 && s % n == 0 && d % n == 0, "cluster must divide l, S, D");
+    let t_rows = row_slot.len();
+    assert_eq!(row_pos.len(), t_rows);
+    let ls = l / n;
+    let scale = 1.0 / (l as f32).sqrt();
+
+    let mut out = vec![0f32; t_rows * d];
+    let mut report = CostReport { launches: 1, ..Default::default() };
+
+    let (wq_p, wkv_p, wo_p) = (&weights.wq, &weights.wkv, &weights.wo);
+    assert!(wq_p.n_in() == d && wq_p.n_out() == nh * l && wo_p.n_out() == d);
+
+    // ---- shared KV projection over all T rows + plane write (before
+    // any attention: rows of this chunk must see each other) ----
+    let kv_segs: Vec<Vec<f32>> = pool.run_map(n, |r| {
+        let mut seg = vec![0f32; t_rows * ls];
+        linalg::matmul_rows(hidden, t_rows, d, wkv_p, 0, r * ls, ls, &mut seg);
+        seg
+    });
+    let (kv_gathered, gc_kv) = cluster_gather(&kv_segs, transport, hw, noc);
+    report.dsmem_bytes += gc_kv.traffic_bytes;
+    let mut kv_new = vec![0f32; t_rows * l];
+    for r in 0..n {
+        let seg = gathered_segment(&kv_gathered[0], 0, r, n, t_rows * ls);
+        for j in 0..t_rows {
+            kv_new[j * l + r * ls..j * l + (r + 1) * ls]
+                .copy_from_slice(&seg[j * ls..(j + 1) * ls]);
+        }
+    }
+    for j in 0..t_rows {
+        let dst = (row_slot[j] * s + row_pos[j]) * l;
+        kv_plane[dst..dst + l].copy_from_slice(&kv_new[j * l..(j + 1) * l]);
+    }
+
+    let mut attn = vec![0f32; l]; // b == 1 scratch, reused across rows
+    for head in 0..nh {
+        // absorbed Q projection batched over the chunk
+        let q_segs: Vec<Vec<f32>> = pool.run_map(n, |r| {
+            let mut seg = vec![0f32; t_rows * ls];
+            linalg::matmul_rows(hidden, t_rows, d, wq_p, 0, head * l + r * ls, ls, &mut seg);
+            seg
+        });
+        let (q_gathered, gc_q) = cluster_gather(&q_segs, transport, hw, noc);
+        report.dsmem_bytes += gc_q.traffic_bytes;
+        let mut q = vec![0f32; t_rows * l];
+        for r in 0..n {
+            let seg = gathered_segment(&q_gathered[0], 0, r, n, t_rows * ls);
+            for j in 0..t_rows {
+                q[j * l + r * ls..j * l + (r + 1) * ls]
+                    .copy_from_slice(&seg[j * ls..(j + 1) * ls]);
+            }
+        }
+        // causal attention per row (serial in feed order)
+        for j in 0..t_rows {
+            let slot = row_slot[j];
+            let kc = &kv_plane[slot * s * l..(slot + 1) * s * l];
+            let pos_j = [row_pos[j]];
+            attend_head_on(
+                pool,
+                &q[j * l..(j + 1) * l],
+                &kv_new[j * l..(j + 1) * l],
+                kc,
+                &pos_j,
+                1,
+                d,
+                l,
+                dh,
+                s,
+                n,
+                head,
+                w_down,
+                wo_p,
+                scale,
+                &mut attn,
+                transport,
+                hw,
+                noc,
+                &mut out[j * d..(j + 1) * d],
+                &mut report,
+            );
+        }
+    }
+
+    (AttnOut { out, k_new: kv_new, v_new: vec![] }, report)
 }
 
 /// Performance model of the fused MLA kernel — the paper's collective

@@ -169,22 +169,29 @@ pub fn execute_packed_rope(
     )
 }
 
-/// [`execute_packed_rope`] on a worker [`Pool`]. Within each head's
-/// cluster, the three block-parallel phases — QKV projection segments,
-/// FlashDecoding partials over the KV spans, and the output-projection
-/// column tiles — fan their `n` cluster blocks across the pool
-/// ([`Pool::run_map`], results in block order); the collectives between
-/// them (gather, the three reduces) and the atomicAdd merge stay on the
-/// calling thread, in the serial code's exact order. Every output
-/// element keeps its single in-order accumulation chain, so the result
-/// is **byte-identical** to the serial path at every pool size
-/// (`tests/integration_parallel.rs`); a serial pool runs the identical
-/// loops inline.
+/// The post-gather attention core of one head's cluster schedule —
+/// FlashDecoding partials over each block's KV span, the three
+/// `ClusterReduce`s with the online-softmax rescale between them, and the
+/// per-block output-projection tiles merged into `out` with one
+/// atomicAdd-equivalent add per element, in the serial `(r, bi)` order.
+///
+/// Extracted verbatim from [`execute_packed_rope_on`]'s per-head loop so
+/// the multi-position prefill path ([`prefill_packed_rope_on`]) runs the
+/// *identical* code per prompt row (`b == 1`): per-slot results depend
+/// only on that slot's inputs (every loop is per-`bi`; the butterfly
+/// reduces are element-wise across blocks), so decode batches and
+/// single-row prefill calls produce byte-identical per-slot bits.
+///
+/// `q`/`k_new`/`v_new` are the assembled, already-roped `(b, dh)` per-head
+/// rows; `k_cache`/`v_cache` are `(b, s, nh*dh)` dense plane slices;
+/// `pos[bi]` is slot `bi`'s valid cache length (the self token always
+/// comes from `k_new`/`v_new`, owned by block `n-1`).
 #[allow(clippy::too_many_arguments)]
-pub fn execute_packed_rope_on(
+pub(crate) fn attend_head_on(
     pool: &Pool,
-    hidden: &[f32],
-    weights: &PackedMhaWeights,
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
     k_cache: &[f32],
     v_cache: &[f32],
     pos: &[usize],
@@ -194,94 +201,17 @@ pub fn execute_packed_rope_on(
     dh: usize,
     s: usize,
     n: usize,
+    head: usize,
+    wo_p: &PackedWeight,
+    scale: f32,
     transport: Transport,
     hw: &Hardware,
     noc: &Noc,
-    rope_base: Option<f32>,
-) -> (AttnOut, CostReport) {
-    assert!(dh % n == 0 && s % n == 0 && d % n == 0, "cluster must divide dh, S, D");
-    let h = nh * dh;
-    let (hs, ss, ds) = (dh / n, s / n, d / n); // per-block slices
-    let scale = 1.0 / (dh as f32).sqrt();
-    let (wq_p, wk_p, wv_p, wo_p) = (&weights.wq, &weights.wk, &weights.wv, &weights.wo);
-    assert!(wq_p.n_in() == d && wq_p.n_out() == h && wo_p.n_in() == h && wo_p.n_out() == d);
-
-    let mut out = vec![0f32; b * d]; // global-memory output (atomicAdd target)
-    let mut k_new_g = vec![0f32; b * h];
-    let mut v_new_g = vec![0f32; b * h];
-    let mut report = CostReport::default();
-    report.launches = 1; // the whole block is ONE fused kernel
-
-    for head in 0..nh {
-        // ---- Stage 1: per-block QKV projection segments (Alg. 3 line 2),
-        // one pool task per cluster block r, which computes columns
-        // [head*dh + r*hs, head*dh + (r+1)*hs) of all three projections ----
-        let segs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
-            let project = |pw: &PackedWeight| -> Vec<f32> {
-                let mut seg = vec![0f32; b * hs];
-                linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
-                seg
-            };
-            (project(wq_p), project(wk_p), project(wv_p))
-        });
-
-        // ---- ClusterGather of Q/K/V (Alg. 3 line 3): one gather of the
-        // concatenated 3h-sized segment per block ----
-        let cat: Vec<Vec<f32>> = (0..n)
-            .map(|r| {
-                let (q_seg, k_seg, v_seg) = &segs[r];
-                let mut c = Vec::with_capacity(3 * b * hs);
-                c.extend_from_slice(q_seg);
-                c.extend_from_slice(k_seg);
-                c.extend_from_slice(v_seg);
-                c
-            })
-            .collect();
-        let (gathered, gc) = cluster_gather(&cat, transport, hw, noc);
-        report.dsmem_bytes += gc.traffic_bytes;
-
-        // Each block reassembles the full per-head q/k_new/v_new (B, dh).
-        // All blocks end with identical copies; verify with block 0 and
-        // assert agreement for block n-1 (the cluster contract).
-        let assemble = |owner: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-            let seg_len = 3 * b * hs;
-            let mut q = vec![0f32; b * dh];
-            let mut kn = vec![0f32; b * dh];
-            let mut vn = vec![0f32; b * dh];
-            for r in 0..n {
-                let seg = gathered_segment(&gathered[owner], owner, r, n, seg_len);
-                for bi in 0..b {
-                    q[bi * dh + r * hs..bi * dh + (r + 1) * hs]
-                        .copy_from_slice(&seg[bi * hs..(bi + 1) * hs]);
-                    kn[bi * dh + r * hs..bi * dh + (r + 1) * hs]
-                        .copy_from_slice(&seg[b * hs + bi * hs..b * hs + (bi + 1) * hs]);
-                    vn[bi * dh + r * hs..bi * dh + (r + 1) * hs]
-                        .copy_from_slice(&seg[2 * b * hs + bi * hs..2 * b * hs + (bi + 1) * hs]);
-                }
-            }
-            (q, kn, vn)
-        };
-        let (mut q, mut k_new, v_new) = assemble(0);
-        debug_assert_eq!(assemble(n - 1), (q.clone(), k_new.clone(), v_new.clone()));
-
-        // Rotary embedding (block-pipeline glue): every cluster block
-        // holds the full per-head Q/K after the gather, so each rotates
-        // its copy redundantly — no extra collective traffic.
-        if let Some(base) = rope_base {
-            for bi in 0..b {
-                linalg::rope_rotate(&mut q[bi * dh..(bi + 1) * dh], pos[bi], base);
-                linalg::rope_rotate(&mut k_new[bi * dh..(bi + 1) * dh], pos[bi], base);
-            }
-        }
-
-        // write-back of the new K/V rows (cache append goes to HBM anyway)
-        for bi in 0..b {
-            k_new_g[bi * h + head * dh..bi * h + (head + 1) * dh]
-                .copy_from_slice(&k_new[bi * dh..(bi + 1) * dh]);
-            v_new_g[bi * h + head * dh..bi * h + (head + 1) * dh]
-                .copy_from_slice(&v_new[bi * dh..(bi + 1) * dh]);
-        }
-
+    out: &mut [f32],
+    report: &mut CostReport,
+) {
+    let (ss, ds) = (s / n, d / n);
+    {
         // ---- Stage 2: FlashDecoding partials over each block's KV span
         // (Alg. 3 line 4), one pool task per cluster block; block n-1
         // also owns the self token ----
@@ -416,6 +346,284 @@ pub fn execute_packed_rope_on(
                 let dst = &mut out[bi * d + r * ds..bi * d + (r + 1) * ds];
                 linalg::axpy(1.0, &tile[bi * ds..(bi + 1) * ds], dst); // atomicAdd
             }
+        }
+    }
+}
+
+/// [`execute_packed_rope`] on a worker [`Pool`]. Within each head's
+/// cluster, the three block-parallel phases — QKV projection segments,
+/// FlashDecoding partials over the KV spans, and the output-projection
+/// column tiles — fan their `n` cluster blocks across the pool
+/// ([`Pool::run_map`], results in block order); the collectives between
+/// them (gather, the three reduces) and the atomicAdd merge stay on the
+/// calling thread, in the serial code's exact order. Every output
+/// element keeps its single in-order accumulation chain, so the result
+/// is **byte-identical** to the serial path at every pool size
+/// (`tests/integration_parallel.rs`); a serial pool runs the identical
+/// loops inline.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_packed_rope_on(
+    pool: &Pool,
+    hidden: &[f32],
+    weights: &PackedMhaWeights,
+    k_cache: &[f32],
+    v_cache: &[f32],
+    pos: &[usize],
+    b: usize,
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+    rope_base: Option<f32>,
+) -> (AttnOut, CostReport) {
+    assert!(dh % n == 0 && s % n == 0 && d % n == 0, "cluster must divide dh, S, D");
+    let h = nh * dh;
+    let hs = dh / n; // per-block head-dim slice
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (wq_p, wk_p, wv_p, wo_p) = (&weights.wq, &weights.wk, &weights.wv, &weights.wo);
+    assert!(wq_p.n_in() == d && wq_p.n_out() == h && wo_p.n_in() == h && wo_p.n_out() == d);
+
+    let mut out = vec![0f32; b * d]; // global-memory output (atomicAdd target)
+    let mut k_new_g = vec![0f32; b * h];
+    let mut v_new_g = vec![0f32; b * h];
+    let mut report = CostReport::default();
+    report.launches = 1; // the whole block is ONE fused kernel
+
+    for head in 0..nh {
+        // ---- Stage 1: per-block QKV projection segments (Alg. 3 line 2),
+        // one pool task per cluster block r, which computes columns
+        // [head*dh + r*hs, head*dh + (r+1)*hs) of all three projections ----
+        let segs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
+            let project = |pw: &PackedWeight| -> Vec<f32> {
+                let mut seg = vec![0f32; b * hs];
+                linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
+                seg
+            };
+            (project(wq_p), project(wk_p), project(wv_p))
+        });
+
+        // ---- ClusterGather of Q/K/V (Alg. 3 line 3): one gather of the
+        // concatenated 3h-sized segment per block ----
+        let cat: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let (q_seg, k_seg, v_seg) = &segs[r];
+                let mut c = Vec::with_capacity(3 * b * hs);
+                c.extend_from_slice(q_seg);
+                c.extend_from_slice(k_seg);
+                c.extend_from_slice(v_seg);
+                c
+            })
+            .collect();
+        let (gathered, gc) = cluster_gather(&cat, transport, hw, noc);
+        report.dsmem_bytes += gc.traffic_bytes;
+
+        // Each block reassembles the full per-head q/k_new/v_new (B, dh).
+        // All blocks end with identical copies; verify with block 0 and
+        // assert agreement for block n-1 (the cluster contract).
+        let assemble = |owner: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let seg_len = 3 * b * hs;
+            let mut q = vec![0f32; b * dh];
+            let mut kn = vec![0f32; b * dh];
+            let mut vn = vec![0f32; b * dh];
+            for r in 0..n {
+                let seg = gathered_segment(&gathered[owner], owner, r, n, seg_len);
+                for bi in 0..b {
+                    q[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[bi * hs..(bi + 1) * hs]);
+                    kn[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[b * hs + bi * hs..b * hs + (bi + 1) * hs]);
+                    vn[bi * dh + r * hs..bi * dh + (r + 1) * hs]
+                        .copy_from_slice(&seg[2 * b * hs + bi * hs..2 * b * hs + (bi + 1) * hs]);
+                }
+            }
+            (q, kn, vn)
+        };
+        let (mut q, mut k_new, v_new) = assemble(0);
+        debug_assert_eq!(assemble(n - 1), (q.clone(), k_new.clone(), v_new.clone()));
+
+        // Rotary embedding (block-pipeline glue): every cluster block
+        // holds the full per-head Q/K after the gather, so each rotates
+        // its copy redundantly — no extra collective traffic.
+        if let Some(base) = rope_base {
+            for bi in 0..b {
+                linalg::rope_rotate(&mut q[bi * dh..(bi + 1) * dh], pos[bi], base);
+                linalg::rope_rotate(&mut k_new[bi * dh..(bi + 1) * dh], pos[bi], base);
+            }
+        }
+
+        // write-back of the new K/V rows (cache append goes to HBM anyway)
+        for bi in 0..b {
+            k_new_g[bi * h + head * dh..bi * h + (head + 1) * dh]
+                .copy_from_slice(&k_new[bi * dh..(bi + 1) * dh]);
+            v_new_g[bi * h + head * dh..bi * h + (head + 1) * dh]
+                .copy_from_slice(&v_new[bi * dh..(bi + 1) * dh]);
+        }
+
+        // ---- Stages 2-3: FlashDecoding partials, the three reduces, and
+        // the output-projection tiles + atomicAdd merge (Alg. 3 lines
+        // 4-8) — the shared attention core ----
+        attend_head_on(
+            pool, &q, &k_new, &v_new, k_cache, v_cache, pos, b, d, nh, dh, s, n, head, wo_p,
+            scale, transport, hw, noc, &mut out, &mut report,
+        );
+    }
+
+    (AttnOut { out, k_new: k_new_g, v_new: v_new_g }, report)
+}
+
+/// Multi-position (prefill) execution of the same cluster schedule:
+/// `hidden` holds `T` prompt rows (slot-major across the batch), row `j`
+/// belonging to cache slot `row_slot[j]` at absolute position
+/// `row_pos[j]`. Per head, the QKV projections batch all `T` rows through
+/// the packed-GEMM segments (one weight stream amortised over the whole
+/// chunk — the prefill regime of Fig. 2), rope rotates each row at its
+/// own position, and the roped K/V rows are **written into the mutable
+/// dense planes** at their positions so later rows of the same chunk
+/// attend to earlier ones. Attention then runs causally per row through
+/// [`attend_head_on`] with `b == 1` and `valid = row_pos[j]` — the
+/// byte-identical decode core — so a chunked prefill reproduces the
+/// retired decode-as-prefill token stream bit for bit
+/// (`tests/integration_prefill.rs`).
+///
+/// `k_plane`/`v_plane` are `(bucket, s, nh*dh)` dense planes; only rows
+/// `[row_pos[j]]` of slot `row_slot[j]` are written. Returns `(T, d)`
+/// attention output and the `(T, nh*dh)` new K/V rows in feed order.
+#[allow(clippy::too_many_arguments)]
+pub fn prefill_packed_rope_on(
+    pool: &Pool,
+    hidden: &[f32],
+    weights: &PackedMhaWeights,
+    k_plane: &mut [f32],
+    v_plane: &mut [f32],
+    row_slot: &[usize],
+    row_pos: &[usize],
+    d: usize,
+    nh: usize,
+    dh: usize,
+    s: usize,
+    n: usize,
+    transport: Transport,
+    hw: &Hardware,
+    noc: &Noc,
+    rope_base: Option<f32>,
+) -> (AttnOut, CostReport) {
+    assert!(dh % n == 0 && s % n == 0 && d % n == 0, "cluster must divide dh, S, D");
+    let t_rows = row_slot.len();
+    assert_eq!(row_pos.len(), t_rows);
+    let h = nh * dh;
+    let hs = dh / n; // per-block head-dim slice
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (wq_p, wk_p, wv_p, wo_p) = (&weights.wq, &weights.wk, &weights.wv, &weights.wo);
+    assert!(wq_p.n_in() == d && wq_p.n_out() == h && wo_p.n_in() == h && wo_p.n_out() == d);
+
+    let mut out = vec![0f32; t_rows * d];
+    let mut k_new_g = vec![0f32; t_rows * h];
+    let mut v_new_g = vec![0f32; t_rows * h];
+    let mut q_g = vec![0f32; t_rows * h];
+    let mut report = CostReport::default();
+    report.launches = 1; // one fused kernel per chunk, like decode
+
+    // ---- Phase A: batched QKV projection + rope + cache write, every
+    // head, before any attention — rows of this chunk must see each
+    // other's K/V ----
+    for head in 0..nh {
+        // Stage 1 over all T rows at once (matmul_rows is row-independent,
+        // so each row's bits match the decode-as-prefill projection)
+        let segs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
+            let project = |pw: &PackedWeight| -> Vec<f32> {
+                let mut seg = vec![0f32; t_rows * hs];
+                linalg::matmul_rows(hidden, t_rows, d, pw, 0, head * dh + r * hs, hs, &mut seg);
+                seg
+            };
+            (project(wq_p), project(wk_p), project(wv_p))
+        });
+        let cat: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let (q_seg, k_seg, v_seg) = &segs[r];
+                let mut c = Vec::with_capacity(3 * t_rows * hs);
+                c.extend_from_slice(q_seg);
+                c.extend_from_slice(k_seg);
+                c.extend_from_slice(v_seg);
+                c
+            })
+            .collect();
+        let (gathered, gc) = cluster_gather(&cat, transport, hw, noc);
+        report.dsmem_bytes += gc.traffic_bytes;
+        let seg_len = 3 * t_rows * hs;
+        let mut q = vec![0f32; t_rows * dh];
+        let mut kn = vec![0f32; t_rows * dh];
+        let mut vn = vec![0f32; t_rows * dh];
+        for r in 0..n {
+            let seg = gathered_segment(&gathered[0], 0, r, n, seg_len);
+            for j in 0..t_rows {
+                q[j * dh + r * hs..j * dh + (r + 1) * hs]
+                    .copy_from_slice(&seg[j * hs..(j + 1) * hs]);
+                kn[j * dh + r * hs..j * dh + (r + 1) * hs]
+                    .copy_from_slice(&seg[t_rows * hs + j * hs..t_rows * hs + (j + 1) * hs]);
+                vn[j * dh + r * hs..j * dh + (r + 1) * hs].copy_from_slice(
+                    &seg[2 * t_rows * hs + j * hs..2 * t_rows * hs + (j + 1) * hs],
+                );
+            }
+        }
+        if let Some(base) = rope_base {
+            for j in 0..t_rows {
+                linalg::rope_rotate(&mut q[j * dh..(j + 1) * dh], row_pos[j], base);
+                linalg::rope_rotate(&mut kn[j * dh..(j + 1) * dh], row_pos[j], base);
+            }
+        }
+        for j in 0..t_rows {
+            q_g[j * h + head * dh..j * h + (head + 1) * dh]
+                .copy_from_slice(&q[j * dh..(j + 1) * dh]);
+            k_new_g[j * h + head * dh..j * h + (head + 1) * dh]
+                .copy_from_slice(&kn[j * dh..(j + 1) * dh]);
+            v_new_g[j * h + head * dh..j * h + (head + 1) * dh]
+                .copy_from_slice(&vn[j * dh..(j + 1) * dh]);
+            // dense-plane write at the row's own (slot, position): the
+            // same bits the decode path round-trips through the paged
+            // pool between steps
+            let dst = ((row_slot[j] * s + row_pos[j]) * nh + head) * dh;
+            k_plane[dst..dst + dh].copy_from_slice(&kn[j * dh..(j + 1) * dh]);
+            v_plane[dst..dst + dh].copy_from_slice(&vn[j * dh..(j + 1) * dh]);
+        }
+    }
+
+    // ---- Phase B: causal attention per row, serial in feed order, heads
+    // ascending — the decode core with b == 1 and valid = row_pos[j]
+    // (earlier chunk rows are already in the planes) ----
+    let plane_stride = s * h;
+    for j in 0..t_rows {
+        let slot = row_slot[j];
+        let kc = &k_plane[slot * plane_stride..(slot + 1) * plane_stride];
+        let vc = &v_plane[slot * plane_stride..(slot + 1) * plane_stride];
+        let pos_j = [row_pos[j]];
+        for head in 0..nh {
+            attend_head_on(
+                pool,
+                &q_g[j * h + head * dh..j * h + (head + 1) * dh],
+                &k_new_g[j * h + head * dh..j * h + (head + 1) * dh],
+                &v_new_g[j * h + head * dh..j * h + (head + 1) * dh],
+                kc,
+                vc,
+                &pos_j,
+                1,
+                d,
+                nh,
+                dh,
+                s,
+                n,
+                head,
+                wo_p,
+                scale,
+                transport,
+                hw,
+                noc,
+                &mut out[j * d..(j + 1) * d],
+                &mut report,
+            );
         }
     }
 

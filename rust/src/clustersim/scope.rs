@@ -52,6 +52,56 @@ pub fn split_token_smem(model: &ModelConfig, batch: usize, cluster: usize) -> us
     qkv + acc + stats + staging
 }
 
+/// Per-block shared memory the multi-row prefill schedule needs: the
+/// SplitToken working set with all `rows` prompt positions of a slot
+/// staged through the gathered Q/K/V tiles at once (chunked prefill
+/// feeds `rows` positions per slot per fused step, so the tiles, stats
+/// and staging all scale with the chunk).
+pub fn prefill_smem(model: &ModelConfig, batch: usize, rows: usize, cluster: usize) -> usize {
+    split_token_smem(model, batch * rows.max(1), cluster)
+}
+
+/// Decide the execution plan for a prefill step feeding `rows` prompt
+/// positions per slot. Same feasibility gates as decode (cluster limit,
+/// partition divisibility), but the working set grows with the chunk:
+/// a schedule that runs fully fused at `rows = 1` can degrade to the
+/// gmem fallback at larger chunks — the planning signal a serving
+/// config uses to bound `--prefill-chunk`.
+pub fn plan_prefill(
+    model: &ModelConfig,
+    batch: usize,
+    rows: usize,
+    cluster: usize,
+    hw: &Hardware,
+) -> ScopeReport {
+    plan(model, batch * rows.max(1), cluster, hw)
+}
+
+/// Largest prefill chunk (rows per slot) that still runs fully fused
+/// for this model / batch / cluster on this hardware; 0 when not even a
+/// single row fuses. Monotone in `rows` (the working set only grows),
+/// so binary search over `[0, max_seq]`.
+pub fn max_fused_prefill_rows(
+    model: &ModelConfig,
+    batch: usize,
+    cluster: usize,
+    hw: &Hardware,
+) -> usize {
+    let fused = |rows: usize| {
+        matches!(plan_prefill(model, batch, rows, cluster, hw).plan, FusionPlan::Fused { .. })
+    };
+    let (mut lo, mut hi) = (0usize, model.max_seq);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if fused(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
 /// Decide the execution plan for one model / batch / cluster size.
 pub fn plan(model: &ModelConfig, batch: usize, cluster: usize, hw: &Hardware) -> ScopeReport {
     let mut reasons = Vec::new();
@@ -145,6 +195,28 @@ mod tests {
         let r = plan(&m, 16, 2, &hw);
         assert_eq!(r.plan, FusionPlan::FusedGmemFallback { cluster_size: 2 });
         assert!(r.smem_bytes > hw.smem_bytes_per_sm);
+    }
+
+    #[test]
+    fn prefill_chunks_are_smem_bounded() {
+        let hw = Hardware::h100_sxm5();
+        let m = ModelConfig::llama2_7b();
+        // the working set scales with the chunk
+        assert!(prefill_smem(&m, 1, 8, 4) > prefill_smem(&m, 1, 1, 4));
+        assert_eq!(prefill_smem(&m, 1, 1, 4), split_token_smem(&m, 1, 4));
+        // some fused chunk exists, but not an unbounded one: past the
+        // limit the schedule degrades to the gmem fallback, not to
+        // infeasible (partitions still divide)
+        let max = max_fused_prefill_rows(&m, 1, 4, &hw);
+        assert!(max >= 1, "at least one row must fuse");
+        assert!(max < m.max_seq, "whole-context chunks cannot stay in smem");
+        assert!(matches!(plan_prefill(&m, 1, max, 4, &hw).plan, FusionPlan::Fused { .. }));
+        assert!(matches!(
+            plan_prefill(&m, 1, max + 1, 4, &hw).plan,
+            FusionPlan::FusedGmemFallback { .. }
+        ));
+        // an indivisible cluster never fuses at any chunk
+        assert_eq!(max_fused_prefill_rows(&m, 1, 3, &hw), 0);
     }
 
     #[test]

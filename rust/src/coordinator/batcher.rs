@@ -40,6 +40,10 @@ pub struct Batcher {
     /// Admission headroom: fraction of a request's worst-case pages that
     /// must be free to admit it (1.0 = fully conservative).
     admit_fraction: f64,
+    /// Per-step budget of prompt rows across the whole batch (chunked
+    /// prefill, Sarathi/TGI-style). 0 = unlimited: a prompt prefills in
+    /// one step.
+    prefill_chunk: usize,
 }
 
 impl Batcher {
@@ -48,7 +52,45 @@ impl Batcher {
         assert!(admit_fraction > 0.0 && admit_fraction <= 1.0);
         buckets.sort_unstable();
         buckets.dedup();
-        Self { buckets, waiting: VecDeque::new(), running: Vec::new(), admit_fraction }
+        Self {
+            buckets,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            admit_fraction,
+            prefill_chunk: 0,
+        }
+    }
+
+    /// Cap prompt rows fed per step across the batch (0 = unlimited).
+    pub fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.prefill_chunk = chunk;
+    }
+
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+    }
+
+    /// Split this step's prefill-token budget over the running set.
+    /// `remaining[i]` is slot i's outstanding prompt rows (0 for decode
+    /// slots, which always get exactly one row and cost no budget).
+    /// Prefilling slots draw from the budget FCFS in running order; a
+    /// slot allocated 0 rows sits the step out. With a non-zero chunk the
+    /// first prefilling slot always gets at least one row, so prefill
+    /// can never starve behind decode traffic.
+    pub fn allocate_prefill(&self, remaining: &[usize]) -> Vec<usize> {
+        let mut budget = if self.prefill_chunk == 0 { usize::MAX } else { self.prefill_chunk };
+        remaining
+            .iter()
+            .map(|&rem| {
+                if rem == 0 {
+                    1
+                } else {
+                    let r = rem.min(budget);
+                    budget -= r;
+                    r
+                }
+            })
+            .collect()
     }
 
     pub fn max_batch(&self) -> usize {
@@ -161,6 +203,22 @@ mod tests {
         // submission timestamps ride along
         assert_eq!(admitted[0].submitted_us, 0);
         assert_eq!(admitted[2].submitted_us, 20);
+    }
+
+    #[test]
+    fn prefill_allocation_is_fcfs_within_budget() {
+        let mut b = Batcher::new(vec![8], 1.0);
+        // unlimited by default: everyone prefills whole
+        assert_eq!(b.allocate_prefill(&[5, 0, 3]), vec![5, 1, 3]);
+        b.set_prefill_chunk(4);
+        assert_eq!(b.prefill_chunk(), 4);
+        // decode slots ride free; prefill budget drains in order
+        assert_eq!(b.allocate_prefill(&[0, 5, 3]), vec![1, 4, 0]);
+        assert_eq!(b.allocate_prefill(&[2, 3, 1]), vec![2, 2, 0]);
+        // first prefill slot always progresses, even with chunk 1
+        b.set_prefill_chunk(1);
+        assert_eq!(b.allocate_prefill(&[0, 9]), vec![1, 1]);
+        assert_eq!(b.allocate_prefill(&[]), Vec::<usize>::new());
     }
 
     #[test]

@@ -65,6 +65,11 @@ pub struct ServeConfig {
     /// are byte-identical at every value — this is a wall-clock knob.
     /// Virtual-clock replay runs pin 1 (the §4 determinism rule).
     pub threads: usize,
+    /// Per-step prefill-token budget (Sarathi-style chunked prefill;
+    /// DESIGN.md §Prefill). `0` = unbounded: each admitted prompt
+    /// prefills in one step. Replayed traces must pin this — a different
+    /// chunk changes step boundaries and every timestamp downstream.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +87,7 @@ impl Default for ServeConfig {
             backend: BackendKind::Functional,
             cluster_size: 2,
             threads: 0,
+            prefill_chunk: 0,
         }
     }
 }
@@ -102,6 +108,7 @@ impl ServeConfig {
             "backend" => self.backend = BackendKind::parse(v)?,
             "cluster_size" => self.cluster_size = v.parse().context("cluster_size")?,
             "threads" => self.threads = v.parse().context("threads")?,
+            "prefill_chunk" => self.prefill_chunk = v.parse().context("prefill_chunk")?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -215,6 +222,21 @@ mod tests {
         // exhausting OS threads mid-serve
         c.threads = 500_000;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn prefill_chunk_key_round_trips() {
+        // default is one-shot prefill (0 = unbounded budget)
+        assert_eq!(ServeConfig::default().prefill_chunk, 0);
+        let mut c = ServeConfig::default();
+        c.apply_text("prefill_chunk = 4\n").unwrap();
+        assert_eq!(c.prefill_chunk, 4);
+        c.validate().unwrap();
+        // CLI-style override wins, 0 restores one-shot
+        c.set("prefill_chunk", "0").unwrap();
+        assert_eq!(c.prefill_chunk, 0);
+        c.validate().unwrap();
+        assert!(c.set("prefill_chunk", "four").is_err());
     }
 
     #[test]

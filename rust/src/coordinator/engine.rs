@@ -3,11 +3,14 @@
 //! without PJRT (see [`MockBackend`]); the real backend lives in
 //! `pjrt_backend.rs`.
 //!
-//! One `step()` = one fused decode step for the current continuous batch:
-//! gather pages → execute the AOT executable → sample → append new KV rows
-//! → emit events. Prefill is fed through the same decode path token by
-//! token (decode-as-prefill; prompt logits are discarded until the last
-//! prompt token).
+//! One `step()` = one fused step for the current continuous batch: gather
+//! pages → execute the AOT executable → sample → append new KV rows →
+//! emit events. Each running slot contributes a *row range* per step —
+//! one row for decode slots, up to `Batcher::prefill_chunk` prompt rows
+//! for prefilling slots — so long prompts chunk across steps and mix
+//! with decode traffic in a single batch (Sarathi/TGI-style chunked
+//! prefill). Logits are produced per slot from its last fed row; prompt
+//! logits before the final prompt row are never materialised.
 //!
 //! All request timing (queue wait, TTFT, TPOT, end-to-end) is measured on
 //! a pluggable [`Clock`]: real runs use the wall clock, load tests inject
@@ -46,25 +49,49 @@ impl ModelGeom {
     }
 }
 
-/// Output of one backend step.
+/// One slot's contribution to a step: a contiguous run of input rows.
+/// Decode slots carry exactly one row (the last sampled token); a
+/// prefilling slot carries its next prompt chunk. `pos0` is the absolute
+/// position of the first row (== the slot's current KV length).
+#[derive(Debug, Clone)]
+pub struct SlotRows {
+    pub tokens: Vec<i32>,
+    pub pos0: usize,
+}
+
+impl SlotRows {
+    pub fn rows(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// Output of one backend step over `n_slots` slot row-ranges totalling
+/// `total_rows` rows.
 #[derive(Debug, Clone)]
 pub struct StepOut {
-    /// (bucket, vocab) row-major.
+    /// (n_slots, vocab) row-major: one logits row per slot, taken from
+    /// that slot's *last* fed row.
     pub logits: Vec<f32>,
-    /// Per plane: (n_layers, bucket, row_elems) row-major new cache rows.
+    /// Per plane: (n_layers, total_rows, row_elems) row-major new cache
+    /// rows, slot-major within a layer (slot 0's rows first, in position
+    /// order).
     pub new_rows: Vec<Vec<f32>>,
 }
 
-/// Something that can execute one fused decode step for a batch bucket.
+/// Something that can execute one fused multi-position step for a batch
+/// bucket. `slots` holds between 1 and `bucket` entries; `cache_planes`
+/// are the gathered dense KV planes (`(n_layers, bucket, max_seq,
+/// row_elems)` each) and are mutable so backends may write the new roped
+/// rows in place — the engine re-gathers from the pool every step, so
+/// such writes never leak between steps.
 pub trait Backend {
     fn geom(&self) -> ModelGeom;
     fn buckets(&self) -> Vec<usize>;
     fn step(
         &mut self,
         bucket: usize,
-        tokens: &[i32],
-        pos: &[i32],
-        cache_planes: &[Vec<f32>],
+        slots: &[SlotRows],
+        cache_planes: &mut [Vec<f32>],
     ) -> Result<StepOut>;
 }
 
@@ -138,8 +165,16 @@ pub struct Engine<B: Backend> {
     /// decode steps executed (each = one fused kernel invocation batch).
     pub steps: u64,
     /// live sequences in the most recent executed step (0 if the last
-    /// `step()` was a no-op) — what a service-time model should bill.
+    /// `step()` was a no-op).
     pub last_batch: usize,
+    /// decode slots (single-row) in the most recent executed step — what
+    /// a service-time model bills per sequence.
+    pub last_decode_slots: usize,
+    /// prompt rows fed in the most recent executed step — what a
+    /// service-time model bills per prefill token.
+    pub last_prefill_tokens: usize,
+    /// prompt rows fed in total across all steps.
+    pub prefill_tokens: u64,
     /// tokens generated in total.
     pub tokens_out: u64,
     /// preemptions performed under cache pressure.
@@ -174,6 +209,9 @@ impl<B: Backend> Engine<B> {
             rng: Rng::seed_from_u64(0xC1A5),
             steps: 0,
             last_batch: 0,
+            last_decode_slots: 0,
+            last_prefill_tokens: 0,
+            prefill_tokens: 0,
             tokens_out: 0,
             preemptions: 0,
         }
@@ -187,6 +225,11 @@ impl<B: Backend> Engine<B> {
     pub fn submit(&mut self, req: Request) {
         let now = self.clock.now_us();
         self.batcher.submit(req, now);
+    }
+
+    /// Cap on prompt rows fed per step across the batch (0 = unlimited).
+    pub fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.batcher.set_prefill_chunk(chunk);
     }
 
     /// Drain accumulated events.
@@ -247,28 +290,45 @@ impl<B: Backend> Engine<B> {
     }
 
     /// Preempt sequences until the pool can absorb the next step's
-    /// appends: every running sequence sitting on a page boundary needs a
-    /// fresh page *this* step, so that many pages must be free (vLLM-style
-    /// recompute preemption: the youngest victim loses its pages and
-    /// re-enters the queue from the front).
-    fn relieve_pressure(&mut self) {
+    /// appends: `plan` maps each running sequence to the rows it intends
+    /// to append this step, and the pages those rows require must all be
+    /// free up front (vLLM-style recompute preemption: the youngest
+    /// victim loses its pages, leaves the plan, and re-enters the queue
+    /// from the front). A lone sequence shrinks its prefill chunk to
+    /// whatever still fits before giving up at its current length.
+    fn relieve_pressure(&mut self, plan: &mut HashMap<SeqId, usize>) {
         // sequences at the hard context limit finish rather than preempt
         for id in self.batcher.running().to_vec() {
             if self.pool.seq_len(id).is_some_and(|l| l >= self.pool.geometry().max_seq) {
+                plan.remove(&id);
                 self.finish(id, FinishReason::CacheFull);
             }
         }
         loop {
             let running = self.batcher.running().to_vec();
-            let needed = running.iter().filter(|id| self.pool.needs_new_page(**id)).count();
+            let needed: usize = running
+                .iter()
+                .map(|id| self.pool.pages_needed(*id, plan.get(id).copied().unwrap_or(0)))
+                .sum();
             if self.pool.free_pages() >= needed {
                 return;
             }
             if running.len() <= 1 {
-                // nothing left to evict: the lone sequence can never get
-                // more pages, so it finishes at its current length
+                // nothing left to evict: shrink the lone sequence's chunk
+                // to the rows that still fit; if not even one row fits it
+                // can never get more pages and finishes where it stands
                 if let Some(&id) = running.first() {
-                    self.finish(id, FinishReason::CacheFull);
+                    let free = self.pool.free_pages();
+                    let mut fit = plan.get(&id).copied().unwrap_or(0);
+                    while fit > 0 && self.pool.pages_needed(id, fit) > free {
+                        fit -= 1;
+                    }
+                    if fit >= 1 {
+                        plan.insert(id, fit);
+                    } else {
+                        plan.remove(&id);
+                        self.finish(id, FinishReason::CacheFull);
+                    }
                 }
                 return;
             }
@@ -276,6 +336,7 @@ impl<B: Backend> Engine<B> {
                 self.seqs.get(&id).map(|s| s.admitted_us).unwrap_or(u64::MAX)
             });
             self.preemptions += 1;
+            plan.remove(&victim);
             if let Some(st) = self.seqs.remove(&victim) {
                 let now = self.clock.now_us();
                 self.batcher.requeue_front(st.req, st.submitted_us, st.queue_us, now);
@@ -305,60 +366,111 @@ impl<B: Backend> Engine<B> {
                 },
             );
         }
-        // 2. cache pressure
-        self.relieve_pressure();
+        // 2. plan this step's rows per running slot: decode slots always
+        // get one row; prefilling slots split the batcher's per-step
+        // prefill token budget FCFS (chunked prefill), clamped to the
+        // context limit
         let running = self.batcher.running().to_vec();
         if running.is_empty() {
             self.last_batch = 0;
+            self.last_decode_slots = 0;
+            self.last_prefill_tokens = 0;
             return Ok(false);
         }
-        self.last_batch = running.len();
+        let remaining: Vec<usize> = running
+            .iter()
+            .map(|id| {
+                let st = &self.seqs[id];
+                st.req.prompt.len().saturating_sub(st.fed)
+            })
+            .collect();
+        let alloc = self.batcher.allocate_prefill(&remaining);
+        let max_seq = self.pool.geometry().max_seq;
+        let mut plan: HashMap<SeqId, usize> = HashMap::new();
+        for (i, id) in running.iter().enumerate() {
+            let len = self.pool.seq_len(*id).unwrap_or(0);
+            plan.insert(*id, alloc[i].min(max_seq.saturating_sub(len)));
+        }
+
+        // 3. cache pressure (victims and finished sequences leave the plan)
+        self.relieve_pressure(&mut plan);
+        let active: Vec<SeqId> = self
+            .batcher
+            .running()
+            .iter()
+            .copied()
+            .filter(|id| plan.get(id).copied().unwrap_or(0) >= 1)
+            .collect();
+        if active.is_empty() {
+            self.last_batch = 0;
+            self.last_decode_slots = 0;
+            self.last_prefill_tokens = 0;
+            return Ok(false);
+        }
         let bucket = self
             .batcher
-            .bucket_for(running.len())
-            .context("running set exceeds largest bucket")?;
+            .bucket_for(active.len())
+            .context("active set exceeds largest bucket")?;
 
-        // 3. build step inputs
-        let mut tokens = vec![0i32; bucket];
-        let mut pos = vec![0i32; bucket];
-        for (i, id) in running.iter().enumerate() {
+        // 4. build per-slot row ranges
+        let mut slots_in: Vec<SlotRows> = Vec::with_capacity(active.len());
+        let mut decode_slots = 0usize;
+        let mut prefill_rows = 0usize;
+        for id in &active {
             let st = &self.seqs[id];
-            tokens[i] = st.next_input();
-            pos[i] = self.pool.seq_len(*id).unwrap_or(0) as i32;
+            let r = plan[id];
+            let pos0 = self.pool.seq_len(*id).unwrap_or(0);
+            let tokens: Vec<i32> = if st.fed < st.req.prompt.len() {
+                prefill_rows += r;
+                st.req.prompt[st.fed..st.fed + r].to_vec()
+            } else {
+                decode_slots += 1;
+                debug_assert_eq!(r, 1, "decode slots step one row");
+                vec![st.next_input()]
+            };
+            slots_in.push(SlotRows { tokens, pos0 });
         }
+        self.last_batch = active.len();
+        self.last_decode_slots = decode_slots;
+        self.last_prefill_tokens = prefill_rows;
+        self.prefill_tokens += prefill_rows as u64;
+
         let g0 = self.pool.geometry();
         let planes = self.plane_bufs.entry(bucket).or_insert_with(|| {
             vec![vec![0.0f32; g0.n_layers * bucket * g0.max_seq * g0.row_elems]; g0.planes]
         });
-        self.pool.gather_batch_into(&running, bucket, planes)?;
+        self.pool.gather_batch_into(&active, bucket, planes)?;
 
-        // 4. execute
-        let out = self.backend.step(bucket, &tokens, &pos, planes)?;
+        // 5. execute
+        let out = self.backend.step(bucket, &slots_in, planes)?;
         self.steps += 1;
 
-        // 5. scatter results
+        // 6. scatter results: new_rows is (L, total_rows, re) slot-major
         let g = self.backend.geom();
         let re = g.row_elems;
-        for (i, id) in running.iter().enumerate() {
-            // append this slot's new KV rows: plane layout (L, bucket, re)
+        let total_rows: usize = slots_in.iter().map(SlotRows::rows).sum();
+        let mut row_base = 0usize;
+        for (i, id) in active.iter().enumerate() {
+            let r = slots_in[i].rows();
             let rows: Vec<Vec<f32>> = out
                 .new_rows
                 .iter()
                 .map(|plane| {
-                    let mut row = Vec::with_capacity(g.n_layers * re);
+                    let mut buf = Vec::with_capacity(g.n_layers * r * re);
                     for l in 0..g.n_layers {
-                        let o = (l * bucket + i) * re;
-                        row.extend_from_slice(&plane[o..o + re]);
+                        let o = (l * total_rows + row_base) * re;
+                        buf.extend_from_slice(&plane[o..o + r * re]);
                     }
-                    row
+                    buf
                 })
                 .collect();
-            let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
-            self.pool.append(*id, &row_refs).context("append new KV rows")?;
+            let row_refs: Vec<&[f32]> = rows.iter().map(|b| b.as_slice()).collect();
+            self.pool.append_rows(*id, &row_refs, r).context("append new KV rows")?;
+            row_base += r;
 
             let logits_row = &out.logits[i * g.vocab..(i + 1) * g.vocab];
             let st = self.seqs.get_mut(id).expect("running seq has state");
-            st.fed += 1;
+            st.fed += r;
             let prompt_done = st.fed >= st.req.prompt.len();
             if !prompt_done {
                 continue; // still prefilling: discard logits
@@ -412,8 +524,10 @@ impl<B: Backend> Engine<B> {
 }
 
 /// Deterministic in-memory backend for coordinator tests: the "model"
-/// echoes `(input_token + pos) % vocab` as the argmax and encodes
-/// `(token, pos)` into the new KV rows so tests can verify appends.
+/// echoes `(last_token + its_pos) % vocab` as each slot's argmax and
+/// encodes `(token, pos)` into every new KV row so tests can verify
+/// multi-row appends. Identical token streams to the single-row mock —
+/// only the step count changes under chunking.
 pub struct MockBackend {
     pub geom: ModelGeom,
     pub buckets: Vec<usize>,
@@ -445,34 +559,41 @@ impl Backend for MockBackend {
     fn step(
         &mut self,
         bucket: usize,
-        tokens: &[i32],
-        pos: &[i32],
-        cache_planes: &[Vec<f32>],
+        slots: &[SlotRows],
+        cache_planes: &mut [Vec<f32>],
     ) -> Result<StepOut> {
-        anyhow::ensure!(tokens.len() == bucket && pos.len() == bucket);
+        anyhow::ensure!(!slots.is_empty() && slots.len() <= bucket);
         anyhow::ensure!(cache_planes.len() == self.geom.planes);
         let g = self.geom;
-        for p in cache_planes {
+        for p in cache_planes.iter() {
             anyhow::ensure!(p.len() == g.n_layers * bucket * g.max_seq * g.row_elems);
         }
         self.steps += 1;
-        let mut logits = vec![0.0f32; bucket * g.vocab];
-        for i in 0..bucket {
-            let t = ((tokens[i] + pos[i]) as usize) % g.vocab;
+        let n_slots = slots.len();
+        let total_rows: usize = slots.iter().map(SlotRows::rows).sum();
+        let mut logits = vec![0.0f32; n_slots * g.vocab];
+        for (i, s) in slots.iter().enumerate() {
+            anyhow::ensure!(!s.tokens.is_empty(), "slot {i} fed no rows");
+            let last = s.tokens.len() - 1;
+            let t = ((s.tokens[last] + (s.pos0 + last) as i32) as usize) % g.vocab;
             logits[i * g.vocab + t] = 1.0;
         }
         let new_rows: Vec<Vec<f32>> = (0..g.planes)
             .map(|plane| {
-                let mut rows = vec![0.0f32; g.n_layers * bucket * g.row_elems];
+                let mut rows = vec![0.0f32; g.n_layers * total_rows * g.row_elems];
                 for l in 0..g.n_layers {
-                    for i in 0..bucket {
-                        let o = (l * bucket + i) * g.row_elems;
-                        rows[o] = tokens[i] as f32;
-                        if g.row_elems > 1 {
-                            rows[o + 1] = pos[i] as f32;
-                        }
-                        if g.row_elems > 2 {
-                            rows[o + 2] = plane as f32;
+                    let mut r = 0usize;
+                    for s in slots {
+                        for (j, &tok) in s.tokens.iter().enumerate() {
+                            let o = (l * total_rows + r) * g.row_elems;
+                            rows[o] = tok as f32;
+                            if g.row_elems > 1 {
+                                rows[o + 1] = (s.pos0 + j) as f32;
+                            }
+                            if g.row_elems > 2 {
+                                rows[o + 2] = plane as f32;
+                            }
+                            r += 1;
                         }
                     }
                 }
@@ -499,8 +620,8 @@ mod tests {
         e.submit(Request::new(1, vec![3, 5], 3));
         e.run_to_completion(100).unwrap();
         let events = e.take_events();
-        // prefill feeds 3 then 5; logits after last prompt token: (5+1)%32=6
-        // then (6+2)%32=8, then (8+3)%32=11
+        // prefill feeds [3, 5] in one step; logits from the last prompt
+        // row: (5+1)%32=6, then (6+2)%32=8, then (8+3)%32=11
         let toks: Vec<i32> = events
             .iter()
             .filter_map(|ev| match ev {
@@ -517,9 +638,83 @@ mod tests {
             other => panic!("expected Finished, got {other:?}"),
         }
         assert_eq!(e.tokens_out, 3);
-        // prompt(2) + generated(3) steps, minus 1: the last prompt step
-        // already yields the first generated token
-        assert_eq!(e.steps, 4);
+        // the whole prompt prefills in one step (which already yields the
+        // first generated token), then one step per remaining token
+        assert_eq!(e.steps, 3);
+        assert_eq!(e.prefill_tokens, 2);
+    }
+
+    #[test]
+    fn prompt_prefills_in_ceil_p_over_chunk_steps() {
+        // P=5, chunk=2 -> chunks of 2,2,1: first token on step 3, then
+        // 2 more decode steps
+        let mut e = engine();
+        e.set_prefill_chunk(2);
+        e.submit(Request::new(1, vec![1, 1, 1, 1, 1], 3));
+        e.step().unwrap();
+        assert_eq!((e.last_prefill_tokens, e.last_decode_slots), (2, 0));
+        assert_eq!(e.pool.seq_len(1), Some(2));
+        e.step().unwrap();
+        assert_eq!((e.last_prefill_tokens, e.last_decode_slots), (2, 0));
+        e.step().unwrap();
+        assert_eq!((e.last_prefill_tokens, e.last_decode_slots), (1, 0));
+        assert_eq!(e.tokens_out, 1, "first token sampled on the final chunk");
+        e.run_to_completion(100).unwrap();
+        assert_eq!(e.steps, 5); // ceil(5/2)=3 prefill + 2 decode
+        assert_eq!(e.prefill_tokens, 5);
+    }
+
+    #[test]
+    fn chunked_stream_matches_unchunked_byte_for_byte() {
+        let run = |chunk: usize| {
+            let mut e = engine();
+            e.set_prefill_chunk(chunk);
+            e.submit(Request::new(1, vec![3, 5, 9, 2], 4));
+            e.run_to_completion(100).unwrap();
+            let toks: Vec<i32> = e
+                .take_events()
+                .iter()
+                .filter_map(|ev| match ev {
+                    Event::FirstToken { token, .. } | Event::Token { token, .. } => Some(*token),
+                    _ => None,
+                })
+                .collect();
+            (toks, e.steps)
+        };
+        let (base, base_steps) = run(0); // unlimited: one prefill step
+        assert_eq!(base_steps, 4); // 1 prefill + 3 decode
+        for chunk in [1, 2, 3, 4, 7] {
+            let (toks, steps) = run(chunk);
+            assert_eq!(toks, base, "chunk={chunk}");
+            let c = chunk.min(4);
+            let prefill_steps = (4 + c - 1) / c;
+            assert_eq!(steps as usize, prefill_steps + 3, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn prefill_budget_is_shared_fcfs_and_decode_slots_ride_free() {
+        // slot A decodes while B and C prefill under a 3-row budget:
+        // B (first in running order among prefills) gets its rows first
+        let mut e = engine();
+        e.submit(Request::new(1, vec![4], 8)); // A: prompt 1, decodes early
+        e.step().unwrap(); // A prefills its single row
+        e.set_prefill_chunk(3);
+        e.submit(Request::new(2, vec![1; 5], 2)); // B
+        e.submit(Request::new(3, vec![2; 4], 2)); // C
+        e.step().unwrap();
+        // A decode (1 slot) + B rows min(5,3)=3 + C rows 0 (budget spent)
+        assert_eq!(e.last_decode_slots, 1);
+        assert_eq!(e.last_prefill_tokens, 3);
+        assert_eq!(e.pool.seq_len(2), Some(3));
+        assert_eq!(e.pool.seq_len(3), Some(0));
+        e.step().unwrap();
+        // A decode + B's last 2 rows + C gets the leftover 1
+        assert_eq!(e.last_decode_slots, 1);
+        assert_eq!(e.last_prefill_tokens, 3);
+        assert_eq!(e.pool.seq_len(2), Some(5));
+        assert_eq!(e.pool.seq_len(3), Some(1));
+        e.run_to_completion(100).unwrap();
     }
 
     #[test]
@@ -557,8 +752,8 @@ mod tests {
             .filter(|ev| matches!(ev, Event::Finished { .. }))
             .collect();
         assert_eq!(finished.len(), 4);
-        // batching means far fewer steps than sequential: sequential would
-        // be 4 * (3 + 4) = 28; batched should be ~7
+        // batching + one-shot prefill means far fewer steps than
+        // sequential decode-as-prefill (4 * (3 + 4) = 28); expected 4
         assert!(e.steps <= 10, "steps = {}", e.steps);
         assert_eq!(e.tokens_out, 16);
     }
@@ -632,7 +827,8 @@ mod tests {
         let clock = VirtualClock::shared();
         let shared: SharedClock = clock.clone();
         let mut e = Engine::with_clock(MockBackend::tiny(), 64, 4, 1.0, shared);
-        // prompt 2 + gen 3 -> 4 steps (last prompt step emits first token)
+        // prompt 2 + gen 3 -> 3 steps (the one-shot prefill step emits
+        // the first token)
         e.submit(Request::new(1, vec![3, 5], 3));
         while !e.idle() {
             e.step().unwrap();
@@ -641,12 +837,13 @@ mod tests {
         let t = e.timings()[0];
         assert_eq!(t.submitted_us, 0);
         // events are stamped at the *start* of the step that produced
-        // them: the first token falls in step 2, which begins at 1 ms
-        assert!((t.ttft - 1e-3).abs() < 1e-9, "{}", t.ttft);
+        // them: the first token falls in step 1, which begins at t=0 —
+        // prefill no longer costs one step per prompt token
+        assert_eq!(t.ttft, 0.0);
         // tokens 2 and 3 arrive one step (1 ms) apart
         assert!((t.tpot - 1e-3).abs() < 1e-9, "{}", t.tpot);
-        assert_eq!(t.finished_us, 3_000);
-        assert!((t.total - 3e-3).abs() < 1e-9, "{}", t.total);
+        assert_eq!(t.finished_us, 2_000);
+        assert!((t.total - 2e-3).abs() < 1e-9, "{}", t.total);
         assert_eq!(t.queue, 0.0);
     }
 

@@ -21,7 +21,7 @@ use crate::clustersim::collective::Transport;
 use crate::models::{MaterializedWeights, ModelConfig};
 use crate::util::pool::Pool;
 
-use super::engine::{Backend, ModelGeom, StepOut};
+use super::engine::{Backend, ModelGeom, SlotRows, StepOut};
 
 /// Default batch buckets (powers of two, like the AOT serving artifacts).
 pub const DEFAULT_BUCKETS: [usize; 4] = [1, 2, 4, 8];
@@ -47,8 +47,9 @@ pub struct FunctionalBackend {
     /// Decode steps executed (observability parity with `MockBackend`).
     pub steps: u64,
     /// Per-slot merged per-shard argmax of the last step's logits
-    /// (`BlockModel::decode_step_on`): what a greedy sampler will pick,
-    /// exposed for observability and the speculative-decode direction.
+    /// (`BlockModel::prefill_on`, from each slot's last fed row): what a
+    /// greedy sampler will pick, exposed for observability and the
+    /// speculative-decode direction.
     pub last_greedy: Vec<usize>,
 }
 
@@ -180,13 +181,16 @@ impl Backend for FunctionalBackend {
     fn step(
         &mut self,
         bucket: usize,
-        tokens: &[i32],
-        pos: &[i32],
-        cache_planes: &[Vec<f32>],
+        slots: &[SlotRows],
+        cache_planes: &mut [Vec<f32>],
     ) -> Result<StepOut> {
-        anyhow::ensure!(tokens.len() == bucket && pos.len() == bucket, "padded batch inputs");
-        let (logits, new_rows, greedy) =
-            self.model.decode_step_on(&self.pool, tokens, pos, cache_planes, bucket);
+        anyhow::ensure!(!slots.is_empty() && slots.len() <= bucket, "slot count fits bucket");
+        // the multi-position entry point covers decode too: a decode slot
+        // is a one-row range, and `prefill_on` is bit-identical to the
+        // retired per-token path at every row count (integration_prefill)
+        let rows: Vec<(&[i32], usize)> =
+            slots.iter().map(|s| (s.tokens.as_slice(), s.pos0)).collect();
+        let (logits, new_rows, greedy) = self.model.prefill_on(&self.pool, &rows, cache_planes, bucket);
         self.steps += 1;
         self.last_greedy = greedy;
         Ok(StepOut { logits, new_rows })
@@ -259,9 +263,13 @@ mod tests {
             assert_eq!(backend.threads(), threads);
             let g = geom_of(&backend);
             let bucket = 2usize;
-            let planes =
+            let mut planes =
                 vec![vec![0f32; g.n_layers * bucket * g.max_seq * g.row_elems]; g.planes];
-            let out = backend.step(bucket, &[3, 9], &[0, 0], &planes).unwrap();
+            let slots = [
+                SlotRows { tokens: vec![3], pos0: 0 },
+                SlotRows { tokens: vec![9], pos0: 0 },
+            ];
+            let out = backend.step(bucket, &slots, &mut planes).unwrap();
             // last_greedy is the sharded-argmax merge — must equal the
             // full-row argmax, and both must be pool-size invariant
             let greedy: Vec<usize> = (0..bucket)

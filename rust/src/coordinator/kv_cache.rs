@@ -187,40 +187,74 @@ impl KvPool {
         self.page_tokens * self.geom.token_elems()
     }
 
+    /// Pages a multi-row append of `n_rows` tokens to `id` would have to
+    /// allocate (0 for unknown sequences). The engine's pressure loop
+    /// sums this over its planned row counts before a step;
+    /// `pages_needed(id, 1)` is `needs_new_page` as a count.
+    pub fn pages_needed(&self, id: SeqId, n_rows: usize) -> usize {
+        match self.seqs.get(&id) {
+            Some(e) => self.pages_for(e.len + n_rows).saturating_sub(e.pages.len()),
+            None => 0,
+        }
+    }
+
     /// Append one token's rows for every (layer, plane).
     ///
     /// `rows[plane]` must be laid out `(n_layers, row_elems)` — exactly the
     /// `k_new` / `v_new` (or `kv_new`) row of one batch slot as returned by
-    /// the serving executable.
+    /// the serving executable. The `n_rows == 1` case of
+    /// [`Self::append_rows`].
     pub fn append(&mut self, id: SeqId, rows: &[&[f32]]) -> Result<()> {
+        self.append_rows(id, rows, 1)
+    }
+
+    /// Append `n_rows` tokens' rows for every (layer, plane) in one call,
+    /// allocating pages as boundaries are crossed (a chunked-prefill step
+    /// may span several).
+    ///
+    /// `rows[plane]` is laid out `(n_layers, n_rows, row_elems)` in feed
+    /// order — the multi-row generalisation of the single-token layout.
+    /// Capacity is validated up front (`max_seq` and free pages), so a
+    /// failed call appends nothing.
+    pub fn append_rows(&mut self, id: SeqId, rows: &[&[f32]], n_rows: usize) -> Result<()> {
         let g = self.geom;
+        anyhow::ensure!(n_rows >= 1, "append_rows needs at least one row");
         anyhow::ensure!(rows.len() == g.planes, "expected {} planes", g.planes);
         for r in rows {
-            anyhow::ensure!(r.len() == g.n_layers * g.row_elems, "bad row length");
+            anyhow::ensure!(r.len() == g.n_layers * n_rows * g.row_elems, "bad row length");
         }
         let page_elems = self.page_elems();
         let page_tokens = self.page_tokens;
-        let entry = self.seqs.get_mut(&id).ok_or_else(|| anyhow::anyhow!("unknown seq {id}"))?;
-        if entry.len >= g.max_seq {
-            bail!("sequence {id} at max_seq {}", g.max_seq);
-        }
-        if entry.len == entry.pages.len() * page_tokens {
-            let page = self.free.pop().ok_or_else(|| anyhow::anyhow!("kv pool exhausted"))?;
-            entry.pages.push(page);
-        }
-        let t = entry.len;
-        let page = entry.pages[t / page_tokens];
-        let slot = t % page_tokens;
-        // page layout: [layer][plane][slot][re]
-        for (plane, row) in rows.iter().enumerate() {
-            for l in 0..g.n_layers {
-                let dst = page * page_elems
-                    + ((l * g.planes + plane) * page_tokens + slot) * g.row_elems;
-                let src = &row[l * g.row_elems..(l + 1) * g.row_elems];
-                self.data[dst..dst + g.row_elems].copy_from_slice(src);
+        {
+            let entry = self.seqs.get(&id).ok_or_else(|| anyhow::anyhow!("unknown seq {id}"))?;
+            if entry.len + n_rows > g.max_seq {
+                bail!("sequence {id} at max_seq {}", g.max_seq);
+            }
+            let new_pages = self.pages_for(entry.len + n_rows).saturating_sub(entry.pages.len());
+            if new_pages > self.free.len() {
+                bail!("kv pool exhausted");
             }
         }
-        entry.len += 1;
+        for r in 0..n_rows {
+            let entry = self.seqs.get_mut(&id).expect("checked above");
+            if entry.len == entry.pages.len() * page_tokens {
+                let page = self.free.pop().expect("capacity checked above");
+                entry.pages.push(page);
+            }
+            let t = entry.len;
+            let page = entry.pages[t / page_tokens];
+            let slot = t % page_tokens;
+            // page layout: [layer][plane][slot][re]
+            for (plane, row) in rows.iter().enumerate() {
+                for l in 0..g.n_layers {
+                    let dst = page * page_elems
+                        + ((l * g.planes + plane) * page_tokens + slot) * g.row_elems;
+                    let src = &row[(l * n_rows + r) * g.row_elems..(l * n_rows + r + 1) * g.row_elems];
+                    self.data[dst..dst + g.row_elems].copy_from_slice(src);
+                }
+            }
+            entry.len += 1;
+        }
         Ok(())
     }
 
@@ -512,6 +546,87 @@ mod tests {
         }
         assert!(!pool.can_append(1));
         assert!(pool.append(1, &[&k, &v]).is_err());
+    }
+
+    /// `(n_layers, n_rows, re)` buffer whose row `r` equals the
+    /// single-token layout of `rows(vals[r])`.
+    fn multirow(vals: &[f32], g: &CacheGeometry) -> (Vec<f32>, Vec<f32>) {
+        let n = vals.len();
+        let mut k = vec![0f32; g.n_layers * n * g.row_elems];
+        let mut v = vec![0f32; g.n_layers * n * g.row_elems];
+        for (r, &val) in vals.iter().enumerate() {
+            let (kr, vr) = rows(val, g);
+            for l in 0..g.n_layers {
+                let dst = (l * n + r) * g.row_elems;
+                k[dst..dst + g.row_elems]
+                    .copy_from_slice(&kr[l * g.row_elems..(l + 1) * g.row_elems]);
+                v[dst..dst + g.row_elems]
+                    .copy_from_slice(&vr[l * g.row_elems..(l + 1) * g.row_elems]);
+            }
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn append_rows_matches_repeated_append_across_page_boundaries() {
+        let g = geom();
+        let vals = [0.0f32, 100.0, 200.0, 300.0, 400.0]; // 5 rows, page = 2 tokens
+        // one multi-row append ...
+        let mut multi = KvPool::new(g, 2, 4);
+        multi.alloc_seq(7).unwrap();
+        let (k, v) = multirow(&vals, &g);
+        multi.append_rows(7, &[&k, &v], vals.len()).unwrap();
+        // ... against the token-by-token path
+        let mut single = KvPool::new(g, 2, 4);
+        single.alloc_seq(7).unwrap();
+        for &val in &vals {
+            let (k1, v1) = rows(val, &g);
+            single.append(7, &[&k1, &v1]).unwrap();
+        }
+        assert_eq!(multi.seq_len(7), Some(5));
+        assert_eq!(multi.used_pages(), single.used_pages());
+        for t in 0..5 {
+            for l in 0..g.n_layers {
+                for p in 0..g.planes {
+                    assert_eq!(multi.peek(7, t, l, p), single.peek(7, t, l, p), "t={t} l={l} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pages_needed_counts_the_allocation_a_multi_append_performs() {
+        let g = geom();
+        let mut pool = KvPool::new(g, 2, 8);
+        pool.alloc_seq(1).unwrap();
+        assert_eq!(pool.pages_needed(1, 1), 1, "empty seq: first row allocates");
+        assert_eq!(pool.pages_needed(1, 5), 3, "5 rows at 2 tokens/page");
+        assert_eq!(pool.pages_needed(99, 4), 0, "unknown seq");
+        let (k, v) = rows(0.0, &g);
+        pool.append(1, &[&k, &v]).unwrap();
+        assert_eq!(pool.pages_needed(1, 1), 0, "second row fits the open page");
+        assert_eq!(pool.pages_needed(1, 2), 1);
+        // agreement with needs_new_page on the single-row case
+        assert_eq!(pool.pages_needed(1, 1), usize::from(pool.needs_new_page(1)));
+    }
+
+    #[test]
+    fn append_rows_failure_appends_nothing() {
+        let g = geom(); // max_seq 8
+        let mut pool = KvPool::new(g, 2, 2); // 4-token capacity
+        pool.alloc_seq(1).unwrap();
+        let vals = [0.0f32, 1.0, 2.0, 3.0, 4.0];
+        let (k, v) = multirow(&vals, &g);
+        // 5 rows need 3 pages but only 2 exist: all-or-nothing
+        assert!(pool.append_rows(1, &[&k, &v], 5).is_err());
+        assert_eq!(pool.seq_len(1), Some(0));
+        assert_eq!(pool.used_pages(), 0);
+        // max_seq violation also validated up front
+        let g9 = CacheGeometry { max_seq: 3, ..g };
+        let mut small = KvPool::new(g9, 2, 8);
+        small.alloc_seq(1).unwrap();
+        assert!(small.append_rows(1, &[&k, &v], 5).is_err());
+        assert_eq!(small.seq_len(1), Some(0));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 use crate::runtime::xla;
 use crate::runtime::{HostTensor, Runtime};
 
-use super::engine::{Backend, ModelGeom, StepOut};
+use super::engine::{Backend, ModelGeom, SlotRows, StepOut};
 
 /// PJRT-backed [`Backend`] for one model.
 pub struct PjrtBackend {
@@ -79,34 +79,80 @@ impl Backend for PjrtBackend {
     fn step(
         &mut self,
         bucket: usize,
-        tokens: &[i32],
-        pos: &[i32],
-        cache_planes: &[Vec<f32>],
+        slots: &[SlotRows],
+        cache_planes: &mut [Vec<f32>],
     ) -> Result<StepOut> {
-        let exe = self.rt.get(&self.model, bucket, true)?;
-        let iface = exe.iface.clone();
-        // engine plane layout (L, B, S, row_elems) has the same memory
-        // layout as the manifest's cache spec; only shape metadata differs.
-        let caches: Vec<HostTensor> = cache_planes
-            .iter()
-            .zip(iface.cache_specs())
-            .map(|(data, spec)| {
-                anyhow::ensure!(
-                    data.len() == spec.elems(),
-                    "plane has {} elems, spec {:?} wants {}",
-                    data.len(),
-                    spec.shape,
-                    spec.elems()
-                );
-                Ok(HostTensor { shape: spec.shape.clone(), data: data.clone() })
-            })
-            .collect::<Result<_>>()?;
-        let exe = self.rt.get(&self.model, bucket, true)?;
-        let outs = self.rt.decode_step(exe, tokens, pos, &caches, &self.params)?;
-        let mut it = outs.into_iter();
-        let logits = it.next().context("missing logits output")?;
-        let new_rows: Vec<Vec<f32>> = it.map(|t| t.data).collect();
-        anyhow::ensure!(new_rows.len() == self.geom.planes, "plane count mismatch");
-        Ok(StepOut { logits: logits.data, new_rows })
+        let iface = self.rt.get(&self.model, bucket, true)?.iface.clone();
+        let g = self.geom;
+        let n_slots = slots.len();
+        let total_rows: usize = slots.iter().map(SlotRows::rows).sum();
+        let max_rows = slots.iter().map(SlotRows::rows).max().unwrap_or(0);
+        let mut row_base = Vec::with_capacity(n_slots);
+        let mut acc = 0usize;
+        for s in slots {
+            row_base.push(acc);
+            acc += s.rows();
+        }
+        let mut logits = vec![0.0f32; n_slots * g.vocab];
+        let mut new_rows: Vec<Vec<f32>> =
+            vec![vec![0.0f32; g.n_layers * total_rows * g.row_elems]; g.planes];
+
+        // The AOT artifacts are single-position decode steps, so a
+        // multi-row chunk runs as `max_rows` inner calls: after each call
+        // the fresh KV rows are written back into the gathered planes
+        // (engine layout (L, B, S, row_elems)) so later prompt rows
+        // attend over them. Slots shorter than `max_rows` re-feed their
+        // last row as a padding lane; its outputs are not scattered.
+        for r in 0..max_rows {
+            let mut tokens = vec![0i32; iface.batch];
+            let mut pos = vec![0i32; iface.batch];
+            for (i, s) in slots.iter().enumerate() {
+                let rr = r.min(s.rows() - 1);
+                tokens[i] = s.tokens[rr];
+                pos[i] = (s.pos0 + rr) as i32;
+            }
+            // engine plane layout has the same memory layout as the
+            // manifest's cache spec; only shape metadata differs.
+            let caches: Vec<HostTensor> = cache_planes
+                .iter()
+                .zip(iface.cache_specs())
+                .map(|(data, spec)| {
+                    anyhow::ensure!(
+                        data.len() == spec.elems(),
+                        "plane has {} elems, spec {:?} wants {}",
+                        data.len(),
+                        spec.shape,
+                        spec.elems()
+                    );
+                    Ok(HostTensor { shape: spec.shape.clone(), data: data.clone() })
+                })
+                .collect::<Result<_>>()?;
+            let exe = self.rt.get(&self.model, bucket, true)?;
+            let outs = self.rt.decode_step(exe, &tokens, &pos, &caches, &self.params)?;
+            let mut it = outs.into_iter();
+            let step_logits = it.next().context("missing logits output")?;
+            let step_rows: Vec<Vec<f32>> = it.map(|t| t.data).collect();
+            anyhow::ensure!(step_rows.len() == g.planes, "plane count mismatch");
+            for (i, s) in slots.iter().enumerate() {
+                if r >= s.rows() {
+                    continue; // padding lane
+                }
+                if r == s.rows() - 1 {
+                    let o = i * g.vocab;
+                    logits[o..o + g.vocab].copy_from_slice(&step_logits.data[o..o + g.vocab]);
+                }
+                for (plane, rows) in step_rows.iter().enumerate() {
+                    for l in 0..g.n_layers {
+                        let src = (l * iface.batch + i) * g.row_elems;
+                        let row = &rows[src..src + g.row_elems];
+                        let dst = (l * total_rows + row_base[i] + r) * g.row_elems;
+                        new_rows[plane][dst..dst + g.row_elems].copy_from_slice(row);
+                        let cp = ((l * bucket + i) * g.max_seq + s.pos0 + r) * g.row_elems;
+                        cache_planes[plane][cp..cp + g.row_elems].copy_from_slice(row);
+                    }
+                }
+            }
+        }
+        Ok(StepOut { logits, new_rows })
     }
 }

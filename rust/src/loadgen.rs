@@ -25,8 +25,9 @@
 //!
 //! Timing conventions: events are stamped at the *start* of the decode
 //! step that produced them, and the step's service cost — billed for the
-//! batch that actually executed (`Engine::last_batch`) — is charged
-//! after it completes; a fixed one-step offset that cancels in
+//! batch that actually executed, decode slots (`Engine::last_decode_slots`)
+//! and prefill rows (`Engine::last_prefill_tokens`) priced separately —
+//! is charged after it completes; a fixed one-step offset that cancels in
 //! comparisons. Submissions are stamped when the engine observes them,
 //! which is at most one step after `arrival_us` when the engine is
 //! mid-step (the same mailbox-drain semantics the threaded server has).
@@ -54,28 +55,40 @@ use crate::workload::Trace;
 pub struct ServiceModel {
     /// Fixed cost per decode step, µs (kernel launch + host loop).
     pub step_base_us: u64,
-    /// Additional cost per running sequence in the step, µs.
+    /// Additional cost per decode (single-row) sequence in the step, µs.
     pub step_per_seq_us: u64,
+    /// Additional cost per prompt row prefilled in the step, µs. Prefill
+    /// rows amortize the weight pass, so this is typically far below
+    /// `step_per_seq_us` — chunked prefill is what makes TTFT real in
+    /// the virtual-clock suites.
+    pub step_prefill_token_us: u64,
 }
 
 impl ServiceModel {
-    /// Cost of one step with `live` running sequences, µs.
-    pub fn step_us(&self, live: usize) -> u64 {
-        self.step_base_us + self.step_per_seq_us * live.max(1) as u64
+    /// Cost of one step with `decode_slots` decode sequences and
+    /// `prefill_rows` prompt rows, µs. Floored at one decode slot's
+    /// cost: no executed step is cheaper than a batch-1 decode step
+    /// (parity with the pre-prefill model, which billed `live.max(1)`).
+    pub fn step_us(&self, decode_slots: usize, prefill_rows: usize) -> u64 {
+        let work = self.step_per_seq_us * decode_slots as u64
+            + self.step_prefill_token_us * prefill_rows as u64;
+        self.step_base_us + work.max(self.step_per_seq_us)
     }
 
     /// Model a backend whose step time is one flat TPOT (e.g. taken from
     /// `clustersim::e2e::decode_step` — the Fig. 17 under-load bench).
     pub fn from_tpot_us(tpot_us: u64) -> Self {
-        Self { step_base_us: tpot_us, step_per_seq_us: 0 }
+        Self { step_base_us: tpot_us, step_per_seq_us: 0, step_prefill_token_us: 0 }
     }
 
     /// Derive the step cost from the full-block cost model
-    /// (`clustersim::block::decode_tpot`) at the given fusion scope: the
-    /// per-sequence slope comes from the batch-1 → batch-8 TPOT delta,
-    /// the base is the batch-independent remainder. This is what replay
-    /// bills when driving an `Engine<FunctionalBackend>` — whole-block
-    /// service times instead of the attention-only `decode_step` costs.
+    /// (`clustersim::block::decode_tpot` / `prefill_tpot`) at the given
+    /// fusion scope: the per-sequence slope comes from the batch-1 →
+    /// batch-8 TPOT delta, the base is the batch-independent remainder,
+    /// and the per-prefill-row slope from the rows-1 → rows-128 prefill
+    /// delta. This is what replay bills when driving an
+    /// `Engine<FunctionalBackend>` — whole-block service times instead
+    /// of the attention-only `decode_step` costs.
     pub fn from_block(
         model: &crate::models::ModelConfig,
         seq: usize,
@@ -84,14 +97,18 @@ impl ServiceModel {
         hw: &crate::clustersim::Hardware,
         noc: &crate::clustersim::Noc,
     ) -> Self {
-        use crate::clustersim::block::decode_tpot;
+        use crate::clustersim::block::{decode_tpot, prefill_tpot};
         let t1 = decode_tpot(model, 1, seq, scope, cluster_size, hw, noc);
         let t8 = decode_tpot(model, 8, seq, scope, cluster_size, hw, noc);
         let per_seq = ((t8 - t1) / 7.0).max(0.0);
         let base = (t1 - per_seq).max(0.0);
+        let p1 = prefill_tpot(model, 1, seq, scope, cluster_size, hw, noc);
+        let p128 = prefill_tpot(model, 128, seq, scope, cluster_size, hw, noc);
+        let per_tok = ((p128 - p1) / 127.0).max(0.0);
         Self {
             step_base_us: (base * 1e6).round().max(1.0) as u64,
             step_per_seq_us: (per_seq * 1e6).round() as u64,
+            step_prefill_token_us: (per_tok * 1e6).round().max(1.0) as u64,
         }
     }
 }
@@ -215,9 +232,12 @@ pub fn replay<B: Backend>(
         if did {
             steps += 1;
             anyhow::ensure!(steps <= max_steps, "replay exceeded {max_steps} steps");
-            // bill the batch that actually executed (engine.last_batch),
-            // not the post-completion running count
-            clock.advance_us(service.step_us(engine.last_batch));
+            // bill the batch that actually executed — decode slots and
+            // prefill rows priced separately — not the post-completion
+            // running count
+            clock.advance_us(
+                service.step_us(engine.last_decode_slots, engine.last_prefill_tokens),
+            );
         } else if engine.batcher.running().is_empty() {
             // Admission blocked with the whole pool free: the queue head's
             // worst-case footprint exceeds the pool and can never run.
@@ -318,7 +338,8 @@ mod tests {
         r1.arrival_us = 5_000;
         let mut r2 = Request::new(1, vec![3], 2);
         r2.arrival_us = 9_000;
-        let service = ServiceModel { step_base_us: 100, step_per_seq_us: 0 };
+        let service =
+            ServiceModel { step_base_us: 100, step_per_seq_us: 0, step_prefill_token_us: 0 };
         let rep = replay(&mut e, &[r1, r2], &service, 1_000).unwrap();
         assert_eq!(rep.completed, 2);
         // paced: first submission at its arrival, not t=0
@@ -334,7 +355,8 @@ mod tests {
             let trace = Trace::poisson(64, 400.0, SeqlenDist::Fixed(24), (8, 8), 64, 11);
             let reqs = synthesize_requests(&trace, 64, 16, 8, 5);
             let mut e = virtual_engine();
-            let service = ServiceModel { step_base_us: 200, step_per_seq_us: 50 };
+            let service =
+                ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 25 };
             replay(&mut e, &reqs, &service, 1_000_000).unwrap().render()
         };
         assert_eq!(run(), run(), "virtual-clock replay must be byte-deterministic");
@@ -343,16 +365,41 @@ mod tests {
     #[test]
     fn replay_charges_service_model_time() {
         let mut e = virtual_engine();
-        // prompt 2 + gen 3 -> 4 steps at 1000 µs, batch of one
+        // prompt 2 + gen 3 -> 3 steps at 1000 µs: the one-shot prefill
+        // step already emits the first token
         let r = Request::new(0, vec![1, 2], 3);
-        let service = ServiceModel { step_base_us: 1_000, step_per_seq_us: 0 };
+        let service =
+            ServiceModel { step_base_us: 1_000, step_per_seq_us: 0, step_prefill_token_us: 0 };
         let rep = replay(&mut e, &[r], &service, 100).unwrap();
-        assert_eq!(rep.steps, 4);
-        // finish is stamped at the start of the 4th step (3 advances)
-        assert_eq!(rep.last_finish_us, 3_000);
+        assert_eq!(rep.steps, 3);
+        // finish is stamped at the start of the 3rd step (2 advances)
+        assert_eq!(rep.last_finish_us, 2_000);
         let t = &e.timings()[0];
-        assert!((t.ttft - 1e-3).abs() < 1e-9, "{}", t.ttft);
+        assert_eq!(t.ttft, 0.0, "prefill costs one step, stamped at its start");
         assert!((t.tpot - 1e-3).abs() < 1e-9, "{}", t.tpot);
+    }
+
+    #[test]
+    fn replay_bills_prefill_rows_distinct_from_decode_slots() {
+        let run = |chunk: usize| {
+            let mut e = virtual_engine();
+            e.set_prefill_chunk(chunk);
+            let service = ServiceModel {
+                step_base_us: 100,
+                step_per_seq_us: 50,
+                step_prefill_token_us: 10,
+            };
+            let rep = replay(&mut e, &[Request::new(0, vec![1; 6], 2)], &service, 100).unwrap();
+            (rep.steps, rep.last_finish_us)
+        };
+        // one-shot: step 1 bills 6 prefill rows (100 + 6*10 = 160 µs) and
+        // emits the first token; step 2 is a decode slot (150 µs), so the
+        // finish is stamped at its start
+        assert_eq!(run(0), (2, 160));
+        // chunk 3: two prefill steps of 3 rows — each floored at one
+        // decode slot's cost (100 + max(30, 50) = 150 µs) — then a decode
+        // step; first token at 150 µs, finish stamped at 300 µs
+        assert_eq!(run(3), (3, 300));
     }
 
     #[test]
@@ -360,7 +407,8 @@ mod tests {
         // pool: 8 pages x 4 tokens = 32 slots; request needs 90 worst-case
         let mut e = Engine::with_clock(mock(), 8, 4, 1.0, VirtualClock::shared());
         let r = Request::new(0, vec![1; 30], 60);
-        let service = ServiceModel { step_base_us: 100, step_per_seq_us: 0 };
+        let service =
+            ServiceModel { step_base_us: 100, step_per_seq_us: 0, step_prefill_token_us: 0 };
         let err = replay(&mut e, &[r], &service, 1_000).unwrap_err();
         assert!(err.to_string().contains("wedged"), "{err:#}");
     }
@@ -370,13 +418,14 @@ mod tests {
         // replay takes &mut Engine, so engines can be reused: the report
         // must cover this call's work only, not lifetime totals.
         let mut e = virtual_engine();
-        let service = ServiceModel { step_base_us: 100, step_per_seq_us: 0 };
+        let service =
+            ServiceModel { step_base_us: 100, step_per_seq_us: 0, step_prefill_token_us: 0 };
         let a = replay(&mut e, &[Request::new(0, vec![1], 2)], &service, 100).unwrap();
         let b = replay(&mut e, &[Request::new(1, vec![1, 2], 2)], &service, 100).unwrap();
         assert_eq!(a.completed, 1);
         assert_eq!(b.completed, 1, "second replay must not double-count");
         assert_eq!(b.percentiles.e2e.count, 1);
-        assert_eq!(b.steps, 3, "prompt 2 + gen 2 overlap one step");
+        assert_eq!(b.steps, 2, "one-shot prefill emits the first token");
         assert_eq!(b.tokens_out, 2);
     }
 
@@ -386,7 +435,8 @@ mod tests {
         let mut e = Engine::with_clock(mock(), 64, 4, 0.5, clock);
         let trace = Trace::poisson(8, 2_000.0, SeqlenDist::Fixed(12), (4, 4), 64, 2);
         let reqs = synthesize_requests(&trace, 64, 8, 4, 3);
-        let service = ServiceModel { step_base_us: 0, step_per_seq_us: 0 };
+        let service =
+            ServiceModel { step_base_us: 0, step_per_seq_us: 0, step_prefill_token_us: 0 };
         let rep = replay(&mut e, &reqs, &service, 100_000).unwrap();
         assert_eq!(rep.completed, 8);
         assert!(rep.percentiles.e2e.count == 8);
@@ -408,21 +458,27 @@ mod tests {
         );
         for live in [1usize, 4, 8] {
             assert!(
-                ful.step_us(live) <= att.step_us(live) && att.step_us(live) <= iso.step_us(live),
+                ful.step_us(live, 0) <= att.step_us(live, 0)
+                    && att.step_us(live, 0) <= iso.step_us(live, 0),
                 "live={live}: {} / {} / {}",
-                ful.step_us(live),
-                att.step_us(live),
-                iso.step_us(live)
+                ful.step_us(live, 0),
+                att.step_us(live, 0),
+                iso.step_us(live, 0)
             );
         }
         // sanity: llama-scale TPOT lands in the single-digit-ms range
-        assert!((2_000..30_000).contains(&ful.step_us(1)), "{}", ful.step_us(1));
+        assert!((2_000..30_000).contains(&ful.step_us(1, 0)), "{}", ful.step_us(1, 0));
+        // prefill rows are priced, and far below a decode slot: the
+        // weight pass is amortized across the chunk
+        assert!(ful.step_prefill_token_us >= 1);
+        assert!(ful.step_prefill_token_us < ful.step_per_seq_us.max(ful.step_base_us));
     }
 
     #[test]
     fn percentiles_skip_tpot_for_single_token_requests() {
         let mut e = virtual_engine();
-        let service = ServiceModel { step_base_us: 500, step_per_seq_us: 0 };
+        let service =
+            ServiceModel { step_base_us: 500, step_per_seq_us: 0, step_prefill_token_us: 0 };
         let one = Request::new(0, vec![1], 1); // single token: no tpot sample
         let two = Request::new(1, vec![1], 3);
         let rep = replay(&mut e, &[one, two], &service, 100).unwrap();

@@ -59,6 +59,7 @@ fn usage() -> ! {
          \x20 serve             --model NAME --requests N --rps R\n\
          \x20                   [--backend functional|pjrt|mock] [--mock]\n\
          \x20                   [--threads N]  (0 = auto; functional backend)\n\
+         \x20                   [--prefill-chunk N]  (0 = one-shot prefill)\n\
          \x20                   [--config FILE] [--set k=v]  (default: functional)\n\
          \x20 simulate          --model NAME [--seq N] [--batch N] [--cluster N]\n\
          \x20 inspect-artifacts [--artifacts DIR]\n\
@@ -141,6 +142,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(t) = flags.get("threads") {
         cfg.threads = t.parse().context("--threads expects an integer (0 = auto)")?;
     }
+    if let Some(c) = flags.get("prefill-chunk") {
+        cfg.prefill_chunk =
+            c.parse().context("--prefill-chunk expects an integer (0 = one-shot)")?;
+    }
     if flags.contains_key("mock") {
         cfg.backend = BackendKind::Mock;
     }
@@ -202,7 +207,8 @@ fn serve_backend<B: Backend + Send + 'static>(
     rps: f64,
 ) -> Result<()> {
     let geom = backend.geom();
-    let engine = Engine::new(backend, cfg.pool_pages, cfg.page_tokens, cfg.admit_fraction);
+    let mut engine = Engine::new(backend, cfg.pool_pages, cfg.page_tokens, cfg.admit_fraction);
+    engine.set_prefill_chunk(cfg.prefill_chunk);
     let server = Server::spawn(engine);
 
     // Open-loop paced replay: submissions honour arrival_us on the wall

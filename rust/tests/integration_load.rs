@@ -4,17 +4,33 @@
 //! `loadgen::replay`, and the percentile reports must be
 //!
 //! * **deterministic** — two runs at the same seed are byte-identical;
-//! * **physical** — preemptions appear only past saturation, and p99 TTFT
-//!   grows monotonically across the knee;
+//! * **physical** — p99 TTFT grows monotonically across the knee, chunked
+//!   prefill keeps the main pool free of preemptions at every rate, and a
+//!   tight-pool scenario still exercises recompute preemption;
 //! * **paced** — the wall-clock `Server` path spreads submissions over
 //!   the trace span instead of dumping everything at t=0.
 //!
 //! Scenario capacity math (see EXPERIMENTS.md §Load saturation): requests
-//! are 16 prompt + 8 generated tokens = 23 steps; the service model costs
-//! 200 + 50·batch µs per step, so a full batch of 8 serves ≈ 580 req/s.
-//! 100 rps is far under the knee, 450 rps sits just below it, 1500 rps is
-//! ~2.6× past it. The KV pool (40 pages × 4 tokens) fits 6 concurrent
-//! worst-case requests, so only the saturated scenario preempts.
+//! are 16 prompt + 8 generated tokens; at the pinned prefill chunk of 4 a
+//! request needs 4 prefill steps + 7 decode steps (the last chunk emits
+//! the first token). The service model costs 200 + 50·decode_slots +
+//! 50·prefill_rows µs per step, floored at one decode slot: a full decode
+//! batch of 8 steps in 600 µs, the worst mixed step (7 decode slots + one
+//! 4-row chunk) in 750 µs. The shared 4-row prefill budget is what bounds
+//! throughput — one 16-token prompt enters service every 4 steps — and the
+//! overload steady state averages ≈484 µs/step, so the knee lands near
+//! ≈520 req/s: 100 rps is far under it, 450 rps just below, 1500 rps
+//! ~2.9× past it.
+//!
+//! Chunked prefill changes the cache-pressure story: serializing prompt
+//! rows through the FCFS budget staggers KV growth across slots, so the
+//! 40-page pool that the retired decode-as-prefill engine thrashed at
+//! overload (63 preemptions in the PR 2 suite) now never sees more than
+//! 13 concurrent pages — the main scenarios assert *zero* preemptions at
+//! every rate. A second, deliberately tight 9-page pool scenario keeps
+//! the vLLM-style recompute-preemption machinery under test at overload.
+//! Byte-determinism requires pinning the chunk size (DESIGN.md §Prefill):
+//! this suite fixes `prefill_chunk = 4`.
 
 use clusterfusion::coordinator::engine::{Engine, MockBackend, ModelGeom};
 use clusterfusion::coordinator::server::Server;
@@ -37,9 +53,11 @@ fn load_mock() -> MockBackend {
 /// clock. Fully determined by (rps, TRACE_SEED, SYNTH_SEED).
 fn run_scenario(rps: f64) -> ReplayReport {
     let mut engine = Engine::with_clock(load_mock(), 40, 4, 0.5, VirtualClock::shared());
+    engine.set_prefill_chunk(4); // pinned: chunking must be deterministic
     let trace = Trace::poisson(N_REQUESTS, rps, SeqlenDist::Fixed(24), (8, 8), 64, TRACE_SEED);
     let requests = loadgen::synthesize_requests(&trace, 64, 16, 8, SYNTH_SEED);
-    let service = ServiceModel { step_base_us: 200, step_per_seq_us: 50 };
+    let service =
+        ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 };
     loadgen::replay(&mut engine, &requests, &service, 1_000_000).expect("replay")
 }
 
@@ -68,26 +86,62 @@ fn percentile_reports_are_seed_stable_and_byte_identical() {
     }
 }
 
+/// The tight-pool pressure scenario: same traffic and service model as
+/// `run_scenario`, but a 9-page pool (36 token slots for up to 8 running
+/// sequences that each want 24) so the preemption machinery stays under
+/// test now that chunked prefill keeps the 40-page pool pressure-free.
+fn run_pressure_scenario(rps: f64) -> ReplayReport {
+    let mut engine = Engine::with_clock(load_mock(), 9, 4, 0.5, VirtualClock::shared());
+    engine.set_prefill_chunk(4);
+    let trace = Trace::poisson(N_REQUESTS, rps, SeqlenDist::Fixed(24), (8, 8), 64, TRACE_SEED);
+    let requests = loadgen::synthesize_requests(&trace, 64, 16, 8, SYNTH_SEED);
+    let service =
+        ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 };
+    loadgen::replay(&mut engine, &requests, &service, 1_000_000).expect("replay")
+}
+
 #[test]
-fn preemptions_only_past_saturation() {
-    let under = run_scenario(UNDER_RPS);
-    let at = run_scenario(AT_CAPACITY_RPS);
-    let over = run_scenario(OVERLOAD_RPS);
-    assert_eq!(
-        under.preemptions, 0,
-        "under-load run must not hit cache pressure (pool fits its concurrency)"
-    );
-    assert_eq!(
-        at.preemptions, 0,
-        "the knee scenario queues but must not yet thrash the KV pool"
-    );
+fn chunked_prefill_staggers_kv_growth_so_the_pool_never_pressures() {
+    // The serialized prefill budget admits one prompt into service every 4
+    // steps, so concurrent KV footprints are staggered: peak demand on the
+    // 40-page pool is 13 pages at every rate, and the recompute preemption
+    // the decode-as-prefill engine paid at overload (63 in the PR 2 suite)
+    // disappears entirely.
+    for rps in [UNDER_RPS, AT_CAPACITY_RPS, OVERLOAD_RPS] {
+        let rep = run_scenario(rps);
+        assert_eq!(rep.preemptions, 0, "rps {rps}: staggered prefill must not thrash the pool");
+        // no preemption => no token is ever regenerated
+        assert_eq!(rep.tokens_out, (N_REQUESTS * 8) as u64, "rps {rps}");
+    }
+    // ... and no prompt row is ever re-fed: total prefill rows == sum of
+    // prompt lengths, exactly once each
+    let mut engine = Engine::with_clock(load_mock(), 40, 4, 0.5, VirtualClock::shared());
+    engine.set_prefill_chunk(4);
+    let trace =
+        Trace::poisson(N_REQUESTS, OVERLOAD_RPS, SeqlenDist::Fixed(24), (8, 8), 64, TRACE_SEED);
+    let requests = loadgen::synthesize_requests(&trace, 64, 16, 8, SYNTH_SEED);
+    let service =
+        ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 };
+    loadgen::replay(&mut engine, &requests, &service, 1_000_000).expect("replay");
+    assert_eq!(engine.prefill_tokens, (N_REQUESTS * 16) as u64);
+}
+
+#[test]
+fn tight_pool_still_preempts_at_overload() {
+    // 9 pages cannot hold 8 staggered 24-token sequences, so overload
+    // thrashes: preempted requests restart prefill from row 0 (recompute
+    // preemption discards fed progress) and regenerate their tokens.
+    let rep = run_pressure_scenario(OVERLOAD_RPS);
+    assert!(rep.preemptions > 0, "9-page pool must thrash at 1500 rps");
+    assert_eq!(rep.completed, N_REQUESTS, "every request still finishes");
     assert!(
-        over.preemptions > 0,
-        "overload must preempt: 8 running × 6 worst-case pages > 40-page pool"
+        rep.tokens_out > (N_REQUESTS * 8) as u64,
+        "recompute preemption regenerates tokens: {}",
+        rep.tokens_out
     );
-    // recompute preemption regenerates tokens: only the overload pays it
-    assert_eq!(under.tokens_out, (N_REQUESTS * 8) as u64);
-    assert!(over.tokens_out > (N_REQUESTS * 8) as u64);
+    // preemption churn must not break byte-determinism
+    let again = run_pressure_scenario(OVERLOAD_RPS);
+    assert_eq!(rep.render(), again.render());
 }
 
 #[test]
@@ -107,9 +161,10 @@ fn p99_ttft_grows_monotonically_across_the_knee() {
 
 #[test]
 fn decode_rate_stays_bounded_while_queues_grow() {
-    // TPOT measures pure decode cadence: even 2.6x past saturation it is
-    // bounded by the full-batch step cost (600 µs), while TTFT/e2e absorb
-    // the queueing. This is the TPOT-vs-load flattening of Fig. 17.
+    // TPOT measures pure decode cadence: even far past saturation it is
+    // bounded by the worst mixed step cost (750 µs: 7 decode slots plus
+    // a 4-row prefill chunk), while TTFT/e2e absorb the queueing. This
+    // is the TPOT-vs-load flattening of Fig. 17.
     let over = run_scenario(OVERLOAD_RPS);
     assert!(over.percentiles.tpot.p99 <= 0.0008, "{}", over.percentiles.tpot.p99);
     assert!(over.percentiles.ttft.p99 > 0.1, "{}", over.percentiles.ttft.p99);

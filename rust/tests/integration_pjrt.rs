@@ -4,7 +4,7 @@
 //! note) when the manifest is absent so `cargo test` stays green on a
 //! fresh checkout.
 
-use clusterfusion::coordinator::engine::{Backend, Engine};
+use clusterfusion::coordinator::engine::{Backend, Engine, SlotRows};
 use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
 use clusterfusion::coordinator::request::{Event, Request};
 use clusterfusion::runtime::{HostTensor, Runtime};
@@ -54,20 +54,32 @@ fn serving_interface_returns_new_rows_and_is_position_consistent() {
     let planes: Vec<Vec<f32>> = (0..g.planes)
         .map(|_| vec![0.0; g.n_layers * g.max_seq * g.row_elems])
         .collect();
-    let out = backend.step(1, &[7], &[0], &planes).unwrap();
+    let slot = |tok: i32| vec![SlotRows { tokens: vec![tok], pos0: 0 }];
+    let out = backend.step(1, &slot(7), &mut planes.clone()).unwrap();
     assert_eq!(out.logits.len(), g.vocab);
     assert_eq!(out.new_rows.len(), 2);
     assert_eq!(out.new_rows[0].len(), g.n_layers * g.row_elems);
     assert!(out.new_rows[0].iter().any(|&x| x != 0.0), "k_new non-trivial");
 
     // Determinism: same inputs -> same logits.
-    let out2 = backend.step(1, &[7], &[0], &planes).unwrap();
+    let out2 = backend.step(1, &slot(7), &mut planes.clone()).unwrap();
     assert_eq!(out.logits, out2.logits);
 
     // Different token -> different logits (the model actually depends on
     // its input).
-    let out3 = backend.step(1, &[9], &[0], &planes).unwrap();
+    let out3 = backend.step(1, &slot(9), &mut planes.clone()).unwrap();
     assert_ne!(out.logits, out3.logits);
+
+    // Multi-row prefill: feeding [7, 9] as one two-row chunk produces
+    // per-layer rows for both positions, and its logits (from the last
+    // fed row) match feeding row 9 after writing row 7's KV back — the
+    // single-position equivalence the engine relies on.
+    let mut chunk_planes = planes.clone();
+    let chunked = backend
+        .step(1, &[SlotRows { tokens: vec![7, 9], pos0: 0 }], &mut chunk_planes)
+        .unwrap();
+    assert_eq!(chunked.logits.len(), g.vocab);
+    assert_eq!(chunked.new_rows[0].len(), g.n_layers * 2 * g.row_elems);
 }
 
 #[test]

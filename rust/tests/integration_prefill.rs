@@ -1,0 +1,187 @@
+//! Prefill differential suite (tier-1): the multi-position prefill path
+//! must be *byte-identical* to the retired decode-as-prefill behaviour at
+//! every chunk size. Feeding a prompt one row per step (`chunk = 1`) is
+//! exactly what the old single-token engine did, so it is the frozen
+//! baseline; one-shot prefill (`chunk = 0`, the whole prompt in one step)
+//! and every intermediate chunking must reproduce its KV planes
+//! (`f32::to_bits` over every layer/plane/position), its first token, and
+//! its full greedy stream — only the step count may change, and it must be
+//! exactly ceil(P/chunk) prefill steps for a P-token prompt.
+//!
+//! The matrix runs the real functional pipeline (micro-llama MHA +
+//! micro-mla MLA) across worker-pool sizes 1 and 4: chunking must be
+//! invariant to both the attention family and host threading
+//! (DESIGN.md §Prefill, §Parallel). Edge cases — a chunk larger than the
+//! prompt, a single-token prompt, and a mid-prefill preemption that must
+//! discard fed progress (vLLM recompute semantics) — ride on the mock
+//! backend.
+
+use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend};
+use clusterfusion::coordinator::request::{Event, Request};
+use clusterfusion::coordinator::FunctionalBackend;
+
+/// Everything the prefill refactor is allowed to keep and the one thing
+/// it is allowed to change: the byte-level outcome of a request, plus
+/// the step count that produced it.
+#[derive(Debug, PartialEq, Eq)]
+struct Snapshot {
+    /// KV rows of every prompt position, captured the moment prefill
+    /// completes: `(layer, plane, position, to_bits(row))` flattened.
+    kv_bits: Vec<u32>,
+    first_token: i32,
+    stream: Vec<i32>,
+    prefill_steps: u64,
+}
+
+fn greedy_stream(events: &[Event]) -> Vec<i32> {
+    events
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::FirstToken { token, .. } | Event::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Drive one request through an engine at the given chunk: step exactly
+/// through prefill, snapshot the KV planes, then decode to completion.
+fn snapshot<B: Backend>(backend: B, chunk: usize, prompt: &[i32], gen: usize) -> Snapshot {
+    let geom = backend.geom();
+    let mut engine = Engine::new(backend, 64, 8, 1.0);
+    engine.set_prefill_chunk(chunk);
+    engine.submit(Request::new(1, prompt.to_vec(), gen));
+
+    let p = prompt.len();
+    let prefill_steps = if chunk == 0 { 1 } else { p.div_ceil(chunk) };
+    let expect_steps = prefill_steps as u64;
+    while engine.pool.seq_len(1).unwrap_or(0) < p {
+        assert!(engine.step().unwrap(), "engine stalled mid-prefill");
+        assert!(engine.steps <= expect_steps, "prefill overran ceil(P/chunk)");
+    }
+    assert_eq!(engine.steps, expect_steps, "P={p} chunk={chunk}");
+    assert_eq!(engine.pool.seq_len(1), Some(p), "no decode rows may land early");
+    // the final prompt chunk already sampled the first token
+    assert_eq!(engine.tokens_out, 1);
+
+    let mut kv_bits = Vec::new();
+    for layer in 0..geom.n_layers {
+        for plane in 0..geom.planes {
+            for pos in 0..p {
+                let row = engine.pool.peek(1, pos, layer, plane).expect("prompt row present");
+                kv_bits.extend(row.iter().map(|v| v.to_bits()));
+            }
+        }
+    }
+
+    engine.run_to_completion(1_000).unwrap();
+    let events = engine.take_events();
+    let stream = greedy_stream(&events);
+    assert_eq!(stream.len(), gen);
+    Snapshot { kv_bits, first_token: stream[0], stream, prefill_steps: expect_steps }
+}
+
+const PROMPT: [i32; 7] = [3, 5, 9, 2, 11, 4, 7];
+const GEN: usize = 5;
+
+#[test]
+fn chunked_prefill_matches_decode_as_prefill_byte_for_byte() {
+    // chunk 1 == the retired engine (one prompt row per step): everything
+    // else must reproduce it exactly, on both attention families and at
+    // both worker-pool sizes.
+    for model in ["micro-llama", "micro-mla"] {
+        for threads in [1usize, 4] {
+            let make = || FunctionalBackend::from_model_name_on(model, 42, 2, threads).unwrap();
+            let baseline = snapshot(make(), 1, &PROMPT, GEN);
+            assert_eq!(baseline.prefill_steps, 7);
+            for chunk in [3usize, 0] {
+                let got = snapshot(make(), chunk, &PROMPT, GEN);
+                assert_eq!(
+                    got.kv_bits, baseline.kv_bits,
+                    "{model} t{threads} chunk={chunk}: KV planes diverged"
+                );
+                assert_eq!(got.first_token, baseline.first_token, "{model} t{threads}");
+                assert_eq!(
+                    got.stream, baseline.stream,
+                    "{model} t{threads} chunk={chunk}: greedy stream diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_pool_size_never_changes_prefill_bytes() {
+    // the same (model, seed, chunk) must produce identical bytes at pool
+    // sizes 1 and 4 — threading is a wall-clock knob only
+    for model in ["micro-llama", "micro-mla"] {
+        for chunk in [1usize, 3, 0] {
+            let at = |threads| {
+                snapshot(
+                    FunctionalBackend::from_model_name_on(model, 42, 2, threads).unwrap(),
+                    chunk,
+                    &PROMPT,
+                    GEN,
+                )
+            };
+            assert_eq!(at(1), at(4), "{model} chunk={chunk}");
+        }
+    }
+}
+
+#[test]
+fn chunk_larger_than_prompt_is_one_shot() {
+    let base = snapshot(MockBackend::tiny(), 0, &[3, 5, 9], 4);
+    let big = snapshot(MockBackend::tiny(), 64, &[3, 5, 9], 4);
+    assert_eq!(base.prefill_steps, 1);
+    assert_eq!(big.prefill_steps, 1, "an oversized chunk must not pad steps");
+    assert_eq!(base, big);
+}
+
+#[test]
+fn single_token_prompt_prefills_in_one_step_at_every_chunk() {
+    let mut snaps = Vec::new();
+    for chunk in [0usize, 1, 5] {
+        let s = snapshot(MockBackend::tiny(), chunk, &[7], 4);
+        assert_eq!(s.prefill_steps, 1, "chunk={chunk}");
+        snaps.push(s);
+    }
+    assert!(snaps.windows(2).all(|w| w[0] == w[1]));
+}
+
+#[test]
+fn mid_prefill_preemption_discards_fed_progress() {
+    // 3 pages × 4 tokens = 12 KV slots. Request 1 (prompt 4 + gen 8 = 12
+    // slots) fills the pool alone, so request 2 (prompt 8 + gen 4) is
+    // preempted mid-prefill — after feeding its first chunk but before
+    // finishing the prompt — and must restart from row 0 when readmitted
+    // (vLLM recompute preemption: fed progress is discarded with the
+    // pages). The regenerated outcome must match an unpressured run.
+    let run = |pages: usize| {
+        let mut e = Engine::new(MockBackend::tiny(), pages, 4, 0.5);
+        e.set_prefill_chunk(4);
+        e.submit(Request::new(1, vec![2; 4], 8));
+        e.submit(Request::new(2, vec![3; 8], 4));
+        e.run_to_completion(1_000).unwrap();
+        let mut streams: Vec<(u64, Vec<i32>)> = e
+            .take_events()
+            .into_iter()
+            .filter_map(|ev| match ev {
+                Event::Finished { id, generated, .. } => Some((id, generated)),
+                _ => None,
+            })
+            .collect();
+        streams.sort();
+        assert_eq!(e.pool.used_pages(), 0, "all pages returned");
+        (streams, e.preemptions, e.prefill_tokens)
+    };
+    let (pressured, preemptions, prefill_rows) = run(3);
+    let (free, no_preemptions, free_rows) = run(64);
+    assert_eq!(no_preemptions, 0);
+    assert_eq!(free_rows, 12, "unpressured: each prompt row fed exactly once");
+    assert!(preemptions > 0, "the 3-page pool must preempt");
+    assert!(
+        prefill_rows > 12,
+        "a mid-prefill victim must re-feed discarded rows: {prefill_rows}"
+    );
+    assert_eq!(pressured, free, "recompute preemption must not change any stream");
+}

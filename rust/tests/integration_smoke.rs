@@ -21,11 +21,12 @@ fn lifecycle_smoke_admit_decode_finish_metrics() {
     engine.submit(Request::new(42, vec![9, 9, 9], 2));
     assert!(!engine.idle());
     assert!(engine.step().unwrap());
-    assert_eq!(engine.pool.seq_len(42), Some(1), "prefill fed one token");
+    assert_eq!(engine.pool.seq_len(42), Some(3), "one-shot prefill fed the whole prompt");
 
-    // Drive to completion; prompt(3) + gen(2) - 1 overlapping step = 4.
+    // Drive to completion; the prefill step already emitted the first
+    // token, so gen(2) needs just one more decode step: 2 total.
     engine.run_to_completion(16).unwrap();
-    assert_eq!(engine.steps, 4);
+    assert_eq!(engine.steps, 2);
     assert_eq!(engine.tokens_out, 2);
 
     // Event stream shape: FirstToken, Token, Finished(Length).
@@ -71,7 +72,8 @@ fn quickstart_mock_snapshot() {
         events.last(),
         Some(Event::Finished { reason: FinishReason::Length, .. })
     ));
-    assert_eq!(engine.steps, 4);
+    // one-shot prefill (emits the first token) + two decode steps
+    assert_eq!(engine.steps, 3);
     assert_eq!(engine.tokens_out, 3);
 }
 
@@ -83,11 +85,12 @@ fn kv_rows_land_where_addressed() {
     let geom = ModelGeom { vocab: 64, n_layers: 3, row_elems: 4, planes: 2, max_seq: 32 };
     let mut engine = Engine::new(MockBackend::new(geom, vec![1, 2]), 32, 4, 1.0);
     engine.submit(Request::new(5, vec![11, 13], 30));
-    for _ in 0..4 {
+    for _ in 0..3 {
         engine.step().unwrap();
     }
-    // 4 tokens appended: prompt 11 @ pos 0, prompt 13 @ pos 1, then two
-    // generated tokens. MockBackend encodes (token, pos, plane) per row.
+    // 4 tokens appended: the one-shot prefill step fed prompt 11 @ pos 0
+    // and 13 @ pos 1, then two decode steps appended the generated
+    // tokens. MockBackend encodes (token, pos, plane) per row.
     assert_eq!(engine.pool.seq_len(5), Some(4));
     let row = engine.pool.peek(5, 1, 2, 1).unwrap();
     assert_eq!(row[0], 13.0, "token at pos 1");
