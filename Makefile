@@ -1,9 +1,9 @@
 # Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
 # what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
 
-.PHONY: tier1 build test test-load test-block test-prefill test-parallel bench-compile bench-smoke quickstart artifacts clean
+.PHONY: tier1 build test test-load test-router test-block test-prefill test-parallel bench-compile bench-smoke quickstart artifacts clean
 
-tier1: build test test-load test-block test-prefill test-parallel bench-compile bench-smoke quickstart
+tier1: build test test-load test-router test-block test-prefill test-parallel bench-compile bench-smoke quickstart
 
 build:
 	cd rust && cargo build --release
@@ -16,6 +16,12 @@ test:
 # pacing/percentile regressions).
 test-load:
 	cd rust && cargo test -q --test integration_load
+
+# Front-door suite (also run by `test`): latency-targeted admission —
+# token budget, SLO projection, growth gate — end to end on the virtual
+# clock, plus the router eligibility/ledger regressions.
+test-router:
+	cd rust && cargo test -q --test integration_router
 
 # Full-block subsystem suite (also run by `test`): functional block
 # pipeline vs frozen scalar reference, greedy determinism, fusion-scope

@@ -89,8 +89,8 @@ fn run<B: Backend + Send + 'static>(backend: B, n_requests: usize) -> Result<()>
     );
     let requests = loadgen::synthesize_requests(&trace, vocab, 16, 12, 7);
     for req in &requests {
-        let route = router.route(req)?;
-        router.on_started(route.replica);
+        router.route(req)?;
+        router.on_started(req.id);
     }
 
     // Paced open-loop submission: honours arrival_us on the wall clock.
@@ -107,7 +107,7 @@ fn run<B: Backend + Send + 'static>(backend: B, n_requests: usize) -> Result<()>
                     tokens += 1;
                 }
                 Event::Token { .. } => tokens += 1,
-                Event::Finished { .. } => router.on_finished(0, id),
+                Event::Finished { .. } => router.on_finished(id),
             }
         }
     }

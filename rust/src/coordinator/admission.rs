@@ -1,0 +1,245 @@
+//! Latency-targeted admission control: the serving front door.
+//!
+//! The batcher and scheduler react *after* saturation (preemption, FCFS
+//! head blocking); this module shapes load *before* it enters the engine,
+//! TGI-router style (`waiting_served_ratio` / `max_batch_total_tokens` in
+//! `router/src/infer.rs`). Three independent knobs, all off by default so
+//! an unconfigured engine behaves exactly as before:
+//!
+//! * **Token budget** (`max_batch_total_tokens`): admission stops growing
+//!   the running set once the sum of worst-case token footprints
+//!   (`prompt + max_new`) of running sequences would exceed the budget —
+//!   KV-footprint admission by tokens, not request count. A lone request
+//!   larger than the whole budget still runs (the batch is never starved
+//!   to zero).
+//! * **Growth gate** (`waiting_served_ratio` + `max_waiting_steps`):
+//!   between decode steps, waiting requests may force batch growth only
+//!   when the queue is at least `ratio × running` deep — small dribbles
+//!   wait for a worthwhile prefill batch instead of repeatedly disturbing
+//!   decode cadence. `max_waiting_steps` bounds the wait: after that many
+//!   steps without growth, admission is forced regardless of the ratio.
+//! * **SLO projection** (`slo_ttft_us` / `slo_tpot_us`): `submit` projects
+//!   the marginal TTFT of the queue head from [`ServiceModel`] step costs
+//!   and rejects requests whose projection breaches the TTFT target
+//!   (back-pressure instead of an unbounded queue); the TPOT target caps
+//!   the decode batch at the largest width whose step cost still meets it.
+//!
+//! Determinism rule (DESIGN.md §4): every decision here is a pure function
+//! of engine-visible state (queue depths, fed counts, step counter) and
+//! the static config — no wall-clock reads, no randomness — so
+//! virtual-clock replay through the front door stays single-writer and
+//! byte-deterministic.
+
+use crate::loadgen::ServiceModel;
+
+/// Outcome of [`crate::coordinator::engine::Engine::submit`] with the
+/// front door active. Rejections emit a `Finished` event with
+/// [`crate::coordinator::request::FinishReason::Rejected`] and record no
+/// timing (latency percentiles cover admitted requests only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Accepted into the waiting queue.
+    Queued,
+    /// `prompt + max_new_tokens` exceeds the model context window
+    /// (`CacheGeometry::max_seq`): the request could only ever end in a
+    /// truncated `CacheFull` stop, so it is refused up front.
+    RejectedTooLong,
+    /// Projected TTFT of serving this request behind the current backlog
+    /// breaches `slo_ttft_us`.
+    RejectedSlo,
+}
+
+impl SubmitOutcome {
+    pub fn is_queued(&self) -> bool {
+        matches!(self, Self::Queued)
+    }
+}
+
+/// Front-door configuration. [`AdmissionConfig::off`] (the `Default`)
+/// disables every check: submit always queues, admission fills the batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionConfig {
+    /// Token-budget bound on the running set: sum of worst-case footprints
+    /// (`prompt + max_new`) of concurrently running sequences. 0 = off.
+    pub max_batch_total_tokens: usize,
+    /// Waiting requests may grow a non-empty batch only when
+    /// `waiting >= ratio * running` (TGI `waiting_served_ratio`).
+    /// 0.0 = off: admission never defers.
+    pub waiting_served_ratio: f64,
+    /// Force growth after this many steps without it, bounding the
+    /// ratio gate's worst-case deferral. 0 = never force.
+    pub max_waiting_steps: u64,
+    /// Reject at submit when projected TTFT exceeds this, µs. 0 = off.
+    pub slo_ttft_us: u64,
+    /// Cap decode batch width so one step stays within this, µs. 0 = off.
+    pub slo_tpot_us: u64,
+    /// Step-cost model the projections price against (the same model
+    /// `loadgen::replay` bills, so projection and virtual clock agree).
+    pub service: ServiceModel,
+}
+
+impl AdmissionConfig {
+    /// Everything disabled: byte-identical behaviour to an engine without
+    /// a front door.
+    pub fn off() -> Self {
+        Self {
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 0.0,
+            max_waiting_steps: 0,
+            slo_ttft_us: 0,
+            slo_tpot_us: 0,
+            service: ServiceModel {
+                step_base_us: 0,
+                step_per_seq_us: 0,
+                step_prefill_token_us: 0,
+            },
+        }
+    }
+
+    /// True when no knob is active (submit/admission take the fast path).
+    pub fn is_off(&self) -> bool {
+        self.max_batch_total_tokens == 0
+            && self.waiting_served_ratio <= 0.0
+            && self.slo_ttft_us == 0
+            && self.slo_tpot_us == 0
+    }
+
+    /// Largest decode batch width (in 1..=`max_batch`) whose worst-case
+    /// step cost — decode slots plus a full `chunk`-row prefill budget —
+    /// still meets the TPOT SLO. Never below 1 (a lone sequence must be
+    /// allowed to decode even when the SLO is unmeetable); `max_batch`
+    /// when the TPOT SLO is off.
+    pub fn decode_slot_cap(&self, max_batch: usize, chunk: usize) -> usize {
+        if self.slo_tpot_us == 0 {
+            return max_batch;
+        }
+        let mut cap = 1;
+        for cand in 1..=max_batch {
+            if self.service.step_us(cand, chunk) <= self.slo_tpot_us {
+                cap = cand;
+            }
+        }
+        cap
+    }
+
+    /// Projected time for `backlog_rows` outstanding prompt rows (queue +
+    /// partially-fed running prompts + the candidate) to clear the shared
+    /// prefill budget, priced at the worst mixed step (`max_batch - 1`
+    /// decode slots riding along with each chunk), µs. With one-shot
+    /// prefill (`chunk == 0`) each backlogged prompt costs one step
+    /// billed at its own row count.
+    pub fn projected_ttft_us(
+        &self,
+        backlog_rows: usize,
+        backlog_prompts: usize,
+        prompt_rows: usize,
+        max_batch: usize,
+        chunk: usize,
+    ) -> u64 {
+        let decode_ride = max_batch.saturating_sub(1);
+        if chunk > 0 {
+            let steps = (backlog_rows + prompt_rows).div_ceil(chunk) as u64;
+            steps * self.service.step_us(decode_ride, chunk)
+        } else {
+            let steps = (backlog_prompts + 1) as u64;
+            steps * self.service.step_us(decode_ride, prompt_rows)
+        }
+    }
+
+    /// Growth gate: may this step admit from a non-empty queue into a
+    /// non-empty batch? (An empty batch or empty queue always passes —
+    /// the gate only defers *growth*, never first admission or drain.)
+    /// `steps_since_growth` is the current step count minus the step of
+    /// the last successful admission.
+    pub fn growth_allowed(
+        &self,
+        waiting: usize,
+        running: usize,
+        steps_since_growth: u64,
+    ) -> bool {
+        if self.waiting_served_ratio <= 0.0 || running == 0 || waiting == 0 {
+            return true;
+        }
+        if self.max_waiting_steps > 0 && steps_since_growth >= self.max_waiting_steps {
+            return true;
+        }
+        waiting as f64 >= self.waiting_served_ratio * running as f64
+    }
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The load-suite service model: 200 + 50·decode + 50·prefill µs,
+    /// floored at one decode slot (step_us(d, 4) = 400 + 50·d).
+    fn svc() -> ServiceModel {
+        ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 }
+    }
+
+    fn with_slo(slo_ttft_us: u64, slo_tpot_us: u64) -> AdmissionConfig {
+        AdmissionConfig { slo_ttft_us, slo_tpot_us, service: svc(), ..AdmissionConfig::off() }
+    }
+
+    #[test]
+    fn off_config_gates_nothing() {
+        let a = AdmissionConfig::off();
+        assert!(a.is_off());
+        assert_eq!(a.decode_slot_cap(8, 4), 8);
+        assert!(a.growth_allowed(100, 8, 0));
+        // zero service model projects zero: nothing could ever breach
+        assert_eq!(a.projected_ttft_us(1000, 10, 16, 8, 4), 0);
+    }
+
+    #[test]
+    fn decode_slot_cap_tracks_the_tpot_target() {
+        // step_us(d, chunk=4) = 400 + 50·d
+        assert_eq!(with_slo(0, 500).decode_slot_cap(8, 4), 2);
+        assert_eq!(with_slo(0, 600).decode_slot_cap(8, 4), 4);
+        assert_eq!(with_slo(0, 750).decode_slot_cap(8, 4), 7);
+        // unmeetable target still leaves one slot
+        assert_eq!(with_slo(0, 1).decode_slot_cap(8, 4), 1);
+        // off = full batch
+        assert_eq!(with_slo(0, 0).decode_slot_cap(8, 4), 8);
+    }
+
+    #[test]
+    fn projected_ttft_prices_the_worst_mixed_step() {
+        let a = with_slo(25_000, 0);
+        // empty engine, prompt 16, chunk 4, max_batch 8:
+        // ceil(16/4) = 4 steps × step_us(7, 4) = 4 × 750 = 3000 µs
+        assert_eq!(a.projected_ttft_us(0, 0, 16, 8, 4), 3_000);
+        // 16 backlogged rows ahead double it
+        assert_eq!(a.projected_ttft_us(16, 1, 16, 8, 4), 6_000);
+        // one-shot prefill: (backlog_prompts + 1) steps at the candidate's
+        // own row count: 2 × (200 + max(7·50 + 16·50, 50)) = 2 × 1350
+        assert_eq!(a.projected_ttft_us(16, 1, 16, 8, 0), 2_700);
+    }
+
+    #[test]
+    fn growth_gate_defers_until_ratio_or_timeout() {
+        let a = AdmissionConfig {
+            waiting_served_ratio: 2.0,
+            max_waiting_steps: 16,
+            ..AdmissionConfig::off()
+        };
+        // empty batch or empty queue: always allowed
+        assert!(a.growth_allowed(5, 0, 0));
+        assert!(a.growth_allowed(0, 5, 0));
+        // 3 waiting vs 2 running: 3 < 2·2 = deferred
+        assert!(!a.growth_allowed(3, 2, 0));
+        assert!(a.growth_allowed(4, 2, 0), "ratio met");
+        // timeout forces growth past the ratio
+        assert!(a.growth_allowed(1, 8, 16));
+        assert!(!a.growth_allowed(1, 8, 15));
+        // ratio 0 = gate off
+        let off = AdmissionConfig { waiting_served_ratio: 0.0, ..a };
+        assert!(off.growth_allowed(1, 8, 0));
+    }
+}

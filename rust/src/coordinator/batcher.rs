@@ -116,6 +116,13 @@ impl Batcher {
         self.waiting.len()
     }
 
+    /// Total prompt rows across the waiting queue — the queue's share of
+    /// the prefill backlog the admission controller projects TTFT from
+    /// (`coordinator::admission`).
+    pub fn waiting_prompt_rows(&self) -> usize {
+        self.waiting.iter().map(|e| e.req.prompt.len()).sum()
+    }
+
     pub fn running(&self) -> &[RequestId] {
         &self.running
     }
@@ -141,17 +148,40 @@ impl Batcher {
     /// Admit queued requests while capacity allows; returns newly admitted
     /// entries (caller must alloc_seq + start prefill).
     pub fn admit(&mut self, pool: &KvPool) -> Vec<QueuedRequest> {
+        self.admit_bounded(pool, self.max_batch(), 0, 0)
+    }
+
+    /// [`Self::admit`] under the front door's bounds: `slot_cap` caps the
+    /// running set below `max_batch` (TPOT SLO), and a non-zero
+    /// `token_budget` stops growth once the worst-case token footprints
+    /// (`prompt + max_new`) of running sequences — `run_tokens` for the
+    /// already-running set, accumulated here for new admits — would
+    /// exceed it. The budget never blocks admission into an *empty*
+    /// batch: a lone oversized request still runs rather than starving.
+    pub fn admit_bounded(
+        &mut self,
+        pool: &KvPool,
+        slot_cap: usize,
+        token_budget: usize,
+        mut run_tokens: usize,
+    ) -> Vec<QueuedRequest> {
         let mut admitted = Vec::new();
         let mut reserved = 0usize; // pages promised to requests admitted now
-        while self.running.len() < self.max_batch() {
+        while self.running.len() < slot_cap {
             let Some(front) = self.waiting.front() else { break };
-            let worst_pages = pool.pages_for(front.req.max_total_len());
+            let tokens = front.req.max_total_len();
+            let worst_pages = pool.pages_for(tokens);
             let need = ((worst_pages as f64) * self.admit_fraction).ceil() as usize;
             if pool.free_pages() < reserved + need.max(1) {
                 break; // FCFS: do not skip ahead of the blocked head
             }
+            if token_budget > 0 && !self.running.is_empty() && run_tokens + tokens > token_budget
+            {
+                break; // token budget: growth stops, drain continues
+            }
             let entry = self.waiting.pop_front().unwrap();
             reserved += need.max(1);
+            run_tokens += tokens;
             self.running.push(entry.req.id);
             admitted.push(entry);
         }
@@ -247,6 +277,25 @@ mod tests {
         assert_eq!(again[0].submitted_us, 5, "original submit time survives requeue");
         assert_eq!(again[0].queued_us, 40, "accumulated queue wait survives requeue");
         assert_eq!(again[0].enqueued_us, 100, "current wait restarts at requeue time");
+    }
+
+    #[test]
+    fn bounded_admission_honours_slot_cap_and_token_budget() {
+        let mut b = Batcher::new(vec![8], 1.0);
+        let p = pool(64);
+        for i in 0..5 {
+            b.submit(req(i, 4, 4), 0); // 8-token worst case each
+        }
+        assert_eq!(b.waiting_prompt_rows(), 20);
+        // slot cap 2 binds below the bucket's 8
+        assert_eq!(b.admit_bounded(&p, 2, 0, 0).len(), 2);
+        // token budget 20 with 16 already running: +8 would overshoot
+        assert!(b.admit_bounded(&p, 8, 20, 16).is_empty());
+        // the budget never blocks admission into an empty batch
+        b.release(0);
+        b.release(1);
+        assert_eq!(b.admit_bounded(&p, 8, 4, 0).len(), 1, "lone oversized request still runs");
+        assert_eq!(b.waiting_prompt_rows(), 8);
     }
 
     #[test]

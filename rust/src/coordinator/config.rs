@@ -70,6 +70,24 @@ pub struct ServeConfig {
     /// prefills in one step. Replayed traces must pin this — a different
     /// chunk changes step boundaries and every timestamp downstream.
     pub prefill_chunk: usize,
+    /// Token-budget bound on the running set: sum of worst-case
+    /// footprints (`prompt + max_new`) across concurrently running
+    /// sequences (TGI `max_batch_total_tokens`). `0` = unbounded.
+    pub max_batch_total_tokens: usize,
+    /// Growth gate: waiting requests may grow a non-empty batch only
+    /// when `waiting >= ratio * running` (TGI `waiting_served_ratio`).
+    /// `0` = off: admission never defers.
+    pub waiting_served_ratio: f64,
+    /// Force batch growth after this many steps without it, bounding the
+    /// ratio gate's worst-case deferral. `0` = never force.
+    pub max_waiting_steps: u64,
+    /// TTFT SLO target, milliseconds: submit rejects requests whose
+    /// projected TTFT behind the current backlog exceeds this
+    /// (`coordinator::admission`). `0` = off.
+    pub slo_ttft_ms: f64,
+    /// TPOT SLO target, microseconds: caps the decode batch at the
+    /// largest width whose modelled step cost still meets it. `0` = off.
+    pub slo_tpot_us: u64,
 }
 
 impl Default for ServeConfig {
@@ -88,6 +106,11 @@ impl Default for ServeConfig {
             cluster_size: 2,
             threads: 0,
             prefill_chunk: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 0.0,
+            max_waiting_steps: 0,
+            slo_ttft_ms: 0.0,
+            slo_tpot_us: 0,
         }
     }
 }
@@ -109,6 +132,17 @@ impl ServeConfig {
             "cluster_size" => self.cluster_size = v.parse().context("cluster_size")?,
             "threads" => self.threads = v.parse().context("threads")?,
             "prefill_chunk" => self.prefill_chunk = v.parse().context("prefill_chunk")?,
+            "max_batch_total_tokens" => {
+                self.max_batch_total_tokens = v.parse().context("max_batch_total_tokens")?
+            }
+            "waiting_served_ratio" => {
+                self.waiting_served_ratio = v.parse().context("waiting_served_ratio")?
+            }
+            "max_waiting_steps" => {
+                self.max_waiting_steps = v.parse().context("max_waiting_steps")?
+            }
+            "slo_ttft_ms" => self.slo_ttft_ms = v.parse().context("slo_ttft_ms")?,
+            "slo_tpot_us" => self.slo_tpot_us = v.parse().context("slo_tpot_us")?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -154,6 +188,14 @@ impl ServeConfig {
             self.threads <= crate::util::pool::MAX_THREADS,
             "threads must be 0 (auto) or at most {}",
             crate::util::pool::MAX_THREADS
+        );
+        anyhow::ensure!(
+            self.waiting_served_ratio.is_finite() && self.waiting_served_ratio >= 0.0,
+            "waiting_served_ratio must be finite and >= 0 (0 = off)"
+        );
+        anyhow::ensure!(
+            self.slo_ttft_ms.is_finite() && self.slo_ttft_ms >= 0.0,
+            "slo_ttft_ms must be finite and >= 0 (0 = off)"
         );
         Ok(())
     }
@@ -237,6 +279,47 @@ mod tests {
         assert_eq!(c.prefill_chunk, 0);
         c.validate().unwrap();
         assert!(c.set("prefill_chunk", "four").is_err());
+    }
+
+    #[test]
+    fn admission_keys_round_trip_and_flags_take_precedence() {
+        // all front-door knobs default to off: an unconfigured serve is
+        // byte-identical to the pre-admission engine
+        let d = ServeConfig::default();
+        assert_eq!(d.max_batch_total_tokens, 0);
+        assert_eq!(d.waiting_served_ratio, 0.0);
+        assert_eq!(d.max_waiting_steps, 0);
+        assert_eq!(d.slo_ttft_ms, 0.0);
+        assert_eq!(d.slo_tpot_us, 0);
+        // config-file text sets them ...
+        let mut c = ServeConfig::default();
+        c.apply_text(
+            "max_batch_total_tokens = 4096\nwaiting_served_ratio = 1.2\n\
+             max_waiting_steps = 20\nslo_ttft_ms = 25\nslo_tpot_us = 500\n",
+        )
+        .unwrap();
+        assert_eq!(c.max_batch_total_tokens, 4096);
+        assert_eq!(c.waiting_served_ratio, 1.2);
+        assert_eq!(c.max_waiting_steps, 20);
+        assert_eq!(c.slo_ttft_ms, 25.0);
+        assert_eq!(c.slo_tpot_us, 500);
+        c.validate().unwrap();
+        // ... and a later CLI-style assignment (file first, then flags —
+        // the same precedence `clusterfusion serve` applies) wins
+        c.set("slo_ttft_ms", "12.5").unwrap();
+        assert_eq!(c.slo_ttft_ms, 12.5);
+        c.set("slo_tpot_us", "750").unwrap();
+        assert_eq!(c.slo_tpot_us, 750);
+        assert!(c.set("slo_ttft_ms", "soon").is_err());
+        assert!(c.set("max_batch_total_tokens", "-1").is_err());
+        // negative or non-finite targets are rejected at validate
+        c.waiting_served_ratio = -0.5;
+        assert!(c.validate().is_err());
+        c.waiting_served_ratio = 0.0;
+        c.slo_ttft_ms = f64::NAN;
+        assert!(c.validate().is_err());
+        c.slo_ttft_ms = 0.0;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -23,6 +23,7 @@ use anyhow::{Context, Result};
 use crate::util::clock::{SharedClock, WallClock};
 use crate::util::rng::Rng;
 
+use super::admission::{AdmissionConfig, SubmitOutcome};
 use super::batcher::Batcher;
 use super::kv_cache::{CacheGeometry, KvPool, SeqId};
 use super::request::{Event, FinishReason, Phase, Request, RequestId};
@@ -179,6 +180,16 @@ pub struct Engine<B: Backend> {
     pub tokens_out: u64,
     /// preemptions performed under cache pressure.
     pub preemptions: u64,
+    /// front-door configuration (off by default: no behaviour change).
+    admission: AdmissionConfig,
+    /// requests refused at submit: could never fit the context window.
+    pub rejected_too_long: u64,
+    /// requests refused at submit: projected TTFT breached the SLO.
+    pub rejected_slo: u64,
+    /// admission attempts deferred by the growth gate (telemetry).
+    pub growth_deferrals: u64,
+    /// step counter value at the last successful batch growth.
+    last_growth_step: u64,
 }
 
 impl<B: Backend> Engine<B> {
@@ -214,6 +225,11 @@ impl<B: Backend> Engine<B> {
             prefill_tokens: 0,
             tokens_out: 0,
             preemptions: 0,
+            admission: AdmissionConfig::off(),
+            rejected_too_long: 0,
+            rejected_slo: 0,
+            growth_deferrals: 0,
+            last_growth_step: 0,
         }
     }
 
@@ -222,9 +238,84 @@ impl<B: Backend> Engine<B> {
         self.clock.clone()
     }
 
-    pub fn submit(&mut self, req: Request) {
+    /// Install the front door. [`AdmissionConfig::off`] (the default)
+    /// restores pre-admission behaviour exactly.
+    pub fn set_admission(&mut self, cfg: AdmissionConfig) {
+        self.admission = cfg;
+    }
+
+    pub fn admission(&self) -> &AdmissionConfig {
+        &self.admission
+    }
+
+    /// Total requests refused at the front door.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_too_long + self.rejected_slo
+    }
+
+    /// Outstanding prompt rows the prefill budget must clear before a new
+    /// arrival sees its first token: every waiting prompt plus the unfed
+    /// remainder of running prompts.
+    fn backlog_rows(&self) -> usize {
+        let running: usize = self
+            .batcher
+            .running()
+            .iter()
+            .filter_map(|id| self.seqs.get(id))
+            .map(|st| st.req.prompt.len().saturating_sub(st.fed))
+            .sum();
+        self.batcher.waiting_prompt_rows() + running
+    }
+
+    /// Prompts in that backlog (waiting + running-but-still-prefilling) —
+    /// the step count under one-shot prefill.
+    fn backlog_prompts(&self) -> usize {
+        let running = self
+            .batcher
+            .running()
+            .iter()
+            .filter_map(|id| self.seqs.get(id))
+            .filter(|st| st.fed < st.req.prompt.len())
+            .count();
+        self.batcher.queued() + running
+    }
+
+    /// Submit through the front door. Rejections emit a `Finished` event
+    /// with [`FinishReason::Rejected`] (empty `generated`, no timing) so
+    /// subscribers always hear back; the outcome is decided purely from
+    /// engine-visible state, never the clock, so virtual-clock replay
+    /// stays deterministic.
+    pub fn submit(&mut self, req: Request) -> SubmitOutcome {
+        if req.max_total_len() > self.pool.geometry().max_seq {
+            self.rejected_too_long += 1;
+            self.events.push(Event::Finished {
+                id: req.id,
+                reason: FinishReason::Rejected,
+                generated: Vec::new(),
+            });
+            return SubmitOutcome::RejectedTooLong;
+        }
+        if self.admission.slo_ttft_us > 0 {
+            let projected = self.admission.projected_ttft_us(
+                self.backlog_rows(),
+                self.backlog_prompts(),
+                req.prompt.len(),
+                self.batcher.max_batch(),
+                self.batcher.prefill_chunk(),
+            );
+            if projected > self.admission.slo_ttft_us {
+                self.rejected_slo += 1;
+                self.events.push(Event::Finished {
+                    id: req.id,
+                    reason: FinishReason::Rejected,
+                    generated: Vec::new(),
+                });
+                return SubmitOutcome::RejectedSlo;
+            }
+        }
         let now = self.clock.now_us();
         self.batcher.submit(req, now);
+        SubmitOutcome::Queued
     }
 
     /// Cap on prompt rows fed per step across the batch (0 = unlimited).
@@ -348,9 +439,43 @@ impl<B: Backend> Engine<B> {
 
     /// Run one engine iteration. Returns false when there was nothing to do.
     pub fn step(&mut self) -> Result<bool> {
-        // 1. admission
+        // 1. admission, through the front door: the TPOT SLO caps the
+        // batch width, the growth gate batches queue drains into
+        // worthwhile prefills, and the token budget bounds the running
+        // set's worst-case KV footprint. With the default off-config this
+        // reduces to exactly the unbounded `Batcher::admit`.
         let now = self.clock.now_us();
-        for entry in self.batcher.admit(&self.pool) {
+        let max_batch = self.batcher.max_batch();
+        let slot_cap = self
+            .admission
+            .decode_slot_cap(max_batch, self.batcher.prefill_chunk())
+            .min(max_batch);
+        let admitted = if self.admission.growth_allowed(
+            self.batcher.queued(),
+            self.batcher.running().len(),
+            self.steps - self.last_growth_step,
+        ) {
+            let run_tokens: usize = self
+                .batcher
+                .running()
+                .iter()
+                .filter_map(|id| self.seqs.get(id))
+                .map(|st| st.req.max_total_len())
+                .sum();
+            self.batcher.admit_bounded(
+                &self.pool,
+                slot_cap,
+                self.admission.max_batch_total_tokens,
+                run_tokens,
+            )
+        } else {
+            self.growth_deferrals += 1;
+            Vec::new()
+        };
+        if !admitted.is_empty() {
+            self.last_growth_step = self.steps;
+        }
+        for entry in admitted {
             self.pool.alloc_seq(entry.req.id).context("alloc admitted seq")?;
             self.seqs.insert(
                 entry.req.id,
@@ -725,7 +850,7 @@ mod tests {
         // the engine freed the seq at finish; run again with longer gen to
         // inspect mid-flight state instead
         let mut e = engine();
-        e.submit(Request::new(9, vec![7], 50));
+        e.submit(Request::new(9, vec![7], 10));
         for _ in 0..3 {
             e.step().unwrap();
         }
@@ -761,7 +886,7 @@ mod tests {
     #[test]
     fn eos_stops_generation() {
         let mut e = engine();
-        let mut req = Request::new(1, vec![3, 5], 100);
+        let mut req = Request::new(1, vec![3, 5], 14);
         req.sampling.eos_token = Some(8); // second generated token (see above)
         e.submit(req);
         e.run_to_completion(100).unwrap();
@@ -776,14 +901,102 @@ mod tests {
 
     #[test]
     fn cache_capacity_finishes_request() {
-        // max_seq 16; prompt 4 + gen budget 100 -> finishes at cache limit
+        // max_seq 16; prompt 4 + gen budget 100 would be rejected at the
+        // front door, so inject straight into the batcher to exercise the
+        // in-flight backstop: the sequence finishes at the cache limit
+        // instead of stalling there.
         let mut e = engine();
-        e.submit(Request::new(1, vec![1, 1, 1, 1], 100));
+        e.batcher.submit(Request::new(1, vec![1, 1, 1, 1], 100), 0);
         e.run_to_completion(200).unwrap();
         match e.take_events().last().unwrap() {
             Event::Finished { reason, .. } => assert_eq!(*reason, FinishReason::CacheFull),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn too_long_request_is_rejected_at_submit() {
+        // prompt 4 + gen 100 > max_seq 16: refused before any work, with
+        // a Finished(Rejected) event and no timing recorded
+        let mut e = engine();
+        assert_eq!(
+            e.submit(Request::new(1, vec![1, 1, 1, 1], 100)),
+            SubmitOutcome::RejectedTooLong
+        );
+        assert!(e.idle(), "rejected request never enters the queue");
+        assert_eq!(e.rejected_too_long, 1);
+        assert_eq!(e.rejected(), 1);
+        match e.take_events().as_slice() {
+            [Event::Finished { id: 1, reason: FinishReason::Rejected, generated }] => {
+                assert!(generated.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(e.timings().is_empty());
+        // the boundary case (== max_seq) is admitted
+        assert!(e.submit(Request::new(2, vec![1, 1, 1, 1], 12)).is_queued());
+        e.run_to_completion(100).unwrap();
+    }
+
+    #[test]
+    fn slo_submit_rejects_when_projection_breaches_ttft() {
+        use crate::loadgen::ServiceModel;
+        let mut e = engine();
+        e.set_prefill_chunk(4);
+        let service =
+            ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 };
+        e.set_admission(AdmissionConfig { slo_ttft_us: 1_000, service, ..AdmissionConfig::off() });
+        // empty engine, prompt 4, chunk 4, max_batch 4:
+        // 1 step × step_us(3, 4) = 550 µs ≤ 1000 → queued
+        assert!(e.submit(Request::new(1, vec![1; 4], 4)).is_queued());
+        // backlog now 4 rows: 2 steps × 550 = 1100 > 1000 → rejected
+        assert_eq!(e.submit(Request::new(2, vec![1; 4], 4)), SubmitOutcome::RejectedSlo);
+        assert_eq!(e.rejected_slo, 1);
+        // drain the backlog and the same request is welcome again
+        e.run_to_completion(100).unwrap();
+        assert!(e.submit(Request::new(3, vec![1; 4], 4)).is_queued());
+        e.run_to_completion(100).unwrap();
+        assert_eq!(e.timings().len(), 2, "rejected request left no timing");
+    }
+
+    #[test]
+    fn tpot_slo_caps_decode_width() {
+        use crate::loadgen::ServiceModel;
+        let mut e = engine();
+        e.set_prefill_chunk(4);
+        let service =
+            ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 };
+        // step_us(d, 4) = 400 + 50·d caps at d = 2
+        e.set_admission(AdmissionConfig { slo_tpot_us: 500, service, ..AdmissionConfig::off() });
+        for id in 0..4 {
+            e.submit(Request::new(id, vec![1, 2], 4));
+        }
+        e.step().unwrap();
+        assert_eq!(e.last_batch, 2, "TPOT SLO holds the batch at 2 slots");
+        e.run_to_completion(100).unwrap();
+        assert_eq!(e.timings().len(), 4, "capped batch still drains the queue");
+    }
+
+    #[test]
+    fn growth_gate_defers_small_dribbles() {
+        let mut e = engine();
+        e.set_admission(AdmissionConfig {
+            waiting_served_ratio: 2.0,
+            max_waiting_steps: 3,
+            ..AdmissionConfig::off()
+        });
+        e.submit(Request::new(0, vec![1, 2], 8));
+        e.step().unwrap(); // first admission: empty batch always grows
+        assert_eq!(e.last_batch, 1);
+        e.submit(Request::new(1, vec![1, 2], 4));
+        e.step().unwrap(); // 1 waiting < 2.0 × 1 running: deferred
+        assert_eq!(e.last_batch, 1);
+        assert_eq!(e.growth_deferrals, 1);
+        e.submit(Request::new(2, vec![1, 2], 4));
+        e.step().unwrap(); // 2 waiting ≥ 2.0 × 1 running: admitted
+        assert_eq!(e.last_batch, 3);
+        e.run_to_completion(100).unwrap();
+        assert_eq!(e.timings().len(), 3);
     }
 
     #[test]
@@ -864,7 +1077,7 @@ mod tests {
     #[test]
     fn temperature_sampling_stays_in_vocab() {
         let mut e = engine();
-        let mut req = Request::new(1, vec![1], 20);
+        let mut req = Request::new(1, vec![1], 15);
         req.sampling.temperature = 1.0;
         e.submit(req);
         e.run_to_completion(100).unwrap();

@@ -3,7 +3,10 @@
 //! The framework around the fused kernels — what a team would actually
 //! deploy. Mirrors the vLLM-router shape:
 //!
-//! * [`router`] — admission control + least-loaded replica selection;
+//! * [`admission`] — the latency-targeted front door: token-budget and
+//!   SLO-projected admission control (TGI-style);
+//! * [`router`] — least-loaded replica selection under queue and
+//!   token-budget bounds;
 //! * [`batcher`] — continuous (iteration-level) batching into the AOT
 //!   batch buckets;
 //! * [`kv_cache`] — paged, host-authoritative KV-cache pool;
@@ -17,6 +20,7 @@
 //!
 //! Python never runs on this path: the engine consumes `artifacts/*.hlo.txt`
 //! through the [`crate::runtime`] PJRT wrapper.
+pub mod admission;
 pub mod batcher;
 pub mod config;
 pub mod engine;

@@ -14,6 +14,11 @@ pub enum FinishReason {
     Eos,
     /// Evicted by the scheduler and not resumable (shutdown).
     Aborted,
+    /// Refused at the front door before any work ran: the request could
+    /// never fit the context window, or admitting it would breach the
+    /// configured latency SLO (`coordinator::admission`). `generated` is
+    /// always empty and no `RequestTiming` is recorded.
+    Rejected,
 }
 
 /// Sampling configuration. The demo engine is greedy by default; a

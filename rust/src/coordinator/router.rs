@@ -1,10 +1,25 @@
-//! Request router: admission control and replica selection.
+//! Request router: replica selection under queue and token-budget bounds.
 //!
-//! Mirrors the vLLM router architecture: a front door that (a) rejects
-//! work beyond a queue bound, (b) picks the least-loaded engine replica,
-//! and (c) tracks per-replica in-flight counts. The demo deployment runs
-//! one replica per process, but the policy is replica-count generic and is
-//! exercised with many simulated replicas in tests.
+//! Mirrors the vLLM/TGI router architecture: a front door that (a) rejects
+//! work beyond per-replica queue and token budgets, (b) picks the
+//! least-loaded *eligible* engine replica, and (c) tracks each request's
+//! lifecycle in a ledger so load counters can never drift. The demo
+//! deployment runs one replica per process, but the policy is
+//! replica-count generic and is exercised with many simulated replicas in
+//! tests (`integration_router`).
+//!
+//! Two historical bugs shaped this module (regression-tested):
+//!
+//! * `route` used to pick the least-total replica first and then reject
+//!   if *that* replica's queue was full — even when another replica had
+//!   headroom. Eligibility is now filtered before the min.
+//! * `on_started` used to `debug_assert` + `saturating_sub` on a
+//!   double-start, which silently corrupted the queued/running split in
+//!   release builds. Transitions are now ledger-driven: a spurious
+//!   start/finish is an explicit no-op, counted and surfaced in
+//!   [`RouterStats`], never a corruption.
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
@@ -15,6 +30,10 @@ use super::request::{Request, RequestId};
 pub struct ReplicaLoad {
     pub queued: usize,
     pub running: usize,
+    /// Worst-case token footprint (`prompt + max_new`) of every request
+    /// currently routed here (queued + running) — the TGI
+    /// `max_batch_total_tokens` analogue at the routing layer.
+    pub tokens: usize,
 }
 
 impl ReplicaLoad {
@@ -29,13 +48,42 @@ pub struct Route {
     pub replica: usize,
 }
 
-/// Least-loaded router with a global queue bound.
+/// Lifecycle counters. `spurious_starts` / `spurious_finishes` count
+/// out-of-protocol transition calls (double-start, finish-without-route);
+/// each was a no-op, but a non-zero value means a caller is broken.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    pub routed: u64,
+    pub rejected: u64,
+    pub spurious_starts: u64,
+    pub spurious_finishes: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqPhase {
+    Queued,
+    Running,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ledger {
+    replica: usize,
+    phase: ReqPhase,
+    tokens: usize,
+}
+
+/// Least-loaded router over eligible replicas, with per-replica queue and
+/// token-budget bounds.
 #[derive(Debug)]
 pub struct Router {
     loads: Vec<ReplicaLoad>,
     max_queue_per_replica: usize,
-    routed: u64,
-    rejected: u64,
+    /// Worst-case token budget per replica (0 = unbounded). A replica
+    /// with nothing in flight is always eligible — one oversized request
+    /// must not deadlock the deployment.
+    max_tokens_per_replica: usize,
+    inflight: HashMap<RequestId, Ledger>,
+    stats: RouterStats,
 }
 
 impl Router {
@@ -44,9 +92,17 @@ impl Router {
         Self {
             loads: vec![ReplicaLoad::default(); replicas],
             max_queue_per_replica,
-            routed: 0,
-            rejected: 0,
+            max_tokens_per_replica: 0,
+            inflight: HashMap::new(),
+            stats: RouterStats::default(),
         }
+    }
+
+    /// Bound each replica's in-flight worst-case token footprint
+    /// (0 = unbounded).
+    pub fn with_token_budget(mut self, max_tokens_per_replica: usize) -> Self {
+        self.max_tokens_per_replica = max_tokens_per_replica;
+        self
     }
 
     pub fn replicas(&self) -> usize {
@@ -57,40 +113,79 @@ impl Router {
         &self.loads[replica]
     }
 
-    pub fn stats(&self) -> (u64, u64) {
-        (self.routed, self.rejected)
+    pub fn stats(&self) -> RouterStats {
+        self.stats
     }
 
-    /// Route a request to the least-loaded replica, or reject when every
-    /// replica's queue is full (back-pressure to the client).
-    pub fn route(&mut self, _req: &Request) -> Result<Route> {
-        let (idx, load) = self
-            .loads
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, l)| l.total())
-            .expect("at least one replica");
-        if load.queued >= self.max_queue_per_replica {
-            self.rejected += 1;
-            bail!("all replicas saturated (queue bound {})", self.max_queue_per_replica);
+    fn eligible(&self, replica: usize, tokens: usize) -> bool {
+        let l = &self.loads[replica];
+        if l.queued >= self.max_queue_per_replica {
+            return false;
         }
+        if self.max_tokens_per_replica > 0
+            && l.total() > 0
+            && l.tokens + tokens > self.max_tokens_per_replica
+        {
+            return false;
+        }
+        true
+    }
+
+    /// Route a request to the least-loaded replica *with headroom*, or
+    /// reject when no replica is eligible (back-pressure to the client).
+    /// A full queue on the globally least-loaded replica does not reject
+    /// while any other replica still has room.
+    pub fn route(&mut self, req: &Request) -> Result<Route> {
+        let tokens = req.max_total_len();
+        let pick = (0..self.loads.len())
+            .filter(|&i| self.eligible(i, tokens))
+            .min_by_key(|&i| self.loads[i].total());
+        let Some(idx) = pick else {
+            self.stats.rejected += 1;
+            bail!(
+                "all replicas saturated (queue bound {}, token budget {})",
+                self.max_queue_per_replica,
+                self.max_tokens_per_replica
+            );
+        };
+        self.inflight
+            .insert(req.id, Ledger { replica: idx, phase: ReqPhase::Queued, tokens });
         self.loads[idx].queued += 1;
-        self.routed += 1;
+        self.loads[idx].tokens += tokens;
+        self.stats.routed += 1;
         Ok(Route { replica: idx })
     }
 
-    /// Replica picked up the request (queued -> running).
-    pub fn on_started(&mut self, replica: usize) {
-        let l = &mut self.loads[replica];
-        debug_assert!(l.queued > 0);
-        l.queued = l.queued.saturating_sub(1);
-        l.running += 1;
+    /// Replica picked up the request (queued → running). A start for an
+    /// unknown or already-running request is a counted no-op — the load
+    /// split stays exact instead of silently corrupting.
+    pub fn on_started(&mut self, id: RequestId) {
+        match self.inflight.get_mut(&id) {
+            Some(entry) if entry.phase == ReqPhase::Queued => {
+                entry.phase = ReqPhase::Running;
+                let l = &mut self.loads[entry.replica];
+                l.queued -= 1;
+                l.running += 1;
+            }
+            _ => self.stats.spurious_starts += 1,
+        }
     }
 
-    /// Replica finished a request.
-    pub fn on_finished(&mut self, replica: usize, _id: RequestId) {
-        let l = &mut self.loads[replica];
-        l.running = l.running.saturating_sub(1);
+    /// Replica finished (or refused) the request: it leaves the ledger
+    /// from whichever phase it was in. A finish for an unknown request is
+    /// a counted no-op.
+    pub fn on_finished(&mut self, id: RequestId) {
+        match self.inflight.remove(&id) {
+            Some(entry) => {
+                let l = &mut self.loads[entry.replica];
+                match entry.phase {
+                    ReqPhase::Queued => l.queued -= 1,
+                    ReqPhase::Running => l.running -= 1,
+                }
+                l.tokens -= entry.tokens;
+            }
+            None => self.stats.spurious_finishes += 1,
+        }
     }
 }
 
@@ -120,18 +215,99 @@ mod tests {
         r.route(&req(1)).unwrap();
         r.route(&req(2)).unwrap();
         assert!(r.route(&req(3)).is_err());
-        assert_eq!(r.stats(), (2, 1));
+        let s = r.stats();
+        assert_eq!((s.routed, s.rejected), (2, 1));
+    }
+
+    #[test]
+    fn full_queue_on_least_total_replica_does_not_reject() {
+        // Regression: replica 0 has a full queue but the smaller total
+        // (queued = cap, running = 0); replica 1 is queue-empty but busy
+        // (running = cap + 1). The old min-by-total-then-check picked
+        // replica 0 and rejected; the request must route to replica 1.
+        let cap = 2;
+        let mut r = Router::new(2, cap);
+        // route-and-start 6 requests: least-loaded alternates 0,1,0,1,0,1
+        for id in 0..6 {
+            let route = r.route(&req(id)).unwrap();
+            assert_eq!(route.replica, id as usize % 2);
+            r.on_started(id);
+        }
+        // drain replica 0 and queue fresh work there (it is now idle, so
+        // least-loaded sends both its way without starting them)
+        for id in [0, 2, 4] {
+            r.on_finished(id);
+        }
+        r.route(&req(6)).unwrap();
+        r.route(&req(7)).unwrap();
+        assert_eq!((r.load(0).queued, r.load(0).running), (cap, 0));
+        assert_eq!((r.load(1).queued, r.load(1).running), (0, cap + 1));
+        // replica 0 has the smaller total (2 < 3) but a full queue
+        let route = r.route(&req(999)).unwrap();
+        assert_eq!(route.replica, 1, "queue headroom beats smaller total");
+        assert_eq!(r.stats().rejected, 0);
     }
 
     #[test]
     fn lifecycle_counts() {
         let mut r = Router::new(1, 8);
-        let route = r.route(&req(1)).unwrap();
+        r.route(&req(1)).unwrap();
         assert_eq!(r.load(0).queued, 1);
-        r.on_started(route.replica);
+        r.on_started(1);
         assert_eq!((r.load(0).queued, r.load(0).running), (0, 1));
-        r.on_finished(route.replica, 1);
+        r.on_finished(1);
         assert_eq!(r.load(0).running, 0);
+        assert_eq!(r.load(0).tokens, 0, "token footprint returned");
+    }
+
+    #[test]
+    fn double_start_and_double_finish_are_counted_noops() {
+        // Regression: a double on_started used to decrement queued twice
+        // (saturating to 0) while incrementing running twice — permanent
+        // load-counter drift. Now: explicit no-op + telemetry.
+        let mut r = Router::new(1, 8);
+        r.route(&req(1)).unwrap();
+        r.on_started(1);
+        r.on_started(1); // duplicate
+        assert_eq!((r.load(0).queued, r.load(0).running), (0, 1));
+        r.on_finished(1);
+        r.on_finished(1); // duplicate
+        assert_eq!((r.load(0).queued, r.load(0).running), (0, 0));
+        r.on_started(42); // never routed
+        let s = r.stats();
+        assert_eq!(s.spurious_starts, 2);
+        assert_eq!(s.spurious_finishes, 1);
+        assert_eq!(r.load(0).tokens, 0);
+    }
+
+    #[test]
+    fn finish_from_queued_phase_releases_the_queue_slot() {
+        // A request the replica refuses (front-door rejection) finishes
+        // without ever starting; its queue slot and tokens must free.
+        let mut r = Router::new(1, 1);
+        r.route(&req(1)).unwrap();
+        assert!(r.route(&req(2)).is_err(), "queue bound 1");
+        r.on_finished(1);
+        assert_eq!((r.load(0).queued, r.load(0).tokens), (0, 0));
+        r.route(&req(3)).unwrap();
+    }
+
+    #[test]
+    fn token_budget_bounds_inflight_footprint() {
+        // budget 16 per replica; each request's worst case is 10 tokens
+        let big = |id| Request::new(id, vec![1; 4], 6);
+        let mut r = Router::new(2, 100).with_token_budget(16);
+        assert_eq!(r.route(&big(1)).unwrap().replica, 0);
+        assert_eq!(r.route(&big(2)).unwrap().replica, 1);
+        // both replicas at 10/16: +10 would overshoot everywhere
+        assert!(r.route(&big(3)).is_err());
+        assert_eq!(r.stats().rejected, 1);
+        r.on_finished(1);
+        assert_eq!(r.route(&big(4)).unwrap().replica, 0);
+        // an oversized lone request still routes to an empty replica
+        r.on_finished(2);
+        let huge = Request::new(9, vec![1; 20], 20);
+        assert_eq!(r.route(&huge).unwrap().replica, 1, "empty replica never starves");
     }
 
     #[test]
@@ -142,11 +318,12 @@ mod tests {
         let mut rng = Rng::seed_from_u64(3);
         for id in 0..200 {
             let route = r.route(&req(id)).unwrap();
-            r.on_started(route.replica);
+            r.on_started(id);
             // randomly finish some work
             if rng.bool() {
-                r.on_finished(route.replica, id);
+                r.on_finished(id);
             }
+            let _ = route;
         }
         let loads: Vec<usize> = (0..4).map(|i| r.load(i).total()).collect();
         let (lo, hi) = (loads.iter().min().unwrap(), loads.iter().max().unwrap());

@@ -25,6 +25,36 @@ enum Msg {
     Shutdown,
 }
 
+/// Drain the engine's event buffer into per-request subscriber channels.
+/// Called after every step *and* after every mailbox drain: front-door
+/// rejections emit their `Finished` event at submit time, possibly while
+/// the engine is otherwise idle, and must still reach the client.
+fn forward<B: Backend>(
+    engine: &mut Engine<B>,
+    subscribers: &mut HashMap<RequestId, Sender<Event>>,
+    send_failures: &mut u64,
+) {
+    for ev in engine.take_events() {
+        let id = match &ev {
+            Event::FirstToken { id, .. }
+            | Event::Token { id, .. }
+            | Event::Finished { id, .. } => *id,
+        };
+        let done = matches!(ev, Event::Finished { .. });
+        if let Some(tx) = subscribers.get(&id) {
+            if tx.send(ev).is_err() {
+                // receiver hung up: prune immediately so the map does
+                // not grow with dead senders
+                *send_failures += 1;
+                subscribers.remove(&id);
+            }
+        }
+        if done {
+            subscribers.remove(&id);
+        }
+    }
+}
+
 /// Handle to a running engine thread.
 pub struct Server {
     tx: Sender<Msg>,
@@ -39,6 +69,9 @@ pub struct ServerReport {
     pub preemptions: u64,
     /// Event sends that failed because the client dropped its receiver.
     pub send_failures: u64,
+    /// Requests refused at the front door (too long for the context
+    /// window, or projected to breach the TTFT SLO).
+    pub rejected: u64,
     /// Subscriber entries still registered when the engine thread exited
     /// (0 unless the server loop leaked — asserted by tests).
     pub dangling_subscribers: usize,
@@ -74,6 +107,11 @@ impl Server {
                         Some(Msg::Submit(req, events)) => {
                             subscribers.insert(req.id, events);
                             engine.submit(req);
+                            // a front-door rejection emits its Finished
+                            // event right here, while the engine may stay
+                            // idle: deliver it before blocking on the
+                            // mailbox with the client still waiting
+                            forward(&mut engine, &mut subscribers, &mut send_failures);
                         }
                         Some(Msg::Shutdown) => shutdown = true,
                         None => break,
@@ -89,31 +127,14 @@ impl Server {
                     eprintln!("engine step failed: {e:#}");
                     break;
                 }
-                for ev in engine.take_events() {
-                    let id = match &ev {
-                        Event::FirstToken { id, .. }
-                        | Event::Token { id, .. }
-                        | Event::Finished { id, .. } => *id,
-                    };
-                    let done = matches!(ev, Event::Finished { .. });
-                    if let Some(tx) = subscribers.get(&id) {
-                        if tx.send(ev).is_err() {
-                            // receiver hung up: prune immediately so the
-                            // map does not grow with dead senders
-                            send_failures += 1;
-                            subscribers.remove(&id);
-                        }
-                    }
-                    if done {
-                        subscribers.remove(&id);
-                    }
-                }
+                forward(&mut engine, &mut subscribers, &mut send_failures);
             }
             ServerReport {
                 steps: engine.steps,
                 tokens_out: engine.tokens_out,
                 preemptions: engine.preemptions,
                 send_failures,
+                rejected: engine.rejected(),
                 dangling_subscribers: subscribers.len(),
                 timings: engine.timings().to_vec(),
             }
@@ -217,6 +238,27 @@ mod tests {
         };
         let saw_failed_send = (0..5).any(|_| attempt() >= 1);
         assert!(saw_failed_send, "drop never hit an in-flight send in 5 attempts");
+    }
+
+    #[test]
+    fn rejection_event_reaches_client_while_engine_is_idle() {
+        // prompt 4 + gen 100 > max_seq 16: refused at submit. No step
+        // ever runs, so the event must be forwarded from the mailbox
+        // drain, not the post-step path — a client blocked on its stream
+        // would otherwise deadlock against the idle engine loop.
+        let engine = Engine::new(MockBackend::tiny(), 64, 4, 1.0);
+        let server = Server::spawn(engine);
+        let rx = server.submit(Request::new(9, vec![1; 4], 100)).unwrap();
+        let evs: Vec<Event> = rx.iter().collect();
+        assert!(matches!(
+            evs.as_slice(),
+            [Event::Finished { id: 9, reason: FinishReason::Rejected, .. }]
+        ));
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.steps, 0);
+        assert_eq!(report.timings.len(), 0);
+        assert_eq!(report.dangling_subscribers, 0);
     }
 
     #[test]

@@ -154,6 +154,10 @@ pub fn percentiles(timings: &[RequestTiming]) -> PercentileReport {
 #[derive(Debug, Clone)]
 pub struct ReplayReport {
     pub completed: usize,
+    /// Requests refused at the engine's front door (too long for the
+    /// context window or projected to breach the TTFT SLO); these never
+    /// enter `completed` and leave no timing samples.
+    pub rejected: u64,
     pub steps: u64,
     pub tokens_out: u64,
     pub preemptions: u64,
@@ -171,9 +175,10 @@ impl ReplayReport {
     /// virtual-clock runs (asserted by `integration_load`).
     pub fn render(&self) -> String {
         format!(
-            "completed={} steps={} tokens={} preemptions={}\n\
+            "completed={} rejected={} steps={} tokens={} preemptions={}\n\
              submit_span_us=[{}, {}] last_finish_us={}\n{}",
             self.completed,
+            self.rejected,
             self.steps,
             self.tokens_out,
             self.preemptions,
@@ -201,8 +206,8 @@ pub fn replay<B: Backend>(
     let clock = engine.clock();
     // Baselines so a reused engine reports only *this* replay's work.
     let base_timings = engine.timings().len();
-    let (base_steps, base_tokens, base_preempt) =
-        (engine.steps, engine.tokens_out, engine.preemptions);
+    let (base_steps, base_tokens, base_preempt, base_rejected) =
+        (engine.steps, engine.tokens_out, engine.preemptions, engine.rejected());
     let mut next = 0usize;
     let mut first_submit_us = None;
     let mut last_submit_us = 0u64;
@@ -247,6 +252,7 @@ pub fn replay<B: Backend>(
     let timings = &engine.timings()[base_timings..];
     Ok(ReplayReport {
         completed: timings.len(),
+        rejected: engine.rejected() - base_rejected,
         steps: engine.steps - base_steps,
         tokens_out: engine.tokens_out - base_tokens,
         preemptions: engine.preemptions - base_preempt,
@@ -404,13 +410,32 @@ mod tests {
 
     #[test]
     fn replay_rejects_unadmittable_request() {
-        // pool: 8 pages x 4 tokens = 32 slots; request needs 90 worst-case
+        // pool: 8 pages x 4 tokens = 32 slots; the request fits the
+        // context window (30 + 30 = 60 ≤ max_seq 64) so the front door
+        // queues it, but its worst-case footprint (15 pages) exceeds the
+        // whole pool: admission can never run it and replay must bail
+        // instead of spinning
         let mut e = Engine::with_clock(mock(), 8, 4, 1.0, VirtualClock::shared());
-        let r = Request::new(0, vec![1; 30], 60);
+        let r = Request::new(0, vec![1; 30], 30);
         let service =
             ServiceModel { step_base_us: 100, step_per_seq_us: 0, step_prefill_token_us: 0 };
         let err = replay(&mut e, &[r], &service, 1_000).unwrap_err();
         assert!(err.to_string().contains("wedged"), "{err:#}");
+    }
+
+    #[test]
+    fn replay_counts_front_door_rejections() {
+        // prompt 30 + gen 60 = 90 > max_seq 64: refused at submit; the
+        // admittable request completes and the report separates the two
+        let mut e = virtual_engine();
+        let too_long = Request::new(0, vec![1; 30], 60);
+        let ok = Request::new(1, vec![1, 2], 2);
+        let service =
+            ServiceModel { step_base_us: 100, step_per_seq_us: 0, step_prefill_token_us: 0 };
+        let rep = replay(&mut e, &[too_long, ok], &service, 1_000).unwrap();
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.rejected, 1);
+        assert!(rep.render().starts_with("completed=1 rejected=1 "), "{}", rep.render());
     }
 
     #[test]

@@ -12,9 +12,11 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use clusterfusion::clustersim::block::FusionScope;
 use clusterfusion::clustersim::e2e::{decode_step, Engine as SimEngine};
 use clusterfusion::clustersim::frameworks::FrameworkProfile;
 use clusterfusion::clustersim::{Hardware, Noc};
+use clusterfusion::coordinator::admission::AdmissionConfig;
 use clusterfusion::coordinator::config::{BackendKind, ServeConfig};
 use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend};
 use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
@@ -60,6 +62,8 @@ fn usage() -> ! {
          \x20                   [--backend functional|pjrt|mock] [--mock]\n\
          \x20                   [--threads N]  (0 = auto; functional backend)\n\
          \x20                   [--prefill-chunk N]  (0 = one-shot prefill)\n\
+         \x20                   [--slo-ttft-ms X]  (reject when projected TTFT > X; 0 = off)\n\
+         \x20                   [--slo-tpot-us N]  (cap decode width to meet TPOT; 0 = off)\n\
          \x20                   [--config FILE] [--set k=v]  (default: functional)\n\
          \x20 simulate          --model NAME [--seq N] [--batch N] [--cluster N]\n\
          \x20 inspect-artifacts [--artifacts DIR]\n\
@@ -146,6 +150,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         cfg.prefill_chunk =
             c.parse().context("--prefill-chunk expects an integer (0 = one-shot)")?;
     }
+    if let Some(s) = flags.get("slo-ttft-ms") {
+        cfg.slo_ttft_ms = s.parse().context("--slo-ttft-ms expects a number (0 = off)")?;
+    }
+    if let Some(s) = flags.get("slo-tpot-us") {
+        cfg.slo_tpot_us = s.parse().context("--slo-tpot-us expects an integer (0 = off)")?;
+    }
     if flags.contains_key("mock") {
         cfg.backend = BackendKind::Mock;
     }
@@ -209,13 +219,43 @@ fn serve_backend<B: Backend + Send + 'static>(
     let geom = backend.geom();
     let mut engine = Engine::new(backend, cfg.pool_pages, cfg.page_tokens, cfg.admit_fraction);
     engine.set_prefill_chunk(cfg.prefill_chunk);
+    // Front door: the SLO projections price steps with the same
+    // whole-block cost model replay bills (ServiceModel::from_block) when
+    // the model is known to the cost model, else a flat 1 ms TPOT.
+    let service = match ModelConfig::by_name(&cfg.model) {
+        Some(m) => {
+            let hw = Hardware::h100_sxm5();
+            let noc = Noc::h100(&hw);
+            loadgen::ServiceModel::from_block(
+                &m,
+                geom.max_seq,
+                FusionScope::FullBlockFused,
+                cfg.cluster_size,
+                &hw,
+                &noc,
+            )
+        }
+        None => loadgen::ServiceModel::from_tpot_us(1_000),
+    };
+    engine.set_admission(AdmissionConfig {
+        max_batch_total_tokens: cfg.max_batch_total_tokens,
+        waiting_served_ratio: cfg.waiting_served_ratio,
+        max_waiting_steps: cfg.max_waiting_steps,
+        slo_ttft_us: (cfg.slo_ttft_ms * 1_000.0).round() as u64,
+        slo_tpot_us: cfg.slo_tpot_us,
+        service,
+    });
     let server = Server::spawn(engine);
 
     // Open-loop paced replay: submissions honour arrival_us on the wall
     // clock instead of dumping the whole trace at t=0 (loadgen::pace_submit).
     let trace =
         Trace::poisson(n_requests, rps, SeqlenDist::ShareGpt, (8, 24), geom.max_seq / 4, 42);
-    let requests = loadgen::synthesize_requests(&trace, geom.vocab, 64, 24, 7);
+    // Clamp generation budgets so prompt + max_new always fits max_seq:
+    // the front door rejects requests that could never fit the context
+    // window, and the synthetic trace must not manufacture those.
+    let max_gen = 24.min(geom.max_seq.saturating_sub(geom.max_seq / 4)).max(1);
+    let requests = loadgen::synthesize_requests(&trace, geom.vocab, 64, max_gen, 7);
     eprintln!(
         "replaying {} requests open-loop: offered {:.2} rps over {:.2}s",
         requests.len(),
@@ -235,8 +275,10 @@ fn serve_backend<B: Backend + Send + 'static>(
     let wall = clock.now_us() as f64 / 1e6;
     let report = server.shutdown()?;
     println!(
-        "served {} requests, {tokens} tokens in {wall:.2}s ({:.2} tok/s), {} engine steps, {} preemptions",
+        "served {} requests ({} rejected at the front door), {tokens} tokens in {wall:.2}s \
+         ({:.2} tok/s), {} engine steps, {} preemptions",
         report.timings.len(),
+        report.rejected,
         tokens as f64 / wall,
         report.steps,
         report.preemptions

@@ -32,6 +32,7 @@
 //! Byte-determinism requires pinning the chunk size (DESIGN.md §Prefill):
 //! this suite fixes `prefill_chunk = 4`.
 
+use clusterfusion::coordinator::admission::AdmissionConfig;
 use clusterfusion::coordinator::engine::{Engine, MockBackend, ModelGeom};
 use clusterfusion::coordinator::server::Server;
 use clusterfusion::loadgen::{self, ReplayReport, ServiceModel};
@@ -210,6 +211,63 @@ fn paced_server_submissions_spread_over_trace_span() {
         spread >= span / 2,
         "submissions not paced: spread {spread}µs vs trace span {span}µs"
     );
+}
+
+/// `run_scenario` with the latency-targeted front door active: a 25 ms
+/// TTFT SLO priced by the same service model replay bills.
+fn run_front_door_scenario(rps: f64) -> ReplayReport {
+    let mut engine = Engine::with_clock(load_mock(), 40, 4, 0.5, VirtualClock::shared());
+    engine.set_prefill_chunk(4);
+    engine.set_admission(AdmissionConfig {
+        slo_ttft_us: 25_000,
+        service: ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 },
+        ..AdmissionConfig::off()
+    });
+    let trace = Trace::poisson(N_REQUESTS, rps, SeqlenDist::Fixed(24), (8, 8), 64, TRACE_SEED);
+    let requests = loadgen::synthesize_requests(&trace, 64, 16, 8, SYNTH_SEED);
+    let service =
+        ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 };
+    loadgen::replay(&mut engine, &requests, &service, 1_000_000).expect("replay")
+}
+
+#[test]
+fn front_door_sheds_overload_and_keeps_admitted_ttft_under_the_slo() {
+    // 1500 rps is ~2.9x past the knee. Unbounded, every request is
+    // eventually served but the p99 TTFT explodes two orders of
+    // magnitude past any interactive target; with the 25 ms front door
+    // the engine sheds the un-servable tail at submit and every admitted
+    // request still meets the SLO. All numbers are pure functions of
+    // (rate, seeds, SLO) on the virtual clock.
+    let rep = run_front_door_scenario(OVERLOAD_RPS);
+    assert_eq!(rep.completed + rep.rejected as usize, N_REQUESTS);
+    assert_eq!(rep.rejected, 92, "57.5% of offered load is beyond the SLO at 1500 rps");
+    assert_eq!(rep.completed, 68);
+    assert_eq!(rep.preemptions, 0);
+    // admitted p99 TTFT: 15.6 ms, within the 25 ms target …
+    assert!(rep.percentiles.ttft.p99 <= 0.025, "{}", rep.percentiles.ttft.p99);
+    assert!((rep.percentiles.ttft.p99 - 0.0156).abs() < 1e-9, "{}", rep.percentiles.ttft.p99);
+    // … which the unbounded baseline breaches by ~8x
+    let baseline = run_scenario(OVERLOAD_RPS);
+    assert_eq!(baseline.rejected, 0);
+    assert!(
+        baseline.percentiles.ttft.p99 > 0.1,
+        "unbounded overload must breach the target: {}",
+        baseline.percentiles.ttft.p99
+    );
+    // rejection decisions are part of the §4 determinism contract:
+    // byte-stable across two runs at the pinned seeds
+    assert_eq!(rep.render(), run_front_door_scenario(OVERLOAD_RPS).render());
+}
+
+#[test]
+fn front_door_is_inert_below_saturation() {
+    // Under and at capacity the projection never breaches 25 ms, so the
+    // front door must be byte-invisible against the unbounded baseline.
+    for rps in [UNDER_RPS, AT_CAPACITY_RPS] {
+        let front = run_front_door_scenario(rps);
+        assert_eq!(front.rejected, 0, "rps {rps}");
+        assert_eq!(front.render(), run_scenario(rps).render(), "rps {rps}");
+    }
 }
 
 #[test]

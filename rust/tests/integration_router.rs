@@ -1,0 +1,259 @@
+//! Front-door integration tests: the latency-targeted admission layer
+//! (`coordinator::admission`) end to end through `Engine` + virtual-clock
+//! replay, plus the router regressions this PR fixed.
+//!
+//! Scenario math matches `integration_load` (see EXPERIMENTS.md §Load
+//! saturation): requests are 16 prompt + 8 generated tokens (24-token
+//! worst case), prefill chunk 4, service model 200 + 50·decode +
+//! 50·prefill µs per step — so a full decode batch of 8 steps in 600 µs
+//! and the worst mixed step costs 750 µs. Every pinned number below is a
+//! pure function of (rate, TRACE_SEED, SYNTH_SEED, admission knobs) on
+//! the virtual clock.
+
+use clusterfusion::coordinator::admission::{AdmissionConfig, SubmitOutcome};
+use clusterfusion::coordinator::engine::{Engine, MockBackend, ModelGeom};
+use clusterfusion::coordinator::request::{Event, FinishReason, Request};
+use clusterfusion::coordinator::router::Router;
+use clusterfusion::loadgen::{self, ReplayReport, ServiceModel};
+use clusterfusion::util::clock::VirtualClock;
+use clusterfusion::workload::{SeqlenDist, Trace};
+
+const N_REQUESTS: usize = 160;
+const TRACE_SEED: u64 = 42;
+const SYNTH_SEED: u64 = 7;
+const OVERLOAD_RPS: f64 = 1500.0;
+
+fn load_mock() -> MockBackend {
+    MockBackend::new(
+        ModelGeom { vocab: 64, n_layers: 2, row_elems: 4, planes: 2, max_seq: 64 },
+        vec![1, 2, 4, 8],
+    )
+}
+
+fn svc() -> ServiceModel {
+    ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 }
+}
+
+/// The `integration_load` saturation scenario with an explicit front-door
+/// config. Fully determined by (rps, admission, the pinned seeds).
+fn run_with_admission(rps: f64, admission: AdmissionConfig) -> (ReplayReport, Engine<MockBackend>) {
+    let mut engine = Engine::with_clock(load_mock(), 40, 4, 0.5, VirtualClock::shared());
+    engine.set_prefill_chunk(4);
+    engine.set_admission(admission);
+    let trace = Trace::poisson(N_REQUESTS, rps, SeqlenDist::Fixed(24), (8, 8), 64, TRACE_SEED);
+    let requests = loadgen::synthesize_requests(&trace, 64, 16, 8, SYNTH_SEED);
+    let rep = loadgen::replay(&mut engine, &requests, &svc(), 1_000_000).expect("replay");
+    (rep, engine)
+}
+
+// ---------------------------------------------------------------------
+// router regressions
+// ---------------------------------------------------------------------
+
+#[test]
+fn router_routes_past_a_full_queue_on_the_least_total_replica() {
+    // The exact scenario from the old bug: replica 0 queued=cap/running=0
+    // (total 2), replica 1 queued=0/running=cap+1 (total 3). The buggy
+    // route() min'd by total, landed on replica 0, saw its full queue and
+    // rejected — with replica 1 wide open.
+    let cap = 2;
+    let mut router = Router::new(2, cap);
+    for id in 0..6u64 {
+        assert_eq!(router.route(&Request::new(id, vec![1], 1)).unwrap().replica, id as usize % 2);
+        router.on_started(id);
+    }
+    for id in [0u64, 2, 4] {
+        router.on_finished(id);
+    }
+    router.route(&Request::new(6, vec![1], 1)).unwrap();
+    router.route(&Request::new(7, vec![1], 1)).unwrap();
+    assert_eq!((router.load(0).queued, router.load(0).running), (cap, 0));
+    assert_eq!((router.load(1).queued, router.load(1).running), (0, cap + 1));
+    let route = router.route(&Request::new(999, vec![1], 1)).unwrap();
+    assert_eq!(route.replica, 1, "headroom on replica 1 must win over the smaller total");
+    assert_eq!(router.stats().rejected, 0);
+}
+
+#[test]
+fn router_double_transitions_never_corrupt_the_load_split() {
+    // The old on_started(replica) pattern debug_assert'd then
+    // saturating_sub'd: in release builds a double-start drove queued to
+    // 0 while running climbed, permanently skewing least-loaded picks.
+    let mut router = Router::new(2, 8);
+    router.route(&Request::new(1, vec![1; 4], 4)).unwrap();
+    router.on_started(1);
+    router.on_started(1); // duplicate pickup notification
+    router.on_started(77); // pickup for a request never routed
+    assert_eq!((router.load(0).queued, router.load(0).running), (0, 1));
+    router.on_finished(1);
+    router.on_finished(1); // duplicate completion
+    assert_eq!((router.load(0).queued, router.load(0).running), (0, 0));
+    assert_eq!(router.load(0).tokens, 0, "token footprint fully returned");
+    let stats = router.stats();
+    assert_eq!(stats.spurious_starts, 2);
+    assert_eq!(stats.spurious_finishes, 1);
+    // the router still balances correctly afterwards
+    assert_eq!(router.route(&Request::new(2, vec![1], 1)).unwrap().replica, 0);
+}
+
+#[test]
+fn router_token_budget_spreads_by_footprint_not_count() {
+    // 3 replicas, 64-token budget each; 24-token requests: two per
+    // replica (48), the seventh must wait for a completion.
+    let mut router = Router::new(3, 100).with_token_budget(64);
+    let req = |id| Request::new(id, vec![1; 16], 8);
+    for id in 0..6u64 {
+        router.route(&req(id)).unwrap();
+    }
+    assert!(router.route(&req(6)).is_err(), "all replicas at 48/64: +24 overshoots");
+    router.on_finished(0);
+    assert_eq!(router.route(&req(6)).unwrap().replica, 0);
+    let stats = router.stats();
+    assert_eq!((stats.routed, stats.rejected), (7, 1));
+}
+
+// ---------------------------------------------------------------------
+// engine front door: context-window and SLO rejection
+// ---------------------------------------------------------------------
+
+#[test]
+fn context_limit_finishes_in_flight_and_rejects_at_submit() {
+    // Satellite fix, both halves. (1) submit: a request that can never
+    // fit max_seq is refused up front with an event. (2) in-flight: a
+    // sequence that reaches max_seq anyway (injected past the front
+    // door, as a preemption-requeue could) finishes with a length-capped
+    // stop instead of stalling the engine forever.
+    let mut engine = Engine::with_clock(load_mock(), 40, 4, 0.5, VirtualClock::shared());
+    assert_eq!(
+        engine.submit(Request::new(1, vec![1; 32], 40)),
+        SubmitOutcome::RejectedTooLong,
+        "32 + 40 > max_seq 64"
+    );
+    assert!(engine.idle());
+    let events = engine.take_events();
+    assert!(
+        matches!(
+            events.as_slice(),
+            [Event::Finished { id: 1, reason: FinishReason::Rejected, .. }]
+        ),
+        "{events:?}"
+    );
+    // boundary: exactly max_seq is admitted and completes
+    assert!(engine.submit(Request::new(2, vec![1; 32], 32)).is_queued());
+    engine.run_to_completion(1_000).unwrap();
+    // inject an over-window request straight into the batcher
+    engine.batcher.submit(Request::new(3, vec![1; 32], 40), 0);
+    engine.run_to_completion(1_000).unwrap();
+    let reasons: Vec<(u64, FinishReason)> = engine
+        .take_events()
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::Finished { id, reason, .. } => Some((*id, *reason)),
+            _ => None,
+        })
+        .collect();
+    assert!(reasons.contains(&(2, FinishReason::Length)));
+    assert!(
+        reasons.contains(&(3, FinishReason::CacheFull)),
+        "in-flight context-limit must finish, not stall: {reasons:?}"
+    );
+    assert_eq!(engine.rejected_too_long, 1);
+    assert_eq!(engine.pool.used_pages(), 0);
+}
+
+#[test]
+fn slo_overload_rejects_the_tail_and_protects_admitted_ttft() {
+    // 1500 rps is ~2.9x past the knee: unbounded, p99 TTFT explodes to
+    // ~190 ms. A 25 ms TTFT SLO sheds the excess at submit instead.
+    let slo = AdmissionConfig { slo_ttft_us: 25_000, service: svc(), ..AdmissionConfig::off() };
+    let (rep, engine) = run_with_admission(OVERLOAD_RPS, slo);
+    assert_eq!(rep.completed + rep.rejected as usize, N_REQUESTS);
+    assert!(rep.rejected > 0, "overload must shed load");
+    assert_eq!(engine.rejected_slo, rep.rejected, "all rejections are SLO rejections");
+    assert_eq!(engine.rejected_too_long, 0);
+    // every admitted request's TTFT meets the target the projection
+    // promised (the projection prices the worst mixed step, so it is
+    // conservative)
+    for t in engine.timings() {
+        assert!(t.ttft <= 0.025 + 1e-9, "req {} ttft {} breached the SLO", t.id, t.ttft);
+    }
+    assert!(rep.percentiles.ttft.p99 <= 0.025 + 1e-9, "{}", rep.percentiles.ttft.p99);
+}
+
+#[test]
+fn tpot_cap_and_token_budget_bind_identically_here() {
+    // Two different knobs, same effective concurrency on this workload:
+    // a 500 µs TPOT target caps decode width at 2 (step_us(2,4) = 500),
+    // and a 48-token budget fits exactly two 24-token requests. The
+    // whole virtual-clock trajectory must agree byte for byte.
+    let tpot = AdmissionConfig { slo_tpot_us: 500, service: svc(), ..AdmissionConfig::off() };
+    let budget = AdmissionConfig { max_batch_total_tokens: 48, ..AdmissionConfig::off() };
+    let (rep_tpot, eng_tpot) = run_with_admission(OVERLOAD_RPS, tpot);
+    let (rep_budget, eng_budget) = run_with_admission(OVERLOAD_RPS, budget);
+    assert_eq!(rep_tpot.render(), rep_budget.render());
+    assert_eq!(rep_tpot.completed, N_REQUESTS, "capped concurrency still drains everything");
+    assert_eq!(rep_tpot.rejected, 0, "neither knob rejects — they defer");
+    // narrow batches decode faster per token than the full-width
+    // baseline's worst mixed step (750 µs)
+    assert!(rep_tpot.percentiles.tpot.p99 < 0.00075, "{}", rep_tpot.percentiles.tpot.p99);
+    assert_eq!(eng_tpot.steps, eng_budget.steps);
+    assert_eq!(eng_tpot.growth_deferrals, 0, "slot caps are not growth deferrals");
+    assert_eq!(eng_budget.growth_deferrals, 0);
+}
+
+#[test]
+fn growth_gate_defers_at_overload_but_completes_everything() {
+    let gate = AdmissionConfig {
+        waiting_served_ratio: 2.0,
+        max_waiting_steps: 16,
+        ..AdmissionConfig::off()
+    };
+    let (rep, engine) = run_with_admission(OVERLOAD_RPS, gate);
+    assert_eq!(rep.completed, N_REQUESTS, "the gate defers, it never drops");
+    assert_eq!(rep.rejected, 0);
+    assert!(engine.growth_deferrals > 0, "overload must trip the ratio gate");
+    // max_waiting_steps bounds every deferral streak, so the queue can
+    // never be starved longer than 16 steps
+    assert!(
+        engine.growth_deferrals < rep.steps,
+        "deferrals {} must not dominate {} steps",
+        engine.growth_deferrals,
+        rep.steps
+    );
+}
+
+#[test]
+fn front_door_replay_is_byte_deterministic() {
+    // DESIGN.md §4 extended to admission: every front-door decision is a
+    // pure function of engine-visible state, so two identically-seeded
+    // runs — rejections included — render byte-identically.
+    let cfg = || AdmissionConfig {
+        slo_ttft_us: 25_000,
+        slo_tpot_us: 750,
+        waiting_served_ratio: 1.5,
+        max_waiting_steps: 16,
+        max_batch_total_tokens: 120,
+        service: svc(),
+    };
+    let (a, ea) = run_with_admission(OVERLOAD_RPS, cfg());
+    let (b, eb) = run_with_admission(OVERLOAD_RPS, cfg());
+    assert_eq!(a.render(), b.render());
+    assert_eq!(ea.rejected_slo, eb.rejected_slo);
+    assert_eq!(ea.growth_deferrals, eb.growth_deferrals);
+    assert!(a.rejected > 0, "the combined config must shed at 1500 rps");
+}
+
+#[test]
+fn off_config_replays_identically_to_no_front_door() {
+    // AdmissionConfig::off() must be byte-invisible: the same scenario
+    // with and without set_admission renders identically.
+    let (with_off, _) = run_with_admission(OVERLOAD_RPS, AdmissionConfig::off());
+    let mut engine = Engine::with_clock(load_mock(), 40, 4, 0.5, VirtualClock::shared());
+    engine.set_prefill_chunk(4);
+    let trace =
+        Trace::poisson(N_REQUESTS, OVERLOAD_RPS, SeqlenDist::Fixed(24), (8, 8), 64, TRACE_SEED);
+    let requests = loadgen::synthesize_requests(&trace, 64, 16, 8, SYNTH_SEED);
+    let bare = loadgen::replay(&mut engine, &requests, &svc(), 1_000_000).expect("replay");
+    assert_eq!(with_off.render(), bare.render());
+    assert_eq!(with_off.rejected, 0);
+}

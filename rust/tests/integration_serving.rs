@@ -95,21 +95,26 @@ fn router_plus_engines_spread_load() {
     for id in 0..40u64 {
         let req = Request::new(id, vec![2; 4], 4);
         let route = router.route(&req).unwrap();
-        router.on_started(route.replica);
+        router.on_started(id);
         engines[route.replica].submit(req);
     }
     let mut counts = Vec::new();
-    for (i, e) in engines.iter_mut().enumerate() {
+    for e in engines.iter_mut() {
         e.run_to_completion(10_000).unwrap();
         let n = e.timings().len();
         for t in e.timings() {
-            router.on_finished(i, t.id);
+            router.on_finished(t.id);
         }
         counts.push(n);
     }
     assert_eq!(counts.iter().sum::<usize>(), 40);
     assert!(counts.iter().all(|&c| c == 10), "least-loaded spread: {counts:?}");
-    assert_eq!(router.stats().0, 40);
+    let stats = router.stats();
+    assert_eq!(stats.routed, 40);
+    assert_eq!(stats.spurious_starts + stats.spurious_finishes, 0);
+    for i in 0..4 {
+        assert_eq!(router.load(i).tokens, 0, "replica {i} footprint returned");
+    }
 }
 
 #[test]
@@ -159,8 +164,13 @@ fn finish_reasons_are_accurate() {
     let mut r2 = Request::new(2, vec![1], 50);
     r2.sampling.eos_token = Some(2);
     engine.submit(r2);
-    // cache-bound: prompt + gen exceed max_seq 256
-    engine.submit(Request::new(3, vec![1; 10], 10_000));
+    // cache-bound: prompt + gen exceed max_seq 256, which the front door
+    // now refuses at submit — inject past it to exercise the in-flight
+    // backstop (a sequence reaching max_seq finishes, never stalls)
+    engine.batcher.submit(Request::new(3, vec![1; 10], 10_000), 0);
+    // front-door-bound: the same oversized shape via submit is rejected
+    // up front with an event and no execution
+    engine.submit(Request::new(4, vec![1; 10], 10_000));
     engine.run_to_completion(100_000).unwrap();
     let mut reasons = std::collections::HashMap::new();
     for ev in engine.take_events() {
@@ -171,4 +181,7 @@ fn finish_reasons_are_accurate() {
     assert_eq!(reasons[&1], FinishReason::Length);
     assert_eq!(reasons[&2], FinishReason::Eos);
     assert_eq!(reasons[&3], FinishReason::CacheFull);
+    assert_eq!(reasons[&4], FinishReason::Rejected);
+    assert_eq!(engine.rejected_too_long, 1);
+    assert_eq!(engine.timings().len(), 3, "rejected request records no timing");
 }
