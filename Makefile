@@ -1,9 +1,9 @@
 # Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
 # what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
 
-.PHONY: tier1 build test test-load test-router test-block test-prefill test-parallel bench-compile bench-smoke quickstart artifacts clean
+.PHONY: tier1 build test test-load test-router test-block test-prefill test-parallel test-fleet bench-compile bench-smoke quickstart artifacts clean
 
-tier1: build test test-load test-router test-block test-prefill test-parallel bench-compile bench-smoke quickstart
+tier1: build test test-load test-router test-block test-prefill test-parallel test-fleet bench-compile bench-smoke quickstart
 
 build:
 	cd rust && cargo build --release
@@ -39,6 +39,12 @@ test-prefill:
 # byte-identical across pool sizes; util::pool unit semantics.
 test-parallel:
 	cd rust && cargo test -q --test integration_parallel
+
+# Fleet suite (also run by `test`): replicated serving with deterministic
+# fault injection — failover determinism, zero-loss crash recovery, fleet
+# deadlines, router token-budget leak property.
+test-fleet:
+	cd rust && cargo test -q --test integration_fleet
 
 bench-compile:
 	cd rust && cargo bench --no-run

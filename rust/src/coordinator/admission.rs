@@ -47,6 +47,10 @@ pub enum SubmitOutcome {
     /// Projected TTFT of serving this request behind the current backlog
     /// breaches `slo_ttft_us`.
     RejectedSlo,
+    /// The request carried a `deadline_us` that has already passed, or
+    /// whose projected TTFT lands past it — it could only ever expire in
+    /// the queue, so it is refused up front.
+    RejectedDeadline,
 }
 
 impl SubmitOutcome {

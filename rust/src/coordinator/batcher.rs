@@ -112,6 +112,49 @@ impl Batcher {
         });
     }
 
+    /// Enqueue at the *back* while preserving timestamps from an earlier
+    /// life on another replica (fleet failover — recompute semantics like
+    /// [`Self::requeue_front`], but the retry queues behind work the new
+    /// replica already holds rather than jumping it).
+    pub fn submit_carried(
+        &mut self,
+        req: Request,
+        submitted_us: u64,
+        queued_us: u64,
+        now_us: u64,
+    ) {
+        self.waiting.push_back(QueuedRequest { req, submitted_us, enqueued_us: now_us, queued_us });
+    }
+
+    /// Remove and return every waiting entry (fleet evacuation of a
+    /// crashed/stalled replica). Running sequences are the engine's to
+    /// evacuate — see `Engine::evacuate`.
+    pub fn drain_waiting(&mut self) -> Vec<QueuedRequest> {
+        self.waiting.drain(..).collect()
+    }
+
+    /// Remove and return waiting entries whose deadline has passed at
+    /// `now_us` (FCFS order preserved for the survivors). Entries without
+    /// a deadline (`deadline_us == 0`) are never expired; the common
+    /// no-deadline queue takes one scan and no allocation.
+    pub fn take_expired(&mut self, now_us: u64) -> Vec<QueuedRequest> {
+        let hit = |e: &QueuedRequest| e.req.deadline_us > 0 && e.req.deadline_us <= now_us;
+        if !self.waiting.iter().any(hit) {
+            return Vec::new();
+        }
+        let mut expired = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.waiting.len());
+        for e in self.waiting.drain(..) {
+            if hit(&e) {
+                expired.push(e);
+            } else {
+                keep.push_back(e);
+            }
+        }
+        self.waiting = keep;
+        expired
+    }
+
     pub fn queued(&self) -> usize {
         self.waiting.len()
     }
@@ -296,6 +339,46 @@ mod tests {
         b.release(1);
         assert_eq!(b.admit_bounded(&p, 8, 4, 0).len(), 1, "lone oversized request still runs");
         assert_eq!(b.waiting_prompt_rows(), 8);
+    }
+
+    #[test]
+    fn submit_carried_queues_behind_local_work_with_old_timestamps() {
+        let mut b = Batcher::new(vec![4], 1.0);
+        let p = pool(16);
+        b.submit(req(1, 2, 2), 50);
+        b.submit_carried(req(2, 2, 2), 5, 30, 60); // failed over from elsewhere
+        let admitted = b.admit(&p);
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(admitted[0].req.id, 1, "retry does not jump local FCFS order");
+        assert_eq!(admitted[1].submitted_us, 5, "original submit time survives failover");
+        assert_eq!(admitted[1].queued_us, 30, "accumulated queue wait survives failover");
+        assert_eq!(admitted[1].enqueued_us, 60, "current wait restarts at the new replica");
+    }
+
+    #[test]
+    fn drain_waiting_empties_the_queue_in_order() {
+        let mut b = Batcher::new(vec![4], 1.0);
+        b.submit(req(1, 2, 2), 0);
+        b.submit(req(2, 2, 2), 1);
+        let drained = b.drain_waiting();
+        assert_eq!(drained.iter().map(|e| e.req.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.queued(), 0);
+        assert!(b.drain_waiting().is_empty());
+    }
+
+    #[test]
+    fn take_expired_removes_only_past_deadline_entries() {
+        let mut b = Batcher::new(vec![4], 1.0);
+        b.submit(req(1, 2, 2), 0); // no deadline: never expires
+        b.submit(req(2, 2, 2).with_deadline_us(100), 0);
+        b.submit(req(3, 2, 2).with_deadline_us(500), 0);
+        assert!(b.take_expired(99).is_empty(), "deadline not yet reached");
+        let expired = b.take_expired(100);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].req.id, 2, "deadline is inclusive at now");
+        assert_eq!(b.queued(), 2, "survivors keep their FCFS order");
+        assert!(b.take_expired(400).is_empty());
+        assert_eq!(b.take_expired(10_000).len(), 1);
     }
 
     #[test]

@@ -88,6 +88,24 @@ pub struct ServeConfig {
     /// TPOT SLO target, microseconds: caps the decode batch at the
     /// largest width whose modelled step cost still meets it. `0` = off.
     pub slo_tpot_us: u64,
+    /// Replica count of the serving fleet (`coordinator::fleet`). `1`
+    /// (the default) is the plain single-engine path.
+    pub replicas: usize,
+    /// Fault-plan spec (`FaultPlan::parse` format, e.g.
+    /// `"stall:0@40000+30000;crash:1@80000"`). Empty = no faults. A
+    /// non-empty plan selects the deterministic virtual-clock fleet
+    /// replay (faults are scheduled in virtual time).
+    pub fault_plan: String,
+    /// Mark a replica Unhealthy after this long without step progress
+    /// while work is stuck on it, µs. `0` = stall detection off.
+    pub fault_stall_threshold_us: u64,
+    /// Failovers a request may consume before it is counted Failed.
+    pub fault_max_retries: u32,
+    /// Delay between evacuation and the re-route attempt, µs.
+    pub fault_retry_backoff_us: u64,
+    /// What stall detection does with a stuck replica:
+    /// `failover` (evacuate + re-route) or `drain` (finish inflight).
+    pub fault_stall_policy: String,
 }
 
 impl Default for ServeConfig {
@@ -111,6 +129,12 @@ impl Default for ServeConfig {
             max_waiting_steps: 0,
             slo_ttft_ms: 0.0,
             slo_tpot_us: 0,
+            replicas: 1,
+            fault_plan: String::new(),
+            fault_stall_threshold_us: 0,
+            fault_max_retries: 2,
+            fault_retry_backoff_us: 0,
+            fault_stall_policy: "failover".into(),
         }
     }
 }
@@ -143,6 +167,18 @@ impl ServeConfig {
             }
             "slo_ttft_ms" => self.slo_ttft_ms = v.parse().context("slo_ttft_ms")?,
             "slo_tpot_us" => self.slo_tpot_us = v.parse().context("slo_tpot_us")?,
+            "replicas" => self.replicas = v.parse().context("replicas")?,
+            "fault_plan" => self.fault_plan = v.into(),
+            "fault_stall_threshold_us" => {
+                self.fault_stall_threshold_us = v.parse().context("fault_stall_threshold_us")?
+            }
+            "fault_max_retries" => {
+                self.fault_max_retries = v.parse().context("fault_max_retries")?
+            }
+            "fault_retry_backoff_us" => {
+                self.fault_retry_backoff_us = v.parse().context("fault_retry_backoff_us")?
+            }
+            "fault_stall_policy" => self.fault_stall_policy = v.into(),
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -197,7 +233,30 @@ impl ServeConfig {
             self.slo_ttft_ms.is_finite() && self.slo_ttft_ms >= 0.0,
             "slo_ttft_ms must be finite and >= 0 (0 = off)"
         );
+        anyhow::ensure!(self.replicas >= 1, "replicas must be at least 1");
+        let plan = super::fleet::FaultPlan::parse(&self.fault_plan).context("fault_plan")?;
+        if let Some(max) = plan.max_replica() {
+            anyhow::ensure!(
+                max < self.replicas,
+                "fault_plan names replica {max}, but replicas = {}",
+                self.replicas
+            );
+        }
+        super::fleet::StallPolicy::parse(&self.fault_stall_policy)
+            .context("fault_stall_policy")?;
         Ok(())
+    }
+
+    /// The fleet policy knobs this config selects (`coordinator::fleet`).
+    pub fn fleet_options(&self) -> Result<super::fleet::FleetOptions> {
+        Ok(super::fleet::FleetOptions {
+            stall_threshold_us: self.fault_stall_threshold_us,
+            max_retries: self.fault_max_retries,
+            retry_backoff_us: self.fault_retry_backoff_us,
+            stall_policy: super::fleet::StallPolicy::parse(&self.fault_stall_policy)?,
+            max_queue_per_replica: self.max_queue,
+            max_tokens_per_replica: self.max_batch_total_tokens,
+        })
     }
 }
 
@@ -319,6 +378,63 @@ mod tests {
         c.slo_ttft_ms = f64::NAN;
         assert!(c.validate().is_err());
         c.slo_ttft_ms = 0.0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_keys_round_trip_and_validate() {
+        // defaults: one replica, no faults — the fleet layer is inert
+        let d = ServeConfig::default();
+        assert_eq!(d.replicas, 1);
+        assert!(d.fault_plan.is_empty());
+        assert_eq!(d.fault_stall_threshold_us, 0);
+        assert_eq!(d.fault_max_retries, 2);
+        assert_eq!(d.fault_retry_backoff_us, 0);
+        assert_eq!(d.fault_stall_policy, "failover");
+        // config-file text sets them ...
+        let mut c = ServeConfig::default();
+        c.apply_text(
+            "replicas = 4\nfault_plan = stall:0@40000+30000;crash:1@80000\n\
+             fault_stall_threshold_us = 20000\nfault_max_retries = 3\n\
+             fault_retry_backoff_us = 500\nfault_stall_policy = drain\n",
+        )
+        .unwrap();
+        assert_eq!(c.replicas, 4);
+        assert_eq!(c.fault_plan, "stall:0@40000+30000;crash:1@80000");
+        assert_eq!(c.fault_stall_threshold_us, 20_000);
+        assert_eq!(c.fault_max_retries, 3);
+        assert_eq!(c.fault_retry_backoff_us, 500);
+        c.validate().unwrap();
+        let opts = c.fleet_options().unwrap();
+        assert_eq!(opts.stall_threshold_us, 20_000);
+        assert_eq!(opts.max_retries, 3);
+        assert_eq!(opts.stall_policy, crate::coordinator::fleet::StallPolicy::Drain);
+        assert_eq!(opts.max_queue_per_replica, c.max_queue);
+        // ... and a later CLI-style assignment (file first, then flags) wins
+        c.set("replicas", "2").unwrap();
+        assert_eq!(c.replicas, 2);
+        c.validate().unwrap(); // plan names replicas 0 and 1: still in range
+        c.set("replicas", "1").unwrap();
+        assert!(c.validate().is_err(), "plan now names a replica outside the fleet");
+    }
+
+    #[test]
+    fn fleet_validation_rejects_bad_plans_and_policies() {
+        let mut c = ServeConfig::default();
+        c.replicas = 0;
+        assert!(c.validate().is_err(), "zero replicas");
+        c.replicas = 2;
+        c.fault_plan = "crash:5@100".into();
+        assert!(c.validate().is_err(), "plan names replica 5 of 2");
+        c.fault_plan = "crash:1@100".into();
+        c.validate().unwrap();
+        c.fault_plan = "freeze:0@1".into();
+        assert!(c.validate().is_err(), "unknown fault kind");
+        c.fault_plan.clear();
+        c.fault_stall_policy = "panic".into();
+        assert!(c.validate().is_err(), "unknown stall policy");
+        assert!(c.fleet_options().is_err());
+        c.fault_stall_policy = "failover".into();
         c.validate().unwrap();
     }
 

@@ -150,6 +150,18 @@ fn us_delta_secs(later: u64, earlier: u64) -> f64 {
     later.saturating_sub(earlier) as f64 * 1e-6
 }
 
+/// A request pulled off an engine by fleet failover ([`Engine::evacuate`]):
+/// everything needed to resubmit it elsewhere with recompute semantics —
+/// prefill progress is discarded; the original submission time and the
+/// queue wait accumulated so far ride along, exactly like a preemption
+/// requeue but across replicas.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evacuated {
+    pub req: Request,
+    pub submitted_us: u64,
+    pub queued_us: u64,
+}
+
 /// The decode engine.
 pub struct Engine<B: Backend> {
     backend: B,
@@ -186,6 +198,12 @@ pub struct Engine<B: Backend> {
     pub rejected_too_long: u64,
     /// requests refused at submit: projected TTFT breached the SLO.
     pub rejected_slo: u64,
+    /// requests refused at submit: their `deadline_us` had already passed
+    /// (or the TTFT projection provably lands past it).
+    pub rejected_deadline: u64,
+    /// requests expired at a step boundary after entering the queue or
+    /// the running set (`FinishReason::DeadlineExceeded`, timing kept).
+    pub deadline_expired: u64,
     /// admission attempts deferred by the growth gate (telemetry).
     pub growth_deferrals: u64,
     /// step counter value at the last successful batch growth.
@@ -228,6 +246,8 @@ impl<B: Backend> Engine<B> {
             admission: AdmissionConfig::off(),
             rejected_too_long: 0,
             rejected_slo: 0,
+            rejected_deadline: 0,
+            deadline_expired: 0,
             growth_deferrals: 0,
             last_growth_step: 0,
         }
@@ -250,7 +270,7 @@ impl<B: Backend> Engine<B> {
 
     /// Total requests refused at the front door.
     pub fn rejected(&self) -> u64 {
-        self.rejected_too_long + self.rejected_slo
+        self.rejected_too_long + self.rejected_slo + self.rejected_deadline
     }
 
     /// Outstanding prompt rows the prefill budget must clear before a new
@@ -281,10 +301,10 @@ impl<B: Backend> Engine<B> {
     }
 
     /// Submit through the front door. Rejections emit a `Finished` event
-    /// with [`FinishReason::Rejected`] (empty `generated`, no timing) so
-    /// subscribers always hear back; the outcome is decided purely from
-    /// engine-visible state, never the clock, so virtual-clock replay
-    /// stays deterministic.
+    /// (empty `generated`, no timing) so subscribers always hear back;
+    /// SLO outcomes are decided purely from engine-visible state, and the
+    /// deadline check reads only the *injected* clock, so virtual-clock
+    /// replay stays deterministic.
     pub fn submit(&mut self, req: Request) -> SubmitOutcome {
         if req.max_total_len() > self.pool.geometry().max_seq {
             self.rejected_too_long += 1;
@@ -294,6 +314,30 @@ impl<B: Backend> Engine<B> {
                 generated: Vec::new(),
             });
             return SubmitOutcome::RejectedTooLong;
+        }
+        if req.deadline_us > 0 {
+            // A request whose deadline already passed — or whose projected
+            // TTFT lands past it under the active service model — could
+            // only ever expire in the queue; refuse it up front. With the
+            // off-config the projection is 0 and only the first clause
+            // can trip.
+            let now = self.clock.now_us();
+            let projected = self.admission.projected_ttft_us(
+                self.backlog_rows(),
+                self.backlog_prompts(),
+                req.prompt.len(),
+                self.batcher.max_batch(),
+                self.batcher.prefill_chunk(),
+            );
+            if now >= req.deadline_us || now.saturating_add(projected) > req.deadline_us {
+                self.rejected_deadline += 1;
+                self.events.push(Event::Finished {
+                    id: req.id,
+                    reason: FinishReason::DeadlineExceeded,
+                    generated: Vec::new(),
+                });
+                return SubmitOutcome::RejectedDeadline;
+            }
         }
         if self.admission.slo_ttft_us > 0 {
             let projected = self.admission.projected_ttft_us(
@@ -380,6 +424,90 @@ impl<B: Backend> Engine<B> {
         self.batcher.release(id);
     }
 
+    /// Finish every queued or running request whose absolute deadline has
+    /// passed at `now_us`. Queued casualties never ran, so their timing is
+    /// synthesised here (pure queue wait, nothing generated); running ones
+    /// go through [`Self::finish`] and keep whatever they generated.
+    fn expire_deadlines(&mut self, now_us: u64) {
+        for entry in self.batcher.take_expired(now_us) {
+            self.deadline_expired += 1;
+            let queue_us = entry.queued_us + now_us.saturating_sub(entry.enqueued_us);
+            self.timings.push(RequestTiming {
+                id: entry.req.id,
+                submitted_us: entry.submitted_us,
+                finished_us: now_us,
+                queue: queue_us as f64 * 1e-6,
+                ttft: 0.0,
+                tpot: 0.0,
+                total: us_delta_secs(now_us, entry.submitted_us),
+                prompt_len: entry.req.prompt.len(),
+                generated: 0,
+            });
+            self.events.push(Event::Finished {
+                id: entry.req.id,
+                reason: FinishReason::DeadlineExceeded,
+                generated: Vec::new(),
+            });
+        }
+        for id in self.batcher.running().to_vec() {
+            let expired = self
+                .seqs
+                .get(&id)
+                .is_some_and(|st| st.req.deadline_us > 0 && st.req.deadline_us <= now_us);
+            if expired {
+                self.deadline_expired += 1;
+                self.finish(id, FinishReason::DeadlineExceeded);
+            }
+        }
+    }
+
+    /// Pull every queued *and* running request off this engine for fleet
+    /// failover (the replica crashed or stalled): recompute semantics as
+    /// in preemption — prefill progress and generated tokens are
+    /// discarded, KV pages freed, and each request leaves with its
+    /// original submission time plus the queue wait accumulated so far
+    /// (waiting entries also bill the wait ending now). No events or
+    /// timings are recorded here; the fleet decides retry vs `Failed`.
+    /// Sorted by (submitted_us, id) so downstream re-routing is
+    /// deterministic and FCFS-fair.
+    pub fn evacuate(&mut self) -> Vec<Evacuated> {
+        let now = self.clock.now_us();
+        let mut out: Vec<Evacuated> = self
+            .batcher
+            .drain_waiting()
+            .into_iter()
+            .map(|e| Evacuated {
+                submitted_us: e.submitted_us,
+                queued_us: e.queued_us + now.saturating_sub(e.enqueued_us),
+                req: e.req,
+            })
+            .collect();
+        for id in self.batcher.running().to_vec() {
+            if let Some(st) = self.seqs.remove(&id) {
+                out.push(Evacuated {
+                    req: st.req,
+                    submitted_us: st.submitted_us,
+                    queued_us: st.queue_us,
+                });
+            }
+            self.pool.free_seq(id);
+            self.batcher.release(id);
+        }
+        out.sort_by_key(|e| (e.submitted_us, e.req.id));
+        out
+    }
+
+    /// Re-enqueue a request evacuated from another replica, preserving
+    /// its original submission time and accumulated queue wait. Bypasses
+    /// the front door on purpose (same recompute semantics as a
+    /// preemption requeue): a retry the router already accepted must not
+    /// be re-rejected here — its deadline, if any, still applies at step
+    /// boundaries.
+    pub fn resubmit(&mut self, req: Request, submitted_us: u64, queued_us: u64) {
+        let now = self.clock.now_us();
+        self.batcher.submit_carried(req, submitted_us, queued_us, now);
+    }
+
     /// Preempt sequences until the pool can absorb the next step's
     /// appends: `plan` maps each running sequence to the rows it intends
     /// to append this step, and the pages those rows require must all be
@@ -445,6 +573,10 @@ impl<B: Backend> Engine<B> {
         // set's worst-case KV footprint. With the default off-config this
         // reduces to exactly the unbounded `Batcher::admit`.
         let now = self.clock.now_us();
+        // 0. deadline enforcement at the step boundary: queued and running
+        // requests whose absolute deadline passed finish now (no-op when
+        // no request carries a deadline)
+        self.expire_deadlines(now);
         let max_batch = self.batcher.max_batch();
         let slot_cap = self
             .admission
@@ -1072,6 +1204,118 @@ mod tests {
         let t = e.timings()[0];
         assert_eq!(t.submitted_us, 500);
         assert!((t.queue - 2.5e-3).abs() < 1e-9, "{}", t.queue);
+    }
+
+    #[test]
+    fn past_deadline_is_rejected_at_submit() {
+        let clock = VirtualClock::shared();
+        let mut e = Engine::with_clock(MockBackend::tiny(), 64, 4, 1.0, clock.clone());
+        clock.advance_us(5_000);
+        // deadline 4000 < now 5000: refused with the distinct reason
+        assert_eq!(
+            e.submit(Request::new(1, vec![1, 2], 2).with_deadline_us(4_000)),
+            SubmitOutcome::RejectedDeadline
+        );
+        assert_eq!((e.rejected_deadline, e.rejected()), (1, 1));
+        match e.take_events().as_slice() {
+            [Event::Finished { id: 1, reason: FinishReason::DeadlineExceeded, generated }] => {
+                assert!(generated.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(e.timings().is_empty(), "submit-time rejection records no timing");
+        // a future deadline is admitted and (deadline never reached) fully served
+        assert!(e.submit(Request::new(2, vec![1, 2], 2).with_deadline_us(1_000_000)).is_queued());
+        e.run_to_completion(100).unwrap();
+        assert_eq!(e.timings().len(), 1);
+    }
+
+    #[test]
+    fn submit_rejects_when_projected_ttft_lands_past_the_deadline() {
+        use crate::loadgen::ServiceModel;
+        let clock = VirtualClock::shared();
+        let mut e = Engine::with_clock(MockBackend::tiny(), 64, 4, 1.0, clock.clone());
+        e.set_prefill_chunk(4);
+        let service =
+            ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 };
+        e.set_admission(AdmissionConfig { service, ..AdmissionConfig::off() });
+        // empty engine, prompt 4, chunk 4, max_batch 4: projection is
+        // 1 step × step_us(3, 4) = 550 µs. Deadline at 500 µs is
+        // provably unmeetable even though it hasn't passed yet.
+        assert_eq!(
+            e.submit(Request::new(1, vec![1; 4], 2).with_deadline_us(500)),
+            SubmitOutcome::RejectedDeadline
+        );
+        // deadline at 600 µs clears the projection
+        assert!(e.submit(Request::new(2, vec![1; 4], 2).with_deadline_us(600)).is_queued());
+    }
+
+    #[test]
+    fn deadlines_expire_queued_and_running_requests_at_step_boundaries() {
+        let clock = VirtualClock::shared();
+        let mut e = Engine::with_clock(MockBackend::tiny(), 64, 4, 1.0, clock.clone());
+        // two requests: one with a deadline mid-generation, one without
+        assert!(e.submit(Request::new(1, vec![3, 5], 10).with_deadline_us(2_500)).is_queued());
+        assert!(e.submit(Request::new(2, vec![3, 5], 4)).is_queued());
+        e.step().unwrap(); // both admitted and prefilled at t=0
+        clock.advance_us(1_000);
+        e.step().unwrap(); // t=1000 < 2500: both still running
+        assert_eq!(e.last_batch, 2);
+        clock.advance_us(2_000);
+        e.step().unwrap(); // boundary at t=3000 ≥ 2500: request 1 expires
+        assert_eq!(e.deadline_expired, 1);
+        assert_eq!(e.last_batch, 1, "survivor decodes alone");
+        e.run_to_completion(100).unwrap();
+        let expired = e.timings().iter().find(|t| t.id == 1).unwrap();
+        assert!(expired.generated >= 1, "mid-flight expiry keeps generated tokens");
+        assert_eq!(expired.finished_us, 3_000, "expired at the step boundary");
+        let events = e.take_events();
+        assert!(events.iter().any(|ev| matches!(
+            ev,
+            Event::Finished { id: 1, reason: FinishReason::DeadlineExceeded, .. }
+        )));
+        // queued-only expiry: deadline passes before first admission
+        let clock = VirtualClock::shared();
+        let mut e = Engine::with_clock(MockBackend::tiny(), 64, 4, 1.0, clock.clone());
+        assert!(e.submit(Request::new(7, vec![1], 1).with_deadline_us(100)).is_queued());
+        clock.advance_us(200);
+        e.step().unwrap();
+        assert_eq!(e.deadline_expired, 1);
+        let t = e.timings()[0];
+        assert_eq!((t.id, t.generated), (7, 0));
+        assert!((t.queue - 2e-4).abs() < 1e-12, "expiry bills the full queue wait");
+    }
+
+    #[test]
+    fn evacuate_returns_queued_and_running_with_carried_timestamps() {
+        let clock = VirtualClock::shared();
+        let mut e = Engine::with_clock(MockBackend::tiny(), 16, 4, 1.0, clock.clone());
+        clock.advance_us(100);
+        e.submit(Request::new(1, vec![1, 2], 4)); // will run
+        e.step().unwrap();
+        clock.advance_us(400);
+        e.submit(Request::new(2, vec![1, 2], 4)); // waits at t=500
+        clock.advance_us(500);
+        let evac = e.evacuate();
+        assert_eq!(evac.len(), 2);
+        assert!(e.idle() && e.pool.used_pages() == 0, "evacuation frees everything");
+        // sorted by (submitted_us, id): request 1 first
+        assert_eq!(evac[0].req.id, 1);
+        assert_eq!(evac[0].submitted_us, 100);
+        assert_eq!(evac[0].queued_us, 0, "execution time is not queueing");
+        assert_eq!(evac[1].req.id, 2);
+        assert_eq!(evac[1].submitted_us, 500);
+        assert_eq!(evac[1].queued_us, 500, "waiting entry bills its wait up to now");
+        assert!(e.timings().is_empty(), "evacuation records no timings");
+        // resubmit elsewhere: timestamps survive, generation restarts
+        let mut e2 = Engine::with_clock(MockBackend::tiny(), 16, 4, 1.0, clock.clone());
+        for ev in evac {
+            e2.resubmit(ev.req, ev.submitted_us, ev.queued_us);
+        }
+        e2.run_to_completion(100).unwrap();
+        let t1 = e2.timings().iter().find(|t| t.id == 1).unwrap();
+        assert_eq!(t1.submitted_us, 100, "original submit time survives failover");
+        assert_eq!(e2.timings().len(), 2);
     }
 
     #[test]

@@ -1,0 +1,1239 @@
+//! Replicated serving fleet: N engines behind the [`Router`], with
+//! deterministic fault injection, health-gated routing, bounded failover,
+//! and per-request deadlines.
+//!
+//! Two drivers share the policy layer, mirroring the `loadgen` split:
+//!
+//! * [`Fleet`] — a discrete-event simulation that drives every replica
+//!   *inline* on **one shared [`VirtualClock`]**. The DESIGN.md §4 rule —
+//!   a virtual-clock run has exactly one writer of time — forbids one
+//!   thread per replica here, so replicas are simulated with per-replica
+//!   `busy_until` watermarks instead: the event loop always advances to
+//!   the globally earliest event (arrival, retry, crash, stall detection,
+//!   or a replica becoming ready), which makes a multi-replica run with
+//!   an active [`FaultPlan`] byte-deterministic (`integration_fleet`).
+//!   At one replica with no faults, the loop reduces *exactly* to
+//!   `loadgen::replay` — same submission stamps, same step boundaries,
+//!   same service billing, same wedge rule — so the robustness layer is
+//!   provably inert when off.
+//! * [`FleetServer`] — the threaded deployment shape: one
+//!   [`Server`] (engine thread) per replica behind a mutexed [`Router`],
+//!   on the wall clock. A dead engine thread is detected at submit,
+//!   marked [`ReplicaHealth::Unhealthy`], and the request is re-routed
+//!   with the same bounded-retry policy; exhaustion surfaces as a
+//!   terminal [`FinishReason::Failed`] event rather than a hang.
+//!
+//! Fault model ([`FaultPlan`], decided entirely from virtual timestamps —
+//! never the wall clock — so replay stays byte-stable):
+//!
+//! * `Stall {replica, from_us, dur_us}` — the replica freezes: no steps,
+//!   no mailbox delivery, for the window. Step-progress watermarks detect
+//!   it after `stall_threshold_us` without progress and the
+//!   [`StallPolicy`] decides: **Failover** evacuates inflight work and
+//!   re-routes it; **Drain** stops new admissions but lets the replica
+//!   finish inflight work when it wakes. Either way the replica Recovers
+//!   (becomes routable) once it is idle and the stall window has passed.
+//! * `Crash {replica, at_us}` — the replica dies permanently; inflight
+//!   and mailbox work is evacuated and failed over.
+//! * `SlowStep {replica, factor}` — every step on the replica is billed
+//!   at `factor ×` the [`ServiceModel`] cost (degraded, not dead).
+//!
+//! Failover uses recompute semantics, exactly like preemption but across
+//! replicas ([`Engine::evacuate`] / [`Engine::resubmit`]): prefill
+//! progress and generated tokens are discarded, the original submission
+//! time and accumulated queue wait ride along, and after `max_retries`
+//! failovers the request is counted [`FinishReason::Failed`] — never
+//! silently lost (`completed + failed + rejected == routed`, asserted by
+//! `integration_fleet`).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::loadgen::{percentiles, ReplayReport, ServiceModel};
+use crate::metrics::{CountHistogram, PercentileReport};
+use crate::util::clock::{Clock, SharedClock, VirtualClock};
+use crate::util::rng::Rng;
+
+use super::engine::{Backend, Engine, Evacuated, RequestTiming};
+use super::request::{Event, FinishReason, Request, RequestId};
+use super::router::{ReplicaHealth, Router, RouterStats};
+use super::server::{Server, ServerReport};
+
+/// One injected fault. All times are virtual-clock microseconds (same
+/// origin as `Request::arrival_us`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// The replica freezes for `[from_us, from_us + dur_us)`: no steps
+    /// execute and no mailbox delivery happens inside the window.
+    Stall { replica: usize, from_us: u64, dur_us: u64 },
+    /// The replica dies permanently at `at_us`.
+    Crash { replica: usize, at_us: u64 },
+    /// Every step on the replica costs `factor ×` the service model.
+    SlowStep { replica: usize, factor: f64 },
+}
+
+/// A deterministic schedule of faults. Parsed from the CLI/config spec
+/// format (`"stall:0@40000+30000;crash:1@80000;slow:2@1.50"`), generated
+/// from a seed ([`FaultPlan::seeded`]), or built directly.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// No faults: the fleet behaves as a plain replicated deployment.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Earliest crash scheduled for `replica`, if any.
+    pub fn crash_at(&self, replica: usize) -> Option<u64> {
+        self.faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::Crash { replica: r, at_us } if *r == replica => Some(*at_us),
+                _ => None,
+            })
+            .min()
+    }
+
+    /// The stall window covering `t_us` on `replica`, as
+    /// `(from_us, end_us)` with `end_us` exclusive.
+    pub fn stall_covering(&self, replica: usize, t_us: u64) -> Option<(u64, u64)> {
+        self.faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::Stall { replica: r, from_us, dur_us }
+                    if *r == replica && *from_us <= t_us && t_us < from_us + dur_us =>
+                {
+                    Some((*from_us, from_us + dur_us))
+                }
+                _ => None,
+            })
+            .min()
+    }
+
+    /// Combined slow-step factor for `replica` (product; 1.0 = nominal).
+    pub fn slow_factor(&self, replica: usize) -> f64 {
+        self.faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::SlowStep { replica: r, factor } if *r == replica => Some(*factor),
+                _ => None,
+            })
+            .product()
+    }
+
+    /// Largest replica index any fault names (plans are validated against
+    /// the actual replica count at fleet build).
+    pub fn max_replica(&self) -> Option<usize> {
+        self.faults
+            .iter()
+            .map(|f| match f {
+                Fault::Stall { replica, .. }
+                | Fault::Crash { replica, .. }
+                | Fault::SlowStep { replica, .. } => *replica,
+            })
+            .max()
+    }
+
+    /// Parse the semicolon-separated spec format:
+    /// `stall:<replica>@<from_us>+<dur_us>`, `crash:<replica>@<at_us>`,
+    /// `slow:<replica>@<factor>`. Whitespace around parts is ignored;
+    /// an empty spec is an empty plan.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut faults = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) =
+                part.split_once(':').with_context(|| format!("fault '{part}': want kind:args"))?;
+            let (replica, arg) = rest
+                .split_once('@')
+                .with_context(|| format!("fault '{part}': want {kind}:<replica>@..."))?;
+            let replica: usize =
+                replica.trim().parse().with_context(|| format!("fault '{part}': replica"))?;
+            let arg = arg.trim();
+            match kind.trim() {
+                "stall" => {
+                    let (from, dur) = arg.split_once('+').with_context(|| {
+                        format!("fault '{part}': want stall:<replica>@<from_us>+<dur_us>")
+                    })?;
+                    let from_us: u64 =
+                        from.trim().parse().with_context(|| format!("fault '{part}': from_us"))?;
+                    let dur_us: u64 =
+                        dur.trim().parse().with_context(|| format!("fault '{part}': dur_us"))?;
+                    anyhow::ensure!(dur_us > 0, "fault '{part}': zero-length stall");
+                    faults.push(Fault::Stall { replica, from_us, dur_us });
+                }
+                "crash" => {
+                    let at_us: u64 =
+                        arg.parse().with_context(|| format!("fault '{part}': at_us"))?;
+                    faults.push(Fault::Crash { replica, at_us });
+                }
+                "slow" => {
+                    let factor: f64 =
+                        arg.parse().with_context(|| format!("fault '{part}': factor"))?;
+                    anyhow::ensure!(
+                        factor.is_finite() && factor > 0.0,
+                        "fault '{part}': factor must be finite and > 0"
+                    );
+                    faults.push(Fault::SlowStep { replica, factor });
+                }
+                other => bail!("unknown fault kind '{other}' (stall | crash | slow)"),
+            }
+        }
+        Ok(Self { faults })
+    }
+
+    /// Canonical spec render (round-trips through [`FaultPlan::parse`];
+    /// slow factors are canonicalised to two decimals).
+    pub fn render(&self) -> String {
+        self.faults
+            .iter()
+            .map(|f| match f {
+                Fault::Stall { replica, from_us, dur_us } => {
+                    format!("stall:{replica}@{from_us}+{dur_us}")
+                }
+                Fault::Crash { replica, at_us } => format!("crash:{replica}@{at_us}"),
+                Fault::SlowStep { replica, factor } => format!("slow:{replica}@{factor:.2}"),
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Seeded random plan over `replicas` replicas and a trace of roughly
+    /// `span_us` microseconds: each replica independently draws nothing,
+    /// a stall, a crash, or a slow-down (uniform kinds). Deterministic in
+    /// the seed, and slow factors are drawn at two decimals so the plan
+    /// round-trips through `render`/`parse`.
+    pub fn seeded(seed: u64, replicas: usize, span_us: u64) -> Self {
+        let span = span_us.max(8) as usize;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut faults = Vec::new();
+        for replica in 0..replicas {
+            match rng.below(4) {
+                0 => {}
+                1 => {
+                    let from_us = rng.below(span / 2) as u64;
+                    let dur_us = (span / 8 + rng.below(span / 4)) as u64;
+                    faults.push(Fault::Stall { replica, from_us, dur_us });
+                }
+                2 => faults.push(Fault::Crash { replica, at_us: rng.below(span) as u64 }),
+                _ => faults.push(Fault::SlowStep {
+                    replica,
+                    factor: 1.0 + rng.below(151) as f64 / 100.0,
+                }),
+            }
+        }
+        Self { faults }
+    }
+}
+
+/// What stall detection does with a replica that stopped making progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StallPolicy {
+    /// Mark Unhealthy, evacuate inflight + mailbox work, re-route it.
+    #[default]
+    Failover,
+    /// Mark Draining: admit nothing new, keep inflight work (it resumes
+    /// when the stall ends).
+    Drain,
+}
+
+impl StallPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "failover" => Ok(Self::Failover),
+            "drain" => Ok(Self::Drain),
+            other => bail!("unknown stall policy '{other}' (failover | drain)"),
+        }
+    }
+}
+
+/// Fleet policy knobs. The defaults run a plain replicated deployment:
+/// no stall detection (`stall_threshold_us = 0`), two failover retries,
+/// immediate retry, unbounded token budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetOptions {
+    /// Mark a replica Unhealthy after this long without step progress
+    /// while work is stuck on it, µs. 0 = detection off (crashes still
+    /// fail over — only *stall* detection is gated).
+    pub stall_threshold_us: u64,
+    /// Failovers a request may consume before it is counted
+    /// [`FinishReason::Failed`].
+    pub max_retries: u32,
+    /// Delay between evacuation and the re-route attempt, µs.
+    pub retry_backoff_us: u64,
+    pub stall_policy: StallPolicy,
+    /// Router queue bound per replica (routed-but-undelivered backlog).
+    pub max_queue_per_replica: usize,
+    /// Router token budget per replica (0 = unbounded).
+    pub max_tokens_per_replica: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        Self {
+            stall_threshold_us: 0,
+            max_retries: 2,
+            retry_backoff_us: 0,
+            stall_policy: StallPolicy::Failover,
+            max_queue_per_replica: 1024,
+            max_tokens_per_replica: 0,
+        }
+    }
+}
+
+/// A routed request in flight to a replica. `route_us` is when the router
+/// accepted it; `carried` holds `(submitted_us, queued_us)` for failover
+/// retries (recompute semantics — see [`Engine::resubmit`]).
+#[derive(Debug, Clone)]
+struct Inbound {
+    req: Request,
+    route_us: u64,
+    carried: Option<(u64, u64)>,
+}
+
+/// A failed-over request waiting for its re-route attempt.
+#[derive(Debug, Clone)]
+struct RetryEntry {
+    due_us: u64,
+    /// Tie-break so same-instant retries fire in scheduling order.
+    seq: u64,
+    req: Request,
+    submitted_us: u64,
+    queued_us: u64,
+    /// When the request was evacuated: the wait until the successful
+    /// re-route is billed as queue time.
+    evac_us: u64,
+}
+
+/// Per-replica simulation state.
+struct Replica<B: Backend> {
+    engine: Engine<B>,
+    /// Routed but not yet delivered (the engine observes a submission at
+    /// its next step boundary — the same mailbox-drain semantics the
+    /// threaded server has, and exactly `loadgen::replay`'s behaviour).
+    mailbox: VecDeque<Inbound>,
+    /// The replica is mid-step (or mid-stall) until this virtual time.
+    busy_until_us: u64,
+    /// End of the last executed step: the step-progress watermark stall
+    /// detection compares against.
+    last_progress_us: u64,
+    /// Pending stall-detection check, if one is scheduled.
+    detection_at: Option<u64>,
+    crashed: bool,
+    first_submit_us: Option<u64>,
+    last_submit_us: u64,
+}
+
+impl<B: Backend> Replica<B> {
+    fn new(engine: Engine<B>) -> Self {
+        Self {
+            engine,
+            mailbox: VecDeque::new(),
+            busy_until_us: 0,
+            last_progress_us: 0,
+            detection_at: None,
+            crashed: false,
+            first_submit_us: None,
+            last_submit_us: 0,
+        }
+    }
+}
+
+/// Outcome of one [`Fleet::replay`] run: per-replica [`ReplayReport`]s,
+/// the aggregate latency percentiles, and the robustness counters.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub replicas: Vec<ReplayReport>,
+    /// Percentiles over every completed request fleet-wide.
+    pub aggregate: PercentileReport,
+    /// Successful routes, including failover re-routes.
+    pub routed: u64,
+    /// Fresh arrivals the router refused (back-pressure, not loss).
+    pub router_rejected: u64,
+    /// Failover retries scheduled.
+    pub retries: u64,
+    /// Requests pulled off crashed/stalled replicas.
+    pub evacuated: u64,
+    /// Requests that exhausted `max_retries`, with their failover count
+    /// — the only way admitted work leaves without completing. Sorted by
+    /// request id.
+    pub failed: Vec<(RequestId, u32)>,
+    /// Requests that expired at a step boundary (queued or running),
+    /// fleet-wide (`FinishReason::DeadlineExceeded`; submit-time deadline
+    /// rejections count in each replica's `rejected` instead).
+    pub deadline_expired: u64,
+    /// Replicas that crashed, in crash order.
+    pub crashed: Vec<usize>,
+    /// Healthy → Unhealthy/Draining transitions from stall detection.
+    pub unhealthy_transitions: u64,
+    /// Unhealthy/Draining → Healthy recoveries.
+    pub recovered: u64,
+    /// Failover counts per failed-over request (requests never evacuated
+    /// do not appear).
+    pub retry_attempts: CountHistogram,
+    /// Router lifecycle counters (spurious_* must be 0 — asserted by
+    /// `integration_fleet`).
+    pub router_stats: RouterStats,
+}
+
+impl FleetReport {
+    pub fn completed(&self) -> usize {
+        self.replicas.iter().map(|r| r.completed).sum()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.replicas.iter().map(|r| r.rejected).sum()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.replicas.iter().map(|r| r.steps).sum()
+    }
+
+    pub fn tokens_out(&self) -> u64 {
+        self.replicas.iter().map(|r| r.tokens_out).sum()
+    }
+
+    /// Fixed-format render: one fleet counter line, the retry histogram,
+    /// per-replica [`ReplayReport::render`] sections, and the aggregate
+    /// percentiles. Byte-identical across identically-seeded runs
+    /// (`integration_fleet` compares renders directly).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fleet replicas={} routed={} router_rejected={} retries={} evacuated={} \
+             failed={} deadline_expired={} unhealthy_transitions={} recovered={} crashed={:?}\n\
+             retry_attempts: {}\n",
+            self.replicas.len(),
+            self.routed,
+            self.router_rejected,
+            self.retries,
+            self.evacuated,
+            self.failed.len(),
+            self.deadline_expired,
+            self.unhealthy_transitions,
+            self.recovered,
+            self.crashed,
+            self.retry_attempts.render(),
+        );
+        if !self.failed.is_empty() {
+            out.push_str(&format!("failed_ids: {:?}\n", self.failed));
+        }
+        for (i, r) in self.replicas.iter().enumerate() {
+            out.push_str(&format!("-- replica {i} --\n{}", r.render()));
+        }
+        out.push_str(&format!(
+            "-- aggregate --\ncompleted={} rejected={} steps={} tokens={}\n{}",
+            self.completed(),
+            self.rejected(),
+            self.steps(),
+            self.tokens_out(),
+            self.aggregate.render()
+        ));
+        out
+    }
+}
+
+/// The deterministic replicated fleet: N inline engines on one shared
+/// virtual clock, a [`Router`] front door, and a [`FaultPlan`].
+pub struct Fleet<B: Backend> {
+    clock: Arc<VirtualClock>,
+    replicas: Vec<Replica<B>>,
+    router: Router,
+    plan: FaultPlan,
+    opts: FleetOptions,
+}
+
+impl<B: Backend> Fleet<B> {
+    /// Build `replicas` engines via `make`, every one on **the same**
+    /// fresh virtual clock (the single-writer rule): `make` must
+    /// construct each engine with `Engine::with_clock(..., clock)` using
+    /// the handle it is given.
+    pub fn build(
+        replicas: usize,
+        plan: FaultPlan,
+        opts: FleetOptions,
+        mut make: impl FnMut(SharedClock) -> Engine<B>,
+    ) -> Self {
+        assert!(replicas > 0, "need at least one replica");
+        if let Some(max) = plan.max_replica() {
+            assert!(max < replicas, "fault plan names replica {max}, fleet has {replicas}");
+        }
+        let clock = VirtualClock::shared();
+        let reps = (0..replicas)
+            .map(|_| {
+                let handle: SharedClock = clock.clone();
+                Replica::new(make(handle))
+            })
+            .collect();
+        let router = Router::new(replicas, opts.max_queue_per_replica)
+            .with_token_budget(opts.max_tokens_per_replica);
+        Self { clock, replicas: reps, router, plan, opts }
+    }
+
+    /// The fleet's shared time source.
+    pub fn clock(&self) -> SharedClock {
+        self.clock.clone()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Replay `requests` (arrival-sorted) open-loop through the router
+    /// into the replicas, executing the fault plan. One replay per fleet
+    /// (reports read absolute engine counters). `max_steps` bounds the
+    /// fleet-wide executed step count.
+    ///
+    /// Event-loop invariant: the globally earliest pending event fires
+    /// next; ties break crash < detect < arrival < retry < replica-ready
+    /// (by replica index), so the schedule — and therefore every
+    /// timestamp — is a pure function of inputs.
+    pub fn replay(
+        &mut self,
+        requests: &[Request],
+        service: &ServiceModel,
+        max_steps: u64,
+    ) -> Result<FleetReport> {
+        debug_assert!(
+            requests.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+            "fleet replay requires arrival-sorted requests"
+        );
+        let Fleet { clock, replicas, router, plan, opts } = self;
+        let n = replicas.len();
+        let mut crash_pending: Vec<Option<u64>> = (0..n).map(|i| plan.crash_at(i)).collect();
+        let mut next = 0usize;
+        let mut retries: Vec<RetryEntry> = Vec::new();
+        let mut retry_seq = 0u64;
+        let mut attempts: HashMap<RequestId, u32> = HashMap::new();
+        let mut failed: Vec<(RequestId, u32)> = Vec::new();
+        let mut crashed_list: Vec<usize> = Vec::new();
+        let mut fleet_steps = 0u64;
+        let (mut routed, mut router_rejected) = (0u64, 0u64);
+        let (mut retries_total, mut evacuated) = (0u64, 0u64);
+        let (mut unhealthy_transitions, mut recovered) = (0u64, 0u64);
+
+        // event classes, in tie-break priority order at equal times
+        const CRASH: u8 = 0;
+        const DETECT: u8 = 1;
+        const ARRIVAL: u8 = 2;
+        const RETRY: u8 = 3;
+        const READY: u8 = 4;
+        fn consider(best: &mut Option<(u64, u8, usize)>, t: u64, class: u8, sub: usize) {
+            let cand = (t, class, sub);
+            if best.map_or(true, |b| cand < b) {
+                *best = Some(cand);
+            }
+        }
+
+        loop {
+            // Work pending? Crash/detect events alone keep nothing alive:
+            // a fault scheduled after the work ends never fires.
+            let has_ready = replicas
+                .iter()
+                .any(|r| !r.crashed && (!r.engine.idle() || !r.mailbox.is_empty()));
+            if next >= requests.len() && retries.is_empty() && !has_ready {
+                break;
+            }
+
+            let mut best: Option<(u64, u8, usize)> = None;
+            for (i, r) in replicas.iter().enumerate() {
+                if r.crashed {
+                    continue;
+                }
+                if let Some(at) = crash_pending[i] {
+                    consider(&mut best, at, CRASH, i);
+                }
+                if let Some(at) = r.detection_at {
+                    consider(&mut best, at, DETECT, i);
+                }
+                let ready = if !r.engine.idle() {
+                    Some(r.busy_until_us)
+                } else {
+                    r.mailbox.front().map(|inb| r.busy_until_us.max(inb.route_us))
+                };
+                if let Some(at) = ready {
+                    consider(&mut best, at, READY, i);
+                }
+            }
+            if let Some(req) = requests.get(next) {
+                consider(&mut best, req.arrival_us, ARRIVAL, 0);
+            }
+            if let Some((idx, e)) =
+                retries.iter().enumerate().min_by_key(|(_, e)| (e.due_us, e.seq))
+            {
+                consider(&mut best, e.due_us, RETRY, idx);
+            }
+            let Some((t, class, sub)) = best else { break };
+            clock.sleep_until_us(t);
+
+            match class {
+                CRASH => {
+                    crash_pending[sub] = None;
+                    let r = &mut replicas[sub];
+                    r.crashed = true;
+                    r.detection_at = None;
+                    router.set_health(sub, ReplicaHealth::Unhealthy);
+                    crashed_list.push(sub);
+                    for e in evacuate_replica(r, t) {
+                        evacuated += 1;
+                        router.on_failed(e.req.id);
+                        fail_over(
+                            e,
+                            t,
+                            opts,
+                            &mut attempts,
+                            &mut retries,
+                            &mut retry_seq,
+                            &mut failed,
+                            &mut retries_total,
+                        );
+                    }
+                }
+                DETECT => {
+                    replicas[sub].detection_at = None;
+                    unhealthy_transitions += 1;
+                    match opts.stall_policy {
+                        StallPolicy::Drain => router.set_health(sub, ReplicaHealth::Draining),
+                        StallPolicy::Failover => {
+                            router.set_health(sub, ReplicaHealth::Unhealthy);
+                            for e in evacuate_replica(&mut replicas[sub], t) {
+                                evacuated += 1;
+                                router.on_failed(e.req.id);
+                                fail_over(
+                                    e,
+                                    t,
+                                    opts,
+                                    &mut attempts,
+                                    &mut retries,
+                                    &mut retry_seq,
+                                    &mut failed,
+                                    &mut retries_total,
+                                );
+                            }
+                        }
+                    }
+                }
+                ARRIVAL => {
+                    probe_recovery(router, replicas, plan, t, &mut recovered);
+                    let req = requests[next].clone();
+                    next += 1;
+                    match router.route(&req) {
+                        Ok(route) => {
+                            routed += 1;
+                            replicas[route.replica]
+                                .mailbox
+                                .push_back(Inbound { req, route_us: t, carried: None });
+                        }
+                        // back-pressure on a fresh arrival is a
+                        // rejection, not a loss
+                        Err(_) => router_rejected += 1,
+                    }
+                }
+                RETRY => {
+                    probe_recovery(router, replicas, plan, t, &mut recovered);
+                    let entry = retries.swap_remove(sub);
+                    match router.route(&entry.req) {
+                        Ok(route) => {
+                            routed += 1;
+                            let queued = entry.queued_us + t.saturating_sub(entry.evac_us);
+                            replicas[route.replica].mailbox.push_back(Inbound {
+                                route_us: t,
+                                carried: Some((entry.submitted_us, queued)),
+                                req: entry.req,
+                            });
+                        }
+                        Err(_) => {
+                            // no eligible replica right now: consume an
+                            // attempt and back off (floored so a zero
+                            // backoff cannot spin at one instant)
+                            let a = attempts.entry(entry.req.id).or_insert(0);
+                            *a += 1;
+                            if *a > opts.max_retries {
+                                failed.push((entry.req.id, *a));
+                            } else {
+                                retries_total += 1;
+                                retry_seq += 1;
+                                retries.push(RetryEntry {
+                                    due_us: t + opts.retry_backoff_us.max(1_000),
+                                    seq: retry_seq,
+                                    ..entry
+                                });
+                            }
+                        }
+                    }
+                }
+                READY => {
+                    let i = sub;
+                    if let Some((_, end)) = plan.stall_covering(i, t) {
+                        // frozen: no delivery, no step; wake at stall end
+                        // and schedule the watermark check if progress
+                        // will have been absent long enough before then
+                        let r = &mut replicas[i];
+                        r.busy_until_us = r.busy_until_us.max(end);
+                        if opts.stall_threshold_us > 0 && r.detection_at.is_none() {
+                            let fire = r.last_progress_us + opts.stall_threshold_us;
+                            if fire < end {
+                                r.detection_at = Some(fire.max(t));
+                            }
+                        }
+                        continue;
+                    }
+                    let r = &mut replicas[i];
+                    while let Some(inb) = r.mailbox.pop_front() {
+                        r.first_submit_us.get_or_insert(t);
+                        r.last_submit_us = t;
+                        let id = inb.req.id;
+                        match inb.carried {
+                            Some((s, q)) => {
+                                r.engine.resubmit(inb.req, s, q + t.saturating_sub(inb.route_us));
+                                router.on_started(id);
+                            }
+                            None => {
+                                // a front-door rejection finishes via the
+                                // event drain below
+                                if r.engine.submit(inb.req).is_queued() {
+                                    router.on_started(id);
+                                }
+                            }
+                        }
+                    }
+                    if r.engine.idle() {
+                        // every delivery was rejected at the front door
+                        r.busy_until_us = t;
+                        notify_finished(&mut r.engine, router);
+                        continue;
+                    }
+                    let did =
+                        r.engine.step().with_context(|| format!("fleet replica {i} step"))?;
+                    notify_finished(&mut r.engine, router);
+                    if did {
+                        fleet_steps += 1;
+                        anyhow::ensure!(
+                            fleet_steps <= max_steps,
+                            "fleet replay exceeded {max_steps} steps"
+                        );
+                        let base = service
+                            .step_us(r.engine.last_decode_slots, r.engine.last_prefill_tokens);
+                        let factor = plan.slow_factor(i);
+                        let cost = if factor == 1.0 {
+                            base
+                        } else {
+                            ((base as f64) * factor).round().max(1.0) as u64
+                        };
+                        r.busy_until_us = t + cost;
+                        r.last_progress_us = t + cost;
+                    } else if r.engine.idle() {
+                        // deadline expiry at the boundary can empty the
+                        // engine without executing a step
+                        r.busy_until_us = t;
+                    } else {
+                        bail!("fleet replica {i} wedged: queued request cannot fit the KV pool");
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+
+        failed.sort_by_key(|(id, _)| *id);
+        let mut retry_attempts = CountHistogram::new();
+        for &a in attempts.values() {
+            retry_attempts.add(a as u64);
+        }
+        let mut all_timings: Vec<RequestTiming> = Vec::new();
+        let mut reps = Vec::with_capacity(n);
+        let mut deadline_expired = 0u64;
+        for r in replicas.iter() {
+            let timings = r.engine.timings();
+            all_timings.extend_from_slice(timings);
+            deadline_expired += r.engine.deadline_expired;
+            reps.push(ReplayReport {
+                completed: timings.len(),
+                rejected: r.engine.rejected(),
+                steps: r.engine.steps,
+                tokens_out: r.engine.tokens_out,
+                preemptions: r.engine.preemptions,
+                first_submit_us: r.first_submit_us.unwrap_or(0),
+                last_submit_us: r.last_submit_us,
+                last_finish_us: timings.iter().map(|t| t.finished_us).max().unwrap_or(0),
+                percentiles: percentiles(timings),
+            });
+        }
+        Ok(FleetReport {
+            replicas: reps,
+            aggregate: percentiles(&all_timings),
+            routed,
+            router_rejected,
+            retries: retries_total,
+            evacuated,
+            failed,
+            deadline_expired,
+            crashed: crashed_list,
+            unhealthy_transitions,
+            recovered,
+            retry_attempts,
+            router_stats: router.stats(),
+        })
+    }
+}
+
+/// Pull everything off a crashed/stalled replica: the engine's queued and
+/// running requests plus the undelivered mailbox, merged and sorted by
+/// `(submitted_us, id)` so downstream re-routing is deterministic and
+/// FCFS-fair.
+fn evacuate_replica<B: Backend>(r: &mut Replica<B>, now_us: u64) -> Vec<Evacuated> {
+    let mut evac = r.engine.evacuate();
+    for inb in r.mailbox.drain(..) {
+        let transit = now_us.saturating_sub(inb.route_us);
+        evac.push(match inb.carried {
+            Some((s, q)) => Evacuated { submitted_us: s, queued_us: q + transit, req: inb.req },
+            None => Evacuated { submitted_us: inb.route_us, queued_us: transit, req: inb.req },
+        });
+    }
+    evac.sort_by_key(|e| (e.submitted_us, e.req.id));
+    evac
+}
+
+/// Consume one failover attempt for an evacuated request: schedule a
+/// retry after the backoff, or — past `max_retries` — count it Failed.
+#[allow(clippy::too_many_arguments)]
+fn fail_over(
+    e: Evacuated,
+    now_us: u64,
+    opts: &FleetOptions,
+    attempts: &mut HashMap<RequestId, u32>,
+    retries: &mut Vec<RetryEntry>,
+    retry_seq: &mut u64,
+    failed: &mut Vec<(RequestId, u32)>,
+    retries_total: &mut u64,
+) {
+    let a = attempts.entry(e.req.id).or_insert(0);
+    *a += 1;
+    if *a > opts.max_retries {
+        failed.push((e.req.id, *a));
+        return;
+    }
+    *retries_total += 1;
+    *retry_seq += 1;
+    retries.push(RetryEntry {
+        due_us: now_us + opts.retry_backoff_us,
+        seq: *retry_seq,
+        req: e.req,
+        submitted_us: e.submitted_us,
+        queued_us: e.queued_us,
+        evac_us: now_us,
+    });
+}
+
+/// Recovery probe, run at routing decisions: a non-crashed replica that
+/// is Unhealthy/Draining, out of any stall window, and fully idle takes
+/// traffic again.
+fn probe_recovery<B: Backend>(
+    router: &mut Router,
+    replicas: &mut [Replica<B>],
+    plan: &FaultPlan,
+    now_us: u64,
+    recovered: &mut u64,
+) {
+    for (i, r) in replicas.iter_mut().enumerate() {
+        if r.crashed || router.health(i) == ReplicaHealth::Healthy {
+            continue;
+        }
+        if plan.stall_covering(i, now_us).is_none() && r.engine.idle() && r.mailbox.is_empty() {
+            router.set_health(i, ReplicaHealth::Healthy);
+            r.last_progress_us = now_us;
+            *recovered += 1;
+        }
+    }
+}
+
+/// Feed the engine's Finished events back into the router ledger (the
+/// "driven by engine events" half of the lifecycle protocol).
+fn notify_finished<B: Backend>(engine: &mut Engine<B>, router: &mut Router) {
+    for ev in engine.take_events() {
+        if let Event::Finished { id, .. } = ev {
+            router.on_finished(id);
+        }
+    }
+}
+
+/// The threaded deployment shape: one engine thread per replica behind a
+/// mutexed router, on the wall clock (never combined with virtual time —
+/// DESIGN.md §4). Failover here is reactive: a dead engine thread is
+/// detected when a submit to it fails, the replica is marked Unhealthy,
+/// and the request re-routes up to `max_retries` times before the client
+/// sees a terminal [`FinishReason::Failed`] event.
+pub struct FleetServer {
+    servers: Vec<Server>,
+    router: Mutex<Router>,
+    max_retries: u32,
+}
+
+impl FleetServer {
+    /// Spawn one [`Server`] per engine. All engines must be on the wall
+    /// clock.
+    pub fn spawn<B: Backend + Send + 'static>(
+        engines: Vec<Engine<B>>,
+        opts: &FleetOptions,
+    ) -> Self {
+        assert!(!engines.is_empty(), "need at least one replica");
+        let router = Router::new(engines.len(), opts.max_queue_per_replica)
+            .with_token_budget(opts.max_tokens_per_replica);
+        Self {
+            servers: engines.into_iter().map(Server::spawn).collect(),
+            router: Mutex::new(router),
+            max_retries: opts.max_retries,
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        self.router.lock().expect("router lock").stats()
+    }
+
+    pub fn health(&self, replica: usize) -> ReplicaHealth {
+        self.router.lock().expect("router lock").health(replica)
+    }
+
+    /// Route and submit with bounded failover. `Err` means back-pressure
+    /// (no eligible replica); a replica whose engine thread died is
+    /// marked Unhealthy and the request retries elsewhere, and when
+    /// retries are exhausted the returned stream carries a single
+    /// terminal `Finished(Failed)` event instead of hanging the client.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Event>> {
+        let mut attempt = 0u32;
+        loop {
+            let route = self
+                .router
+                .lock()
+                .expect("router lock")
+                .route(&req)
+                .context("fleet saturated")?;
+            match self.servers[route.replica].submit(req.clone()) {
+                Ok(rx) => {
+                    self.router.lock().expect("router lock").on_started(req.id);
+                    return Ok(rx);
+                }
+                Err(_) => {
+                    // engine thread gone: release the ledger, gate the
+                    // replica out of routing, try the survivors
+                    let mut router = self.router.lock().expect("router lock");
+                    router.on_failed(req.id);
+                    router.set_health(route.replica, ReplicaHealth::Unhealthy);
+                    attempt += 1;
+                    if attempt > self.max_retries {
+                        let (tx, rx) = channel();
+                        let _ = tx.send(Event::Finished {
+                            id: req.id,
+                            reason: FinishReason::Failed,
+                            generated: Vec::new(),
+                        });
+                        return Ok(rx);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Client acknowledgement that `id`'s event stream ended (Finished
+    /// received or the stream died with its replica): releases the
+    /// router ledger so load counters return to zero.
+    pub fn finished(&self, id: RequestId) {
+        self.router.lock().expect("router lock").on_finished(id);
+    }
+
+    /// Finish outstanding work and join every engine thread.
+    pub fn shutdown(self) -> Result<Vec<ServerReport>> {
+        self.servers.into_iter().map(Server::shutdown).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{MockBackend, ModelGeom, SlotRows, StepOut};
+    use crate::workload::{SeqlenDist, Trace};
+
+    fn geom() -> ModelGeom {
+        ModelGeom { vocab: 64, n_layers: 2, row_elems: 4, planes: 2, max_seq: 64 }
+    }
+
+    fn svc() -> ServiceModel {
+        ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 }
+    }
+
+    fn mk_fleet(n: usize, plan: FaultPlan, opts: FleetOptions) -> Fleet<MockBackend> {
+        Fleet::build(n, plan, opts, |clock| {
+            let mut e = Engine::with_clock(
+                MockBackend::new(geom(), vec![1, 2, 4, 8]),
+                40,
+                4,
+                0.5,
+                clock,
+            );
+            e.set_prefill_chunk(4);
+            e
+        })
+    }
+
+    fn paced_requests(count: u64, gap_us: u64) -> Vec<Request> {
+        (0..count)
+            .map(|i| {
+                let mut r = Request::new(i, vec![1 + (i % 5) as i32; 8], 6);
+                r.arrival_us = i * gap_us;
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fault_plan_parse_round_trips() {
+        let spec = "stall:0@40000+30000;crash:1@80000;slow:2@1.50";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.faults.len(), 3);
+        assert_eq!(plan.render(), spec);
+        assert_eq!(plan.crash_at(1), Some(80_000));
+        assert_eq!(plan.crash_at(0), None);
+        assert_eq!(plan.stall_covering(0, 39_999), None);
+        assert_eq!(plan.stall_covering(0, 40_000), Some((40_000, 70_000)));
+        assert_eq!(plan.stall_covering(0, 69_999), Some((40_000, 70_000)));
+        assert_eq!(plan.stall_covering(0, 70_000), None, "stall end is exclusive");
+        assert_eq!(plan.slow_factor(2), 1.5);
+        assert_eq!(plan.slow_factor(0), 1.0, "no slow fault = nominal");
+        assert_eq!(plan.max_replica(), Some(2));
+        // whitespace and empty parts are tolerated
+        let ws = FaultPlan::parse(" crash:0@5 ; ").unwrap();
+        assert_eq!(ws.faults, vec![Fault::Crash { replica: 0, at_us: 5 }]);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_parse_rejects_garbage() {
+        assert!(FaultPlan::parse("nope:0@1").is_err());
+        assert!(FaultPlan::parse("stall:0@5").is_err(), "stall needs from+dur");
+        assert!(FaultPlan::parse("stall:0@5+0").is_err(), "zero-length stall");
+        assert!(FaultPlan::parse("crash:x@5").is_err());
+        assert!(FaultPlan::parse("slow:0@-1").is_err());
+        assert!(FaultPlan::parse("crash:0").is_err());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_round_trip() {
+        let a = FaultPlan::seeded(9, 4, 1_000_000);
+        assert_eq!(a, FaultPlan::seeded(9, 4, 1_000_000));
+        assert!(a.max_replica().map_or(true, |m| m < 4));
+        let reparsed = FaultPlan::parse(&a.render()).unwrap();
+        assert_eq!(reparsed, a, "seeded plan round-trips through the spec format");
+        // different seeds differ somewhere across a few draws
+        let plans: Vec<_> = (0..8).map(|s| FaultPlan::seeded(s, 4, 1_000_000)).collect();
+        assert!(plans.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn fleet_without_faults_completes_everything_deterministically() {
+        let run = || {
+            let trace = Trace::poisson(24, 400.0, SeqlenDist::Fixed(24), (8, 8), 64, 42);
+            let reqs = crate::loadgen::synthesize_requests(&trace, 64, 16, 8, 7);
+            let mut fleet = mk_fleet(2, FaultPlan::none(), FleetOptions::default());
+            let rep = fleet.replay(&reqs, &svc(), 100_000).unwrap();
+            assert_eq!(rep.completed(), 24);
+            assert_eq!(rep.routed, 24);
+            assert_eq!(rep.router_rejected, 0);
+            assert!(rep.failed.is_empty());
+            assert_eq!(rep.evacuated, 0);
+            assert!(rep.crashed.is_empty());
+            let s = rep.router_stats;
+            assert_eq!(
+                (s.spurious_starts, s.spurious_finishes, s.spurious_fails, s.spurious_routes),
+                (0, 0, 0, 0),
+                "lifecycle protocol stays exact"
+            );
+            rep.render()
+        };
+        assert_eq!(run(), run(), "fleet replay must be byte-deterministic");
+    }
+
+    #[test]
+    fn crash_fails_over_without_losing_requests() {
+        let run = || {
+            let plan = FaultPlan::parse("crash:0@2000").unwrap();
+            let mut fleet = mk_fleet(2, plan, FleetOptions::default());
+            let rep = fleet.replay(&paced_requests(16, 500), &svc(), 100_000).unwrap();
+            assert_eq!(rep.crashed, vec![0]);
+            assert!(rep.evacuated >= 1, "replica 0 had work at the crash");
+            assert!(rep.retries >= 1);
+            assert!(rep.failed.is_empty(), "one healthy survivor absorbs every retry");
+            assert_eq!(rep.completed(), 16, "zero lost requests");
+            assert_eq!(rep.replicas[0].completed + rep.replicas[1].completed, 16);
+            assert!(rep.retry_attempts.total() >= 1);
+            rep.render()
+        };
+        assert_eq!(run(), run(), "crash schedule must be byte-deterministic");
+    }
+
+    #[test]
+    fn stall_failover_detects_evacuates_and_recovers() {
+        let plan = FaultPlan::parse("stall:0@1000+8000").unwrap();
+        let opts = FleetOptions {
+            stall_threshold_us: 2_000,
+            stall_policy: StallPolicy::Failover,
+            ..FleetOptions::default()
+        };
+        let mut reqs = paced_requests(8, 500);
+        // a late arrival probes recovery after the stall window closes
+        let mut late = Request::new(8, vec![3; 8], 6);
+        late.arrival_us = 20_000;
+        reqs.push(late);
+        let mut fleet = mk_fleet(2, plan, opts);
+        let rep = fleet.replay(&reqs, &svc(), 100_000).unwrap();
+        assert_eq!(rep.unhealthy_transitions, 1, "watermark detection fired once");
+        assert!(rep.evacuated >= 1, "failover pulled inflight work off the stalled replica");
+        assert_eq!(rep.recovered, 1, "the stalled replica takes traffic again");
+        assert!(rep.crashed.is_empty());
+        assert!(rep.failed.is_empty());
+        assert_eq!(rep.completed(), 9, "zero lost requests across stall + recovery");
+    }
+
+    #[test]
+    fn stall_drain_policy_keeps_inflight_work_on_the_replica() {
+        let plan = FaultPlan::parse("stall:0@1000+8000").unwrap();
+        let opts = FleetOptions {
+            stall_threshold_us: 2_000,
+            stall_policy: StallPolicy::Drain,
+            ..FleetOptions::default()
+        };
+        let mut reqs = paced_requests(8, 500);
+        let mut late = Request::new(8, vec![3; 8], 6);
+        late.arrival_us = 20_000;
+        reqs.push(late);
+        let mut fleet = mk_fleet(2, plan, opts);
+        let rep = fleet.replay(&reqs, &svc(), 100_000).unwrap();
+        assert_eq!(rep.unhealthy_transitions, 1);
+        assert_eq!(rep.evacuated, 0, "drain never evacuates");
+        assert_eq!(rep.retries, 0);
+        assert_eq!(rep.recovered, 1, "drained replica recovers once idle");
+        assert_eq!(rep.completed(), 9, "inflight work finishes after the stall ends");
+        assert!(rep.replicas[0].completed >= 1, "the stalled replica kept its work");
+    }
+
+    #[test]
+    fn slow_step_factor_inflates_the_slow_replicas_service_time() {
+        let run = |spec: &str| {
+            let plan = FaultPlan::parse(spec).unwrap();
+            let mut fleet = mk_fleet(2, plan, FleetOptions::default());
+            let rep = fleet.replay(&paced_requests(12, 400), &svc(), 100_000).unwrap();
+            assert_eq!(rep.completed(), 12);
+            (rep.replicas[0].last_finish_us, rep.replicas[1].last_finish_us)
+        };
+        let (nom0, _) = run("");
+        let (slow0, _) = run("slow:0@3.00");
+        assert!(slow0 > nom0, "3× steps on replica 0 must finish later ({nom0} -> {slow0})");
+    }
+
+    /// Wall-clock failover test double: replica 0's backend errors on its
+    /// first step, killing the engine thread, while replica 1 is a plain
+    /// mock.
+    enum TestBackend {
+        Ok(MockBackend),
+        Doomed(MockBackend),
+    }
+
+    impl Backend for TestBackend {
+        fn geom(&self) -> ModelGeom {
+            match self {
+                TestBackend::Ok(b) | TestBackend::Doomed(b) => b.geom,
+            }
+        }
+        fn buckets(&self) -> Vec<usize> {
+            match self {
+                TestBackend::Ok(b) | TestBackend::Doomed(b) => b.buckets.clone(),
+            }
+        }
+        fn step(
+            &mut self,
+            bucket: usize,
+            slots: &[SlotRows],
+            cache_planes: &mut [Vec<f32>],
+        ) -> Result<StepOut> {
+            match self {
+                TestBackend::Ok(b) => b.step(bucket, slots, cache_planes),
+                TestBackend::Doomed(_) => bail!("injected replica fault"),
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_fleet_fails_over_to_the_surviving_replica() {
+        let engines = vec![
+            Engine::new(TestBackend::Doomed(MockBackend::tiny()), 64, 4, 1.0),
+            Engine::new(TestBackend::Ok(MockBackend::tiny()), 64, 4, 1.0),
+        ];
+        let fleet = FleetServer::spawn(engines, &FleetOptions::default());
+        assert_eq!(fleet.replicas(), 2);
+        // least-loaded routes the first request to replica 0, whose first
+        // step kills its engine thread: the stream dies with no Finished
+        let rx = fleet.submit(Request::new(1, vec![3, 5], 3)).unwrap();
+        let evs: Vec<Event> = rx.iter().collect();
+        assert!(
+            !evs.iter().any(|e| matches!(e, Event::Finished { .. })),
+            "stream died mid-flight: {evs:?}"
+        );
+        fleet.finished(1); // client releases the dead stream's ledger
+        // the dead thread is now detected at submit, the replica gated
+        // out, and the retry lands on the survivor
+        let rx = fleet.submit(Request::new(1, vec![3, 5], 3)).unwrap();
+        let evs: Vec<Event> = rx.iter().collect();
+        assert!(matches!(
+            evs.last().unwrap(),
+            Event::Finished { reason: FinishReason::Length, .. }
+        ));
+        fleet.finished(1);
+        assert_eq!(fleet.health(0), ReplicaHealth::Unhealthy);
+        assert_eq!(fleet.health(1), ReplicaHealth::Healthy);
+        let s = fleet.stats();
+        assert_eq!(s.failed, 1, "one failover recorded");
+        assert_eq!(s.spurious_fails, 0);
+        let reports = fleet.shutdown().unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[1].tokens_out, 3, "the survivor served the retry");
+    }
+
+    #[test]
+    fn threaded_fleet_exhausted_retries_surface_as_failed_event() {
+        // every replica is doomed: after max_retries failovers the client
+        // receives a terminal Failed event instead of hanging
+        let mk = || {
+            let e = Engine::new(TestBackend::Doomed(MockBackend::tiny()), 64, 4, 1.0);
+            let s = Server::spawn(e);
+            // kill the thread deterministically before the fleet routes
+            // to it: a throwaway request whose stream must die
+            let rx = s.submit(Request::new(999, vec![1], 1)).unwrap();
+            let _ = rx.iter().count();
+            s
+        };
+        let fleet = FleetServer {
+            servers: vec![mk(), mk()],
+            router: Mutex::new(Router::new(2, 1024)),
+            max_retries: 2,
+        };
+        let rx = fleet.submit(Request::new(7, vec![1, 2], 2)).unwrap();
+        let evs: Vec<Event> = rx.iter().collect();
+        assert!(matches!(
+            evs.as_slice(),
+            [Event::Finished { id: 7, reason: FinishReason::Failed, generated }] if generated.is_empty()
+        ));
+        assert_eq!(fleet.stats().failed, 3, "initial attempt + 2 retries all failed over");
+        assert_eq!(fleet.health(0), ReplicaHealth::Unhealthy);
+        assert_eq!(fleet.health(1), ReplicaHealth::Unhealthy);
+    }
+}

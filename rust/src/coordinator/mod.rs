@@ -12,6 +12,8 @@
 //! * [`kv_cache`] — paged, host-authoritative KV-cache pool;
 //! * [`scheduler`] — preemption policy under cache pressure;
 //! * [`engine`] — the decode-step loop (generic over [`engine::Backend`]);
+//! * [`fleet`] — replicated serving behind the router: deterministic
+//!   fault injection, health-gated routing, failover, deadlines;
 //! * [`functional_backend`] — the artifact-free backend decoding real
 //!   numerics through the full-block pipeline (`clustersim::block`);
 //! * [`pjrt_backend`] — the real backend executing AOT artifacts on PJRT;
@@ -24,6 +26,7 @@ pub mod admission;
 pub mod batcher;
 pub mod config;
 pub mod engine;
+pub mod fleet;
 pub mod functional_backend;
 pub mod kv_cache;
 pub mod pjrt_backend;

@@ -19,6 +19,15 @@ pub enum FinishReason {
     /// configured latency SLO (`coordinator::admission`). `generated` is
     /// always empty and no `RequestTiming` is recorded.
     Rejected,
+    /// The request's `deadline_us` passed — at submit (the projected TTFT
+    /// could never land in time; no `RequestTiming`) or at a later step
+    /// boundary (queued or mid-generation; a `RequestTiming` is recorded
+    /// with whatever was generated).
+    DeadlineExceeded,
+    /// Failover exhausted: the request was evacuated from a crashed or
+    /// stalled replica more than `max_retries` times
+    /// (`coordinator::fleet`). Terminal — the client will not see tokens.
+    Failed,
 }
 
 /// Sampling configuration. The demo engine is greedy by default; a
@@ -46,6 +55,10 @@ pub struct Request {
     /// Arrival time offset (µs from engine start) for trace replay; 0 for
     /// interactive submissions.
     pub arrival_us: u64,
+    /// Absolute clock deadline in µs (same origin as `arrival_us`); 0 =
+    /// none. Enforced at submit (projection) and at step boundaries —
+    /// see [`FinishReason::DeadlineExceeded`].
+    pub deadline_us: u64,
 }
 
 impl Request {
@@ -56,7 +69,14 @@ impl Request {
             prompt,
             sampling: SamplingParams { max_new_tokens, ..Default::default() },
             arrival_us: 0,
+            deadline_us: 0,
         }
+    }
+
+    /// Builder-style absolute deadline (clock µs; 0 clears it).
+    pub fn with_deadline_us(mut self, deadline_us: u64) -> Self {
+        self.deadline_us = deadline_us;
+        self
     }
 
     /// Total KV slots this request may need.

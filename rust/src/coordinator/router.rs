@@ -8,7 +8,7 @@
 //! replica-count generic and is exercised with many simulated replicas in
 //! tests (`integration_router`).
 //!
-//! Two historical bugs shaped this module (regression-tested):
+//! Three historical bugs shaped this module (regression-tested):
 //!
 //! * `route` used to pick the least-total replica first and then reject
 //!   if *that* replica's queue was full — even when another replica had
@@ -18,6 +18,16 @@
 //!   release builds. Transitions are now ledger-driven: a spurious
 //!   start/finish is an explicit no-op, counted and surfaced in
 //!   [`RouterStats`], never a corruption.
+//! * `route` used to blind-`insert` into the ledger, so re-routing a
+//!   still-open id (a retry raced with its failure notification) leaked
+//!   the old entry's queued/token counters forever. A re-route now
+//!   releases the stale ledger first and counts in `spurious_routes`.
+//!
+//! The fleet layer (`coordinator::fleet`) adds two lifecycle inputs: a
+//! per-replica [`ReplicaHealth`] gate (Unhealthy/Draining replicas take
+//! no new work) and [`Router::on_failed`], which returns an evacuated
+//! request's counters from whichever phase it was in so it can be
+//! re-routed with exact accounting.
 
 use std::collections::HashMap;
 
@@ -48,15 +58,35 @@ pub struct Route {
     pub replica: usize,
 }
 
-/// Lifecycle counters. `spurious_starts` / `spurious_finishes` count
-/// out-of-protocol transition calls (double-start, finish-without-route);
-/// each was a no-op, but a non-zero value means a caller is broken.
+/// Health gate the fleet layer sets per replica. Only `Healthy` replicas
+/// are eligible for new work; the distinction between the other two is
+/// what happens to work already on the replica (evacuated vs drained) —
+/// the router treats both as "route nothing here".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplicaHealth {
+    #[default]
+    Healthy,
+    /// Stalled or crashed: no new work; inflight is evacuated.
+    Unhealthy,
+    /// Finishing inflight work, admitting nothing new.
+    Draining,
+}
+
+/// Lifecycle counters. `spurious_starts` / `spurious_finishes` /
+/// `spurious_fails` count out-of-protocol transition calls (double-start,
+/// finish-without-route); each was a no-op, but a non-zero value means a
+/// caller is broken. `spurious_routes` counts re-routes of a still-open
+/// id — the stale ledger was released first, so counters stay exact.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct RouterStats {
     pub routed: u64,
     pub rejected: u64,
+    /// Requests returned via [`Router::on_failed`] (failover events).
+    pub failed: u64,
     pub spurious_starts: u64,
     pub spurious_finishes: u64,
+    pub spurious_fails: u64,
+    pub spurious_routes: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,6 +107,7 @@ struct Ledger {
 #[derive(Debug)]
 pub struct Router {
     loads: Vec<ReplicaLoad>,
+    health: Vec<ReplicaHealth>,
     max_queue_per_replica: usize,
     /// Worst-case token budget per replica (0 = unbounded). A replica
     /// with nothing in flight is always eligible — one oversized request
@@ -91,6 +122,7 @@ impl Router {
         assert!(replicas > 0);
         Self {
             loads: vec![ReplicaLoad::default(); replicas],
+            health: vec![ReplicaHealth::Healthy; replicas],
             max_queue_per_replica,
             max_tokens_per_replica: 0,
             inflight: HashMap::new(),
@@ -117,7 +149,21 @@ impl Router {
         self.stats
     }
 
+    pub fn health(&self, replica: usize) -> ReplicaHealth {
+        self.health[replica]
+    }
+
+    /// Set the fleet-layer health gate for `replica`. Affects routing of
+    /// *future* requests only; inflight ledgers are untouched (the fleet
+    /// evacuates them through [`Self::on_failed`] if it wants them back).
+    pub fn set_health(&mut self, replica: usize, health: ReplicaHealth) {
+        self.health[replica] = health;
+    }
+
     fn eligible(&self, replica: usize, tokens: usize) -> bool {
+        if self.health[replica] != ReplicaHealth::Healthy {
+            return false;
+        }
         let l = &self.loads[replica];
         if l.queued >= self.max_queue_per_replica {
             return false;
@@ -148,12 +194,27 @@ impl Router {
                 self.max_tokens_per_replica
             );
         };
+        // Re-routing a still-open id must release the stale ledger first,
+        // or its queued/token counters leak forever (regression-tested).
+        if let Some(stale) = self.inflight.remove(&req.id) {
+            self.release_counters(stale);
+            self.stats.spurious_routes += 1;
+        }
         self.inflight
             .insert(req.id, Ledger { replica: idx, phase: ReqPhase::Queued, tokens });
         self.loads[idx].queued += 1;
         self.loads[idx].tokens += tokens;
         self.stats.routed += 1;
         Ok(Route { replica: idx })
+    }
+
+    fn release_counters(&mut self, entry: Ledger) {
+        let l = &mut self.loads[entry.replica];
+        match entry.phase {
+            ReqPhase::Queued => l.queued -= 1,
+            ReqPhase::Running => l.running -= 1,
+        }
+        l.tokens -= entry.tokens;
     }
 
     /// Replica picked up the request (queued → running). A start for an
@@ -176,15 +237,22 @@ impl Router {
     /// a counted no-op.
     pub fn on_finished(&mut self, id: RequestId) {
         match self.inflight.remove(&id) {
-            Some(entry) => {
-                let l = &mut self.loads[entry.replica];
-                match entry.phase {
-                    ReqPhase::Queued => l.queued -= 1,
-                    ReqPhase::Running => l.running -= 1,
-                }
-                l.tokens -= entry.tokens;
-            }
+            Some(entry) => self.release_counters(entry),
             None => self.stats.spurious_finishes += 1,
+        }
+    }
+
+    /// The request's replica crashed, stalled, or was otherwise unable to
+    /// complete it: the ledger entry is released from whichever phase it
+    /// was in (the fleet layer then decides retry vs `Failed`). A fail
+    /// for an unknown request is a counted no-op.
+    pub fn on_failed(&mut self, id: RequestId) {
+        match self.inflight.remove(&id) {
+            Some(entry) => {
+                self.release_counters(entry);
+                self.stats.failed += 1;
+            }
+            None => self.stats.spurious_fails += 1,
         }
     }
 }
@@ -308,6 +376,52 @@ mod tests {
         r.on_finished(2);
         let huge = Request::new(9, vec![1; 20], 20);
         assert_eq!(r.route(&huge).unwrap().replica, 1, "empty replica never starves");
+    }
+
+    #[test]
+    fn unhealthy_and_draining_replicas_take_no_new_work() {
+        let mut r = Router::new(2, 10);
+        r.set_health(0, ReplicaHealth::Unhealthy);
+        assert_eq!(r.route(&req(1)).unwrap().replica, 1);
+        assert_eq!(r.route(&req(2)).unwrap().replica, 1, "never the unhealthy one");
+        r.set_health(1, ReplicaHealth::Draining);
+        assert!(r.route(&req(3)).is_err(), "no healthy replica left");
+        r.set_health(0, ReplicaHealth::Healthy);
+        assert_eq!(r.route(&req(4)).unwrap().replica, 0, "recovery restores eligibility");
+        assert_eq!(r.health(1), ReplicaHealth::Draining);
+    }
+
+    #[test]
+    fn on_failed_releases_counters_from_either_phase() {
+        let mut r = Router::new(1, 8);
+        r.route(&req(1)).unwrap(); // fails from Queued
+        r.route(&req(2)).unwrap();
+        r.on_started(2); // fails from Running
+        r.on_failed(1);
+        r.on_failed(2);
+        r.on_failed(99); // never routed
+        let l = r.load(0);
+        assert_eq!((l.queued, l.running, l.tokens), (0, 0, 0));
+        let s = r.stats();
+        assert_eq!((s.failed, s.spurious_fails), (2, 1));
+    }
+
+    #[test]
+    fn rerouting_an_open_id_releases_the_stale_ledger() {
+        // Regression: `route` blind-inserted into the ledger, so routing
+        // an id that was still inflight leaked the old entry's queued and
+        // token counters permanently.
+        let mut r = Router::new(1, 8);
+        r.route(&req(1)).unwrap();
+        r.on_started(1);
+        r.route(&req(1)).unwrap(); // re-route without on_failed/on_finished
+        let l = r.load(0);
+        assert_eq!((l.queued, l.running), (1, 0), "stale running slot released");
+        assert_eq!(l.tokens, req(1).max_total_len(), "tokens counted once");
+        r.on_finished(1);
+        let l = r.load(0);
+        assert_eq!((l.queued, l.running, l.tokens), (0, 0, 0));
+        assert_eq!(r.stats().spurious_routes, 1);
     }
 
     #[test]

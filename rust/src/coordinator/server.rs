@@ -70,8 +70,12 @@ pub struct ServerReport {
     /// Event sends that failed because the client dropped its receiver.
     pub send_failures: u64,
     /// Requests refused at the front door (too long for the context
-    /// window, or projected to breach the TTFT SLO).
+    /// window, projected to breach the TTFT SLO, or already past their
+    /// deadline).
     pub rejected: u64,
+    /// Requests whose `deadline_us` passed at a step boundary after
+    /// admission (queued or mid-generation).
+    pub deadline_expired: u64,
     /// Subscriber entries still registered when the engine thread exited
     /// (0 unless the server loop leaked — asserted by tests).
     pub dangling_subscribers: usize,
@@ -135,6 +139,7 @@ impl Server {
                 preemptions: engine.preemptions,
                 send_failures,
                 rejected: engine.rejected(),
+                deadline_expired: engine.deadline_expired,
                 dangling_subscribers: subscribers.len(),
                 timings: engine.timings().to_vec(),
             }

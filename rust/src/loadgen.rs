@@ -243,9 +243,11 @@ pub fn replay<B: Backend>(
             clock.advance_us(
                 service.step_us(engine.last_decode_slots, engine.last_prefill_tokens),
             );
-        } else if engine.batcher.running().is_empty() {
+        } else if engine.batcher.running().is_empty() && !engine.idle() {
             // Admission blocked with the whole pool free: the queue head's
             // worst-case footprint exceeds the pool and can never run.
+            // (An *idle* no-op step is fine — deadline expiry at the step
+            // boundary can empty the engine without executing anything.)
             anyhow::bail!("replay wedged: queued request cannot fit the KV pool");
         }
     }
@@ -465,6 +467,63 @@ mod tests {
         let rep = replay(&mut e, &reqs, &service, 100_000).unwrap();
         assert_eq!(rep.completed, 8);
         assert!(rep.percentiles.e2e.count == 8);
+    }
+
+    #[test]
+    fn replay_survives_deadline_expiry_emptying_the_engine() {
+        // A running request whose deadline passes at a step boundary is
+        // finished inside step(), which then returns false with nothing
+        // running — that is an idle no-op, not the cannot-fit-pool wedge
+        // (the wedge check used to bail here).
+        let mut e = virtual_engine();
+        let r = Request::new(0, vec![1, 2], 20).with_deadline_us(1_500);
+        let service =
+            ServiceModel { step_base_us: 1_000, step_per_seq_us: 0, step_prefill_token_us: 0 };
+        let rep = replay(&mut e, &[r], &service, 1_000).unwrap();
+        assert_eq!(e.deadline_expired, 1);
+        assert_eq!(rep.completed, 1, "expiry records a timing with partial output");
+        assert!(rep.rejected == 0);
+    }
+
+    #[test]
+    fn paced_server_delivers_rejection_while_idle() {
+        // Threaded regression for the wall-clock submit path: a request
+        // refused at the engine's front door (prompt 30 + gen 60 > max_seq
+        // 64) must deliver its terminal event to the paced client even
+        // though the engine never steps for it; the admittable request
+        // paced in behind it completes normally.
+        use crate::coordinator::request::FinishReason;
+        let clock: SharedClock = WallClock::shared();
+        let engine = Engine::with_clock(mock(), 64, 4, 0.5, clock.clone());
+        let server = Server::spawn(engine);
+        let too_long = Request::new(0, vec![1; 30], 60);
+        let mut ok = Request::new(1, vec![1, 2], 2);
+        ok.arrival_us = 500;
+        let paced = pace_submit(&server, &[too_long, ok], clock.as_ref()).unwrap();
+        assert_eq!(paced.receivers.len(), 2);
+        for ((id, rx), submit_us) in paced.receivers.iter().zip(&paced.submit_us) {
+            let evs: Vec<Event> = rx.iter().collect();
+            match id {
+                0 => assert!(
+                    matches!(
+                        evs.as_slice(),
+                        [Event::Finished { id: 0, reason: FinishReason::Rejected, .. }]
+                    ),
+                    "rejected stream must carry exactly the terminal event: {evs:?}"
+                ),
+                _ => {
+                    assert!(matches!(
+                        evs.last().unwrap(),
+                        Event::Finished { reason: FinishReason::Length, .. }
+                    ));
+                    assert!(*submit_us >= 500, "paced at least to arrival_us");
+                }
+            }
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.timings.len(), 1);
+        assert_eq!(report.dangling_subscribers, 0);
     }
 
     #[test]

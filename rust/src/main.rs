@@ -18,9 +18,10 @@ use clusterfusion::clustersim::frameworks::FrameworkProfile;
 use clusterfusion::clustersim::{Hardware, Noc};
 use clusterfusion::coordinator::admission::AdmissionConfig;
 use clusterfusion::coordinator::config::{BackendKind, ServeConfig};
-use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend};
+use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend, ModelGeom};
+use clusterfusion::coordinator::fleet::{FaultPlan, Fleet, FleetServer};
 use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
-use clusterfusion::coordinator::request::Event;
+use clusterfusion::coordinator::request::{Event, FinishReason, Request};
 use clusterfusion::coordinator::server::Server;
 use clusterfusion::coordinator::FunctionalBackend;
 use clusterfusion::loadgen;
@@ -64,6 +65,10 @@ fn usage() -> ! {
          \x20                   [--prefill-chunk N]  (0 = one-shot prefill)\n\
          \x20                   [--slo-ttft-ms X]  (reject when projected TTFT > X; 0 = off)\n\
          \x20                   [--slo-tpot-us N]  (cap decode width to meet TPOT; 0 = off)\n\
+         \x20                   [--replicas N]  (fleet of N engines behind the router)\n\
+         \x20                   [--fault-plan SPEC]  (e.g. stall:0@40000+30000;crash:1@80000 —\n\
+         \x20                    selects the deterministic virtual-clock fleet replay;\n\
+         \x20                    fault_* keys via --set tune detection/retries)\n\
          \x20                   [--config FILE] [--set k=v]  (default: functional)\n\
          \x20 simulate          --model NAME [--seq N] [--batch N] [--cluster N]\n\
          \x20 inspect-artifacts [--artifacts DIR]\n\
@@ -159,6 +164,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if flags.contains_key("mock") {
         cfg.backend = BackendKind::Mock;
     }
+    if let Some(r) = flags.get("replicas") {
+        cfg.replicas = r.parse().context("--replicas expects an integer >= 1")?;
+    }
+    if let Some(p) = flags.get("fault-plan") {
+        cfg.fault_plan = p.clone();
+    }
     if let Some(sets) = flags.get("set") {
         for kv in sets.split(',') {
             let (k, v) = kv.split_once('=').context("--set expects k=v[,k=v...]")?;
@@ -173,16 +184,29 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // degrades to the mock (it hides behind --mock / --backend mock).
     match cfg.backend {
         BackendKind::Functional => {
-            let backend = FunctionalBackend::from_model_name_on(
-                &cfg.model,
-                cfg.seed,
-                cfg.cluster_size,
-                cfg.threads,
-            )?;
-            // describe() carries the active thread count (--threads N /
-            // threads=N, 0 = auto; outputs byte-identical at every size)
-            eprintln!("backend: {}", backend.describe());
-            serve_backend(backend, &cfg, n_requests, rps)
+            // Virtual-clock fleet replay pins the functional pool serial:
+            // one thread, one writer of time (DESIGN.md §4). Outputs are
+            // byte-identical at every pool size, so this costs nothing.
+            let threads = if cfg.fault_plan.is_empty() { cfg.threads } else { 1 };
+            let mk = || {
+                FunctionalBackend::from_model_name_on(
+                    &cfg.model,
+                    cfg.seed,
+                    cfg.cluster_size,
+                    threads,
+                )
+            };
+            if !cfg.fault_plan.is_empty() {
+                serve_fleet_replay(mk, &cfg, n_requests, rps)
+            } else if cfg.replicas > 1 {
+                serve_fleet_threaded(mk, &cfg, n_requests, rps)
+            } else {
+                let backend = mk()?;
+                // describe() carries the active thread count (--threads N /
+                // threads=N, 0 = auto; outputs byte-identical at every size)
+                eprintln!("backend: {}", backend.describe());
+                serve_backend(backend, &cfg, n_requests, rps)
+            }
         }
         BackendKind::Pjrt => {
             // The config default (micro-llama) is a functional-path model
@@ -199,15 +223,202 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 cfg.model = "tiny-llama-100m".into();
             }
             eprintln!("loading {} from {} ...", cfg.model, cfg.artifacts);
-            let backend = PjrtBackend::load(&cfg.artifacts, &cfg.model, cfg.seed)?;
-            eprintln!("backend: PJRT, platform {}", backend.platform());
-            serve_backend(backend, &cfg, n_requests, rps)
+            let mk = || PjrtBackend::load(&cfg.artifacts, &cfg.model, cfg.seed);
+            if !cfg.fault_plan.is_empty() {
+                serve_fleet_replay(mk, &cfg, n_requests, rps)
+            } else if cfg.replicas > 1 {
+                serve_fleet_threaded(mk, &cfg, n_requests, rps)
+            } else {
+                let backend = mk()?;
+                eprintln!("backend: PJRT, platform {}", backend.platform());
+                serve_backend(backend, &cfg, n_requests, rps)
+            }
         }
         BackendKind::Mock => {
             eprintln!("backend: MOCK (deterministic echo — demo only, not real decoding)");
-            serve_backend(MockBackend::tiny(), &cfg, n_requests, rps)
+            let mk = || Ok(MockBackend::tiny());
+            if !cfg.fault_plan.is_empty() {
+                serve_fleet_replay(mk, &cfg, n_requests, rps)
+            } else if cfg.replicas > 1 {
+                serve_fleet_threaded(mk, &cfg, n_requests, rps)
+            } else {
+                serve_backend(MockBackend::tiny(), &cfg, n_requests, rps)
+            }
         }
     }
+}
+
+/// The step-cost model serving prices projections (and virtual-clock
+/// fleet replay bills) against: the whole-block cost model when the
+/// model is known to it, else a flat 1 ms TPOT.
+fn service_model_for(cfg: &ServeConfig, max_seq: usize) -> loadgen::ServiceModel {
+    match ModelConfig::by_name(&cfg.model) {
+        Some(m) => {
+            let hw = Hardware::h100_sxm5();
+            let noc = Noc::h100(&hw);
+            loadgen::ServiceModel::from_block(
+                &m,
+                max_seq,
+                FusionScope::FullBlockFused,
+                cfg.cluster_size,
+                &hw,
+                &noc,
+            )
+        }
+        None => loadgen::ServiceModel::from_tpot_us(1_000),
+    }
+}
+
+fn admission_for(cfg: &ServeConfig, service: loadgen::ServiceModel) -> AdmissionConfig {
+    AdmissionConfig {
+        max_batch_total_tokens: cfg.max_batch_total_tokens,
+        waiting_served_ratio: cfg.waiting_served_ratio,
+        max_waiting_steps: cfg.max_waiting_steps,
+        slo_ttft_us: (cfg.slo_ttft_ms * 1_000.0).round() as u64,
+        slo_tpot_us: cfg.slo_tpot_us,
+        service,
+    }
+}
+
+/// The synthetic open-loop trace every serve mode replays (fixed seeds:
+/// fleet replay renders must be reproducible run to run).
+fn serve_trace(geom: &ModelGeom, n: usize, rps: f64) -> Vec<Request> {
+    let trace = Trace::poisson(n, rps, SeqlenDist::ShareGpt, (8, 24), geom.max_seq / 4, 42);
+    // Clamp generation budgets so prompt + max_new always fits max_seq:
+    // the front door rejects requests that could never fit the context
+    // window, and the synthetic trace must not manufacture those.
+    let max_gen = 24.min(geom.max_seq.saturating_sub(geom.max_seq / 4)).max(1);
+    eprintln!(
+        "replaying {} requests open-loop: offered {:.2} rps over {:.2}s",
+        trace.requests.len(),
+        trace.achieved_rps(),
+        trace.span_us() as f64 / 1e6
+    );
+    loadgen::synthesize_requests(&trace, geom.vocab, 64, max_gen, 7)
+}
+
+/// Deterministic multi-replica replay on one shared virtual clock,
+/// executing the configured fault plan (`coordinator::fleet::Fleet`).
+fn serve_fleet_replay<B: Backend>(
+    mut make_backend: impl FnMut() -> Result<B>,
+    cfg: &ServeConfig,
+    n_requests: usize,
+    rps: f64,
+) -> Result<()> {
+    let plan = FaultPlan::parse(&cfg.fault_plan)?;
+    let opts = cfg.fleet_options()?;
+    let mut backends = Vec::with_capacity(cfg.replicas);
+    for _ in 0..cfg.replicas {
+        backends.push(make_backend()?);
+    }
+    let geom = backends[0].geom();
+    let service = service_model_for(cfg, geom.max_seq);
+    let admission = admission_for(cfg, service);
+    let mut backends = backends.into_iter();
+    let mut fleet = Fleet::build(cfg.replicas, plan.clone(), opts, |clock| {
+        let mut e = Engine::with_clock(
+            backends.next().expect("one backend per replica"),
+            cfg.pool_pages,
+            cfg.page_tokens,
+            cfg.admit_fraction,
+            clock,
+        );
+        e.set_prefill_chunk(cfg.prefill_chunk);
+        e.set_admission(admission);
+        e
+    });
+    eprintln!(
+        "fleet replay: {} replicas, fault plan '{}' (virtual clock, deterministic)",
+        cfg.replicas,
+        plan.render()
+    );
+    let requests = serve_trace(&geom, n_requests, rps);
+    let report = fleet.replay(&requests, &service, 10_000_000)?;
+    print!("{}", report.render());
+    Ok(())
+}
+
+/// Threaded fleet on the wall clock: one engine thread per replica behind
+/// the router, with reactive failover (`coordinator::fleet::FleetServer`).
+fn serve_fleet_threaded<B: Backend + Send + 'static>(
+    mut make_backend: impl FnMut() -> Result<B>,
+    cfg: &ServeConfig,
+    n_requests: usize,
+    rps: f64,
+) -> Result<()> {
+    let opts = cfg.fleet_options()?;
+    let mut engines = Vec::with_capacity(cfg.replicas);
+    let mut geom = None;
+    for _ in 0..cfg.replicas {
+        let backend = make_backend()?;
+        let g = *geom.get_or_insert(backend.geom());
+        let mut e = Engine::new(backend, cfg.pool_pages, cfg.page_tokens, cfg.admit_fraction);
+        e.set_prefill_chunk(cfg.prefill_chunk);
+        e.set_admission(admission_for(cfg, service_model_for(cfg, g.max_seq)));
+        engines.push(e);
+    }
+    let geom = geom.expect("replicas >= 1");
+    let fleet = FleetServer::spawn(engines, &opts);
+    eprintln!("fleet: {} replicas behind the router (wall clock)", fleet.replicas());
+    let requests = serve_trace(&geom, n_requests, rps);
+    let clock = WallClock::new();
+    let mut streams = Vec::with_capacity(requests.len());
+    let mut saturated = 0u64;
+    for r in &requests {
+        clock.sleep_until_us(r.arrival_us);
+        match fleet.submit(r.clone()) {
+            Ok(rx) => streams.push((r.id, rx)),
+            Err(_) => saturated += 1, // router back-pressure: no eligible replica
+        }
+    }
+    let (mut tokens, mut failed) = (0u64, 0u64);
+    for (id, rx) in streams {
+        for ev in rx.iter() {
+            match ev {
+                Event::Token { .. } | Event::FirstToken { .. } => tokens += 1,
+                Event::Finished { reason: FinishReason::Failed, .. } => failed += 1,
+                Event::Finished { .. } => {}
+            }
+        }
+        fleet.finished(id);
+    }
+    let wall = clock.now_us() as f64 / 1e6;
+    let stats = fleet.stats();
+    let reports = fleet.shutdown()?;
+    let completed: usize = reports.iter().map(|r| r.timings.len()).sum();
+    let steps: u64 = reports.iter().map(|r| r.steps).sum();
+    println!(
+        "fleet served {completed} requests ({saturated} saturated, {failed} failed, \
+         {} rejected at the front door), {tokens} tokens in {wall:.2}s ({:.2} tok/s), \
+         {steps} engine steps",
+        reports.iter().map(|r| r.rejected).sum::<u64>(),
+        tokens as f64 / wall
+    );
+    println!(
+        "router: routed={} rejected={} failed={} (spurious {}/{}/{}/{})",
+        stats.routed,
+        stats.rejected,
+        stats.failed,
+        stats.spurious_starts,
+        stats.spurious_finishes,
+        stats.spurious_fails,
+        stats.spurious_routes
+    );
+    for (i, r) in reports.iter().enumerate() {
+        println!(
+            "-- replica {i}: {} completed, {} steps, {} tokens, {} preemptions, \
+             {} deadline-expired",
+            r.timings.len(),
+            r.steps,
+            r.tokens_out,
+            r.preemptions,
+            r.deadline_expired
+        );
+    }
+    let all: Vec<_> = reports.iter().flat_map(|r| r.timings.iter().cloned()).collect();
+    println!("latency percentiles (queue / ttft / tpot / e2e):");
+    print!("{}", loadgen::percentiles(&all).render());
+    Ok(())
 }
 
 fn serve_backend<B: Backend + Send + 'static>(
@@ -222,29 +433,8 @@ fn serve_backend<B: Backend + Send + 'static>(
     // Front door: the SLO projections price steps with the same
     // whole-block cost model replay bills (ServiceModel::from_block) when
     // the model is known to the cost model, else a flat 1 ms TPOT.
-    let service = match ModelConfig::by_name(&cfg.model) {
-        Some(m) => {
-            let hw = Hardware::h100_sxm5();
-            let noc = Noc::h100(&hw);
-            loadgen::ServiceModel::from_block(
-                &m,
-                geom.max_seq,
-                FusionScope::FullBlockFused,
-                cfg.cluster_size,
-                &hw,
-                &noc,
-            )
-        }
-        None => loadgen::ServiceModel::from_tpot_us(1_000),
-    };
-    engine.set_admission(AdmissionConfig {
-        max_batch_total_tokens: cfg.max_batch_total_tokens,
-        waiting_served_ratio: cfg.waiting_served_ratio,
-        max_waiting_steps: cfg.max_waiting_steps,
-        slo_ttft_us: (cfg.slo_ttft_ms * 1_000.0).round() as u64,
-        slo_tpot_us: cfg.slo_tpot_us,
-        service,
-    });
+    let service = service_model_for(cfg, geom.max_seq);
+    engine.set_admission(admission_for(cfg, service));
     let server = Server::spawn(engine);
 
     // Open-loop paced replay: submissions honour arrival_us on the wall

@@ -1,6 +1,7 @@
 //! Serving metrics: latency recorders, percentile summaries, and the
 //! paper-style table printer used by every figure bench.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 
@@ -151,6 +152,51 @@ impl PercentileReport {
     }
 }
 
+/// Small-integer count histogram (retry counts, preemption depths):
+/// how many observations took each value. Ordered storage so the render
+/// is deterministic.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CountHistogram {
+    counts: BTreeMap<u64, u64>,
+}
+
+impl CountHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, value: u64) {
+        *self.counts.entry(value).or_insert(0) += 1;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Number of observations recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// Observations of exactly `value`.
+    pub fn count(&self, value: u64) -> u64 {
+        self.counts.get(&value).copied().unwrap_or(0)
+    }
+
+    /// `"<value>x<count>"` pairs in ascending value order, e.g. `"1x12 2x3"`
+    /// (12 observations of 1, 3 of 2); `"-"` when empty. Byte-stable.
+    pub fn render(&self) -> String {
+        if self.counts.is_empty() {
+            return "-".to_string();
+        }
+        self.counts
+            .iter()
+            .map(|(v, c)| format!("{v}x{c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
 /// Fixed-width table printer for the paper-figure benches: prints a header
 /// and rows like the paper's tables so runs can be eyeballed against it.
 pub struct Table {
@@ -288,6 +334,25 @@ mod tests {
         }
         // 30 ms p99 TTFT formatted in ms with 3 decimals
         assert!(ra.contains("30.000"), "{ra}");
+    }
+
+    #[test]
+    fn count_histogram_renders_sorted_and_stable() {
+        let mut h = CountHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.render(), "-");
+        for v in [2, 1, 1, 3, 1] {
+            h.add(v);
+        }
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.count(1), 3);
+        assert_eq!(h.count(7), 0);
+        assert_eq!(h.render(), "1x3 2x1 3x1");
+        let mut h2 = CountHistogram::new();
+        for v in [1, 1, 1, 2, 3] {
+            h2.add(v);
+        }
+        assert_eq!(h, h2, "insertion order must not matter");
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Fleet integration tests: replicated serving behind the router with
+//! deterministic fault injection, failover, and deadlines
+//! (`coordinator::fleet`).
+//!
+//! Scenario math matches `integration_router` / `integration_load`:
+//! requests are 16 prompt + 8 generated tokens (24-token worst case),
+//! prefill chunk 4, service model 200 + 50·decode + 50·prefill µs per
+//! step, pool 40 pages × 4 tokens per replica. Every pinned number is a
+//! pure function of (rate, TRACE_SEED, SYNTH_SEED, FaultPlan, knobs) on
+//! the shared virtual clock — the suite's core assertion is that fleet
+//! replays are byte-identical across runs, faults included.
+
+use std::collections::BTreeMap;
+
+use clusterfusion::coordinator::engine::{Engine, MockBackend, ModelGeom};
+use clusterfusion::coordinator::fleet::{FaultPlan, Fleet, FleetOptions, FleetReport};
+use clusterfusion::coordinator::functional_backend::FunctionalBackend;
+use clusterfusion::coordinator::request::Request;
+use clusterfusion::coordinator::router::{ReplicaHealth, Router};
+use clusterfusion::loadgen::{self, ServiceModel};
+use clusterfusion::util::clock::{SharedClock, VirtualClock};
+use clusterfusion::util::rng::Rng;
+use clusterfusion::workload::{SeqlenDist, Trace};
+
+const N_REQUESTS: usize = 160;
+const TRACE_SEED: u64 = 42;
+const SYNTH_SEED: u64 = 7;
+/// The pinned tier-1 rate: saturating but completable on two replicas.
+const CRASH_RPS: f64 = 450.0;
+
+fn load_mock() -> MockBackend {
+    MockBackend::new(
+        ModelGeom { vocab: 64, n_layers: 2, row_elems: 4, planes: 2, max_seq: 64 },
+        vec![1, 2, 4, 8],
+    )
+}
+
+fn svc() -> ServiceModel {
+    ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 }
+}
+
+fn mk_mock_engine(clock: SharedClock) -> Engine<MockBackend> {
+    let mut e = Engine::with_clock(load_mock(), 40, 4, 0.5, clock);
+    e.set_prefill_chunk(4);
+    e
+}
+
+fn load_requests(rps: f64) -> Vec<Request> {
+    let trace = Trace::poisson(N_REQUESTS, rps, SeqlenDist::Fixed(24), (8, 8), 64, TRACE_SEED);
+    loadgen::synthesize_requests(&trace, 64, 16, 8, SYNTH_SEED)
+}
+
+fn assert_router_protocol_clean(report: &FleetReport) {
+    let s = report.router_stats;
+    assert_eq!(
+        (s.spurious_starts, s.spurious_finishes, s.spurious_fails, s.spurious_routes),
+        (0, 0, 0, 0),
+        "the fleet must drive the router strictly in-protocol: {s:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// inertness: a fleet of one with no faults IS the single-engine path
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_of_one_with_no_faults_matches_the_single_engine_path() {
+    // Acceptance gate: with no FaultPlan configured, the N=1 fleet must
+    // render byte-identically to `loadgen::replay` on an identically
+    // configured engine — the fleet layer is provably inert when off.
+    let requests = load_requests(CRASH_RPS);
+    let mut bare = mk_mock_engine(VirtualClock::shared());
+    let bare_report = loadgen::replay(&mut bare, &requests, &svc(), 1_000_000).expect("replay");
+
+    let mut fleet = Fleet::build(1, FaultPlan::none(), FleetOptions::default(), mk_mock_engine);
+    let report = fleet.replay(&requests, &svc(), 1_000_000).expect("fleet replay");
+
+    assert_eq!(
+        report.replicas[0].render(),
+        bare_report.render(),
+        "fleet-of-one must be indistinguishable from the bare engine"
+    );
+    assert_eq!(report.routed, N_REQUESTS as u64);
+    assert_eq!(report.router_rejected, 0);
+    assert_eq!((report.retries, report.evacuated), (0, 0));
+    assert!(report.failed.is_empty());
+    assert!(report.crashed.is_empty());
+    assert_router_protocol_clean(&report);
+}
+
+// ---------------------------------------------------------------------
+// determinism: byte-identical reports across runs, faults included
+// ---------------------------------------------------------------------
+
+fn mock_fleet_render(replicas: usize, plan: &str, opts: FleetOptions, rps: f64) -> String {
+    let plan =
+        if plan.is_empty() { FaultPlan::none() } else { FaultPlan::parse(plan).expect("plan") };
+    let mut fleet = Fleet::build(replicas, plan, opts, mk_mock_engine);
+    fleet.replay(&load_requests(rps), &svc(), 1_000_000).expect("fleet replay").render()
+}
+
+#[test]
+fn fleet_reports_are_byte_identical_across_runs() {
+    // Replicas {1, 2, 4} × {no plan, a crash, a detectable stall}: two
+    // independently constructed fleets must produce the same bytes.
+    let opts = FleetOptions { stall_threshold_us: 2_000, ..FleetOptions::default() };
+    for replicas in [1usize, 2, 4] {
+        for plan in ["", "crash:0@120000", "stall:0@80000+40000"] {
+            let a = mock_fleet_render(replicas, plan, opts, CRASH_RPS);
+            let b = mock_fleet_render(replicas, plan, opts, CRASH_RPS);
+            assert_eq!(a, b, "replicas={replicas} plan={plan:?} must replay byte-identically");
+        }
+    }
+}
+
+#[test]
+fn seeded_fault_plans_replay_byte_identically() {
+    // The seeded-plan path (what `--fault-plan seed:N` style experiments
+    // use) composes arbitrary faults; determinism must survive them too.
+    for seed in [1u64, 9, 23] {
+        let plan = FaultPlan::seeded(seed, 4, 300_000);
+        let opts = FleetOptions { stall_threshold_us: 2_000, ..FleetOptions::default() };
+        let spec = plan.render();
+        let run = || mock_fleet_render(4, &spec, opts, CRASH_RPS);
+        assert_eq!(run(), run(), "seed {seed} plan {spec:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// the pinned failover scenario: crash mid-trace, zero lost requests
+// ---------------------------------------------------------------------
+
+#[test]
+fn crash_mid_trace_at_450_rps_loses_no_admitted_requests() {
+    // Tier-1 acceptance scenario: 450 rps over two replicas, replica 0
+    // crashes ~120 ms into the ~355 ms trace (a pure function of seeds
+    // 42/7, chosen so the crash provably lands with work in flight).
+    // Every admitted request must either complete (possibly after
+    // failover recompute) or be explicitly rejected — none may vanish —
+    // and the whole report must be byte-stable.
+    let run = || {
+        let plan = FaultPlan::parse("crash:0@120000").expect("plan");
+        let mut fleet = Fleet::build(2, plan, FleetOptions::default(), mk_mock_engine);
+        fleet.replay(&load_requests(CRASH_RPS), &svc(), 1_000_000).expect("fleet replay")
+    };
+    let report = run();
+
+    assert_eq!(report.crashed, vec![0], "replica 0 crashes exactly once");
+    assert!(report.evacuated >= 1, "a 120 ms crash at 450 rps must land mid-flight");
+    assert!(report.retries >= report.evacuated, "every evacuee consumed a retry");
+    assert!(
+        report.failed.is_empty(),
+        "failover must not exhaust retries with a healthy survivor: {:?}",
+        report.failed
+    );
+
+    // global accounting identity: every submitted request is exactly one
+    // of {completed, failed, engine-rejected, router-rejected}
+    let accounted = report.completed() as u64
+        + report.failed.len() as u64
+        + report.rejected()
+        + report.router_rejected;
+    assert_eq!(accounted, N_REQUESTS as u64, "a request was lost or double-counted");
+    // stronger, for this scenario: queue caps are generous and requests
+    // fit the context window, so everything completes
+    assert_eq!(report.completed(), N_REQUESTS, "zero lost admitted requests");
+    assert_eq!(report.replicas[1].completed + report.replicas[0].completed, N_REQUESTS);
+    assert!(
+        report.replicas[1].completed > report.replicas[0].completed,
+        "the survivor finishes the evacuated majority"
+    );
+    assert_router_protocol_clean(&report);
+
+    assert_eq!(report.render(), run().render(), "crash replay must be byte-identical");
+}
+
+// ---------------------------------------------------------------------
+// deadlines through the fleet: distinct from other rejections
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_enforces_deadlines_distinctly_from_other_rejections() {
+    // One replica, slow service (1 ms base step). Request 1's deadline
+    // passes at a step boundary after admission (expiry, timing kept);
+    // request 2 arrives with its deadline already in the past (front-door
+    // rejection, no timing). The two paths must stay distinguishable in
+    // the fleet report.
+    let slow = ServiceModel { step_base_us: 1_000, step_per_seq_us: 50, step_prefill_token_us: 50 };
+    let run = || {
+        let mut requests = vec![
+            Request::new(0, vec![1; 8], 20),
+            Request::new(1, vec![2; 8], 4).with_deadline_us(2_000),
+            Request::new(2, vec![3; 8], 4).with_deadline_us(100),
+        ];
+        requests[2].arrival_us = 5_000;
+        let mut fleet = Fleet::build(1, FaultPlan::none(), FleetOptions::default(), mk_mock_engine);
+        fleet.replay(&requests, &slow, 100_000).expect("fleet replay")
+    };
+    let report = run();
+    assert_eq!(report.routed, 3, "the router accepted all three");
+    assert_eq!(report.deadline_expired, 1, "request 1 expires after admission");
+    assert_eq!(report.rejected(), 1, "request 2 is refused at the front door");
+    assert_eq!(report.completed(), 2, "request 0 finishes; request 1 keeps its timing");
+    assert!(report.failed.is_empty());
+    assert_router_protocol_clean(&report);
+    assert_eq!(report.render(), run().render());
+}
+
+// ---------------------------------------------------------------------
+// real numerics: a functional-backend fleet is pool-width invariant
+// ---------------------------------------------------------------------
+
+fn functional_fleet_render(threads: usize) -> String {
+    let mut requests: Vec<Request> = (0..10u64)
+        .map(|i| Request::new(i, vec![3 + (i as i32 % 7); 6], 5))
+        .collect();
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.arrival_us = i as u64 * 2_000;
+    }
+    let mut fleet = Fleet::build(2, FaultPlan::none(), FleetOptions::default(), |clock| {
+        let backend = FunctionalBackend::from_model_name_on("micro-llama", 42, 2, threads)
+            .expect("micro-llama materializes");
+        let mut e = Engine::with_clock(backend, 64, 8, 1.0, clock);
+        e.set_prefill_chunk(4);
+        e
+    });
+    fleet.replay(&requests, &svc(), 100_000).expect("fleet replay").render()
+}
+
+#[test]
+fn functional_fleet_renders_identically_across_host_pools() {
+    // Micro-llama on 2 replicas: the worker-pool width (1 vs 4 host
+    // threads) is an execution detail and must not leak into the report —
+    // same tokens, same timings, same bytes.
+    let serial = functional_fleet_render(1);
+    assert_eq!(serial, functional_fleet_render(4), "pool width must be report-invariant");
+    assert_eq!(serial, functional_fleet_render(1), "and run-to-run stable");
+}
+
+// ---------------------------------------------------------------------
+// satellite: the router's token budget cannot leak — property test
+// ---------------------------------------------------------------------
+
+#[test]
+fn router_token_budget_never_leaks_under_random_interleavings() {
+    // Drive route / on_started / on_failed / on_finished in random order,
+    // including spurious transitions (unknown ids, double finishes) and
+    // re-routes of still-open ids (a retry racing its failure
+    // notification), plus health flips. Invariant after EVERY operation:
+    // the router's aggregate queued/running/token counters equal the
+    // model's open set exactly; at quiescence every replica is zero.
+    const REPLICAS: usize = 3;
+    for seed in 0..12u64 {
+        let mut router = Router::new(REPLICAS, 4).with_token_budget(64);
+        let mut rng = Rng::seed_from_u64(seed);
+        // model of what *should* be inflight: id -> worst-case tokens
+        let mut open: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut next_id = 0u64;
+        let pick = |open: &BTreeMap<u64, usize>, rng: &mut Rng| -> Option<u64> {
+            if open.is_empty() {
+                None
+            } else {
+                open.keys().nth(rng.below(open.len())).copied()
+            }
+        };
+        for _ in 0..400 {
+            match rng.below(8) {
+                0 | 1 | 2 => {
+                    // fresh route (may be rejected: budget/queue/health)
+                    let req = Request::new(next_id, vec![1; 1 + rng.below(12)], 4);
+                    if router.route(&req).is_ok() {
+                        open.insert(next_id, req.max_total_len());
+                    }
+                    next_id += 1;
+                }
+                3 => {
+                    // re-route a still-open id: the stale ledger must be
+                    // released, never doubled
+                    if let Some(id) = pick(&open, &mut rng) {
+                        let req = Request::new(id, vec![1; 1 + rng.below(12)], 4);
+                        if router.route(&req).is_ok() {
+                            open.insert(id, req.max_total_len());
+                        }
+                    }
+                }
+                4 => {
+                    // start an open id (phase move) or an unknown one
+                    // (spurious no-op)
+                    let id = if rng.bool() {
+                        pick(&open, &mut rng).unwrap_or(u64::MAX)
+                    } else {
+                        1_000_000 + rng.below(8) as u64
+                    };
+                    router.on_started(id);
+                }
+                5 => {
+                    if rng.bool() {
+                        if let Some(id) = pick(&open, &mut rng) {
+                            router.on_finished(id);
+                            open.remove(&id);
+                        }
+                    } else {
+                        router.on_finished(1_000_000 + rng.below(8) as u64);
+                    }
+                }
+                6 => {
+                    if rng.bool() {
+                        if let Some(id) = pick(&open, &mut rng) {
+                            router.on_failed(id);
+                            open.remove(&id);
+                        }
+                    } else {
+                        router.on_failed(1_000_000 + rng.below(8) as u64);
+                    }
+                }
+                _ => {
+                    // health flips gate routing but must never touch the
+                    // ledger
+                    let h = match rng.below(3) {
+                        0 => ReplicaHealth::Healthy,
+                        1 => ReplicaHealth::Unhealthy,
+                        _ => ReplicaHealth::Draining,
+                    };
+                    router.set_health(rng.below(REPLICAS), h);
+                }
+            }
+            let tokens: usize = (0..REPLICAS).map(|i| router.load(i).tokens).sum();
+            let total: usize = (0..REPLICAS).map(|i| router.load(i).total()).sum();
+            assert_eq!(tokens, open.values().sum::<usize>(), "token drift (seed {seed})");
+            assert_eq!(total, open.len(), "slot drift (seed {seed})");
+        }
+        // quiesce: close every open id through either exit path
+        let ids: Vec<u64> = open.keys().copied().collect();
+        for id in ids {
+            if rng.bool() {
+                router.on_finished(id);
+            } else {
+                router.on_failed(id);
+            }
+        }
+        for i in 0..REPLICAS {
+            let l = router.load(i);
+            assert_eq!(
+                (l.queued, l.running, l.tokens),
+                (0, 0, 0),
+                "replica {i} leaked counters at quiescence (seed {seed})"
+            );
+        }
+    }
+}
