@@ -1,9 +1,9 @@
 # Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
 # what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
 
-.PHONY: tier1 build test test-load test-router test-block test-prefill test-parallel test-fleet bench-compile bench-smoke quickstart artifacts clean
+.PHONY: tier1 build test test-load test-router test-block test-prefill test-parallel test-fleet test-obs trace-demo bench-compile bench-smoke quickstart artifacts clean
 
-tier1: build test test-load test-router test-block test-prefill test-parallel test-fleet bench-compile bench-smoke quickstart
+tier1: build test test-load test-router test-block test-prefill test-parallel test-fleet test-obs bench-compile bench-smoke quickstart
 
 build:
 	cd rust && cargo build --release
@@ -45,6 +45,20 @@ test-parallel:
 # deadlines, router token-budget leak property.
 test-fleet:
 	cd rust && cargo test -q --test integration_fleet
+
+# Observability suite (also run by `test`): byte-stable trace/metrics
+# exports across runs and pool widths, registry counters equal to the
+# replay/fleet reports, Chrome-trace parse-back with well-formed nesting.
+test-obs:
+	cd rust && cargo test -q --test integration_obs
+
+# Emit a Chrome/Perfetto trace + Prometheus snapshot of the pinned PR 8
+# crash scenario (replica 0 crashes at t=120 ms under 450 rps; failover
+# re-routes its work). Load target/trace_demo.json in chrome://tracing.
+trace-demo:
+	cd rust && cargo run --release -- serve --mock --replicas 2 \
+		--fault-plan crash:0@120000 --requests 160 --rps 450 \
+		--trace-out target/trace_demo.json --metrics-out target/trace_demo.prom
 
 bench-compile:
 	cd rust && cargo bench --no-run

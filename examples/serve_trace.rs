@@ -19,6 +19,10 @@
 //! replay (`coordinator::fleet`) in which replica 0 stalls for 60 ms
 //! mid-trace, the watermark detector fails its work over to replica 1,
 //! and every request still completes — byte-identically on any machine.
+//! The demo records itself through the `obs` tracing plane: it writes
+//! `target/serve_trace_demo.trace.json` (Perfetto-loadable) and
+//! `target/serve_trace_demo.prom` (Prometheus text), then prints the
+//! run's 5 largest spans.
 
 use anyhow::Result;
 use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend, ModelGeom};
@@ -30,6 +34,7 @@ use clusterfusion::coordinator::server::Server;
 use clusterfusion::coordinator::FunctionalBackend;
 use clusterfusion::loadgen;
 use clusterfusion::metrics::{Table, Throughput};
+use clusterfusion::obs::{Obs, TracePhase};
 use clusterfusion::util::clock::{Clock, WallClock};
 use clusterfusion::workload::{SeqlenDist, Trace};
 
@@ -173,7 +178,8 @@ fn run<B: Backend + Send + 'static>(backend: B, n_requests: usize) -> Result<()>
 /// (5 ms threshold) flags it, inflight work is evacuated and re-routed
 /// to replica 1, and the stalled replica recovers once the window ends.
 /// Runs on the fleet's shared virtual clock, so the printed report is
-/// byte-identical on every machine and every pool width.
+/// byte-identical on every machine and every pool width — and so are
+/// the trace/metrics exports the demo writes under `target/`.
 fn fleet_demo() -> Result<()> {
     println!("\n== fleet demo: 2 replicas, one injected 60 ms stall ==");
     let plan = FaultPlan::parse("stall:0@40000+60000")?;
@@ -186,6 +192,8 @@ fn fleet_demo() -> Result<()> {
         e.set_prefill_chunk(4);
         e
     });
+    let obs = Obs::new();
+    fleet.set_obs(obs.clone());
     let trace = Trace::poisson(48, 400.0, SeqlenDist::Fixed(24), (8, 8), 64, 42);
     let requests = loadgen::synthesize_requests(&trace, 64, 16, 8, 7);
     let service =
@@ -195,6 +203,39 @@ fn fleet_demo() -> Result<()> {
     assert!(report.unhealthy_transitions >= 1, "the stall must trip the watermark detector");
     assert!(report.failed.is_empty(), "no request may be lost to the stall");
     assert_eq!(report.completed(), requests.len(), "every request completes despite the stall");
+
+    // The run, as a timeline: write the exports and show where the
+    // microseconds went.
+    let out_dir = format!("{}/target", env!("CARGO_MANIFEST_DIR"));
+    std::fs::create_dir_all(&out_dir)?;
+    let trace_path = format!("{out_dir}/serve_trace_demo.trace.json");
+    let prom_path = format!("{out_dir}/serve_trace_demo.prom");
+    std::fs::write(&trace_path, obs.chrome_trace())?;
+    std::fs::write(&prom_path, obs.prometheus())?;
+    println!("\ntrace written to {trace_path} (load in chrome://tracing or Perfetto)");
+    println!("metrics written to {prom_path}");
+
+    let mut spans: Vec<_> = obs
+        .events()
+        .into_iter()
+        .filter(|e| matches!(e.phase, TracePhase::Span { .. }))
+        .collect();
+    spans.sort_by_key(|e| (std::cmp::Reverse(e.dur_us()), e.ts_us, e.pid, e.tid));
+    println!("5 largest spans:");
+    for e in spans.iter().take(5) {
+        println!(
+            "  {:>10} µs  [{}] {}  (replica {}, track {}, t={} µs)",
+            e.dur_us(),
+            e.cat,
+            e.name,
+            e.pid,
+            e.tid,
+            e.ts_us
+        );
+    }
+    let evacuations =
+        obs.events().iter().filter(|e| e.name == "evacuate" && e.cat == "fleet").count() as u64;
+    assert_eq!(evacuations, report.evacuated, "trace evacuations must match the report");
     println!("fleet demo OK (stall detected, failed over, zero lost)");
     Ok(())
 }

@@ -106,6 +106,12 @@ pub struct ServeConfig {
     /// What stall detection does with a stuck replica:
     /// `failover` (evacuate + re-route) or `drain` (finish inflight).
     pub fault_stall_policy: String,
+    /// Write a Chrome trace-event JSON export of the run here (`obs`
+    /// module). Empty = tracing off. On virtual-clock replays the file
+    /// is byte-identical across runs (`integration_obs`).
+    pub trace_out: String,
+    /// Write a Prometheus text metrics snapshot here. Empty = off.
+    pub metrics_out: String,
 }
 
 impl Default for ServeConfig {
@@ -135,6 +141,8 @@ impl Default for ServeConfig {
             fault_max_retries: 2,
             fault_retry_backoff_us: 0,
             fault_stall_policy: "failover".into(),
+            trace_out: String::new(),
+            metrics_out: String::new(),
         }
     }
 }
@@ -179,6 +187,8 @@ impl ServeConfig {
                 self.fault_retry_backoff_us = v.parse().context("fault_retry_backoff_us")?
             }
             "fault_stall_policy" => self.fault_stall_policy = v.into(),
+            "trace_out" => self.trace_out = v.into(),
+            "metrics_out" => self.metrics_out = v.into(),
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -435,6 +445,18 @@ mod tests {
         assert!(c.validate().is_err(), "unknown stall policy");
         assert!(c.fleet_options().is_err());
         c.fault_stall_policy = "failover".into();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn obs_keys_round_trip() {
+        let d = ServeConfig::default();
+        assert!(d.trace_out.is_empty() && d.metrics_out.is_empty(), "tracing defaults off");
+        let mut c = ServeConfig::default();
+        c.apply_text("trace_out = target/run.trace.json\nmetrics_out = target/run.prom\n")
+            .unwrap();
+        assert_eq!(c.trace_out, "target/run.trace.json");
+        assert_eq!(c.metrics_out, "target/run.prom");
         c.validate().unwrap();
     }
 

@@ -20,6 +20,7 @@ use std::collections::HashMap;
 
 use anyhow::{Context, Result};
 
+use crate::obs::{Obs, TRACK_FLEET, TRACK_REQUEST_BASE};
 use crate::util::clock::{SharedClock, WallClock};
 use crate::util::rng::Rng;
 
@@ -208,6 +209,13 @@ pub struct Engine<B: Backend> {
     pub growth_deferrals: u64,
     /// step counter value at the last successful batch growth.
     last_growth_step: u64,
+    /// Trace sink (`obs::Obs`), off by default. The engine only emits
+    /// trace events here — timestamps always come from `self.clock`,
+    /// never the wall clock directly (DESIGN.md §Observability), so
+    /// attaching a sink cannot perturb virtual-clock determinism.
+    obs: Option<Obs>,
+    /// Replica index used as the Chrome `pid` of emitted events.
+    obs_replica: u64,
 }
 
 impl<B: Backend> Engine<B> {
@@ -250,7 +258,52 @@ impl<B: Backend> Engine<B> {
             deadline_expired: 0,
             growth_deferrals: 0,
             last_growth_step: 0,
+            obs: None,
+            obs_replica: 0,
         }
+    }
+
+    /// Attach a trace sink; `replica` becomes the `pid` of every event
+    /// this engine emits (0 for single-engine deployments).
+    pub fn set_obs(&mut self, obs: Obs, replica: usize) {
+        self.obs = Some(obs);
+        self.obs_replica = replica as u64;
+    }
+
+    /// The attached trace sink, if any (replay drivers use this to emit
+    /// step spans without a second plumbing path).
+    pub fn obs(&self) -> Option<Obs> {
+        self.obs.clone()
+    }
+
+    /// Replica index (`pid`) the sink was attached with.
+    pub fn obs_replica(&self) -> u64 {
+        self.obs_replica
+    }
+
+    /// Publish this engine's cumulative counters into the attached
+    /// registry as `engine_*_total{replica="N"}` series (no-op without
+    /// a sink). Replay drivers call this at sync points; `counter_set`
+    /// keeps the existing report fields authoritative and the registry
+    /// a consolidated view of them.
+    pub fn sync_obs_counters(&self) {
+        let Some(o) = &self.obs else { return };
+        let r = self.obs_replica;
+        let set = |name: &str, v: u64| o.counter_set(&format!("{name}{{replica=\"{r}\"}}"), v);
+        set("engine_steps_total", self.steps);
+        set("engine_tokens_out_total", self.tokens_out);
+        set("engine_prefill_tokens_total", self.prefill_tokens);
+        set("engine_preemptions_total", self.preemptions);
+        set("engine_growth_deferrals_total", self.growth_deferrals);
+        set("engine_deadline_expired_total", self.deadline_expired);
+        set("engine_rejected_too_long_total", self.rejected_too_long);
+        set("engine_rejected_slo_total", self.rejected_slo);
+        set("engine_rejected_deadline_total", self.rejected_deadline);
+    }
+
+    /// The Chrome track id of a request's lifecycle row.
+    fn req_track(id: RequestId) -> u64 {
+        TRACK_REQUEST_BASE + id
     }
 
     /// The engine's time source (shared with the load generator).
@@ -308,10 +361,22 @@ impl<B: Backend> Engine<B> {
     pub fn submit(&mut self, req: Request) -> SubmitOutcome {
         if req.max_total_len() > self.pool.geometry().max_seq {
             self.rejected_too_long += 1;
+            let now = self.clock.now_us();
+            if let Some(o) = &self.obs {
+                o.instant(
+                    "admission",
+                    "reject-too-long",
+                    now,
+                    self.obs_replica,
+                    Self::req_track(req.id),
+                    vec![("id", req.id.to_string())],
+                );
+            }
             self.events.push(Event::Finished {
                 id: req.id,
                 reason: FinishReason::Rejected,
                 generated: Vec::new(),
+                at_us: now,
             });
             return SubmitOutcome::RejectedTooLong;
         }
@@ -331,10 +396,21 @@ impl<B: Backend> Engine<B> {
             );
             if now >= req.deadline_us || now.saturating_add(projected) > req.deadline_us {
                 self.rejected_deadline += 1;
+                if let Some(o) = &self.obs {
+                    o.instant(
+                        "admission",
+                        "reject-deadline",
+                        now,
+                        self.obs_replica,
+                        Self::req_track(req.id),
+                        vec![("id", req.id.to_string())],
+                    );
+                }
                 self.events.push(Event::Finished {
                     id: req.id,
                     reason: FinishReason::DeadlineExceeded,
                     generated: Vec::new(),
+                    at_us: now,
                 });
                 return SubmitOutcome::RejectedDeadline;
             }
@@ -349,10 +425,22 @@ impl<B: Backend> Engine<B> {
             );
             if projected > self.admission.slo_ttft_us {
                 self.rejected_slo += 1;
+                let now = self.clock.now_us();
+                if let Some(o) = &self.obs {
+                    o.instant(
+                        "admission",
+                        "reject-slo",
+                        now,
+                        self.obs_replica,
+                        Self::req_track(req.id),
+                        vec![("id", req.id.to_string()), ("projected_us", projected.to_string())],
+                    );
+                }
                 self.events.push(Event::Finished {
                     id: req.id,
                     reason: FinishReason::Rejected,
                     generated: Vec::new(),
+                    at_us: now,
                 });
                 return SubmitOutcome::RejectedSlo;
             }
@@ -418,7 +506,30 @@ impl<B: Backend> Engine<B> {
                 prompt_len: st.req.prompt.len(),
                 generated,
             });
-            self.events.push(Event::Finished { id, reason, generated: st.generated.clone() });
+            if let Some(o) = &self.obs {
+                // The request lifecycle span: submission → finish, with
+                // the terminal reason. Queue spans (emitted at each
+                // admission) nest inside it on the same track.
+                o.span(
+                    "request",
+                    "request",
+                    st.submitted_us,
+                    now.saturating_sub(st.submitted_us),
+                    self.obs_replica,
+                    Self::req_track(id),
+                    vec![
+                        ("id", id.to_string()),
+                        ("reason", format!("{reason:?}")),
+                        ("generated", generated.to_string()),
+                    ],
+                );
+            }
+            self.events.push(Event::Finished {
+                id,
+                reason,
+                generated: st.generated.clone(),
+                at_us: now,
+            });
         }
         self.pool.free_seq(id);
         self.batcher.release(id);
@@ -443,10 +554,37 @@ impl<B: Backend> Engine<B> {
                 prompt_len: entry.req.prompt.len(),
                 generated: 0,
             });
+            if let Some(o) = &self.obs {
+                let track = Self::req_track(entry.req.id);
+                o.instant(
+                    "fleet",
+                    "deadline-expired",
+                    now_us,
+                    self.obs_replica,
+                    TRACK_FLEET,
+                    vec![("id", entry.req.id.to_string())],
+                );
+                // Queued casualties never reach finish(): synthesise
+                // their lifecycle span here (pure queue wait).
+                o.span(
+                    "request",
+                    "request",
+                    entry.submitted_us,
+                    now_us.saturating_sub(entry.submitted_us),
+                    self.obs_replica,
+                    track,
+                    vec![
+                        ("id", entry.req.id.to_string()),
+                        ("reason", "DeadlineExceeded".to_string()),
+                        ("generated", "0".to_string()),
+                    ],
+                );
+            }
             self.events.push(Event::Finished {
                 id: entry.req.id,
                 reason: FinishReason::DeadlineExceeded,
                 generated: Vec::new(),
+                at_us: now_us,
             });
         }
         for id in self.batcher.running().to_vec() {
@@ -456,6 +594,16 @@ impl<B: Backend> Engine<B> {
                 .is_some_and(|st| st.req.deadline_us > 0 && st.req.deadline_us <= now_us);
             if expired {
                 self.deadline_expired += 1;
+                if let Some(o) = &self.obs {
+                    o.instant(
+                        "fleet",
+                        "deadline-expired",
+                        now_us,
+                        self.obs_replica,
+                        TRACK_FLEET,
+                        vec![("id", id.to_string())],
+                    );
+                }
                 self.finish(id, FinishReason::DeadlineExceeded);
             }
         }
@@ -555,6 +703,16 @@ impl<B: Backend> Engine<B> {
                 self.seqs.get(&id).map(|s| s.admitted_us).unwrap_or(u64::MAX)
             });
             self.preemptions += 1;
+            if let Some(o) = &self.obs {
+                o.instant(
+                    "engine",
+                    "preempt",
+                    self.clock.now_us(),
+                    self.obs_replica,
+                    TRACK_FLEET,
+                    vec![("victim", victim.to_string())],
+                );
+            }
             plan.remove(&victim);
             if let Some(st) = self.seqs.remove(&victim) {
                 let now = self.clock.now_us();
@@ -602,6 +760,16 @@ impl<B: Backend> Engine<B> {
             )
         } else {
             self.growth_deferrals += 1;
+            if let Some(o) = &self.obs {
+                o.instant(
+                    "admission",
+                    "growth-deferral",
+                    now,
+                    self.obs_replica,
+                    TRACK_FLEET,
+                    vec![("queued", self.batcher.queued().to_string())],
+                );
+            }
             Vec::new()
         };
         if !admitted.is_empty() {
@@ -609,6 +777,20 @@ impl<B: Backend> Engine<B> {
         }
         for entry in admitted {
             self.pool.alloc_seq(entry.req.id).context("alloc admitted seq")?;
+            if let Some(o) = &self.obs {
+                // Queue-wait span for this admission round; re-queued
+                // (preempted) requests get one span per round, all nested
+                // inside the request lifecycle span.
+                o.span(
+                    "request",
+                    "queue",
+                    entry.enqueued_us,
+                    now.saturating_sub(entry.enqueued_us),
+                    self.obs_replica,
+                    Self::req_track(entry.req.id),
+                    vec![("id", entry.req.id.to_string())],
+                );
+            }
             self.seqs.insert(
                 entry.req.id,
                 SeqState {
@@ -679,6 +861,16 @@ impl<B: Backend> Engine<B> {
             let pos0 = self.pool.seq_len(*id).unwrap_or(0);
             let tokens: Vec<i32> = if st.fed < st.req.prompt.len() {
                 prefill_rows += r;
+                if let Some(o) = &self.obs {
+                    o.instant(
+                        "request",
+                        "prefill-chunk",
+                        now,
+                        self.obs_replica,
+                        Self::req_track(*id),
+                        vec![("id", id.to_string()), ("rows", r.to_string())],
+                    );
+                }
                 st.req.prompt[st.fed..st.fed + r].to_vec()
             } else {
                 decode_slots += 1;
@@ -745,9 +937,9 @@ impl<B: Backend> Engine<B> {
                 if st_phase_first {
                     st.first_us = Some(t_now);
                     st.phase = Phase::Decode;
-                    self.events.push(Event::FirstToken { id: *id, token: t });
+                    self.events.push(Event::FirstToken { id: *id, token: t, at_us: t_now });
                 } else {
-                    self.events.push(Event::Token { id: *id, token: t });
+                    self.events.push(Event::Token { id: *id, token: t, at_us: t_now });
                 }
                 t
             };
@@ -1059,7 +1251,7 @@ mod tests {
         assert_eq!(e.rejected_too_long, 1);
         assert_eq!(e.rejected(), 1);
         match e.take_events().as_slice() {
-            [Event::Finished { id: 1, reason: FinishReason::Rejected, generated }] => {
+            [Event::Finished { id: 1, reason: FinishReason::Rejected, generated, .. }] => {
                 assert!(generated.is_empty());
             }
             other => panic!("{other:?}"),
@@ -1218,7 +1410,7 @@ mod tests {
         );
         assert_eq!((e.rejected_deadline, e.rejected()), (1, 1));
         match e.take_events().as_slice() {
-            [Event::Finished { id: 1, reason: FinishReason::DeadlineExceeded, generated }] => {
+            [Event::Finished { id: 1, reason: FinishReason::DeadlineExceeded, generated, .. }] => {
                 assert!(generated.is_empty());
             }
             other => panic!("{other:?}"),

@@ -54,6 +54,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::loadgen::{percentiles, ReplayReport, ServiceModel};
 use crate::metrics::{CountHistogram, PercentileReport};
+use crate::obs::{Obs, LATENCY_MS_BUCKETS, TRACK_FLEET};
 use crate::util::clock::{Clock, SharedClock, VirtualClock};
 use crate::util::rng::Rng;
 
@@ -312,6 +313,9 @@ struct RetryEntry {
     /// When the request was evacuated: the wait until the successful
     /// re-route is billed as queue time.
     evac_us: u64,
+    /// Replica the request was evacuated from (trace `pid` for the
+    /// retry/failed instants of this request).
+    from: usize,
 }
 
 /// Per-replica simulation state.
@@ -449,6 +453,7 @@ pub struct Fleet<B: Backend> {
     router: Router,
     plan: FaultPlan,
     opts: FleetOptions,
+    obs: Option<Obs>,
 }
 
 impl<B: Backend> Fleet<B> {
@@ -475,12 +480,29 @@ impl<B: Backend> Fleet<B> {
             .collect();
         let router = Router::new(replicas, opts.max_queue_per_replica)
             .with_token_budget(opts.max_tokens_per_replica);
-        Self { clock, replicas: reps, router, plan, opts }
+        Self { clock, replicas: reps, router, plan, opts, obs: None }
     }
 
     /// The fleet's shared time source.
     pub fn clock(&self) -> SharedClock {
         self.clock.clone()
+    }
+
+    /// Attach one shared trace sink: every replica engine emits into it
+    /// with its replica index as the Chrome `pid`, and the fleet event
+    /// loop adds crash/detect/evacuate/retry/recover instants plus step
+    /// spans. Counter increments are co-located with the instants, so
+    /// trace event counts and `FleetReport` fields agree by construction.
+    pub fn set_obs(&mut self, obs: Obs) {
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            r.engine.set_obs(obs.clone(), i);
+        }
+        self.obs = Some(obs);
+    }
+
+    /// The attached sink, if any.
+    pub fn obs(&self) -> Option<Obs> {
+        self.obs.clone()
     }
 
     pub fn router(&self) -> &Router {
@@ -506,7 +528,8 @@ impl<B: Backend> Fleet<B> {
             requests.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
             "fleet replay requires arrival-sorted requests"
         );
-        let Fleet { clock, replicas, router, plan, opts } = self;
+        let Fleet { clock, replicas, router, plan, opts, obs } = self;
+        let obs = obs.as_ref();
         let n = replicas.len();
         let mut crash_pending: Vec<Option<u64>> = (0..n).map(|i| plan.crash_at(i)).collect();
         let mut next = 0usize;
@@ -582,9 +605,31 @@ impl<B: Backend> Fleet<B> {
                     r.detection_at = None;
                     router.set_health(sub, ReplicaHealth::Unhealthy);
                     crashed_list.push(sub);
+                    if let Some(o) = obs {
+                        o.instant(
+                            "fleet",
+                            "crash",
+                            t,
+                            sub as u64,
+                            TRACK_FLEET,
+                            vec![("replica", sub.to_string())],
+                        );
+                        o.counter_add("fleet_crashes_total", 1);
+                    }
                     for e in evacuate_replica(r, t) {
                         evacuated += 1;
                         router.on_failed(e.req.id);
+                        if let Some(o) = obs {
+                            o.instant(
+                                "fleet",
+                                "evacuate",
+                                t,
+                                sub as u64,
+                                TRACK_FLEET,
+                                vec![("id", e.req.id.to_string())],
+                            );
+                            o.counter_add("fleet_evacuated_total", 1);
+                        }
                         fail_over(
                             e,
                             t,
@@ -594,12 +639,25 @@ impl<B: Backend> Fleet<B> {
                             &mut retry_seq,
                             &mut failed,
                             &mut retries_total,
+                            obs,
+                            sub,
                         );
                     }
                 }
                 DETECT => {
                     replicas[sub].detection_at = None;
                     unhealthy_transitions += 1;
+                    if let Some(o) = obs {
+                        o.instant(
+                            "fleet",
+                            "detect",
+                            t,
+                            sub as u64,
+                            TRACK_FLEET,
+                            vec![("replica", sub.to_string())],
+                        );
+                        o.counter_add("fleet_unhealthy_transitions_total", 1);
+                    }
                     match opts.stall_policy {
                         StallPolicy::Drain => router.set_health(sub, ReplicaHealth::Draining),
                         StallPolicy::Failover => {
@@ -607,6 +665,17 @@ impl<B: Backend> Fleet<B> {
                             for e in evacuate_replica(&mut replicas[sub], t) {
                                 evacuated += 1;
                                 router.on_failed(e.req.id);
+                                if let Some(o) = obs {
+                                    o.instant(
+                                        "fleet",
+                                        "evacuate",
+                                        t,
+                                        sub as u64,
+                                        TRACK_FLEET,
+                                        vec![("id", e.req.id.to_string())],
+                                    );
+                                    o.counter_add("fleet_evacuated_total", 1);
+                                }
                                 fail_over(
                                     e,
                                     t,
@@ -616,13 +685,15 @@ impl<B: Backend> Fleet<B> {
                                     &mut retry_seq,
                                     &mut failed,
                                     &mut retries_total,
+                                    obs,
+                                    sub,
                                 );
                             }
                         }
                     }
                 }
                 ARRIVAL => {
-                    probe_recovery(router, replicas, plan, t, &mut recovered);
+                    probe_recovery(router, replicas, plan, t, &mut recovered, obs);
                     let req = requests[next].clone();
                     next += 1;
                     match router.route(&req) {
@@ -638,7 +709,7 @@ impl<B: Backend> Fleet<B> {
                     }
                 }
                 RETRY => {
-                    probe_recovery(router, replicas, plan, t, &mut recovered);
+                    probe_recovery(router, replicas, plan, t, &mut recovered, obs);
                     let entry = retries.swap_remove(sub);
                     match router.route(&entry.req) {
                         Ok(route) => {
@@ -658,9 +729,31 @@ impl<B: Backend> Fleet<B> {
                             *a += 1;
                             if *a > opts.max_retries {
                                 failed.push((entry.req.id, *a));
+                                if let Some(o) = obs {
+                                    o.instant(
+                                        "fleet",
+                                        "failed",
+                                        t,
+                                        entry.from as u64,
+                                        TRACK_FLEET,
+                                        vec![("id", entry.req.id.to_string())],
+                                    );
+                                    o.counter_add("fleet_failed_total", 1);
+                                }
                             } else {
                                 retries_total += 1;
                                 retry_seq += 1;
+                                if let Some(o) = obs {
+                                    o.instant(
+                                        "fleet",
+                                        "retry",
+                                        t,
+                                        entry.from as u64,
+                                        TRACK_FLEET,
+                                        vec![("id", entry.req.id.to_string())],
+                                    );
+                                    o.counter_add("fleet_retries_total", 1);
+                                }
                                 retries.push(RetryEntry {
                                     due_us: t + opts.retry_backoff_us.max(1_000),
                                     seq: retry_seq,
@@ -728,6 +821,18 @@ impl<B: Backend> Fleet<B> {
                         } else {
                             ((base as f64) * factor).round().max(1.0) as u64
                         };
+                        if let Some(o) = obs {
+                            // Step span over the billed (possibly slowed)
+                            // service time, after the engine's own inline
+                            // request events for this step.
+                            o.step_span(
+                                i as u64,
+                                t,
+                                cost,
+                                r.engine.last_decode_slots,
+                                r.engine.last_prefill_tokens,
+                            );
+                        }
                         r.busy_until_us = t + cost;
                         r.last_progress_us = t + cost;
                     } else if r.engine.idle() {
@@ -765,6 +870,39 @@ impl<B: Backend> Fleet<B> {
                 last_finish_us: timings.iter().map(|t| t.finished_us).max().unwrap_or(0),
                 percentiles: percentiles(timings),
             });
+        }
+        if let Some(o) = obs {
+            // Sync point: per-replica engine counters, fleet/router gauges
+            // that have no inline increment site, and latency histograms.
+            // Inline-incremented fleet_* counters (crash/evacuate/retry/
+            // failed/detect/recover) are deliberately NOT re-set here so
+            // the obs tests genuinely verify their co-location with the
+            // report counters.
+            for r in replicas.iter() {
+                r.engine.sync_obs_counters();
+            }
+            o.counter_set("fleet_routed_total", routed);
+            o.counter_set("fleet_router_rejected_total", router_rejected);
+            o.counter_set("fleet_deadline_expired_total", deadline_expired);
+            let rs = router.stats();
+            o.counter_set("router_routed_total", rs.routed);
+            o.counter_set("router_rejected_total", rs.rejected);
+            o.counter_set("router_failed_total", rs.failed);
+            o.counter_set("router_spurious_starts_total", rs.spurious_starts);
+            o.counter_set("router_spurious_finishes_total", rs.spurious_finishes);
+            o.counter_set("router_spurious_fails_total", rs.spurious_fails);
+            o.counter_set("router_spurious_routes_total", rs.spurious_routes);
+            let b = &LATENCY_MS_BUCKETS;
+            for t in &all_timings {
+                o.observe("request_queue_ms", b, t.queue * 1e3);
+                o.observe("request_e2e_ms", b, t.total * 1e3);
+                if t.generated >= 1 {
+                    o.observe("request_ttft_ms", b, t.ttft * 1e3);
+                }
+                if t.generated >= 2 {
+                    o.observe("request_tpot_ms", b, t.tpot * 1e3);
+                }
+            }
         }
         Ok(FleetReport {
             replicas: reps,
@@ -813,15 +951,39 @@ fn fail_over(
     retry_seq: &mut u64,
     failed: &mut Vec<(RequestId, u32)>,
     retries_total: &mut u64,
+    obs: Option<&Obs>,
+    from: usize,
 ) {
     let a = attempts.entry(e.req.id).or_insert(0);
     *a += 1;
     if *a > opts.max_retries {
         failed.push((e.req.id, *a));
+        if let Some(o) = obs {
+            o.instant(
+                "fleet",
+                "failed",
+                now_us,
+                from as u64,
+                TRACK_FLEET,
+                vec![("id", e.req.id.to_string())],
+            );
+            o.counter_add("fleet_failed_total", 1);
+        }
         return;
     }
     *retries_total += 1;
     *retry_seq += 1;
+    if let Some(o) = obs {
+        o.instant(
+            "fleet",
+            "retry",
+            now_us,
+            from as u64,
+            TRACK_FLEET,
+            vec![("id", e.req.id.to_string())],
+        );
+        o.counter_add("fleet_retries_total", 1);
+    }
     retries.push(RetryEntry {
         due_us: now_us + opts.retry_backoff_us,
         seq: *retry_seq,
@@ -829,6 +991,7 @@ fn fail_over(
         submitted_us: e.submitted_us,
         queued_us: e.queued_us,
         evac_us: now_us,
+        from,
     });
 }
 
@@ -841,6 +1004,7 @@ fn probe_recovery<B: Backend>(
     plan: &FaultPlan,
     now_us: u64,
     recovered: &mut u64,
+    obs: Option<&Obs>,
 ) {
     for (i, r) in replicas.iter_mut().enumerate() {
         if r.crashed || router.health(i) == ReplicaHealth::Healthy {
@@ -850,6 +1014,17 @@ fn probe_recovery<B: Backend>(
             router.set_health(i, ReplicaHealth::Healthy);
             r.last_progress_us = now_us;
             *recovered += 1;
+            if let Some(o) = obs {
+                o.instant(
+                    "fleet",
+                    "recover",
+                    now_us,
+                    i as u64,
+                    TRACK_FLEET,
+                    vec![("replica", i.to_string())],
+                );
+                o.counter_add("fleet_recovered_total", 1);
+            }
         }
     }
 }
@@ -937,6 +1112,9 @@ impl FleetServer {
                             id: req.id,
                             reason: FinishReason::Failed,
                             generated: Vec::new(),
+                            // Threaded wall-clock path: no injected clock
+                            // handle here, and no determinism promise.
+                            at_us: 0,
                         });
                         return Ok(rx);
                     }
@@ -1230,7 +1408,7 @@ mod tests {
         let evs: Vec<Event> = rx.iter().collect();
         assert!(matches!(
             evs.as_slice(),
-            [Event::Finished { id: 7, reason: FinishReason::Failed, generated }] if generated.is_empty()
+            [Event::Finished { id: 7, reason: FinishReason::Failed, generated, .. }] if generated.is_empty()
         ));
         assert_eq!(fleet.stats().failed, 3, "initial attempt + 2 retries all failed over");
         assert_eq!(fleet.health(0), ReplicaHealth::Unhealthy);

@@ -98,16 +98,39 @@ pub enum Phase {
     Finished(FinishReason),
 }
 
-/// Event stream emitted per request.
+/// Event stream emitted per request. Every variant carries `at_us`,
+/// the emitting engine's clock microseconds at emission (virtual µs on
+/// the replay path, wall µs on the threaded server), so event streams
+/// are self-describing without a side-channel clock.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     /// Prefill finished; time-to-first-token is measured from
     /// *submission* (queue wait included — see `RequestTiming::ttft`).
-    FirstToken { id: RequestId, token: i32 },
+    FirstToken { id: RequestId, token: i32, at_us: u64 },
     /// One generated token.
-    Token { id: RequestId, token: i32 },
+    Token { id: RequestId, token: i32, at_us: u64 },
     /// Generation finished.
-    Finished { id: RequestId, reason: FinishReason, generated: Vec<i32> },
+    Finished { id: RequestId, reason: FinishReason, generated: Vec<i32>, at_us: u64 },
+}
+
+impl Event {
+    /// The request this event belongs to.
+    pub fn id(&self) -> RequestId {
+        match self {
+            Event::FirstToken { id, .. } | Event::Token { id, .. } | Event::Finished { id, .. } => {
+                *id
+            }
+        }
+    }
+
+    /// Emission timestamp, clock µs.
+    pub fn at_us(&self) -> u64 {
+        match self {
+            Event::FirstToken { at_us, .. }
+            | Event::Token { at_us, .. }
+            | Event::Finished { at_us, .. } => *at_us,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -23,5 +23,6 @@ pub mod coordinator;
 pub mod loadgen;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod runtime;
 pub mod workload;

@@ -240,9 +240,20 @@ pub fn replay<B: Backend>(
             // bill the batch that actually executed — decode slots and
             // prefill rows priced separately — not the post-completion
             // running count
-            clock.advance_us(
-                service.step_us(engine.last_decode_slots, engine.last_prefill_tokens),
-            );
+            let cost = service.step_us(engine.last_decode_slots, engine.last_prefill_tokens);
+            if let Some(obs) = engine.obs() {
+                // The step span covers exactly the billed service time:
+                // [now, now + cost] on the replica's step track, with
+                // kernel child spans when a schedule is installed.
+                obs.step_span(
+                    engine.obs_replica(),
+                    now,
+                    cost,
+                    engine.last_decode_slots,
+                    engine.last_prefill_tokens,
+                );
+            }
+            clock.advance_us(cost);
         } else if engine.batcher.running().is_empty() && !engine.idle() {
             // Admission blocked with the whole pool free: the queue head's
             // worst-case footprint exceeds the pool and can never run.
@@ -252,6 +263,25 @@ pub fn replay<B: Backend>(
         }
     }
     let timings = &engine.timings()[base_timings..];
+    if let Some(obs) = engine.obs() {
+        // Sync point: fold the engine's report fields into the metrics
+        // registry and observe this replay's latency samples. The report
+        // structs stay authoritative; the registry is the exported view.
+        engine.sync_obs_counters();
+        obs.counter_set("replay_completed_total", timings.len() as u64);
+        obs.counter_set("replay_rejected_total", engine.rejected() - base_rejected);
+        let b = &crate::obs::LATENCY_MS_BUCKETS;
+        for t in timings {
+            obs.observe("request_queue_ms", b, t.queue * 1e3);
+            obs.observe("request_e2e_ms", b, t.total * 1e3);
+            if t.generated >= 1 {
+                obs.observe("request_ttft_ms", b, t.ttft * 1e3);
+            }
+            if t.generated >= 2 {
+                obs.observe("request_tpot_ms", b, t.tpot * 1e3);
+            }
+        }
+    }
     Ok(ReplayReport {
         completed: timings.len(),
         rejected: engine.rejected() - base_rejected,

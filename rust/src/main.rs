@@ -22,11 +22,12 @@ use clusterfusion::coordinator::engine::{Backend, Engine, MockBackend, ModelGeom
 use clusterfusion::coordinator::fleet::{FaultPlan, Fleet, FleetServer};
 use clusterfusion::coordinator::pjrt_backend::PjrtBackend;
 use clusterfusion::coordinator::request::{Event, FinishReason, Request};
-use clusterfusion::coordinator::server::Server;
+use clusterfusion::coordinator::server::{Server, ServerReport};
 use clusterfusion::coordinator::FunctionalBackend;
 use clusterfusion::loadgen;
 use clusterfusion::metrics::Table;
 use clusterfusion::models::ModelConfig;
+use clusterfusion::obs::{kernel_stages_for, Obs};
 use clusterfusion::runtime::ArtifactManifest;
 use clusterfusion::util::clock::{Clock, WallClock};
 use clusterfusion::workload::{SeqlenDist, Trace};
@@ -69,6 +70,8 @@ fn usage() -> ! {
          \x20                   [--fault-plan SPEC]  (e.g. stall:0@40000+30000;crash:1@80000 —\n\
          \x20                    selects the deterministic virtual-clock fleet replay;\n\
          \x20                    fault_* keys via --set tune detection/retries)\n\
+         \x20                   [--trace-out PATH]  (Chrome trace-event JSON of the run)\n\
+         \x20                   [--metrics-out PATH]  (Prometheus text metrics snapshot)\n\
          \x20                   [--config FILE] [--set k=v]  (default: functional)\n\
          \x20 simulate          --model NAME [--seq N] [--batch N] [--cluster N]\n\
          \x20 inspect-artifacts [--artifacts DIR]\n\
@@ -169,6 +172,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(p) = flags.get("fault-plan") {
         cfg.fault_plan = p.clone();
+    }
+    if let Some(p) = flags.get("trace-out") {
+        cfg.trace_out = p.clone();
+    }
+    if let Some(p) = flags.get("metrics-out") {
+        cfg.metrics_out = p.clone();
     }
     if let Some(sets) = flags.get("set") {
         for kv in sets.split(',') {
@@ -280,6 +289,41 @@ fn admission_for(cfg: &ServeConfig, service: loadgen::ServiceModel) -> Admission
     }
 }
 
+/// Build the run's trace/metrics sink when `--trace-out` or
+/// `--metrics-out` asked for one, with the synthetic kernel schedule
+/// installed for models the cost model knows (same scope the service
+/// model bills: the fused whole block).
+fn obs_for(cfg: &ServeConfig, max_seq: usize) -> Option<Obs> {
+    if cfg.trace_out.is_empty() && cfg.metrics_out.is_empty() {
+        return None;
+    }
+    let obs = Obs::new();
+    if let Some(m) = ModelConfig::by_name(&cfg.model) {
+        obs.set_kernel_stages(kernel_stages_for(
+            &m,
+            max_seq,
+            FusionScope::FullBlockFused,
+            cfg.cluster_size,
+        ));
+    }
+    Some(obs)
+}
+
+/// Write the requested exports (no-op for empty paths).
+fn write_obs_exports(obs: &Obs, cfg: &ServeConfig) -> Result<()> {
+    if !cfg.trace_out.is_empty() {
+        std::fs::write(&cfg.trace_out, obs.chrome_trace())
+            .with_context(|| format!("writing {}", cfg.trace_out))?;
+        eprintln!("trace written to {} (chrome://tracing / Perfetto)", cfg.trace_out);
+    }
+    if !cfg.metrics_out.is_empty() {
+        std::fs::write(&cfg.metrics_out, obs.prometheus())
+            .with_context(|| format!("writing {}", cfg.metrics_out))?;
+        eprintln!("metrics written to {}", cfg.metrics_out);
+    }
+    Ok(())
+}
+
 /// The synthetic open-loop trace every serve mode replays (fixed seeds:
 /// fleet replay renders must be reproducible run to run).
 fn serve_trace(geom: &ModelGeom, n: usize, rps: f64) -> Vec<Request> {
@@ -327,6 +371,10 @@ fn serve_fleet_replay<B: Backend>(
         e.set_admission(admission);
         e
     });
+    let obs = obs_for(cfg, geom.max_seq);
+    if let Some(o) = &obs {
+        fleet.set_obs(o.clone());
+    }
     eprintln!(
         "fleet replay: {} replicas, fault plan '{}' (virtual clock, deterministic)",
         cfg.replicas,
@@ -335,6 +383,9 @@ fn serve_fleet_replay<B: Backend>(
     let requests = serve_trace(&geom, n_requests, rps);
     let report = fleet.replay(&requests, &service, 10_000_000)?;
     print!("{}", report.render());
+    if let Some(o) = &obs {
+        write_obs_exports(o, cfg)?;
+    }
     Ok(())
 }
 
@@ -349,12 +400,21 @@ fn serve_fleet_threaded<B: Backend + Send + 'static>(
     let opts = cfg.fleet_options()?;
     let mut engines = Vec::with_capacity(cfg.replicas);
     let mut geom = None;
-    for _ in 0..cfg.replicas {
+    let mut obs = None;
+    for i in 0..cfg.replicas {
         let backend = make_backend()?;
         let g = *geom.get_or_insert(backend.geom());
         let mut e = Engine::new(backend, cfg.pool_pages, cfg.page_tokens, cfg.admit_fraction);
         e.set_prefill_chunk(cfg.prefill_chunk);
         e.set_admission(admission_for(cfg, service_model_for(cfg, g.max_seq)));
+        if i == 0 {
+            obs = obs_for(cfg, g.max_seq);
+        }
+        if let Some(o) = &obs {
+            // Wall-clock path: timestamps are real µs, so the trace is
+            // NOT byte-stable — only the virtual-clock fleet replay is.
+            e.set_obs(o.clone(), i);
+        }
         engines.push(e);
     }
     let geom = geom.expect("replicas >= 1");
@@ -418,7 +478,23 @@ fn serve_fleet_threaded<B: Backend + Send + 'static>(
     let all: Vec<_> = reports.iter().flat_map(|r| r.timings.iter().cloned()).collect();
     println!("latency percentiles (queue / ttft / tpot / e2e):");
     print!("{}", loadgen::percentiles(&all).render());
+    if let Some(o) = &obs {
+        for (i, r) in reports.iter().enumerate() {
+            sync_server_report(o, i, r);
+        }
+        write_obs_exports(o, cfg)?;
+    }
     Ok(())
+}
+
+/// Fold a threaded-server report into the registry (the engines were
+/// consumed by their threads, so the sync reads the report instead).
+fn sync_server_report(obs: &Obs, replica: usize, r: &ServerReport) {
+    let set = |name: &str, v: u64| obs.counter_set(&format!("{name}{{replica=\"{replica}\"}}"), v);
+    set("engine_steps_total", r.steps);
+    set("engine_tokens_out_total", r.tokens_out);
+    set("engine_preemptions_total", r.preemptions);
+    set("engine_deadline_expired_total", r.deadline_expired);
 }
 
 fn serve_backend<B: Backend + Send + 'static>(
@@ -435,6 +511,13 @@ fn serve_backend<B: Backend + Send + 'static>(
     // the model is known to the cost model, else a flat 1 ms TPOT.
     let service = service_model_for(cfg, geom.max_seq);
     engine.set_admission(admission_for(cfg, service));
+    let obs = obs_for(cfg, geom.max_seq);
+    if let Some(o) = &obs {
+        // Wall-clock single-engine path: request lifecycle events are
+        // traced with real µs (not byte-stable; use --fault-plan for the
+        // deterministic virtual-clock trace).
+        engine.set_obs(o.clone(), 0);
+    }
     let server = Server::spawn(engine);
 
     // Open-loop paced replay: submissions honour arrival_us on the wall
@@ -481,6 +564,10 @@ fn serve_backend<B: Backend + Send + 'static>(
     );
     println!("latency percentiles (queue / ttft / tpot / e2e):");
     print!("{}", loadgen::percentiles(&report.timings).render());
+    if let Some(o) = &obs {
+        sync_server_report(o, 0, &report);
+        write_obs_exports(o, cfg)?;
+    }
     Ok(())
 }
 

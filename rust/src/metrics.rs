@@ -1,14 +1,27 @@
 //! Serving metrics: latency recorders, percentile summaries, and the
 //! paper-style table printer used by every figure bench.
 
+use std::cell::OnceCell;
 use std::collections::BTreeMap;
 use std::time::Duration;
 
 
 /// Online latency recorder (stores all samples; decode-scale cardinality).
+///
+/// Percentile queries sort **once** into a lazily-built cached view
+/// (`sorted`); `record` invalidates it. A `Summary` used to clone and
+/// sort the full sample vector four times (once per percentile plus
+/// none for mean/max), which made report assembly O(4·n log n) per
+/// metric — now it is one sort amortised over every query until the
+/// next record. Rendered reports are byte-identical to the pre-cache
+/// behaviour (same nearest-rank indices over the same total order).
 #[derive(Debug, Clone, Default)]
 pub struct LatencyRecorder {
     samples: Vec<f64>,
+    /// Sorted copy of `samples`, built on first percentile query after
+    /// the last `record`. `OnceCell` (not `Mutex`): queries take `&self`
+    /// on a single thread, records take `&mut self` and reset it.
+    sorted: OnceCell<Vec<f64>>,
 }
 
 impl LatencyRecorder {
@@ -19,6 +32,7 @@ impl LatencyRecorder {
     pub fn record(&mut self, seconds: f64) {
         debug_assert!(seconds.is_finite() && seconds >= 0.0);
         self.samples.push(seconds);
+        self.sorted.take(); // invalidate the cached sorted view
     }
 
     pub fn record_duration(&mut self, d: Duration) {
@@ -46,8 +60,11 @@ impl LatencyRecorder {
         if self.samples.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples.clone();
-        s.sort_by(f64::total_cmp);
+        let s = self.sorted.get_or_init(|| {
+            let mut s = self.samples.clone();
+            s.sort_by(f64::total_cmp);
+            s
+        });
         let idx = ((q * s.len() as f64).ceil() as usize).clamp(1, s.len()) - 1;
         s[idx]
     }
@@ -277,6 +294,19 @@ mod tests {
         assert_eq!(r.percentile(0.99), 99.0);
         assert_eq!(r.percentile(1.0), 100.0);
         assert_eq!(r.summary().count, 100);
+    }
+
+    #[test]
+    fn percentile_cache_invalidates_on_record_and_matches_uncached() {
+        let mut r = LatencyRecorder::new();
+        r.record(1.0);
+        assert_eq!(r.percentile(1.0), 1.0); // builds the sorted cache
+        r.record(5.0); // must invalidate it
+        assert_eq!(r.percentile(1.0), 5.0);
+        assert_eq!(r.percentile(0.5), 1.0);
+        // a cached recorder's summary equals a freshly-built one, so
+        // rendered reports stay byte-identical to the pre-cache code
+        assert_eq!(r.summary(), summarize(&[1.0, 5.0]));
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! # obs — the deterministic tracing & metrics plane
+//!
+//! ClusterFusion's whole argument is a *timeline* argument: where the
+//! decode microseconds go across kernel launches, on-chip collectives
+//! and off-chip traffic. This module turns the deterministic replay
+//! stack into a producer of that timeline: one [`Obs`] handle carries
+//!
+//! * a **trace sink** — timestamped spans and instants
+//!   ([`TraceEvent`]) emitted at every layer boundary: request
+//!   lifecycle (queue wait, prefill chunks, first token, finish
+//!   reason), engine steps annotated with decode-slot count and
+//!   prefill rows, admission decisions, fleet events
+//!   (crash/stall/detect/evacuate/retry/deadline), and synthetic
+//!   **kernel-level child spans** derived from the `FusionScope`
+//!   cost-model schedules ([`kernel_stages_for`]) so a step expands
+//!   into its per-kernel launch timeline; and
+//! * a **[`MetricsRegistry`]** — counters, gauges and fixed-bucket
+//!   histograms consolidating the ad-hoc report fields behind named
+//!   series, with the existing report structs kept as views that are
+//!   synchronised into the registry at replay boundaries.
+//!
+//! Exporters: [`chrome_trace`] (Perfetto-loadable trace-event JSON)
+//! and [`MetricsRegistry::render_prometheus`] (text exposition), wired
+//! through `serve --trace-out PATH --metrics-out PATH`.
+//!
+//! **Determinism rule (DESIGN.md §Observability):** the sink never
+//! reads a clock — every timestamp is handed in by the emitter, which
+//! on the replay path reads only the injected virtual
+//! [`crate::util::clock::Clock`]. Event *order* is the program order of
+//! the single-threaded replay loop, which PR 8 made structurally
+//! deterministic; exports are therefore byte-identical across runs and
+//! host pool widths (`tests/integration_obs.rs`).
+
+mod registry;
+mod trace;
+
+pub use registry::{Histogram, MetricsRegistry};
+pub use trace::{chrome_trace, TraceEvent, TracePhase};
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Track (`tid`) 0 within a replica's `pid`: engine step spans and
+/// their synthetic kernel child spans.
+pub const TRACK_STEPS: u64 = 0;
+/// Track 1: fleet/admission lifecycle instants (crash, detect,
+/// evacuate, retry, growth deferrals, ...).
+pub const TRACK_FLEET: u64 = 1;
+/// Per-request lifecycle tracks live at `TRACK_REQUEST_BASE + id` so
+/// concurrent requests render as parallel timeline rows.
+pub const TRACK_REQUEST_BASE: u64 = 1000;
+
+/// Histogram bucket bounds for request latencies, milliseconds.
+pub const LATENCY_MS_BUCKETS: [f64; 10] =
+    [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0];
+
+#[derive(Debug, Default)]
+struct Inner {
+    events: Vec<TraceEvent>,
+    registry: MetricsRegistry,
+    /// Synthetic kernel schedule: `(stage name, weight)` per engine
+    /// step, from [`kernel_stages_for`]. `None` disables child spans.
+    kernel_stages: Option<Vec<(String, u64)>>,
+}
+
+/// Shared handle to one observability sink. Cloning is cheap (an `Arc`
+/// bump); the engine, fleet loop and replay drivers all append to the
+/// same sink. The mutex makes the handle `Send` for the threaded
+/// server path; on the virtual-clock replay path there is exactly one
+/// thread (DESIGN.md §4), so lock order can never perturb event order.
+#[derive(Debug, Clone, Default)]
+pub struct Obs {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Install the synthetic per-step kernel schedule (see
+    /// [`kernel_stages_for`]). Subsequent [`Obs::step_span`] calls emit
+    /// one child span per stage, partitioning the step duration
+    /// proportionally to the stage weights.
+    pub fn set_kernel_stages(&self, stages: Vec<(String, u64)>) {
+        self.lock().kernel_stages = if stages.is_empty() { None } else { Some(stages) };
+    }
+
+    /// Append a complete span.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        cat: &'static str,
+        name: &str,
+        ts_us: u64,
+        dur_us: u64,
+        pid: u64,
+        tid: u64,
+        args: Vec<(&'static str, String)>,
+    ) {
+        self.lock().events.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            phase: TracePhase::Span { dur_us },
+            ts_us,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Append an instant marker.
+    pub fn instant(
+        &self,
+        cat: &'static str,
+        name: &str,
+        ts_us: u64,
+        pid: u64,
+        tid: u64,
+        args: Vec<(&'static str, String)>,
+    ) {
+        self.lock().events.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            phase: TracePhase::Instant,
+            ts_us,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Emit one engine step span `[ts_us, ts_us + dur_us]` on replica
+    /// `pid`'s step track, annotated with the executed batch shape —
+    /// plus, when a kernel schedule is installed, its per-kernel child
+    /// spans: the step duration is split proportionally to the stage
+    /// weights with integer microsecond arithmetic (the last stage
+    /// absorbs the rounding remainder), so children exactly tile the
+    /// parent and the partition is deterministic.
+    pub fn step_span(
+        &self,
+        pid: u64,
+        ts_us: u64,
+        dur_us: u64,
+        decode_slots: usize,
+        prefill_rows: usize,
+    ) {
+        let mut g = self.lock();
+        g.events.push(TraceEvent {
+            name: "step".to_string(),
+            cat: "engine",
+            phase: TracePhase::Span { dur_us },
+            ts_us,
+            pid,
+            tid: TRACK_STEPS,
+            args: vec![
+                ("decode_slots", decode_slots.to_string()),
+                ("prefill_rows", prefill_rows.to_string()),
+            ],
+        });
+        let Some(stages) = g.kernel_stages.clone() else { return };
+        if dur_us == 0 {
+            return;
+        }
+        let total: u128 = stages.iter().map(|(_, w)| *w as u128).sum::<u128>().max(1);
+        let mut t = ts_us;
+        let mut used = 0u64;
+        for (i, (name, w)) in stages.iter().enumerate() {
+            let d = if i + 1 == stages.len() {
+                dur_us - used
+            } else {
+                (dur_us as u128 * *w as u128 / total) as u64
+            };
+            g.events.push(TraceEvent {
+                name: name.clone(),
+                cat: "kernel",
+                phase: TracePhase::Span { dur_us: d },
+                ts_us: t,
+                pid,
+                tid: TRACK_STEPS,
+                args: Vec::new(),
+            });
+            t += d;
+            used += d;
+        }
+    }
+
+    pub fn counter_add(&self, name: &str, v: u64) {
+        self.lock().registry.counter_add(name, v);
+    }
+
+    pub fn counter_set(&self, name: &str, v: u64) {
+        self.lock().registry.counter_set(name, v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.lock().registry.counter(name)
+    }
+
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        self.lock().registry.gauge_set(name, v);
+    }
+
+    /// Observe into a fixed-bucket histogram (created on first touch).
+    pub fn observe(&self, name: &str, bounds: &[f64], v: f64) {
+        self.lock().registry.observe(name, bounds, v);
+    }
+
+    /// Snapshot of the event list (for tests and report printers).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.lock().events.clone()
+    }
+
+    /// Snapshot of the registry.
+    pub fn registry(&self) -> MetricsRegistry {
+        self.lock().registry.clone()
+    }
+
+    /// Render the Chrome trace-event JSON export.
+    pub fn chrome_trace(&self) -> String {
+        chrome_trace(&self.lock().events)
+    }
+
+    /// Render the Prometheus text snapshot.
+    pub fn prometheus(&self) -> String {
+        self.lock().registry.render_prometheus()
+    }
+}
+
+/// Derive the synthetic per-step kernel schedule for `model` decoding
+/// under `scope` at `cluster_size`: the stage list of one layer's
+/// [`crate::clustersim::block::cost`] report, with each stage's
+/// modelled seconds quantised to an integer weight (nanoseconds,
+/// floored at 1 so zero-cost stages still render). [`Obs::step_span`]
+/// splits each step's service time across these stages, which is how a
+/// replayed step expands into the paper's Fig. 5/12-style per-kernel
+/// launch timeline — `BlockIsolated` shows 12 kernels per step,
+/// `AttentionFused` 13 stages over 9 launches, `FullBlockFused` the
+/// single fused launch's 5 internal phases (EXPERIMENTS.md §Trace).
+pub fn kernel_stages_for(
+    model: &crate::models::ModelConfig,
+    seq: usize,
+    scope: crate::clustersim::block::FusionScope,
+    cluster_size: usize,
+) -> Vec<(String, u64)> {
+    use crate::clustersim::block::{cost, BlockProblem};
+    use crate::clustersim::dataflow::CostEnv;
+    use crate::clustersim::{Hardware, Noc};
+    let hw = Hardware::h100_sxm5();
+    let noc = Noc::h100(&hw);
+    let p = BlockProblem::from_model(model, 1, seq.clamp(1, model.max_seq));
+    let env = CostEnv::clusterfusion(&hw, &noc, cluster_size);
+    cost(&p, scope, &env)
+        .stages
+        .iter()
+        .map(|(name, secs)| (name.clone(), ((secs * 1e9).round() as u64).max(1)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustersim::block::FusionScope;
+    use crate::models::ModelConfig;
+
+    #[test]
+    fn step_span_children_tile_the_parent_exactly() {
+        let obs = Obs::new();
+        obs.set_kernel_stages(vec![
+            ("a".to_string(), 3),
+            ("b".to_string(), 3),
+            ("c".to_string(), 1),
+        ]);
+        obs.step_span(0, 1000, 100, 2, 4);
+        let evs = obs.events();
+        assert_eq!(evs.len(), 4, "step + 3 children");
+        let step = &evs[0];
+        assert_eq!((step.ts_us, step.end_us()), (1000, 1100));
+        let kids = &evs[1..];
+        assert_eq!(kids[0].ts_us, step.ts_us, "first child starts with the parent");
+        assert_eq!(kids.last().unwrap().end_us(), step.end_us(), "children tile to the end");
+        for w in kids.windows(2) {
+            assert_eq!(w[0].end_us(), w[1].ts_us, "children are contiguous");
+        }
+        let total: u64 = kids.iter().map(TraceEvent::dur_us).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn step_span_without_schedule_has_no_children() {
+        let obs = Obs::new();
+        obs.step_span(0, 0, 50, 1, 0);
+        assert_eq!(obs.events().len(), 1);
+    }
+
+    #[test]
+    fn kernel_stage_counts_match_the_scope_schedules() {
+        let m = ModelConfig::micro_llama();
+        let n = |s| kernel_stages_for(&m, 64, s, 2).len();
+        // 4 attention kernels + 8 rest ops / 5 fused-attention stages +
+        // 8 rest ops / 5 single-launch phases — the §Trace table.
+        assert_eq!(n(FusionScope::BlockIsolated), 12);
+        assert_eq!(n(FusionScope::AttentionFused), 13);
+        assert_eq!(n(FusionScope::FullBlockFused), 5);
+    }
+
+    #[test]
+    fn kernel_stages_are_deterministic() {
+        let m = ModelConfig::micro_llama();
+        let a = kernel_stages_for(&m, 64, FusionScope::FullBlockFused, 2);
+        let b = kernel_stages_for(&m, 64, FusionScope::FullBlockFused, 2);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|(_, w)| *w >= 1));
+    }
+
+    #[test]
+    fn obs_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Obs>();
+    }
+}

@@ -1,0 +1,197 @@
+//! The metrics registry: counters, gauges, fixed-bucket histograms, and
+//! the Prometheus text-exposition exporter.
+//!
+//! One registry consolidates the counters that used to live as ad-hoc
+//! struct fields (`Engine::rejected_slo`, `RouterStats.spurious_*`,
+//! fleet retry/evacuation counts, ...) behind stable metric names; the
+//! existing report structs stay as typed views and are synchronised
+//! into the registry at well-defined points (`Fleet::replay` report
+//! assembly, `loadgen::replay` return) so the two can be asserted equal
+//! (`tests/integration_obs.rs`).
+//!
+//! Series names follow Prometheus conventions, with labels baked into
+//! the series key (`engine_steps_total{replica="0"}`). Every map is a
+//! `BTreeMap`, so rendering order — and therefore the exported snapshot
+//! — is deterministic.
+
+use std::collections::BTreeMap;
+
+/// Fixed-bucket histogram (Prometheus semantics: cumulative buckets,
+/// a `+Inf` overflow bucket, plus sum and count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// Upper bounds of the finite buckets, ascending.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `counts[bounds.len()]` is
+    /// the `+Inf` bucket.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "ascending bounds");
+        Self { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+/// Counters, gauges and histograms under one deterministic namespace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// Series name without its label set (`a_total{x="1"}` → `a_total`).
+fn base_name(series: &str) -> &str {
+    series.split('{').next().unwrap_or(series)
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter (created at 0 on first touch).
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Set a counter to an authoritative value — how the existing report
+    /// structs are synchronised into the registry as views.
+    pub fn counter_set(&mut self, name: &str, v: u64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    /// Current counter value (0 if the series does not exist).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Observe `v` into the named histogram, creating it with `bounds`
+    /// on first touch (later calls ignore `bounds` — fixed buckets).
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        self.histograms.entry(name.to_string()).or_insert_with(|| Histogram::new(bounds)).observe(v)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Prometheus text-exposition snapshot. Series render in `BTreeMap`
+    /// (lexicographic) order with one `# TYPE` line per base name, so
+    /// the output is byte-deterministic for a given registry state.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_type: Option<String> = None;
+        let mut type_line = |out: &mut String, base: &str, kind: &str| {
+            if last_type.as_deref() != Some(base) {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                last_type = Some(base.to_string());
+            }
+        };
+        for (name, v) in &self.counters {
+            type_line(&mut out, base_name(name), "counter");
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            type_line(&mut out, base_name(name), "gauge");
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            type_line(&mut out, base_name(name), "histogram");
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.counts[i];
+                out.push_str(&format!("{name}_bucket{{le=\"{b}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_add_set_and_read() {
+        let mut r = MetricsRegistry::new();
+        r.counter_add("a_total", 2);
+        r.counter_add("a_total", 3);
+        assert_eq!(r.counter("a_total"), 5);
+        r.counter_set("a_total", 7);
+        assert_eq!(r.counter("a_total"), 7);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_render() {
+        let mut r = MetricsRegistry::new();
+        for v in [0.5, 1.5, 1.5, 99.0] {
+            r.observe("lat_ms", &[1.0, 2.0, 5.0], v);
+        }
+        let text = r.render_prometheus();
+        assert!(text.contains("lat_ms_bucket{le=\"1\"} 1\n"), "{text}");
+        assert!(text.contains("lat_ms_bucket{le=\"2\"} 3\n"), "{text}");
+        assert!(text.contains("lat_ms_bucket{le=\"5\"} 3\n"), "{text}");
+        assert!(text.contains("lat_ms_bucket{le=\"+Inf\"} 4\n"), "{text}");
+        assert!(text.contains("lat_ms_count 4\n"), "{text}");
+        assert_eq!(r.histogram("lat_ms").unwrap().count(), 4);
+    }
+
+    #[test]
+    fn render_is_deterministic_and_sorted() {
+        let build = |order_flip: bool| {
+            let mut r = MetricsRegistry::new();
+            let (a, b) = if order_flip { ("b_total", "a_total") } else { ("a_total", "b_total") };
+            r.counter_add(a, 1);
+            r.counter_add(b, 2);
+            r.gauge_set("g", 1.5);
+            r.render_prometheus()
+        };
+        assert_eq!(build(false), build(true), "insertion order must not leak");
+        let text = build(false);
+        let a = text.find("a_total 1").unwrap();
+        let b = text.find("b_total").unwrap();
+        assert!(a < b, "lexicographic order:\n{text}");
+    }
+
+    #[test]
+    fn labelled_series_share_one_type_line() {
+        let mut r = MetricsRegistry::new();
+        r.counter_set("engine_steps_total{replica=\"0\"}", 3);
+        r.counter_set("engine_steps_total{replica=\"1\"}", 4);
+        let text = r.render_prometheus();
+        assert_eq!(text.matches("# TYPE engine_steps_total counter").count(), 1, "{text}");
+        assert!(text.contains("engine_steps_total{replica=\"1\"} 4\n"), "{text}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Trace events and the Chrome trace-event JSON exporter.
+//!
+//! One [`TraceEvent`] is either a *complete span* (Chrome `"ph":"X"` —
+//! a named interval with a start timestamp and a duration) or an
+//! *instant* (`"ph":"i"` — a point marker). Perfetto and
+//! `chrome://tracing` nest `X` events on the same `(pid, tid)` track by
+//! containment, so the exporter never needs begin/end pairs: the engine
+//! step span and its synthetic kernel children simply share the step
+//! track with nested `[ts, ts+dur]` intervals.
+//!
+//! All timestamps are **clock microseconds from the injected
+//! [`crate::util::clock::Clock`]** — the exporter itself never reads any
+//! clock (the §Observability determinism rule), so a virtual-clock
+//! replay renders byte-identical JSON on every run and every host.
+
+use crate::util::json::escape;
+
+/// Chrome phase of a trace event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// Complete span (`"ph":"X"`): `[ts_us, ts_us + dur_us]`.
+    Span { dur_us: u64 },
+    /// Point event (`"ph":"i"`, process scope).
+    Instant,
+}
+
+/// One timestamped trace record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Taxonomy category: `"engine"`, `"kernel"`, `"request"`,
+    /// `"admission"`, or `"fleet"` (DESIGN.md §Observability).
+    pub cat: &'static str,
+    pub phase: TracePhase,
+    /// Clock µs (virtual µs on the replay path).
+    pub ts_us: u64,
+    /// Chrome process id — the replica index.
+    pub pid: u64,
+    /// Chrome thread id — the track within a replica (see the `TRACK_*`
+    /// constants in the parent module).
+    pub tid: u64,
+    /// Ordered key/value annotations (decode slots, finish reason, ...).
+    pub args: Vec<(&'static str, String)>,
+}
+
+impl TraceEvent {
+    /// Span duration (0 for instants).
+    pub fn dur_us(&self) -> u64 {
+        match self.phase {
+            TracePhase::Span { dur_us } => dur_us,
+            TracePhase::Instant => 0,
+        }
+    }
+
+    /// Exclusive end timestamp.
+    pub fn end_us(&self) -> u64 {
+        self.ts_us + self.dur_us()
+    }
+}
+
+/// Render `events` as Chrome trace-event JSON (the
+/// `{"traceEvents":[...]}` object form; Perfetto-loadable). Field order
+/// is fixed and events are rendered in insertion order, so the output
+/// is a pure function of the event list — byte-identical across runs
+/// whenever the events are.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 110 + 64);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(if i == 0 { "\n" } else { ",\n" });
+        out.push_str("{\"name\":\"");
+        out.push_str(&escape(&e.name));
+        out.push_str("\",\"cat\":\"");
+        out.push_str(&escape(e.cat));
+        out.push_str("\",");
+        match e.phase {
+            TracePhase::Span { dur_us } => {
+                out.push_str(&format!("\"ph\":\"X\",\"ts\":{},\"dur\":{dur_us}", e.ts_us));
+            }
+            TracePhase::Instant => {
+                out.push_str(&format!("\"ph\":\"i\",\"s\":\"p\",\"ts\":{}", e.ts_us));
+            }
+        }
+        out.push_str(&format!(",\"pid\":{},\"tid\":{}", e.pid, e.tid));
+        if !e.args.is_empty() {
+            out.push_str(",\"args\":{");
+            for (j, (k, v)) in e.args.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push('"');
+                out.push_str(&escape(k));
+                out.push_str("\":\"");
+                out.push_str(&escape(v));
+                out.push('"');
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn span(name: &str, ts: u64, dur: u64) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            cat: "engine",
+            phase: TracePhase::Span { dur_us: dur },
+            ts_us: ts,
+            pid: 0,
+            tid: 0,
+            args: vec![("k", "v".to_string())],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_parses_back() {
+        let events = vec![
+            span("step", 100, 50),
+            TraceEvent {
+                name: "crash".to_string(),
+                cat: "fleet",
+                phase: TracePhase::Instant,
+                ts_us: 120,
+                pid: 1,
+                tid: 1,
+                args: Vec::new(),
+            },
+        ];
+        let text = chrome_trace(&events);
+        let v = Json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].get("dur").unwrap().as_usize(), Some(50));
+        assert_eq!(evs[0].get("args").unwrap().get("k").unwrap().as_str(), Some("v"));
+        assert_eq!(evs[1].get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(evs[1].get("pid").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn rendering_is_a_pure_function_of_the_events() {
+        let events = vec![span("a", 0, 10), span("b", 10, 3)];
+        assert_eq!(chrome_trace(&events), chrome_trace(&events.clone()));
+    }
+
+    #[test]
+    fn escapes_names() {
+        let text = chrome_trace(&[span("we\"ird\n", 0, 1)]);
+        assert!(Json::parse(&text).is_ok(), "{text}");
+    }
+}

@@ -1,0 +1,308 @@
+//! Observability integration tests (`obs`): the deterministic tracing
+//! and metrics plane.
+//!
+//! Three acceptance properties:
+//!
+//! 1. **Byte-stability** — the Chrome trace and Prometheus exports of a
+//!    virtual-clock fleet replay are byte-identical across runs and
+//!    host pool widths {1, 4}, per replica count {1, 2}. (The replica
+//!    index is the Chrome `pid`, so traces from *different* replica
+//!    counts legitimately differ — the invariant is within a count.)
+//! 2. **Registry = reports** — after the pinned 450 rps crash scenario
+//!    (`integration_fleet`'s tier-1 scenario), every registry counter
+//!    equals its `FleetReport`/`ReplayReport`/`RouterStats` field, and
+//!    the fleet-event *trace instants* (crash/detect/evacuate/retry)
+//!    count out to the same numbers — the co-location guarantee.
+//! 3. **Well-formed JSON** — the Chrome export parses back through
+//!    `util::json` and spans nest by containment on every `(pid, tid)`
+//!    track (end ≥ start; children inside parents).
+
+use std::collections::BTreeMap;
+
+use clusterfusion::clustersim::block::FusionScope;
+use clusterfusion::coordinator::engine::{Engine, MockBackend, ModelGeom};
+use clusterfusion::coordinator::fleet::{FaultPlan, Fleet, FleetOptions, FleetReport};
+use clusterfusion::coordinator::functional_backend::FunctionalBackend;
+use clusterfusion::coordinator::request::Request;
+use clusterfusion::loadgen::{self, ServiceModel};
+use clusterfusion::models::ModelConfig;
+use clusterfusion::obs::{kernel_stages_for, Obs, TracePhase};
+use clusterfusion::util::clock::SharedClock;
+use clusterfusion::util::json::Json;
+use clusterfusion::workload::{SeqlenDist, Trace};
+
+// The pinned tier-1 crash scenario, identical to integration_fleet.
+const N_REQUESTS: usize = 160;
+const TRACE_SEED: u64 = 42;
+const SYNTH_SEED: u64 = 7;
+const CRASH_RPS: f64 = 450.0;
+
+fn load_mock() -> MockBackend {
+    MockBackend::new(
+        ModelGeom { vocab: 64, n_layers: 2, row_elems: 4, planes: 2, max_seq: 64 },
+        vec![1, 2, 4, 8],
+    )
+}
+
+fn svc() -> ServiceModel {
+    ServiceModel { step_base_us: 200, step_per_seq_us: 50, step_prefill_token_us: 50 }
+}
+
+fn mk_mock_engine(clock: SharedClock) -> Engine<MockBackend> {
+    let mut e = Engine::with_clock(load_mock(), 40, 4, 0.5, clock);
+    e.set_prefill_chunk(4);
+    e
+}
+
+fn load_requests(rps: f64) -> Vec<Request> {
+    let trace = Trace::poisson(N_REQUESTS, rps, SeqlenDist::Fixed(24), (8, 8), 64, TRACE_SEED);
+    loadgen::synthesize_requests(&trace, 64, 16, 8, SYNTH_SEED)
+}
+
+/// The pinned crash replay with a sink attached (kernel schedule
+/// installed so step spans expand into per-kernel children).
+fn crash_replay_with_obs() -> (Obs, FleetReport) {
+    let plan = FaultPlan::parse("crash:0@120000").expect("plan");
+    let mut fleet = Fleet::build(2, plan, FleetOptions::default(), mk_mock_engine);
+    let obs = Obs::new();
+    obs.set_kernel_stages(kernel_stages_for(
+        &ModelConfig::micro_llama(),
+        64,
+        FusionScope::FullBlockFused,
+        2,
+    ));
+    fleet.set_obs(obs.clone());
+    let report = fleet.replay(&load_requests(CRASH_RPS), &svc(), 1_000_000).expect("fleet replay");
+    (obs, report)
+}
+
+// ---------------------------------------------------------------------
+// 1. byte-stability across runs and host pool widths
+// ---------------------------------------------------------------------
+
+/// Functional micro-llama fleet (real numerics) on `threads` host pool
+/// workers; returns both exports. Mirrors integration_fleet's
+/// pool-width-invariance scenario, with the sink attached.
+fn functional_fleet_exports(replicas: usize, threads: usize) -> (String, String) {
+    let mut requests: Vec<Request> =
+        (0..10u64).map(|i| Request::new(i, vec![3 + (i as i32 % 7); 6], 5)).collect();
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.arrival_us = i as u64 * 2_000;
+    }
+    let mut fleet = Fleet::build(replicas, FaultPlan::none(), FleetOptions::default(), |clock| {
+        let backend = FunctionalBackend::from_model_name_on("micro-llama", 42, 2, threads)
+            .expect("micro-llama materializes");
+        let mut e = Engine::with_clock(backend, 64, 8, 1.0, clock);
+        e.set_prefill_chunk(4);
+        e
+    });
+    let obs = Obs::new();
+    obs.set_kernel_stages(kernel_stages_for(
+        &ModelConfig::micro_llama(),
+        64,
+        FusionScope::FullBlockFused,
+        2,
+    ));
+    fleet.set_obs(obs.clone());
+    fleet.replay(&requests, &svc(), 100_000).expect("fleet replay");
+    (obs.chrome_trace(), obs.prometheus())
+}
+
+#[test]
+fn trace_exports_are_byte_identical_across_runs_and_pools() {
+    for replicas in [1usize, 2] {
+        let (trace0, prom0) = functional_fleet_exports(replicas, 1);
+        assert!(trace0.contains("\"cat\":\"kernel\""), "kernel child spans must be present");
+        assert!(trace0.contains("\"cat\":\"request\""), "request lifecycle spans must be present");
+        assert!(prom0.contains("# TYPE engine_steps_total counter"), "{prom0}");
+        for threads in [1usize, 4] {
+            let (t, p) = functional_fleet_exports(replicas, threads);
+            assert_eq!(
+                trace0, t,
+                "replicas={replicas} threads={threads}: trace must be byte-stable"
+            );
+            assert_eq!(
+                prom0, p,
+                "replicas={replicas} threads={threads}: metrics must be byte-stable"
+            );
+        }
+    }
+}
+
+#[test]
+fn mock_crash_trace_is_byte_identical_across_runs() {
+    let (a, _) = crash_replay_with_obs();
+    let (b, _) = crash_replay_with_obs();
+    assert_eq!(a.chrome_trace(), b.chrome_trace(), "crash trace must replay byte-identically");
+    assert_eq!(a.prometheus(), b.prometheus());
+}
+
+// ---------------------------------------------------------------------
+// 2. registry counters == report fields == trace instant counts
+// ---------------------------------------------------------------------
+
+#[test]
+fn registry_and_trace_instants_match_the_pinned_crash_report() {
+    let (obs, report) = crash_replay_with_obs();
+    assert_eq!(report.crashed, vec![0], "scenario: replica 0 crashes exactly once");
+    assert!(report.evacuated >= 1, "the 120 ms crash must land with work in flight");
+
+    // The fleet-event instants in the trace count out to the report —
+    // emission is co-located with every counter increment.
+    let events = obs.events();
+    let instants =
+        |name: &str| events.iter().filter(|e| e.cat == "fleet" && e.name == name).count() as u64;
+    assert_eq!(instants("crash"), report.crashed.len() as u64);
+    assert_eq!(instants("evacuate"), report.evacuated);
+    assert_eq!(instants("retry"), report.retries);
+    assert_eq!(instants("failed"), report.failed.len() as u64);
+    assert_eq!(instants("detect"), report.unhealthy_transitions);
+    assert_eq!(instants("recover"), report.recovered);
+
+    // Registry counters — the inline-incremented fleet series are never
+    // re-set at the sync point, so equality here verifies the inline
+    // sites themselves.
+    let reg = obs.registry();
+    assert_eq!(reg.counter("fleet_crashes_total"), report.crashed.len() as u64);
+    assert_eq!(reg.counter("fleet_evacuated_total"), report.evacuated);
+    assert_eq!(reg.counter("fleet_retries_total"), report.retries);
+    assert_eq!(reg.counter("fleet_failed_total"), report.failed.len() as u64);
+    assert_eq!(reg.counter("fleet_unhealthy_transitions_total"), report.unhealthy_transitions);
+    assert_eq!(reg.counter("fleet_recovered_total"), report.recovered);
+    assert_eq!(reg.counter("fleet_routed_total"), report.routed);
+    assert_eq!(reg.counter("fleet_router_rejected_total"), report.router_rejected);
+    assert_eq!(reg.counter("fleet_deadline_expired_total"), report.deadline_expired);
+
+    // Router ledger.
+    let rs = report.router_stats;
+    assert_eq!(reg.counter("router_routed_total"), rs.routed);
+    assert_eq!(reg.counter("router_rejected_total"), rs.rejected);
+    assert_eq!(reg.counter("router_failed_total"), rs.failed);
+    assert_eq!(reg.counter("router_spurious_starts_total"), rs.spurious_starts);
+    assert_eq!(reg.counter("router_spurious_finishes_total"), rs.spurious_finishes);
+    assert_eq!(reg.counter("router_spurious_fails_total"), rs.spurious_fails);
+    assert_eq!(reg.counter("router_spurious_routes_total"), rs.spurious_routes);
+
+    // Per-replica engine counters against the per-replica ReplayReports.
+    for (i, r) in report.replicas.iter().enumerate() {
+        let c = |name: &str| reg.counter(&format!("{name}{{replica=\"{i}\"}}"));
+        assert_eq!(c("engine_steps_total"), r.steps, "replica {i} steps");
+        assert_eq!(c("engine_tokens_out_total"), r.tokens_out, "replica {i} tokens");
+        assert_eq!(c("engine_preemptions_total"), r.preemptions, "replica {i} preemptions");
+    }
+
+    // One end-to-end latency sample per completed request.
+    let h = reg.histogram("request_e2e_ms").expect("e2e histogram exists");
+    assert_eq!(h.count(), report.completed() as u64);
+
+    // The snapshot renders the consolidated series.
+    let prom = obs.prometheus();
+    assert!(prom.contains("# TYPE fleet_evacuated_total counter"), "{prom}");
+    assert!(prom.contains("# TYPE request_e2e_ms histogram"), "{prom}");
+}
+
+#[test]
+fn loadgen_replay_syncs_engine_counters_into_the_registry() {
+    // The single-engine replay driver is a sync point too: counters and
+    // report must agree, under the replica="0" label.
+    let mut engine = mk_mock_engine(clusterfusion::util::clock::VirtualClock::shared());
+    let obs = Obs::new();
+    engine.set_obs(obs.clone(), 0);
+    let report =
+        loadgen::replay(&mut engine, &load_requests(CRASH_RPS), &svc(), 1_000_000).expect("replay");
+    let reg = obs.registry();
+    assert_eq!(reg.counter("replay_completed_total"), report.completed as u64);
+    assert_eq!(reg.counter("replay_rejected_total"), report.rejected);
+    assert_eq!(reg.counter("engine_steps_total{replica=\"0\"}"), report.steps);
+    assert_eq!(reg.counter("engine_tokens_out_total{replica=\"0\"}"), report.tokens_out);
+    assert_eq!(reg.counter("engine_preemptions_total{replica=\"0\"}"), report.preemptions);
+    let h = reg.histogram("request_e2e_ms").expect("e2e histogram exists");
+    assert_eq!(h.count(), report.completed as u64);
+    // step spans: one per executed step, each annotated with its shape
+    let steps = obs
+        .events()
+        .iter()
+        .filter(|e| e.cat == "engine" && e.name == "step")
+        .count() as u64;
+    assert_eq!(steps, report.steps, "one step span per executed step");
+}
+
+// ---------------------------------------------------------------------
+// 3. the Chrome export parses back and nests well-formed
+// ---------------------------------------------------------------------
+
+#[test]
+fn chrome_trace_parses_back_with_well_formed_nesting() {
+    let (obs, _) = crash_replay_with_obs();
+    let text = obs.chrome_trace();
+    let v = Json::parse(&text).expect("trace JSON parses");
+    let evs = v.get("traceEvents").expect("traceEvents").as_arr().expect("array");
+    assert_eq!(evs.len(), obs.events().len(), "every event renders");
+    assert!(!evs.is_empty());
+
+    // Collect spans per (pid, tid) track; instants only need a ph check.
+    let mut tracks: BTreeMap<(usize, usize), Vec<(u64, u64)>> = BTreeMap::new();
+    for e in evs {
+        let ph = e.get("ph").expect("ph").as_str().expect("ph str");
+        let ts = e.get("ts").expect("ts").as_usize().expect("ts uint") as u64;
+        let pid = e.get("pid").expect("pid").as_usize().expect("pid uint");
+        let tid = e.get("tid").expect("tid").as_usize().expect("tid uint");
+        match ph {
+            "X" => {
+                let dur = e.get("dur").expect("dur").as_usize().expect("dur uint") as u64;
+                tracks.entry((pid, tid)).or_default().push((ts, ts + dur));
+            }
+            "i" => assert_eq!(e.get("s").and_then(|s| s.as_str()), Some("p"), "instant scope"),
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert!(!tracks.is_empty(), "the crash scenario must produce spans");
+
+    // Containment sweep per track: sort by (start asc, end desc) so a
+    // parent precedes the children it contains, then walk with a stack.
+    // Every span must end within the enclosing open span — Chrome/
+    // Perfetto render exactly this nesting.
+    for ((pid, tid), mut spans) in tracks {
+        spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut stack: Vec<(u64, u64)> = Vec::new();
+        for (start, end) in spans {
+            assert!(end >= start, "span end precedes start on ({pid},{tid})");
+            while let Some(&(_, open_end)) = stack.last() {
+                if open_end <= start {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(_, open_end)) = stack.last() {
+                assert!(
+                    end <= open_end,
+                    "span [{start},{end}] escapes its parent (ends {open_end}) on ({pid},{tid})"
+                );
+            }
+            stack.push((start, end));
+        }
+    }
+
+    // Kernel children tile their step spans: per step track, kernel span
+    // time sums to step span time exactly.
+    let events = obs.events();
+    for pid in [0u64, 1] {
+        let step_us: u64 = events
+            .iter()
+            .filter(|e| e.pid == pid && e.cat == "engine" && e.name == "step")
+            .map(|e| e.dur_us())
+            .sum();
+        let kernel_us: u64 = events
+            .iter()
+            .filter(|e| e.pid == pid && e.cat == "kernel")
+            .map(|e| e.dur_us())
+            .sum();
+        assert_eq!(kernel_us, step_us, "replica {pid}: kernel spans must tile the steps");
+    }
+    // No zero-phase leakage: every span event really is a Span.
+    assert!(events
+        .iter()
+        .filter(|e| e.cat == "kernel")
+        .all(|e| matches!(e.phase, TracePhase::Span { .. })));
+}

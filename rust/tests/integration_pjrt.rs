@@ -146,7 +146,9 @@ fn batched_bucket_matches_single_stream() {
         .take_events()
         .iter()
         .filter_map(|e| match e {
-            Event::FirstToken { id: 1, token } | Event::Token { id: 1, token } => Some(*token),
+            Event::FirstToken { id: 1, token, .. } | Event::Token { id: 1, token, .. } => {
+                Some(*token)
+            }
             _ => None,
         })
         .collect();

@@ -33,7 +33,7 @@ fn lifecycle_smoke_admit_decode_finish_metrics() {
     let events = engine.take_events();
     assert!(matches!(events.first(), Some(Event::FirstToken { id: 42, .. })));
     match events.last() {
-        Some(Event::Finished { id: 42, reason, generated }) => {
+        Some(Event::Finished { id: 42, reason, generated, .. }) => {
             assert_eq!(*reason, FinishReason::Length);
             assert_eq!(generated.len(), 2);
         }
