@@ -1,15 +1,28 @@
 # Top-level targets. `make tier1` mirrors the ROADMAP tier-1 verify and is
 # what CI runs; `make artifacts` needs a JAX-capable Python (layer 1/2).
 
-.PHONY: tier1 build test test-load test-router test-block test-prefill test-parallel test-fleet test-obs trace-demo bench-compile bench-smoke quickstart artifacts clean
+.PHONY: tier1 tier1-simd build test test-simd test-load test-router test-block test-prefill test-parallel test-fleet test-obs trace-demo bench-compile bench-smoke bench-smoke-simd quickstart artifacts clean
 
 tier1: build test test-load test-router test-block test-prefill test-parallel test-fleet test-obs bench-compile bench-smoke quickstart
+
+# The explicit-SIMD build (`--features simd`, util::linalg lane-group
+# kernels): the full tier-1 test surface plus the bench smoke run under
+# the feature. CI runs this as its own matrix dimension crossed with the
+# pool-width legs.
+tier1-simd: test-simd bench-smoke-simd
 
 build:
 	cd rust && cargo build --release
 
 test:
 	cd rust && cargo test -q --workspace
+
+# Same surface under the explicit-SIMD linalg kernels. Outputs may differ
+# in bits from the default build (the documented lane-group reduction
+# order) but must be byte-identical across pool widths and runs — the
+# invariance suites assert exactly that in both builds.
+test-simd:
+	cd rust && cargo test -q --workspace --features simd
 
 # Saturation load tests on the virtual clock (also run by `test`; the
 # explicit target keeps the tier-1 intent visible and fails fast on
@@ -69,6 +82,9 @@ bench-compile:
 # runs are noisy; use `cargo bench --bench hotpath` for EXPERIMENTS.md.
 bench-smoke:
 	cd rust && cargo bench --bench hotpath -- --smoke
+
+bench-smoke-simd:
+	cd rust && cargo bench --bench hotpath --features simd -- --smoke
 
 quickstart:
 	cd rust && cargo run --release --example quickstart

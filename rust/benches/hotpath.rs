@@ -189,6 +189,25 @@ fn main() {
                 }
             }
         }
+        // Dispatch-count story (§Parallel, EXPERIMENTS.md): the coalesced
+        // fan-outs post one dispatch per *phase* over the flattened
+        // heads×blocks grid, not one per head per phase. Count exactly
+        // via Pool::stats — this is the per-step line EXPERIMENTS.md
+        // §Parallel records.
+        {
+            let pool = Pool::new(4);
+            let before = pool.stats().dispatches;
+            split_token::execute_packed_on(
+                &pool, &hidden, &packed, &k_cache, &v_cache, &pos, b, d, nh, dh, s, n,
+                Transport::Dsmem, &hw, &noc,
+            );
+            let per_step = pool.stats().dispatches - before;
+            println!(
+                "     dispatches per split_token step (nh={nh}, n={n}): {per_step} \
+                 (pre-coalescing: {} — one per head per phase)",
+                3 * nh
+            );
+        }
         // One-shot path (pack inside the call) for the repack-cost story;
         // skipped in smoke mode (a single iteration blows the budget).
         if !smoke {
@@ -247,6 +266,45 @@ fn main() {
                 )
             })
             .report_rate("evals")
+        );
+    }
+
+    // --- pool dispatch overhead (§Parallel: persistent workers) ---
+    {
+        let threads = 4usize;
+        let persistent = Pool::new(threads);
+        let round_trip = bench("pool: empty-job round-trip, persistent t4", budget, || {
+            persistent.run(threads, |_| {})
+        });
+        println!("{}", round_trip.report());
+        let spawn = bench("pool: empty-job round-trip, spawn-per-call t4", budget, || {
+            // the retired discipline: scope-spawn t−1 threads, run worker
+            // 0 inline, join — what every dispatch used to pay
+            std::thread::scope(|scope| {
+                for _ in 1..threads {
+                    scope.spawn(|| {});
+                }
+            })
+        });
+        println!("{}", spawn.report());
+        println!(
+            "     persistent-pool dispatch win: {:.1}x cheaper than spawn-per-call",
+            spawn.mean_ns / round_trip.mean_ns
+        );
+
+        // Per-step dispatch volume through the full block pipeline (the
+        // serving decode hot path) — the other EXPERIMENTS.md §Parallel
+        // counter line.
+        let cfg = clusterfusion::models::ModelConfig::micro_llama();
+        let model = clusterfusion::clustersim::block::BlockModel::from_config(&cfg, 42, 2);
+        let plane_len = cfg.n_layers * cfg.max_seq * model.row_elems();
+        let planes = vec![vec![0f32; plane_len]; model.planes()];
+        let before = persistent.stats().dispatches;
+        model.decode_step_on(&persistent, &[7], &[0], &planes, 1);
+        let per_step = persistent.stats().dispatches - before;
+        println!(
+            "     dispatches per full-block decode step (micro-llama, {} layers): {per_step}",
+            cfg.n_layers
         );
     }
 

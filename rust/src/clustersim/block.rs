@@ -724,8 +724,8 @@ impl BlockModel {
     /// GEMM stage — embeddings, QKV, gate/up/down — batches the whole
     /// chunk through the packed-weight kernels (one weight stream per
     /// step, the amortisation chunked prefill exists for), while
-    /// attention runs causally per row through the *decode* per-head
-    /// core (`attend_head_on`, `b == 1`), writing each roped row into
+    /// attention runs causally per row through the *decode* all-heads
+    /// core (`attend_heads_on`, `b == 1`), writing each roped row into
     /// the mutable planes so later rows of the chunk attend to earlier
     /// ones.
     ///

@@ -64,13 +64,15 @@ pub fn execute(
     )
 }
 
-/// [`execute`] on a worker [`Pool`], parallel over **heads** in the
-/// FlashDecoding (K2) and rescale (K3) kernels — the two per-head
-/// kernels whose outputs are disjoint head regions. The projection
-/// kernels (K1/K4) keep the seed's row-major `gemm_acc` walk serially.
-/// Each head's arithmetic is unchanged and results land by per-head
-/// copy, so the output is byte-identical to the serial path at every
-/// pool size (`tests/integration_parallel.rs`).
+/// [`execute`] on a worker [`Pool`]: the FlashDecoding kernel (K2) fans
+/// **one flattened heads×splits task grid** across the pool (task `idx`
+/// = head `idx / FLASH_SPLITS`, split `idx % FLASH_SPLITS` — the same
+/// (head, split) blocks a real grid launch would schedule), and the
+/// rescale kernel (K3) fans one task per head. The projection kernels
+/// (K1/K4) keep the seed's row-major `gemm_acc` walk serially. Each
+/// task's arithmetic is unchanged and results land by per-task copy in
+/// ascending grid order, so the output is byte-identical to the serial
+/// path at every pool size (`tests/integration_parallel.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn execute_on(
     pool: &Pool,
@@ -103,86 +105,85 @@ pub fn execute_on(
 
     // ---- Kernel 2: FlashDecoding partials -> GLOBAL MEMORY ----
     // One block per (head, split); partial accumulators + (m, l) stats.
-    // One pool task per head, owning its FLASH_SPLITS × B contiguous
-    // region of the partial arrays.
+    // One task per (head, split) on the flattened grid, each owning its
+    // B-sized region of the partial arrays.
     let scale = 1.0 / (dh as f32).sqrt();
     let seg = s.div_ceil(FLASH_SPLITS);
-    type HeadPartials = (Vec<f32>, Vec<f32>, Vec<f32>);
-    let head_parts: Vec<HeadPartials> = pool.run_map(nh, |head| {
-        let mut acc_h = vec![0f32; FLASH_SPLITS * b * dh];
-        let mut m_h = vec![f32::NEG_INFINITY; FLASH_SPLITS * b];
-        let mut l_h = vec![0f32; FLASH_SPLITS * b];
-        for sp in 0..FLASH_SPLITS {
-            for bi in 0..b {
-                let valid = pos[bi];
-                let lo = sp * seg;
-                let hi = ((sp + 1) * seg).min(valid);
-                let qrow = &q_gmem[bi * h + head * dh..bi * h + (head + 1) * dh];
-                let mut m = f32::NEG_INFINITY;
-                let mut scores = Vec::new();
-                // token-tiled score scan (4 in-order chains per step)
-                let row_at = |t: usize| {
-                    let base = ((bi * s + t) * nh + head) * dh;
-                    &k_cache[base..base + dh]
-                };
-                let end = hi.max(lo);
-                let mut t = lo;
-                while t + 4 <= end {
-                    let d4 =
-                        linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
-                    for (k, dv) in d4.iter().enumerate() {
-                        let sc = dv * scale;
-                        m = m.max(sc);
-                        scores.push((t + k, sc));
-                    }
-                    t += 4;
-                }
-                while t < end {
-                    let sc = linalg::dot(qrow, row_at(t)) * scale;
+    type BlockPartials = (Vec<f32>, Vec<f32>, Vec<f32>);
+    let grid_parts: Vec<BlockPartials> = pool.run_map(nh * FLASH_SPLITS, |idx| {
+        let (head, sp) = (idx / FLASH_SPLITS, idx % FLASH_SPLITS);
+        let mut acc_b = vec![0f32; b * dh];
+        let mut m_b = vec![f32::NEG_INFINITY; b];
+        let mut l_b = vec![0f32; b];
+        for bi in 0..b {
+            let valid = pos[bi];
+            let lo = sp * seg;
+            let hi = ((sp + 1) * seg).min(valid);
+            let qrow = &q_gmem[bi * h + head * dh..bi * h + (head + 1) * dh];
+            let mut m = f32::NEG_INFINITY;
+            let mut scores = Vec::new();
+            // token-tiled score scan (4 in-order chains per step)
+            let row_at = |t: usize| {
+                let base = ((bi * s + t) * nh + head) * dh;
+                &k_cache[base..base + dh]
+            };
+            let end = hi.max(lo);
+            let mut t = lo;
+            while t + 4 <= end {
+                let d4 =
+                    linalg::dot4(qrow, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                for (k, dv) in d4.iter().enumerate() {
+                    let sc = dv * scale;
                     m = m.max(sc);
-                    scores.push((t, sc));
-                    t += 1;
+                    scores.push((t + k, sc));
                 }
-                // the freshly projected token is handled by the last split
-                if sp == FLASH_SPLITS - 1 {
-                    let sc = linalg::dot(
-                        qrow,
-                        &k_gmem[bi * h + head * dh..bi * h + (head + 1) * dh],
-                    ) * scale;
-                    m = m.max(sc);
-                    scores.push((usize::MAX, sc));
-                }
-                if m == f32::NEG_INFINITY {
-                    continue;
-                }
-                let mut l = 0f32;
-                let acc = &mut acc_h[(sp * b + bi) * dh..(sp * b + bi + 1) * dh];
-                for (t, sc) in scores {
-                    let p = (sc - m).exp();
-                    l += p;
-                    let vrow = if t == usize::MAX {
-                        &v_gmem[bi * h + head * dh..bi * h + (head + 1) * dh]
-                    } else {
-                        &v_cache
-                            [((bi * s + t) * nh + head) * dh..((bi * s + t) * nh + head) * dh + dh]
-                    };
-                    linalg::axpy(p, vrow, acc);
-                }
-                m_h[sp * b + bi] = m;
-                l_h[sp * b + bi] = l;
+                t += 4;
             }
+            while t < end {
+                let sc = linalg::dot(qrow, row_at(t)) * scale;
+                m = m.max(sc);
+                scores.push((t, sc));
+                t += 1;
+            }
+            // the freshly projected token is handled by the last split
+            if sp == FLASH_SPLITS - 1 {
+                let sc = linalg::dot(
+                    qrow,
+                    &k_gmem[bi * h + head * dh..bi * h + (head + 1) * dh],
+                ) * scale;
+                m = m.max(sc);
+                scores.push((usize::MAX, sc));
+            }
+            if m == f32::NEG_INFINITY {
+                continue;
+            }
+            let mut l = 0f32;
+            let acc = &mut acc_b[bi * dh..(bi + 1) * dh];
+            for (t, sc) in scores {
+                let p = (sc - m).exp();
+                l += p;
+                let vrow = if t == usize::MAX {
+                    &v_gmem[bi * h + head * dh..bi * h + (head + 1) * dh]
+                } else {
+                    &v_cache
+                        [((bi * s + t) * nh + head) * dh..((bi * s + t) * nh + head) * dh + dh]
+                };
+                linalg::axpy(p, vrow, acc);
+            }
+            m_b[bi] = m;
+            l_b[bi] = l;
         }
-        (acc_h, m_h, l_h)
+        (acc_b, m_b, l_b)
     });
-    // Assemble the flat global-memory partial arrays (per-head regions
-    // are contiguous: blk = head * FLASH_SPLITS + sp).
+    // Assemble the flat global-memory partial arrays — ascending grid
+    // order is exactly the blk = head * FLASH_SPLITS + sp layout.
     let mut part_acc = Vec::with_capacity(nh * FLASH_SPLITS * b * dh);
     let mut part_m = Vec::with_capacity(nh * FLASH_SPLITS * b);
     let mut part_l = Vec::with_capacity(nh * FLASH_SPLITS * b);
-    for (acc_h, m_h, l_h) in &head_parts {
-        part_acc.extend_from_slice(acc_h);
-        part_m.extend_from_slice(m_h);
-        part_l.extend_from_slice(l_h);
+    for (acc_b, m_b, l_b) in &grid_parts {
+        part_acc.extend_from_slice(acc_b);
+        part_m.extend_from_slice(m_b);
+        part_l.extend_from_slice(l_b);
     }
     report.launches += 1;
     report.hbm_bytes += (nh * FLASH_SPLITS * b) as f64 * (dh as f64 * ELEM + 2.0 * 4.0);

@@ -110,10 +110,12 @@ pub fn execute_packed(
 /// [`execute_packed`] on a worker [`Pool`]: each block-parallel phase of
 /// Alg. 4 — the KV/Q projection segments, the FlashDecoding partials
 /// over the latent-cache spans, the down-projection partials over the
-/// lora-rank slices and the output-projection column tiles — fans its
-/// `n` cluster blocks across the pool; the collectives and the
-/// atomicAdd merge stay serial, in the serial code's order. Byte-
-/// identical to the serial path at every pool size
+/// lora-rank slices and the output-projection column tiles — fans **one
+/// flattened heads×blocks task grid** across the pool (the shared KV
+/// projection is one `n`-task dispatch): five dispatches per call
+/// instead of `4·nh + 1`. The collectives and the atomicAdd merge stay
+/// serial, heads ascending, in the serial code's order. Byte-identical
+/// to the serial path at every pool size
 /// (`tests/integration_parallel.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn execute_packed_on(
@@ -145,9 +147,6 @@ pub fn execute_packed_on(
     let (wq_p, wkv_p, wo_p) = (&weights.wq, &weights.wkv, &weights.wo);
     assert!(wq_p.n_in() == d && wq_p.n_out() == nh * l && wo_p.n_out() == d);
 
-    // Scratch reused across heads (serial sections only).
-    let mut attn = vec![0f32; b * l];
-
     // ---- KV Projection segments + gather (shared by all heads; computed
     // by the first cluster, broadcast via the latent cache write); one
     // pool task per cluster block ----
@@ -168,17 +167,21 @@ pub fn execute_packed_on(
     }
     kv_new_g.copy_from_slice(&kv_new);
 
+    // ---- absorbed Q projection segments, one task per (head, cluster
+    // block) on the flattened grid; gathers serial per head ----
+    let lb = b * l;
+    let q_segs: Vec<Vec<f32>> = pool.run_map(nh * n, |idx| {
+        let (head, r) = (idx / n, idx % n);
+        let mut seg = vec![0f32; b * ls];
+        linalg::matmul_rows(hidden, b, d, wq_p, 0, head * l + r * ls, ls, &mut seg);
+        seg
+    });
+    let mut q_all = vec![0f32; nh * lb];
     for head in 0..nh {
-        // ---- absorbed Q projection segments + gather (one task per
-        // cluster block) ----
-        let q_segs: Vec<Vec<f32>> = pool.run_map(n, |r| {
-            let mut seg = vec![0f32; b * ls];
-            linalg::matmul_rows(hidden, b, d, wq_p, 0, head * l + r * ls, ls, &mut seg);
-            seg
-        });
-        let (q_gathered, gc_q) = cluster_gather(&q_segs, transport, hw, noc);
+        let head_segs = &q_segs[head * n..(head + 1) * n];
+        let (q_gathered, gc_q) = cluster_gather(head_segs, transport, hw, noc);
         report.dsmem_bytes += gc_q.traffic_bytes;
-        let mut q = vec![0f32; b * l];
+        let q = &mut q_all[head * lb..(head + 1) * lb];
         for r in 0..n {
             let seg = gathered_segment(&q_gathered[0], 0, r, n, b * ls);
             for bi in 0..b {
@@ -186,31 +189,40 @@ pub fn execute_packed_on(
                     .copy_from_slice(&seg[bi * ls..(bi + 1) * ls]);
             }
         }
-
-        // ---- FlashDecoding partials through the output merge: the
-        // shared per-head attention core ----
-        attend_head_on(
-            pool, &q, &kv_new, kv_cache, pos, b, d, l, dh, s, n, head, w_down, wo_p, scale,
-            &mut attn, transport, hw, noc, &mut out, &mut report,
-        );
     }
+
+    // ---- FlashDecoding partials through the output merge for every
+    // head at once: the shared attention core ----
+    attend_heads_on(
+        pool, &q_all, &kv_new, kv_cache, pos, b, d, nh, l, dh, s, n, w_down, wo_p, scale,
+        transport, hw, noc, &mut out, &mut report,
+    );
 
     (AttnOut { out, k_new: kv_new_g, v_new: vec![] }, report)
 }
 
-/// The post-gather attention core of one MLA head's cluster schedule —
-/// FlashDecoding partials over the latent-cache spans, the three stat
-/// reduces with the online-softmax rescale, the down-projection partials
-/// over the lora-rank slices with their `ClusterReduce(sum)`, and the
-/// output-projection tiles merged into `out` in the serial `(r, bi)`
-/// order. Extracted verbatim from [`execute_packed_on`]'s per-head loop
-/// (see `split_token::attend_head_on` for the bit-exactness argument);
-/// the multi-position prefill path calls it with `b == 1` per prompt row.
+/// The post-gather attention core of **every MLA head's** cluster
+/// schedule — FlashDecoding partials over the latent-cache spans, the
+/// three stat reduces with the online-softmax rescale, the
+/// down-projection partials over the lora-rank slices with their
+/// `ClusterReduce(sum)`, and the output-projection tiles merged into
+/// `out` in the serial `(head, r, bi)` order.
 ///
-/// `q`/`kv_new` are the assembled `(b, l)` per-head rows; `kv_cache` is
-/// the `(b, s, l)` dense latent plane; `attn` is `(b, l)` scratch.
+/// Coalesced fan-out (DESIGN.md §Parallel): each block-parallel phase
+/// dispatches **once over the flattened heads×blocks task grid** (task
+/// `idx` = head `idx / n`, block `idx % n`) — 3 dispatches here instead
+/// of `3·nh` — with the per-task arithmetic the per-head loop body
+/// unchanged and every serial merge (collectives included) walking heads
+/// in ascending order, so results are byte-identical to the per-head
+/// dispatch structure at every pool size (see
+/// `split_token::attend_heads_on` for the bit-exactness argument); the
+/// multi-position prefill path calls it with `b == 1` per prompt row.
+///
+/// `q` holds the assembled `(nh, b, l)` head-major rows; `kv_new` is the
+/// `(b, l)` shared latent row (MQA: one latent cache for all heads);
+/// `kv_cache` is the `(b, s, l)` dense latent plane.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn attend_head_on(
+pub(crate) fn attend_heads_on(
     pool: &Pool,
     q: &[f32],
     kv_new: &[f32],
@@ -218,15 +230,14 @@ pub(crate) fn attend_head_on(
     pos: &[usize],
     b: usize,
     d: usize,
+    nh: usize,
     l: usize,
     dh: usize,
     s: usize,
     n: usize,
-    head: usize,
     w_down: &[f32],
     wo_p: &linalg::PackedWeight,
     scale: f32,
-    attn: &mut [f32],
     transport: Transport,
     hw: &Hardware,
     noc: &Noc,
@@ -234,10 +245,13 @@ pub(crate) fn attend_head_on(
     report: &mut CostReport,
 ) {
     let (ls, ss, ds) = (l / n, s / n, d / n);
+    let lb = b * l; // one head's (b, l) plane in q
     {
         // ---- FlashDecoding partials over latent-cache spans, one task
-        // per cluster block ----
-        let partials: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
+        // per (head, cluster block) on the flattened grid ----
+        let partials: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(nh * n, |idx| {
+            let (head, r) = (idx / n, idx % n);
+            let qh = &q[head * lb..(head + 1) * lb];
             let mut m_row = vec![f32::NEG_INFINITY; b];
             let mut l_row = vec![0f32; b];
             let mut acc_row = vec![0f32; b * l];
@@ -246,7 +260,7 @@ pub(crate) fn attend_head_on(
                 let valid = pos[bi];
                 let lo = r * ss;
                 let hi = ((r + 1) * ss).min(valid);
-                let qrow = &q[bi * l..(bi + 1) * l];
+                let qrow = &qh[bi * l..(bi + 1) * l];
                 scores.clear();
                 // token-tiled score scan (4 independent in-order chains)
                 let row_at = |t: usize| {
@@ -301,46 +315,57 @@ pub(crate) fn attend_head_on(
             }
             (m_row, l_row, acc_row)
         });
-        let mut m_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut l_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut acc_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        for (m_row, l_row, acc_row) in partials {
-            m_bufs.push(m_row);
-            l_bufs.push(l_row);
-            acc_bufs.push(acc_row);
-        }
 
-        // ---- stats + output reduces ----
-        let m_local = m_bufs.clone();
-        let rc1 = cluster_reduce(&mut m_bufs, ReduceOp::Max, transport, hw, noc);
-        for r in 0..n {
-            for bi in 0..b {
-                let alpha = if m_local[r][bi] == f32::NEG_INFINITY {
-                    0.0
-                } else {
-                    (m_local[r][bi] - m_bufs[r][bi]).exp()
-                };
-                l_bufs[r][bi] *= alpha;
-                linalg::scale(alpha, &mut acc_bufs[r][bi * l..(bi + 1) * l]);
+        // ---- stats + output reduces, serial per head in ascending
+        // order; each head's normalised attention row lands in the
+        // (nh, b, l) head-major scratch the down projection reads ----
+        let mut parts = partials.into_iter();
+        let mut attn_all = vec![0f32; nh * lb];
+        for head in 0..nh {
+            let mut m_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut l_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut acc_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (m_row, l_row, acc_row) = parts.next().expect("one task per (head, block)");
+                m_bufs.push(m_row);
+                l_bufs.push(l_row);
+                acc_bufs.push(acc_row);
             }
-        }
-        let rc2 = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
-        let rc3 = cluster_reduce(&mut acc_bufs, ReduceOp::Sum, transport, hw, noc);
-        report.dsmem_bytes += rc1.traffic_bytes + rc2.traffic_bytes + rc3.traffic_bytes;
+            let m_local = m_bufs.clone();
+            let rc1 = cluster_reduce(&mut m_bufs, ReduceOp::Max, transport, hw, noc);
+            for r in 0..n {
+                for bi in 0..b {
+                    let alpha = if m_local[r][bi] == f32::NEG_INFINITY {
+                        0.0
+                    } else {
+                        (m_local[r][bi] - m_bufs[r][bi]).exp()
+                    };
+                    l_bufs[r][bi] *= alpha;
+                    linalg::scale(alpha, &mut acc_bufs[r][bi * l..(bi + 1) * l]);
+                }
+            }
+            let rc2 = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
+            let rc3 = cluster_reduce(&mut acc_bufs, ReduceOp::Sum, transport, hw, noc);
+            report.dsmem_bytes += rc1.traffic_bytes + rc2.traffic_bytes + rc3.traffic_bytes;
 
-        // normalised attention output (identical in every block now)
-        for bi in 0..b {
-            linalg::scale_div(
-                &acc_bufs[0][bi * l..(bi + 1) * l],
-                l_bufs[0][bi],
-                &mut attn[bi * l..(bi + 1) * l],
-            );
+            // normalised attention output (identical in every block now)
+            let attn = &mut attn_all[head * lb..(head + 1) * lb];
+            for bi in 0..b {
+                linalg::scale_div(
+                    &acc_bufs[0][bi * l..(bi + 1) * l],
+                    l_bufs[0][bi],
+                    &mut attn[bi * l..(bi + 1) * l],
+                );
+            }
         }
 
         // ---- Down Projection: blocks partition the lora rank; partial
         // (B, dh) results combined with ClusterReduce(sum); one task per
-        // cluster block ----
-        let mut z_bufs: Vec<Vec<f32>> = pool.run_map(n, |r| {
+        // (head, cluster block) on the flattened grid, reduces serial
+        // per head in ascending order ----
+        let z_raw: Vec<Vec<f32>> = pool.run_map(nh * n, |idx| {
+            let (head, r) = (idx / n, idx % n);
+            let attn = &attn_all[head * lb..(head + 1) * lb];
             let mut z = vec![0f32; b * dh];
             for bi in 0..b {
                 for j in 0..ls {
@@ -352,13 +377,25 @@ pub(crate) fn attend_head_on(
             }
             z
         });
-        let rc4 = cluster_reduce(&mut z_bufs, ReduceOp::Sum, transport, hw, noc);
-        report.dsmem_bytes += rc4.traffic_bytes;
+        let mut z_iter = z_raw.into_iter();
+        let mut z_heads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(nh);
+        for _head in 0..nh {
+            let mut z_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for _ in 0..n {
+                z_bufs.push(z_iter.next().expect("one task per (head, block)"));
+            }
+            let rc4 = cluster_reduce(&mut z_bufs, ReduceOp::Sum, transport, hw, noc);
+            report.dsmem_bytes += rc4.traffic_bytes;
+            z_heads.push(z_bufs);
+        }
 
-        // ---- Output Projection tiles + atomicAdd: block r computes its
-        // [r*ds, (r+1)*ds) column tile as a pool task; the merge adds
-        // each tile element once, in the serial (r, bi, j) order ----
-        let tiles: Vec<Vec<f32>> = pool.run_map(n, |r| {
+        // ---- Output Projection tiles + atomicAdd: task (head, r)
+        // computes its [r*ds, (r+1)*ds) column tile on the flattened
+        // grid; the merge adds each tile element once, in the serial
+        // (head, r, bi, j) order ----
+        let tiles: Vec<Vec<f32>> = pool.run_map(nh * n, |idx| {
+            let (head, r) = (idx / n, idx % n);
+            let z_bufs = &z_heads[head];
             let mut tile = vec![0f32; b * ds];
             for bi in 0..b {
                 linalg::matmul_rows(
@@ -374,7 +411,8 @@ pub(crate) fn attend_head_on(
             }
             tile
         });
-        for (r, tile) in tiles.iter().enumerate() {
+        for (idx, tile) in tiles.iter().enumerate() {
+            let r = idx % n;
             for bi in 0..b {
                 let dst = &mut out[bi * d + r * ds..bi * d + (r + 1) * ds];
                 linalg::axpy(1.0, &tile[bi * ds..(bi + 1) * ds], dst);
@@ -390,7 +428,7 @@ pub(crate) fn attend_head_on(
 /// the mutable plane** at their positions (so later chunk rows attend to
 /// earlier ones); each head then batches its absorbed Q projection over
 /// the chunk and runs causal attention per row through
-/// [`attend_head_on`] with `b == 1` and `valid = row_pos[j]` — the
+/// [`attend_heads_on`] with `b == 1` and `valid = row_pos[j]` — the
 /// byte-identical decode core. `kv_plane` is `(bucket, s, l)`. Returns
 /// `(T, d)` output and the `(T, l)` latent rows in feed order (`k_new`;
 /// `v_new` stays empty, the latent cache is single-plane).
@@ -447,17 +485,21 @@ pub fn prefill_packed_on(
         kv_plane[dst..dst + l].copy_from_slice(&kv_new[j * l..(j + 1) * l]);
     }
 
-    let mut attn = vec![0f32; l]; // b == 1 scratch, reused across rows
+    // absorbed Q projection batched over the chunk, one task per
+    // (head, cluster block) on the flattened grid; gathers serial per
+    // head in ascending order
+    let q_segs: Vec<Vec<f32>> = pool.run_map(nh * n, |idx| {
+        let (head, r) = (idx / n, idx % n);
+        let mut seg = vec![0f32; t_rows * ls];
+        linalg::matmul_rows(hidden, t_rows, d, wq_p, 0, head * l + r * ls, ls, &mut seg);
+        seg
+    });
+    let mut q_all = vec![0f32; nh * t_rows * l]; // (nh, t_rows, l)
     for head in 0..nh {
-        // absorbed Q projection batched over the chunk
-        let q_segs: Vec<Vec<f32>> = pool.run_map(n, |r| {
-            let mut seg = vec![0f32; t_rows * ls];
-            linalg::matmul_rows(hidden, t_rows, d, wq_p, 0, head * l + r * ls, ls, &mut seg);
-            seg
-        });
-        let (q_gathered, gc_q) = cluster_gather(&q_segs, transport, hw, noc);
+        let head_segs = &q_segs[head * n..(head + 1) * n];
+        let (q_gathered, gc_q) = cluster_gather(head_segs, transport, hw, noc);
         report.dsmem_bytes += gc_q.traffic_bytes;
-        let mut q = vec![0f32; t_rows * l];
+        let q = &mut q_all[head * t_rows * l..(head + 1) * t_rows * l];
         for r in 0..n {
             let seg = gathered_segment(&q_gathered[0], 0, r, n, t_rows * ls);
             for j in 0..t_rows {
@@ -465,35 +507,42 @@ pub fn prefill_packed_on(
                     .copy_from_slice(&seg[j * ls..(j + 1) * ls]);
             }
         }
-        // causal attention per row (serial in feed order)
-        for j in 0..t_rows {
-            let slot = row_slot[j];
-            let kc = &kv_plane[slot * s * l..(slot + 1) * s * l];
-            let pos_j = [row_pos[j]];
-            attend_head_on(
-                pool,
-                &q[j * l..(j + 1) * l],
-                &kv_new[j * l..(j + 1) * l],
-                kc,
-                &pos_j,
-                1,
-                d,
-                l,
-                dh,
-                s,
-                n,
-                head,
-                w_down,
-                wo_p,
-                scale,
-                &mut attn,
-                transport,
-                hw,
-                noc,
-                &mut out[j * d..(j + 1) * d],
-                &mut report,
-            );
+    }
+
+    // causal attention per row (serial in feed order), all heads of a
+    // row through one coalesced core call; the copy into the per-row
+    // (nh, 1, l) head-major buffer is pure data movement
+    let mut q_row = vec![0f32; nh * l];
+    for j in 0..t_rows {
+        let slot = row_slot[j];
+        let kc = &kv_plane[slot * s * l..(slot + 1) * s * l];
+        let pos_j = [row_pos[j]];
+        for head in 0..nh {
+            q_row[head * l..(head + 1) * l]
+                .copy_from_slice(&q_all[head * t_rows * l + j * l..head * t_rows * l + (j + 1) * l]);
         }
+        attend_heads_on(
+            pool,
+            &q_row,
+            &kv_new[j * l..(j + 1) * l],
+            kc,
+            &pos_j,
+            1,
+            d,
+            nh,
+            l,
+            dh,
+            s,
+            n,
+            w_down,
+            wo_p,
+            scale,
+            transport,
+            hw,
+            noc,
+            &mut out[j * d..(j + 1) * d],
+            &mut report,
+        );
     }
 
     (AttnOut { out, k_new: kv_new, v_new: vec![] }, report)

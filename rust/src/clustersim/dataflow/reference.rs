@@ -117,14 +117,16 @@ pub fn attention_block_ref(
     )
 }
 
-/// [`attention_block_ref`] on a worker [`Pool`], parallel over **heads**:
-/// each head's masked-softmax attention ([`head_attention`] — the
-/// dominant cost, the full cache scan) is one pool task; the QKV
-/// projections and the per-head output-projection `gemm_acc` merge stay
-/// serial **in ascending head order**, preserving the serial oracle's
-/// exact `out` accumulation sequence — so this is byte-identical to
-/// [`attention_block_ref`] at every pool size
-/// (`tests/integration_parallel.rs`).
+/// [`attention_block_ref`] on a worker [`Pool`], coalesced over the
+/// **flattened heads×batch task grid**: each (head, batch-row) cell of
+/// the masked-softmax attention ([`head_attention`] — the dominant cost,
+/// the full cache scan) is one grid task (`head_attention` is per-row
+/// independent, so slicing one row's cache plane and running `b == 1`
+/// reproduces the full-batch bits); the QKV projections and the per-head
+/// output-projection `gemm_acc` merge stay serial **in ascending head
+/// order**, preserving the serial oracle's exact `out` accumulation
+/// sequence — so this is byte-identical to [`attention_block_ref`] at
+/// every pool size (`tests/integration_parallel.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_block_ref_on(
     pool: &Pool,
@@ -150,25 +152,39 @@ pub fn attention_block_ref_on(
     gemm_acc(hidden, wk, &mut k_new, b, d, h);
     gemm_acc(hidden, wv, &mut v_new, b, d, h);
 
-    let attns: Vec<Vec<f32>> = pool.run_map(nh, |head| {
-        // slice this head's q / k_new / v_new columns
+    let plane = s * nh * dh; // one batch row's (S, nh, dh) cache plane
+    let rows: Vec<Vec<f32>> = pool.run_map(nh * b, |idx| {
+        let (head, bi) = (idx / b, idx % b);
+        // slice this (head, row) cell's q / k_new / v_new columns
         let take = |src: &[f32]| -> Vec<f32> {
-            let mut t = vec![0f32; b * dh];
-            for bi in 0..b {
-                t[bi * dh..(bi + 1) * dh]
-                    .copy_from_slice(&src[bi * h + head * dh..bi * h + (head + 1) * dh]);
-            }
-            t
+            src[bi * h + head * dh..bi * h + (head + 1) * dh].to_vec()
         };
         let (qh, knh, vnh) = (take(&q), take(&k_new), take(&v_new));
-        head_attention(&qh, k_cache, v_cache, &knh, &vnh, pos, b, s, nh, dh, head)
+        head_attention(
+            &qh,
+            &k_cache[bi * plane..(bi + 1) * plane],
+            &v_cache[bi * plane..(bi + 1) * plane],
+            &knh,
+            &vnh,
+            &pos[bi..bi + 1],
+            1,
+            s,
+            nh,
+            dh,
+            head,
+        )
     });
 
     let mut out = vec![0f32; b * d];
-    for (head, attn) in attns.iter().enumerate() {
+    let mut attn = vec![0f32; b * dh];
+    for head in 0..nh {
+        // reassemble this head's (B, dh) attention rows — pure copies
+        for bi in 0..b {
+            attn[bi * dh..(bi + 1) * dh].copy_from_slice(&rows[head * b + bi]);
+        }
         // out += attn_h @ wo[head*dh .. (head+1)*dh, :]
         let wo_head = &wo[head * dh * d..(head + 1) * dh * d];
-        gemm_acc(attn, wo_head, &mut out, b, dh, d);
+        gemm_acc(&attn, wo_head, &mut out, b, dh, d);
     }
     AttnOut { out, k_new, v_new }
 }

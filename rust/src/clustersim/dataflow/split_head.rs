@@ -74,15 +74,17 @@ pub fn execute(
     )
 }
 
-/// [`execute`] on a worker [`Pool`], parallel over **heads**: each
-/// head-cluster of Alg. 5 (register QKV segments → score reduce → local
-/// softmax + partial output projection → output reduce) is one
-/// independent pool task returning its new-K/V rows, its reduced
-/// (B, D) output partial and its two collectives' traffic; the main
-/// thread merges them in ascending head order — one f32 add per output
-/// element per head and the exact serial `dsmem_bytes` accumulation
-/// sequence — so the result is byte-identical to the serial path at
-/// every pool size (`tests/integration_parallel.rs`).
+/// [`execute`] on a worker [`Pool`], coalesced over the **flattened
+/// heads×blocks task grid** (DESIGN.md §Parallel): phase 1 dispatches
+/// one task per (head, cluster block) computing the block's register QKV
+/// segments and its partial score row; phase 2 dispatches the same grid
+/// for the local softmax + partial output projection. The two
+/// `ClusterReduce`s between/after them and the output merge stay on the
+/// calling thread, heads ascending — one f32 add per output element per
+/// head, the serial loop's exact accumulation sequence — so the result
+/// is byte-identical to the serial path at every pool size
+/// (`tests/integration_parallel.rs`), with 2 dispatches per call and
+/// `n`-times finer task granularity than the old per-head fan-out.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_on(
     pool: &Pool,
@@ -119,132 +121,137 @@ pub fn execute_on(
     let wk_p = PackedWeight::pack(wk, d, h);
     let wv_p = PackedWeight::pack(wv, d, h);
 
-    // One task per head-cluster: (k_rows, v_rows, o0, score-reduce
-    // bytes, output-reduce bytes).
-    type HeadOut = (Vec<f32>, Vec<f32>, Vec<f32>, f64, f64);
-    let heads: Vec<HeadOut> = pool.run_map(nh, |head| {
-        // ---- per-block register QKV segments (Alg. 5 lines 1-2) ----
-        // block r owns head-dim slice [r*hs, (r+1)*hs)
-        let project = |pw: &PackedWeight, r: usize| -> Vec<f32> {
+    // ---- Phase 1, one task per (head, cluster block): register QKV
+    // segments (Alg. 5 lines 1-2; block r owns head-dim slice
+    // [r*hs, (r+1)*hs)) and the partial scores over the *full* sequence
+    // (line 3): S_b = Q_b × K_b^T summed over this block's dim slice ----
+    type BlockOut = (Vec<f32>, Vec<f32>, Vec<f32>);
+    let blocks: Vec<BlockOut> = pool.run_map(nh * n, |idx| {
+        let (head, r) = (idx / n, idx % n);
+        let project = |pw: &PackedWeight| -> Vec<f32> {
             let mut seg = vec![0f32; b * hs];
             linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
             seg
         };
-        let q_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wq_p, r)).collect();
-        let k_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wk_p, r)).collect();
-        let v_segs: Vec<Vec<f32>> = (0..n).map(|r| project(&wv_p, r)).collect();
-        // this head's new K/V rows, (B, dh) — merged into the global
-        // (B, H) layout by the caller
-        let mut k_rows = vec![0f32; b * dh];
-        let mut v_rows = vec![0f32; b * dh];
+        let q_seg = project(&wq_p);
+        let k_seg = project(&wk_p);
+        let v_seg = project(&wv_p);
+
+        let mut sc = vec![0f32; b * (s + 1)];
+        for bi in 0..b {
+            let qseg = &q_seg[bi * hs..(bi + 1) * hs];
+            // token-tiled score scan (4 in-order chains per step)
+            let row_at = |t: usize| {
+                let base = ((bi * s + t) * nh + head) * dh + r * hs;
+                &k_cache[base..base + hs]
+            };
+            let valid = pos[bi];
+            let mut t = 0;
+            while t + 4 <= valid {
+                let d4 = linalg::dot4(qseg, row_at(t), row_at(t + 1), row_at(t + 2), row_at(t + 3));
+                for (k, dv) in d4.iter().enumerate() {
+                    sc[bi * (s + 1) + t + k] = dv * scale;
+                }
+                t += 4;
+            }
+            while t < valid {
+                sc[bi * (s + 1) + t] = linalg::dot(qseg, row_at(t)) * scale;
+                t += 1;
+            }
+            // self token at row index s
+            sc[bi * (s + 1) + s] = linalg::dot(qseg, &k_seg[bi * hs..(bi + 1) * hs]) * scale;
+        }
+        (k_seg, v_seg, sc)
+    });
+    let mut k_segs_g: Vec<Vec<f32>> = Vec::with_capacity(nh * n);
+    let mut v_segs_g: Vec<Vec<f32>> = Vec::with_capacity(nh * n);
+    let mut scores_g: Vec<Vec<f32>> = Vec::with_capacity(nh * n);
+    for (k_seg, v_seg, sc) in blocks {
+        k_segs_g.push(k_seg);
+        v_segs_g.push(v_seg);
+        scores_g.push(sc);
+    }
+
+    // ---- new-K/V write-back and the ClusterReduce(sum) of each head's
+    // S-sized score row, serial per head in ascending order ----
+    for head in 0..nh {
         for r in 0..n {
+            let k_seg = &k_segs_g[head * n + r];
+            let v_seg = &v_segs_g[head * n + r];
             for bi in 0..b {
-                let dst = bi * dh + r * hs;
-                k_rows[dst..dst + hs].copy_from_slice(&k_segs[r][bi * hs..(bi + 1) * hs]);
-                v_rows[dst..dst + hs].copy_from_slice(&v_segs[r][bi * hs..(bi + 1) * hs]);
+                let dst = bi * h + head * dh + r * hs;
+                k_new_g[dst..dst + hs].copy_from_slice(&k_seg[bi * hs..(bi + 1) * hs]);
+                v_new_g[dst..dst + hs].copy_from_slice(&v_seg[bi * hs..(bi + 1) * hs]);
             }
         }
+        let rc = cluster_reduce(
+            &mut scores_g[head * n..(head + 1) * n],
+            ReduceOp::Sum,
+            transport,
+            hw,
+            noc,
+        );
+        report.dsmem_bytes += rc.traffic_bytes;
+    }
 
-        // ---- partial scores over the *full* sequence per block (Alg. 5
-        // line 3): S_b = Q_b × K_b^T summed over this block's dim slice ----
-        let mut score_bufs: Vec<Vec<f32>> = (0..n)
-            .map(|r| {
-                let mut sc = vec![0f32; b * (s + 1)];
-                for bi in 0..b {
-                    let qseg = &q_segs[r][bi * hs..(bi + 1) * hs];
-                    // token-tiled score scan (4 in-order chains per step)
-                    let row_at = |t: usize| {
-                        let base = ((bi * s + t) * nh + head) * dh + r * hs;
-                        &k_cache[base..base + hs]
-                    };
-                    let valid = pos[bi];
-                    let mut t = 0;
-                    while t + 4 <= valid {
-                        let d4 = linalg::dot4(
-                            qseg,
-                            row_at(t),
-                            row_at(t + 1),
-                            row_at(t + 2),
-                            row_at(t + 3),
-                        );
-                        for (k, dv) in d4.iter().enumerate() {
-                            sc[bi * (s + 1) + t + k] = dv * scale;
-                        }
-                        t += 4;
-                    }
-                    while t < valid {
-                        sc[bi * (s + 1) + t] = linalg::dot(qseg, row_at(t)) * scale;
-                        t += 1;
-                    }
-                    // self token at row index s
-                    sc[bi * (s + 1) + s] =
-                        linalg::dot(qseg, &k_segs[r][bi * hs..(bi + 1) * hs]) * scale;
-                }
-                sc
-            })
-            .collect();
-
-        // ---- ClusterReduce(sum) of the S-sized score row ----
-        let rc = cluster_reduce(&mut score_bufs, ReduceOp::Sum, transport, hw, noc);
-
-        // ---- local softmax (identical in every block), A_b over the
-        // block's V slice, partial output projection (lines 3-4) ----
+    // ---- Phase 2, same grid: local softmax (identical in every block),
+    // A_b over the block's V slice, partial output projection over the
+    // FULL D columns (lines 3-4) ----
+    let o_grid: Vec<Vec<f32>> = pool.run_map(nh * n, |idx| {
+        let (head, r) = (idx / n, idx % n);
+        let v_seg = &v_segs_g[head * n + r];
+        let score_buf = &scores_g[head * n + r];
         let mut probs: Vec<f32> = Vec::new();
         let mut a_row = vec![0f32; hs];
-        let mut o_bufs: Vec<Vec<f32>> = vec![vec![0f32; b * d]; n];
-        for r in 0..n {
-            for bi in 0..b {
-                let valid = pos[bi];
-                let row = &score_bufs[r][bi * (s + 1)..(bi + 1) * (s + 1)];
-                let mut m = row[s];
-                for t in 0..valid {
-                    m = m.max(row[t]);
-                }
-                let mut l = 0f32;
-                probs.clear();
-                probs.resize(valid + 1, 0.0);
-                for t in 0..valid {
-                    probs[t] = (row[t] - m).exp();
-                    l += probs[t];
-                }
-                probs[valid] = (row[s] - m).exp();
-                l += probs[valid];
-                // A_b: (hs) attention output over this block's V slice
-                a_row.fill(0.0);
-                for t in 0..valid {
-                    let base = ((bi * s + t) * nh + head) * dh + r * hs;
-                    linalg::axpy(probs[t], &v_cache[base..base + hs], &mut a_row);
-                }
-                for (j, av) in a_row.iter_mut().enumerate() {
-                    *av += probs[valid] * v_segs[r][bi * hs + j];
-                    *av /= l;
-                }
-                // partial output projection over the FULL D columns
-                for (j, &av) in a_row.iter().enumerate() {
-                    let wrow = &wo[(head * dh + r * hs + j) * d..(head * dh + r * hs + j + 1) * d];
-                    linalg::axpy(av, wrow, &mut o_bufs[r][bi * d..(bi + 1) * d]);
-                }
+        let mut o_buf = vec![0f32; b * d];
+        for bi in 0..b {
+            let valid = pos[bi];
+            let row = &score_buf[bi * (s + 1)..(bi + 1) * (s + 1)];
+            let mut m = row[s];
+            for t in 0..valid {
+                m = m.max(row[t]);
+            }
+            let mut l = 0f32;
+            probs.clear();
+            probs.resize(valid + 1, 0.0);
+            for t in 0..valid {
+                probs[t] = (row[t] - m).exp();
+                l += probs[t];
+            }
+            probs[valid] = (row[s] - m).exp();
+            l += probs[valid];
+            // A_b: (hs) attention output over this block's V slice
+            a_row.fill(0.0);
+            for t in 0..valid {
+                let base = ((bi * s + t) * nh + head) * dh + r * hs;
+                linalg::axpy(probs[t], &v_cache[base..base + hs], &mut a_row);
+            }
+            for (j, av) in a_row.iter_mut().enumerate() {
+                *av += probs[valid] * v_seg[bi * hs + j];
+                *av /= l;
+            }
+            // partial output projection over the FULL D columns
+            for (j, &av) in a_row.iter().enumerate() {
+                let wrow = &wo[(head * dh + r * hs + j) * d..(head * dh + r * hs + j + 1) * d];
+                linalg::axpy(av, wrow, &mut o_buf[bi * d..(bi + 1) * d]);
             }
         }
-
-        // ---- ClusterReduce(sum) of the D-sized partial output (line 5) ----
-        let rc2 = cluster_reduce(&mut o_bufs, ReduceOp::Sum, transport, hw, noc);
-        let o0 = std::mem::take(&mut o_bufs[0]);
-        (k_rows, v_rows, o0, rc.traffic_bytes, rc2.traffic_bytes)
+        o_buf
     });
 
-    // Serial merge in ascending head order — the serial loop's exact
-    // accumulation sequence for out and dsmem_bytes.
-    for (head, (k_rows, v_rows, o0, sc_bytes, out_bytes)) in heads.iter().enumerate() {
-        for bi in 0..b {
-            let dst = bi * h + head * dh;
-            k_new_g[dst..dst + dh].copy_from_slice(&k_rows[bi * dh..(bi + 1) * dh]);
-            v_new_g[dst..dst + dh].copy_from_slice(&v_rows[bi * dh..(bi + 1) * dh]);
+    // ---- ClusterReduce(sum) of each head's D-sized partial output
+    // (line 5) and the atomicAdd merge (line 6; rank 0 writes), serial
+    // per head in ascending order — the serial loop's exact `out`
+    // accumulation sequence ----
+    let mut o_iter = o_grid.into_iter();
+    for _head in 0..nh {
+        let mut o_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            o_bufs.push(o_iter.next().expect("one task per (head, block)"));
         }
-        report.dsmem_bytes += sc_bytes;
-        report.dsmem_bytes += out_bytes;
-        // atomicAdd into global output (line 6); rank 0 writes
-        linalg::axpy(1.0, o0, &mut out);
+        let rc2 = cluster_reduce(&mut o_bufs, ReduceOp::Sum, transport, hw, noc);
+        report.dsmem_bytes += rc2.traffic_bytes;
+        linalg::axpy(1.0, &o_bufs[0], &mut out);
     }
 
     (AttnOut { out, k_new: k_new_g, v_new: v_new_g }, report)

@@ -169,25 +169,36 @@ pub fn execute_packed_rope(
     )
 }
 
-/// The post-gather attention core of one head's cluster schedule —
+/// The post-gather attention core of **every head's** cluster schedule —
 /// FlashDecoding partials over each block's KV span, the three
 /// `ClusterReduce`s with the online-softmax rescale between them, and the
 /// per-block output-projection tiles merged into `out` with one
-/// atomicAdd-equivalent add per element, in the serial `(r, bi)` order.
+/// atomicAdd-equivalent add per element, in the serial `(head, r, bi)`
+/// order.
 ///
-/// Extracted verbatim from [`execute_packed_rope_on`]'s per-head loop so
-/// the multi-position prefill path ([`prefill_packed_rope_on`]) runs the
-/// *identical* code per prompt row (`b == 1`): per-slot results depend
-/// only on that slot's inputs (every loop is per-`bi`; the butterfly
-/// reduces are element-wise across blocks), so decode batches and
-/// single-row prefill calls produce byte-identical per-slot bits.
+/// Coalesced fan-out (DESIGN.md §Parallel): instead of one pool dispatch
+/// per phase *per head*, each block-parallel phase dispatches **once over
+/// the flattened heads×blocks task grid** — task `idx` is head `idx / n`,
+/// cluster block `idx % n`. The per-task arithmetic is the per-head loop
+/// body unchanged, and every serial merge walks heads (and blocks within
+/// a head) in ascending order, so results stay byte-identical to the
+/// per-head dispatch structure at every pool size while the persistent
+/// pool sees 2 dispatches here instead of `2·nh`. The collectives
+/// between the phases run on the calling thread, heads ascending.
 ///
-/// `q`/`k_new`/`v_new` are the assembled, already-roped `(b, dh)` per-head
-/// rows; `k_cache`/`v_cache` are `(b, s, nh*dh)` dense plane slices;
-/// `pos[bi]` is slot `bi`'s valid cache length (the self token always
-/// comes from `k_new`/`v_new`, owned by block `n-1`).
+/// Runs identically for decode batches and the multi-position prefill
+/// path ([`prefill_packed_rope_on`], `b == 1` per prompt row): per-slot
+/// results depend only on that slot's inputs (every loop is per-`bi`;
+/// the butterfly reduces are element-wise across blocks), so decode
+/// batches and single-row prefill calls produce byte-identical per-slot
+/// bits.
+///
+/// `q`/`k_new`/`v_new` are the assembled, already-roped `(nh, b, dh)`
+/// head-major rows; `k_cache`/`v_cache` are `(b, s, nh*dh)` dense plane
+/// slices; `pos[bi]` is slot `bi`'s valid cache length (the self token
+/// always comes from `k_new`/`v_new`, owned by block `n-1`).
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn attend_head_on(
+pub(crate) fn attend_heads_on(
     pool: &Pool,
     q: &[f32],
     k_new: &[f32],
@@ -201,7 +212,6 @@ pub(crate) fn attend_head_on(
     dh: usize,
     s: usize,
     n: usize,
-    head: usize,
     wo_p: &PackedWeight,
     scale: f32,
     transport: Transport,
@@ -211,11 +221,16 @@ pub(crate) fn attend_head_on(
     report: &mut CostReport,
 ) {
     let (ss, ds) = (s / n, d / n);
+    let hb = b * dh; // one head's (b, dh) plane in q/k_new/v_new
     {
         // ---- Stage 2: FlashDecoding partials over each block's KV span
-        // (Alg. 3 line 4), one pool task per cluster block; block n-1
-        // also owns the self token ----
-        let partials: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
+        // (Alg. 3 line 4), one task per (head, cluster block) on the
+        // flattened grid; block n-1 also owns the self token ----
+        let partials: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(nh * n, |idx| {
+            let (head, r) = (idx / n, idx % n);
+            let qh = &q[head * hb..(head + 1) * hb];
+            let knh = &k_new[head * hb..(head + 1) * hb];
+            let vnh = &v_new[head * hb..(head + 1) * hb];
             let mut m_row = vec![f32::NEG_INFINITY; b];
             let mut l_row = vec![0f32; b];
             let mut acc_row = vec![0f32; b * dh];
@@ -224,7 +239,7 @@ pub(crate) fn attend_head_on(
                 let valid = pos[bi];
                 let lo = r * ss;
                 let hi = ((r + 1) * ss).min(valid);
-                let qrow = &q[bi * dh..(bi + 1) * dh];
+                let qrow = &qh[bi * dh..(bi + 1) * dh];
                 scores.clear();
                 // token-tiled score scan: 4 independent in-order dot
                 // chains per step (each score's accumulation order is
@@ -249,7 +264,7 @@ pub(crate) fn attend_head_on(
                 }
                 let self_here = r == n - 1;
                 let self_score = if self_here {
-                    Some(linalg::dot(qrow, &k_new[bi * dh..(bi + 1) * dh]) * scale)
+                    Some(linalg::dot(qrow, &knh[bi * dh..(bi + 1) * dh]) * scale)
                 } else {
                     None
                 };
@@ -274,52 +289,60 @@ pub(crate) fn attend_head_on(
                 if let Some(sc) = self_score {
                     let p = (sc - m).exp();
                     l += p;
-                    linalg::axpy(p, &v_new[bi * dh..(bi + 1) * dh], acc);
+                    linalg::axpy(p, &vnh[bi * dh..(bi + 1) * dh], acc);
                 }
                 m_row[bi] = m;
                 l_row[bi] = l;
             }
             (m_row, l_row, acc_row)
         });
-        let mut m_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut l_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut acc_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        for (m_row, l_row, acc_row) in partials {
-            m_bufs.push(m_row);
-            l_bufs.push(l_row);
-            acc_bufs.push(acc_row);
-        }
 
-        // ---- ClusterReduce of softmax stats (Alg. 3 lines 5-6) ----
-        let m_local: Vec<Vec<f32>> = m_bufs.clone();
-        let rc1 = cluster_reduce(&mut m_bufs, ReduceOp::Max, transport, hw, noc);
-        report.dsmem_bytes += rc1.traffic_bytes;
-        // rescale local l and acc by exp(m_local - m_global) (line 6's
-        // online-softmax rescale with Reg_max)
-        for r in 0..n {
-            for bi in 0..b {
-                let alpha = if m_local[r][bi] == f32::NEG_INFINITY {
-                    0.0
-                } else {
-                    (m_local[r][bi] - m_bufs[r][bi]).exp()
-                };
-                l_bufs[r][bi] *= alpha;
-                linalg::scale(alpha, &mut acc_bufs[r][bi * dh..(bi + 1) * dh]);
+        // ---- ClusterReduce of softmax stats and the attention output
+        // (Alg. 3 lines 5-7), serial per head in ascending order ----
+        let mut parts = partials.into_iter();
+        let mut reduced: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = Vec::with_capacity(nh);
+        for _head in 0..nh {
+            let mut m_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut l_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut acc_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (m_row, l_row, acc_row) = parts.next().expect("one task per (head, block)");
+                m_bufs.push(m_row);
+                l_bufs.push(l_row);
+                acc_bufs.push(acc_row);
             }
+            let m_local: Vec<Vec<f32>> = m_bufs.clone();
+            let rc1 = cluster_reduce(&mut m_bufs, ReduceOp::Max, transport, hw, noc);
+            report.dsmem_bytes += rc1.traffic_bytes;
+            // rescale local l and acc by exp(m_local - m_global) (line 6's
+            // online-softmax rescale with Reg_max)
+            for r in 0..n {
+                for bi in 0..b {
+                    let alpha = if m_local[r][bi] == f32::NEG_INFINITY {
+                        0.0
+                    } else {
+                        (m_local[r][bi] - m_bufs[r][bi]).exp()
+                    };
+                    l_bufs[r][bi] *= alpha;
+                    linalg::scale(alpha, &mut acc_bufs[r][bi * dh..(bi + 1) * dh]);
+                }
+            }
+            let rc2 = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
+            report.dsmem_bytes += rc2.traffic_bytes;
+            let rc3 = cluster_reduce(&mut acc_bufs, ReduceOp::Sum, transport, hw, noc);
+            report.dsmem_bytes += rc3.traffic_bytes;
+            reduced.push((l_bufs, acc_bufs));
         }
-        let rc2 = cluster_reduce(&mut l_bufs, ReduceOp::Sum, transport, hw, noc);
-        report.dsmem_bytes += rc2.traffic_bytes;
-        // ---- ClusterReduce of the attention output (Alg. 3 line 7) ----
-        let rc3 = cluster_reduce(&mut acc_bufs, ReduceOp::Sum, transport, hw, noc);
-        report.dsmem_bytes += rc3.traffic_bytes;
 
         // ---- Stage 3: per-block Output Projection tile + atomicAdd
-        // (Alg. 3 line 8): block r computes columns [r*ds, (r+1)*ds) as a
-        // pool task into a private tile; the atomicAdd merge below adds
-        // each tile element once, in the serial (r, bi, j ascending)
-        // order — the same single f32 add per output the serial
-        // matmul_rows_acc performed ----
-        let tiles: Vec<Vec<f32>> = pool.run_map(n, |r| {
+        // (Alg. 3 line 8): task (head, r) computes columns
+        // [r*ds, (r+1)*ds) as a grid task into a private tile; the
+        // atomicAdd merge below adds each tile element once, in the
+        // serial (head, r, bi, j ascending) order — the same single f32
+        // add per output the serial matmul_rows_acc performed ----
+        let tiles: Vec<Vec<f32>> = pool.run_map(nh * n, |idx| {
+            let (head, r) = (idx / n, idx % n);
+            let (l_bufs, acc_bufs) = &reduced[head];
             let mut tile = vec![0f32; b * ds];
             let mut attn_row = vec![0f32; dh];
             for bi in 0..b {
@@ -341,7 +364,8 @@ pub(crate) fn attend_head_on(
             }
             tile
         });
-        for (r, tile) in tiles.iter().enumerate() {
+        for (idx, tile) in tiles.iter().enumerate() {
+            let r = idx % n;
             for bi in 0..b {
                 let dst = &mut out[bi * d + r * ds..bi * d + (r + 1) * ds];
                 linalg::axpy(1.0, &tile[bi * ds..(bi + 1) * ds], dst); // atomicAdd
@@ -350,17 +374,19 @@ pub(crate) fn attend_head_on(
     }
 }
 
-/// [`execute_packed_rope`] on a worker [`Pool`]. Within each head's
-/// cluster, the three block-parallel phases — QKV projection segments,
-/// FlashDecoding partials over the KV spans, and the output-projection
-/// column tiles — fan their `n` cluster blocks across the pool
-/// ([`Pool::run_map`], results in block order); the collectives between
-/// them (gather, the three reduces) and the atomicAdd merge stay on the
-/// calling thread, in the serial code's exact order. Every output
-/// element keeps its single in-order accumulation chain, so the result
-/// is **byte-identical** to the serial path at every pool size
-/// (`tests/integration_parallel.rs`); a serial pool runs the identical
-/// loops inline.
+/// [`execute_packed_rope`] on a worker [`Pool`]. The three
+/// block-parallel phases — QKV projection segments, FlashDecoding
+/// partials over the KV spans, and the output-projection column tiles —
+/// each fan **one flattened heads×blocks task grid** across the pool
+/// ([`Pool::run_map`] over `nh·n` tasks, results in (head, block)
+/// order): three dispatches per call instead of `3·nh`, the host analog
+/// of the paper's fused-kernel launch-count cut. The collectives between
+/// the phases (gather, the three reduces) and the atomicAdd merge stay
+/// on the calling thread, heads ascending, in the serial code's exact
+/// order. Every output element keeps its single in-order accumulation
+/// chain, so the result is **byte-identical** to the serial path at
+/// every pool size (`tests/integration_parallel.rs`); a serial pool runs
+/// the identical loops inline.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_packed_rope_on(
     pool: &Pool,
@@ -393,24 +419,31 @@ pub fn execute_packed_rope_on(
     let mut report = CostReport::default();
     report.launches = 1; // the whole block is ONE fused kernel
 
-    for head in 0..nh {
-        // ---- Stage 1: per-block QKV projection segments (Alg. 3 line 2),
-        // one pool task per cluster block r, which computes columns
-        // [head*dh + r*hs, head*dh + (r+1)*hs) of all three projections ----
-        let segs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
-            let project = |pw: &PackedWeight| -> Vec<f32> {
-                let mut seg = vec![0f32; b * hs];
-                linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
-                seg
-            };
-            (project(wq_p), project(wk_p), project(wv_p))
-        });
+    // ---- Stage 1: per-block QKV projection segments (Alg. 3 line 2),
+    // one task per (head, cluster block) on the flattened grid; task
+    // (head, r) computes columns [head*dh + r*hs, head*dh + (r+1)*hs)
+    // of all three projections ----
+    let segs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(nh * n, |idx| {
+        let (head, r) = (idx / n, idx % n);
+        let project = |pw: &PackedWeight| -> Vec<f32> {
+            let mut seg = vec![0f32; b * hs];
+            linalg::matmul_rows(hidden, b, d, pw, 0, head * dh + r * hs, hs, &mut seg);
+            seg
+        };
+        (project(wq_p), project(wk_p), project(wv_p))
+    });
 
-        // ---- ClusterGather of Q/K/V (Alg. 3 line 3): one gather of the
-        // concatenated 3h-sized segment per block ----
+    // ---- ClusterGather of Q/K/V (Alg. 3 line 3), serial per head in
+    // ascending order: one gather of the concatenated 3h-sized segment
+    // per block, then reassembly, rope, and the cache write-back ----
+    let hb = b * dh;
+    let mut q_all = vec![0f32; nh * hb];
+    let mut kn_all = vec![0f32; nh * hb];
+    let mut vn_all = vec![0f32; nh * hb];
+    for head in 0..nh {
         let cat: Vec<Vec<f32>> = (0..n)
             .map(|r| {
-                let (q_seg, k_seg, v_seg) = &segs[r];
+                let (q_seg, k_seg, v_seg) = &segs[head * n + r];
                 let mut c = Vec::with_capacity(3 * b * hs);
                 c.extend_from_slice(q_seg);
                 c.extend_from_slice(k_seg);
@@ -463,14 +496,18 @@ pub fn execute_packed_rope_on(
                 .copy_from_slice(&v_new[bi * dh..(bi + 1) * dh]);
         }
 
-        // ---- Stages 2-3: FlashDecoding partials, the three reduces, and
-        // the output-projection tiles + atomicAdd merge (Alg. 3 lines
-        // 4-8) — the shared attention core ----
-        attend_head_on(
-            pool, &q, &k_new, &v_new, k_cache, v_cache, pos, b, d, nh, dh, s, n, head, wo_p,
-            scale, transport, hw, noc, &mut out, &mut report,
-        );
+        q_all[head * hb..(head + 1) * hb].copy_from_slice(&q);
+        kn_all[head * hb..(head + 1) * hb].copy_from_slice(&k_new);
+        vn_all[head * hb..(head + 1) * hb].copy_from_slice(&v_new);
     }
+
+    // ---- Stages 2-3: FlashDecoding partials, the three reduces, and
+    // the output-projection tiles + atomicAdd merge (Alg. 3 lines 4-8)
+    // for every head at once — the shared attention core ----
+    attend_heads_on(
+        pool, &q_all, &kn_all, &vn_all, k_cache, v_cache, pos, b, d, nh, dh, s, n, wo_p, scale,
+        transport, hw, noc, &mut out, &mut report,
+    );
 
     (AttnOut { out, k_new: k_new_g, v_new: v_new_g }, report)
 }
@@ -484,7 +521,7 @@ pub fn execute_packed_rope_on(
 /// own position, and the roped K/V rows are **written into the mutable
 /// dense planes** at their positions so later rows of the same chunk
 /// attend to earlier ones. Attention then runs causally per row through
-/// [`attend_head_on`] with `b == 1` and `valid = row_pos[j]` — the
+/// [`attend_heads_on`] with `b == 1` and `valid = row_pos[j]` — the
 /// byte-identical decode core — so a chunked prefill reproduces the
 /// retired decode-as-prefill token stream bit for bit
 /// (`tests/integration_prefill.rs`).
@@ -529,21 +566,23 @@ pub fn prefill_packed_rope_on(
 
     // ---- Phase A: batched QKV projection + rope + cache write, every
     // head, before any attention — rows of this chunk must see each
-    // other's K/V ----
+    // other's K/V. Stage 1 runs over all T rows at once (matmul_rows is
+    // row-independent, so each row's bits match the decode-as-prefill
+    // projection) and over all heads at once: one task per
+    // (head, cluster block) on the flattened grid ----
+    let segs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(nh * n, |idx| {
+        let (head, r) = (idx / n, idx % n);
+        let project = |pw: &PackedWeight| -> Vec<f32> {
+            let mut seg = vec![0f32; t_rows * hs];
+            linalg::matmul_rows(hidden, t_rows, d, pw, 0, head * dh + r * hs, hs, &mut seg);
+            seg
+        };
+        (project(wq_p), project(wk_p), project(wv_p))
+    });
     for head in 0..nh {
-        // Stage 1 over all T rows at once (matmul_rows is row-independent,
-        // so each row's bits match the decode-as-prefill projection)
-        let segs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = pool.run_map(n, |r| {
-            let project = |pw: &PackedWeight| -> Vec<f32> {
-                let mut seg = vec![0f32; t_rows * hs];
-                linalg::matmul_rows(hidden, t_rows, d, pw, 0, head * dh + r * hs, hs, &mut seg);
-                seg
-            };
-            (project(wq_p), project(wk_p), project(wv_p))
-        });
         let cat: Vec<Vec<f32>> = (0..n)
             .map(|r| {
-                let (q_seg, k_seg, v_seg) = &segs[r];
+                let (q_seg, k_seg, v_seg) = &segs[head * n + r];
                 let mut c = Vec::with_capacity(3 * t_rows * hs);
                 c.extend_from_slice(q_seg);
                 c.extend_from_slice(k_seg);
@@ -591,40 +630,39 @@ pub fn prefill_packed_rope_on(
         }
     }
 
-    // ---- Phase B: causal attention per row, serial in feed order, heads
-    // ascending — the decode core with b == 1 and valid = row_pos[j]
-    // (earlier chunk rows are already in the planes) ----
+    // ---- Phase B: causal attention per row, serial in feed order —
+    // the decode core with b == 1 and valid = row_pos[j] (earlier chunk
+    // rows are already in the planes). A row's `(h,)` slice of
+    // q_g/k_new_g/v_new_g is exactly the core's (nh, 1, dh) head-major
+    // layout, so all heads of the row go through one coalesced call ----
     let plane_stride = s * h;
     for j in 0..t_rows {
         let slot = row_slot[j];
         let kc = &k_plane[slot * plane_stride..(slot + 1) * plane_stride];
         let vc = &v_plane[slot * plane_stride..(slot + 1) * plane_stride];
         let pos_j = [row_pos[j]];
-        for head in 0..nh {
-            attend_head_on(
-                pool,
-                &q_g[j * h + head * dh..j * h + (head + 1) * dh],
-                &k_new_g[j * h + head * dh..j * h + (head + 1) * dh],
-                &v_new_g[j * h + head * dh..j * h + (head + 1) * dh],
-                kc,
-                vc,
-                &pos_j,
-                1,
-                d,
-                nh,
-                dh,
-                s,
-                n,
-                head,
-                wo_p,
-                scale,
-                transport,
-                hw,
-                noc,
-                &mut out[j * d..(j + 1) * d],
-                &mut report,
-            );
-        }
+        attend_heads_on(
+            pool,
+            &q_g[j * h..(j + 1) * h],
+            &k_new_g[j * h..(j + 1) * h],
+            &v_new_g[j * h..(j + 1) * h],
+            kc,
+            vc,
+            &pos_j,
+            1,
+            d,
+            nh,
+            dh,
+            s,
+            n,
+            wo_p,
+            scale,
+            transport,
+            hw,
+            noc,
+            &mut out[j * d..(j + 1) * d],
+            &mut report,
+        );
     }
 
     (AttnOut { out, k_new: k_new_g, v_new: v_new_g }, report)

@@ -95,6 +95,13 @@ pub trait Backend {
         slots: &[SlotRows],
         cache_planes: &mut [Vec<f32>],
     ) -> Result<StepOut>;
+    /// Cumulative dispatch counters of the backend's worker pool, if it
+    /// runs one (`None` for pool-less backends). The engine publishes a
+    /// `Some` snapshot into the metrics registry at sync points as
+    /// `pool_dispatch_total` / `pool_tasks_total` / `pool_queue_depth`.
+    fn pool_stats(&self) -> Option<crate::util::pool::PoolStats> {
+        None
+    }
 }
 
 #[derive(Debug)]
@@ -299,6 +306,11 @@ impl<B: Backend> Engine<B> {
         set("engine_rejected_too_long_total", self.rejected_too_long);
         set("engine_rejected_slo_total", self.rejected_slo);
         set("engine_rejected_deadline_total", self.rejected_deadline);
+        if let Some(ps) = self.backend.pool_stats() {
+            set("pool_dispatch_total", ps.dispatches);
+            set("pool_tasks_total", ps.tasks);
+            o.gauge_set(&format!("pool_queue_depth{{replica=\"{r}\"}}"), ps.queue_depth as f64);
+        }
     }
 
     /// The Chrome track id of a request's lifecycle row.

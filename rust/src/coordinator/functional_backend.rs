@@ -195,6 +195,10 @@ impl Backend for FunctionalBackend {
         self.last_greedy = greedy;
         Ok(StepOut { logits, new_rows })
     }
+
+    fn pool_stats(&self) -> Option<crate::util::pool::PoolStats> {
+        Some(self.pool.stats())
+    }
 }
 
 #[cfg(test)]
@@ -301,6 +305,24 @@ mod tests {
         // ... and an explicit width is honoured verbatim.
         let forced = FunctionalBackend::from_model_name_on("micro-llama", 42, 2, 4).unwrap();
         assert_eq!(forced.threads(), 4);
+    }
+
+    #[test]
+    fn pool_counters_reach_the_metrics_registry() {
+        // The Backend::pool_stats hook: a functional engine with a sink
+        // attached must publish its pool's cumulative dispatch counters
+        // (serial pools dispatch too — every run_map is one dispatch).
+        let backend = FunctionalBackend::from_model_name("micro-llama", 42, 2).unwrap();
+        let obs = crate::obs::Obs::new();
+        let mut engine = Engine::new(backend, 64, 8, 1.0);
+        engine.set_obs(obs.clone(), 3);
+        engine.submit(Request::new(1, vec![3, 5], 4));
+        engine.run_to_completion(64).unwrap();
+        engine.sync_obs_counters();
+        let d = obs.counter("pool_dispatch_total{replica=\"3\"}");
+        let t = obs.counter("pool_tasks_total{replica=\"3\"}");
+        assert!(d > 0, "decode steps must count pool dispatches");
+        assert!(t >= d, "every dispatch runs at least one task");
     }
 
     #[test]

@@ -20,16 +20,36 @@
 //!   attention inner loops.
 //!
 //! **Bit-exactness contract:** the *accumulation order is part of the
-//! API*. Every output element is produced by one scalar accumulator
-//! summing `x[i] * w[i][col]` for `i = 0..n_in` **in ascending order** —
-//! exactly the order of the seed's scalar loops — so the refactored
-//! dataflows return byte-identical `AttnOut` to the frozen scalar
-//! reference (`tests/integration_bitexact.rs`). Column tiling multiplies
-//! *independent* accumulator chains; it never reassociates a single
-//! output's sum. Do not "optimise" these kernels with multiple partial
-//! accumulators per output, FMA contraction, or SIMD horizontal sums:
-//! that trades the contract for nothing the cache blocking has not
-//! already bought (DESIGN.md §Perf).
+//! API*. In the default build every output element is produced by one
+//! scalar accumulator summing `x[i] * w[i][col]` for `i = 0..n_in` **in
+//! ascending order** — exactly the order of the seed's scalar loops — so
+//! the refactored dataflows return byte-identical `AttnOut` to the
+//! frozen scalar reference (`tests/integration_bitexact.rs`). Column
+//! tiling multiplies *independent* accumulator chains; it never
+//! reassociates a single output's sum. Do not "optimise" these kernels
+//! with multiple partial accumulators per output, FMA contraction, or
+//! SIMD horizontal sums outside the one sanctioned variant below: that
+//! trades the contract for nothing the cache blocking has not already
+//! bought (DESIGN.md §Perf).
+//!
+//! **The `simd` cargo feature** swaps the *reduction* primitives
+//! ([`dot`], [`dot4`], [`dot_seq`], and therefore [`rmsnorm`]'s sum of
+//! squares) to a **fixed lane-group order**: [`SIMD_LANES`] independent
+//! accumulator lanes fed by consecutive `SIMD_LANES`-wide chunks (a
+//! partial final chunk fills lanes `0..len % SIMD_LANES`), reduced by
+//! one fixed pairwise tree. That order is a pure function of the
+//! sequence length — never of pool size, scheduling, or memory layout —
+//! so `simd` builds stay byte-identical across pool widths and runs;
+//! they differ from default builds only by this documented
+//! reassociation, and every bitwise test re-pins against the same
+//! lane-group model (DESIGN.md §Parallel). The element-wise primitives
+//! ([`axpy`], [`scale`], [`scale_div`], [`silu_mul`]) get fixed-width
+//! chunked bodies under the feature but compute bit-identical values in
+//! both builds — per-element ops have no order to reassociate. The
+//! bodies are written as fixed-width lane loops the compiler lowers to
+//! vector instructions on every target; `core::arch` `target_feature`
+//! intrinsics are a drop-in upgrade *only if* they preserve the same
+//! lane-group tree (no FMA contraction, no wider re-blocking).
 
 /// Output-column tile width of the blocked matmul kernels: one activation
 /// element load feeds this many independent accumulator chains (ILP),
@@ -98,10 +118,28 @@ impl PackedWeight {
     }
 }
 
+/// Accumulator lanes of the `simd` builds' reduction order: consecutive
+/// `SIMD_LANES`-wide chunks feed `SIMD_LANES` independent in-order
+/// accumulator chains, reduced by [`lane_reduce`]'s fixed tree. 8 f32
+/// lanes = one AVX/NEON-pair register; the value is part of the numeric
+/// contract — changing it re-pins every `simd` reference.
+#[cfg(feature = "simd")]
+pub const SIMD_LANES: usize = 8;
+
+/// The fixed deterministic lane-group tree:
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — the one sanctioned
+/// horizontal reduction, shared by every `simd` reduction primitive.
+#[cfg(feature = "simd")]
+#[inline]
+fn lane_reduce(acc: [f32; SIMD_LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
 /// Strictly in-order dot product: `Σ a[i] * b[i]`, `i` ascending, one
 /// accumulator — the same reduction order as `zip().map().sum()` over the
 /// same slices (the seed's idiom), kept as a named primitive so the
 /// contract is visible at call sites.
+#[cfg(not(feature = "simd"))]
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -112,12 +150,65 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// Lane-group dot product (`simd` builds): [`SIMD_LANES`] vertical
+/// accumulator chains over consecutive chunks — lane `j` of chunk `k`
+/// adds `a[k·L + j] * b[k·L + j]`, the tail fills lanes `0..len % L` —
+/// then [`lane_reduce`]'s fixed tree. Identical bits to
+/// [`dot_seq`] over the zipped sequence, at every length.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; SIMD_LANES];
+    let mut ca = a.chunks_exact(SIMD_LANES);
+    let mut cb = b.chunks_exact(SIMD_LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for j in 0..SIMD_LANES {
+            acc[j] += xa[j] * xb[j];
+        }
+    }
+    for (j, (x, y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        acc[j] += x * y;
+    }
+    lane_reduce(acc)
+}
+
+/// [`dot`] over an arbitrary `(a_i, b_i)` sequence — the reduction-order
+/// authority for strided or gathered access patterns that cannot form
+/// slices (the frozen references in `tests/integration_bitexact.rs`
+/// route their column-strided sums through this so they re-pin in
+/// lockstep with the live kernels under the `simd` feature). Bitwise:
+/// `dot(a, b) == dot_seq(zip(a, b))` in both builds.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn dot_seq(it: impl Iterator<Item = (f32, f32)>) -> f32 {
+    let mut acc = 0f32;
+    for (x, y) in it {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Lane-group [`dot_seq`] (`simd` builds): element `i` lands in lane
+/// `i % SIMD_LANES` — the streaming statement of the same
+/// consecutive-chunk lane grouping as the slice kernels.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn dot_seq(it: impl Iterator<Item = (f32, f32)>) -> f32 {
+    let mut acc = [0f32; SIMD_LANES];
+    for (i, (x, y)) in it.enumerate() {
+        acc[i % SIMD_LANES] += x * y;
+    }
+    lane_reduce(acc)
+}
+
 /// Four independent strictly in-order dot products of one row against
 /// four (typically strided) cache rows: the attention-score tile. Each
 /// output is its own single-accumulator chain over `i = 0..len` — the
 /// same bits as four [`dot`] calls — but the four chains interleave in
 /// the FP pipeline (ILP) and share each `x[i]` load, which is what makes
 /// the sequence-scan phase fast without reassociating any sum.
+#[cfg(not(feature = "simd"))]
 #[inline]
 pub fn dot4(x: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> [f32; 4] {
     let k = x.len();
@@ -133,29 +224,103 @@ pub fn dot4(x: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> [f32; 
     [a0, a1, a2, a3]
 }
 
+/// Lane-group [`dot4`] (`simd` builds): each of the four outputs is its
+/// own [`SIMD_LANES`]-lane accumulation with the shared `x[i]` loads —
+/// bit-identical to four [`dot`] calls, exactly as in the default build.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn dot4(x: &[f32], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) -> [f32; 4] {
+    let k = x.len();
+    debug_assert!(r0.len() == k && r1.len() == k && r2.len() == k && r3.len() == k);
+    let mut acc = [[0f32; SIMD_LANES]; 4];
+    let chunks = k / SIMD_LANES;
+    for c in 0..chunks {
+        let base = c * SIMD_LANES;
+        for j in 0..SIMD_LANES {
+            let xv = x[base + j];
+            acc[0][j] += xv * r0[base + j];
+            acc[1][j] += xv * r1[base + j];
+            acc[2][j] += xv * r2[base + j];
+            acc[3][j] += xv * r3[base + j];
+        }
+    }
+    let base = chunks * SIMD_LANES;
+    for j in 0..k - base {
+        let xv = x[base + j];
+        acc[0][j] += xv * r0[base + j];
+        acc[1][j] += xv * r1[base + j];
+        acc[2][j] += xv * r2[base + j];
+        acc[3][j] += xv * r3[base + j];
+    }
+    [lane_reduce(acc[0]), lane_reduce(acc[1]), lane_reduce(acc[2]), lane_reduce(acc[3])]
+}
+
 /// `y[i] += alpha * x[i]`, `i` ascending (the attention accumulate /
 /// output-tile update). Same per-element op order as the seed's explicit
-/// loops.
+/// loops. Element-wise: the `simd` build's chunked body computes
+/// bit-identical values (each element is one mul + one add in both).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
+    #[cfg(feature = "simd")]
+    {
+        let n = x.len() - x.len() % SIMD_LANES;
+        for (yc, xc) in y[..n].chunks_exact_mut(SIMD_LANES).zip(x[..n].chunks_exact(SIMD_LANES)) {
+            for j in 0..SIMD_LANES {
+                yc[j] += alpha * xc[j];
+            }
+        }
+        for (yv, xv) in y[n..].iter_mut().zip(&x[n..]) {
+            *yv += alpha * xv;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
     for (yv, xv) in y.iter_mut().zip(x) {
         *yv += alpha * xv;
     }
 }
 
-/// `y[i] *= alpha` (online-softmax rescale).
+/// `y[i] *= alpha` (online-softmax rescale). Element-wise; `simd` build
+/// is bit-identical.
 #[inline]
 pub fn scale(alpha: f32, y: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    {
+        let n = y.len() - y.len() % SIMD_LANES;
+        for yc in y[..n].chunks_exact_mut(SIMD_LANES) {
+            for j in 0..SIMD_LANES {
+                yc[j] *= alpha;
+            }
+        }
+        for yv in y[n..].iter_mut() {
+            *yv *= alpha;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
     for yv in y.iter_mut() {
         *yv *= alpha;
     }
 }
 
 /// `out[i] = x[i] / denom` (softmax normalisation into a reused buffer).
+/// Element-wise; `simd` build is bit-identical.
 #[inline]
 pub fn scale_div(x: &[f32], denom: f32, out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
+    #[cfg(feature = "simd")]
+    {
+        let n = x.len() - x.len() % SIMD_LANES;
+        for (oc, xc) in out[..n].chunks_exact_mut(SIMD_LANES).zip(x[..n].chunks_exact(SIMD_LANES))
+        {
+            for j in 0..SIMD_LANES {
+                oc[j] = xc[j] / denom;
+            }
+        }
+        for (o, v) in out[n..].iter_mut().zip(&x[n..]) {
+            *o = v / denom;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
     for (o, v) in out.iter_mut().zip(x) {
         *o = v / denom;
     }
@@ -260,17 +425,14 @@ pub fn matmul_rows_acc(
 /// `out[i] = x[i] / sqrt(mean(x²) + eps) * w[i]`.
 ///
 /// Bit-exactness contract (same as the matmul kernels): the sum of
-/// squares is **one scalar accumulator over `i = 0..n` ascending** — the
-/// block pipeline's frozen scalar reference uses the identical order, so
-/// the normalised row is reproducible bit-for-bit. Do not parallelise or
-/// pairwise-tree this reduction.
+/// squares is `dot(x, x)` — one scalar accumulator over `i = 0..n`
+/// ascending in the default build, the fixed [`SIMD_LANES`] lane-group
+/// order under the `simd` feature. Routing through [`dot`] keeps one
+/// reduction-order authority; do not hand-roll this sum.
 #[inline]
 pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     debug_assert!(x.len() == w.len() && x.len() == out.len());
-    let mut ss = 0f32;
-    for v in x {
-        ss += v * v;
-    }
+    let ss = dot(x, x);
     let inv = 1.0 / (ss / x.len() as f32 + eps).sqrt();
     for i in 0..x.len() {
         out[i] = x[i] * inv * w[i];
@@ -301,10 +463,31 @@ pub fn rope_rotate(row: &mut [f32], pos: usize, base: f32) {
 /// SwiGLU elementwise gate: `out[i] = silu(gate[i]) * up[i]` with
 /// `silu(g) = g / (1 + e^(-g))`. Elementwise — no accumulation order to
 /// preserve, but kept here so the block pipeline's nonlinearity has one
-/// authoritative definition.
+/// authoritative definition. The `simd` build chunks the loop for the
+/// vectorizer; per-element values are bit-identical (`exp` stays the
+/// scalar libm call in both builds).
 #[inline]
 pub fn silu_mul(gate: &[f32], up: &[f32], out: &mut [f32]) {
     debug_assert!(gate.len() == up.len() && gate.len() == out.len());
+    #[cfg(feature = "simd")]
+    {
+        let n = gate.len() - gate.len() % SIMD_LANES;
+        for ((oc, gc), uc) in out[..n]
+            .chunks_exact_mut(SIMD_LANES)
+            .zip(gate[..n].chunks_exact(SIMD_LANES))
+            .zip(up[..n].chunks_exact(SIMD_LANES))
+        {
+            for j in 0..SIMD_LANES {
+                let g = gc[j];
+                oc[j] = g / (1.0 + (-g).exp()) * uc[j];
+            }
+        }
+        for i in n..gate.len() {
+            let g = gate[i];
+            out[i] = g / (1.0 + (-g).exp()) * up[i];
+        }
+    }
+    #[cfg(not(feature = "simd"))]
     for i in 0..gate.len() {
         let g = gate[i];
         out[i] = g / (1.0 + (-g).exp()) * up[i];
@@ -394,6 +577,30 @@ mod tests {
         (0..n).map(|_| (rng.f32() - 0.5) * scale).collect()
     }
 
+    /// Independent scalar statement of the build's reduction order: the
+    /// seed's in-order fold by default, the fixed 8-lane-group tree under
+    /// `simd` (element `i` in lane `i % 8`, then `((l0+l1)+(l2+l3)) +
+    /// ((l4+l5)+(l6+l7))`). Every reduction primitive must match this
+    /// model bitwise — it is the executable form of the contract.
+    fn model_dot_seq(it: impl Iterator<Item = (f32, f32)>) -> f32 {
+        #[cfg(not(feature = "simd"))]
+        {
+            let mut acc = 0f32;
+            for (x, y) in it {
+                acc += x * y;
+            }
+            acc
+        }
+        #[cfg(feature = "simd")]
+        {
+            let mut acc = [0f32; 8];
+            for (i, (x, y)) in it.enumerate() {
+                acc[i % 8] += x * y;
+            }
+            ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+        }
+    }
+
     /// Bit-exactness of the packed/tiled kernel vs the seed's strided
     /// loop, across shapes that hit every tile remainder (ncols mod
     /// COL_TILE in 0..COL_TILE) and offset windows.
@@ -408,12 +615,28 @@ mod tests {
             let pw = PackedWeight::pack(&w, n_in, n_out);
             for &(col0, ncols) in &[(0usize, n_out), (1, n_out - 1), (n_out / 2, n_out / 2)] {
                 let mut got = vec![0f32; b * ncols];
-                let mut want = vec![0f32; b * ncols];
                 matmul_rows(&x, b, n_in, &pw, 0, col0, ncols, &mut got);
-                matmul_rows_naive_strided(&x, b, n_in, &w, n_out, col0, ncols, &mut want);
+                // the build's reduction model, per output column
+                let mut want = vec![0f32; b * ncols];
+                for bi in 0..b {
+                    for j in 0..ncols {
+                        want[bi * ncols + j] = model_dot_seq(
+                            (0..n_in).map(|i| (x[bi * n_in + i], w[i * n_out + col0 + j])),
+                        );
+                    }
+                }
                 let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
                 let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
                 assert_eq!(gb, wb, "b={b} n_in={n_in} n_out={n_out} col0={col0}");
+                // default build only: the model *is* the seed's strided
+                // loop — pin the kernel against the verbatim baseline too
+                #[cfg(not(feature = "simd"))]
+                {
+                    let mut naive = vec![0f32; b * ncols];
+                    matmul_rows_naive_strided(&x, b, n_in, &w, n_out, col0, ncols, &mut naive);
+                    let nb: Vec<u32> = naive.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, nb, "b={b} n_in={n_in} n_out={n_out} col0={col0} (naive)");
+                }
             }
         }
     }
@@ -438,10 +661,8 @@ mod tests {
         let mut want = init;
         for bi in 0..b {
             for j in 0..ncols {
-                let mut acc = 0f32;
-                for i in 0..sub {
-                    acc += x[bi * sub + i] * w[(in0 + i) * n_out + col0 + j];
-                }
+                let acc =
+                    model_dot_seq((0..sub).map(|i| (x[bi * sub + i], w[(in0 + i) * n_out + col0 + j])));
                 want[bi * n_out + col0 + j] += acc;
             }
         }
@@ -486,7 +707,25 @@ mod tests {
     }
 
     #[test]
+    fn dot_matches_reduction_model_at_every_tail_length() {
+        // lengths hitting every `len % 8` tail, plus chunked ones — the
+        // simd-vs-scalar-model equality pin for the reduction primitives
+        let mut rng = Rng::seed_from_u64(3);
+        for n in [0usize, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 61, 64, 97] {
+            let a = randv(&mut rng, n, 2.0);
+            let b = randv(&mut rng, n, 2.0);
+            let want = model_dot_seq(a.iter().copied().zip(b.iter().copied()));
+            assert_eq!(dot(&a, &b).to_bits(), want.to_bits(), "n={n}");
+            // dot_seq is the same authority for non-slice access
+            let seq = dot_seq(a.iter().copied().zip(b.iter().copied()));
+            assert_eq!(seq.to_bits(), want.to_bits(), "n={n} (dot_seq)");
+        }
+    }
+
+    #[cfg(not(feature = "simd"))]
+    #[test]
     fn dot_matches_zip_sum_order() {
+        // default build: the model *is* the seed's zip().sum() idiom
         let mut rng = Rng::seed_from_u64(3);
         let a = randv(&mut rng, 97, 2.0);
         let b = randv(&mut rng, 97, 2.0);
@@ -497,11 +736,13 @@ mod tests {
     #[test]
     fn dot4_matches_four_dots_bitwise() {
         let mut rng = Rng::seed_from_u64(7);
-        let x = randv(&mut rng, 61, 2.0);
-        let rows: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut rng, 61, 2.0)).collect();
-        let got = dot4(&x, &rows[0], &rows[1], &rows[2], &rows[3]);
-        for (g, r) in got.iter().zip(&rows) {
-            assert_eq!(g.to_bits(), dot(&x, r).to_bits());
+        for n in [5usize, 8, 16, 23, 61] {
+            let x = randv(&mut rng, n, 2.0);
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut rng, n, 2.0)).collect();
+            let got = dot4(&x, &rows[0], &rows[1], &rows[2], &rows[3]);
+            for (g, r) in got.iter().zip(&rows) {
+                assert_eq!(g.to_bits(), dot(&x, r).to_bits(), "n={n}");
+            }
         }
     }
 
@@ -513,11 +754,9 @@ mod tests {
             let w: Vec<f32> = (0..n).map(|_| 1.0 + (rng.f32() - 0.5) * 0.2).collect();
             let mut got = vec![0f32; n];
             rmsnorm(&x, &w, 1e-5, &mut got);
-            // scalar reference: same in-order sum of squares
-            let mut ss = 0f32;
-            for v in &x {
-                ss += v * v;
-            }
+            // scalar reference: sum of squares in the build's reduction
+            // order (in-order by default, lane-grouped under `simd`)
+            let ss = model_dot_seq(x.iter().copied().zip(x.iter().copied()));
             let inv = 1.0 / (ss / n as f32 + 1e-5).sqrt();
             for i in 0..n {
                 assert_eq!(got[i].to_bits(), (x[i] * inv * w[i]).to_bits(), "n={n} i={i}");

@@ -1,4 +1,4 @@
-//! Deterministic scoped worker pool — the host-side analogue of the
+//! Deterministic persistent worker pool — the host-side analogue of the
 //! paper's cluster blocks (§Parallel in DESIGN.md).
 //!
 //! The functional stack has exactly one parallelism story: *independent
@@ -24,46 +24,254 @@
 //! Consequently `f32`/`f64` results are byte-identical across pool sizes
 //! 1/2/4/8/… (pinned by `tests/integration_parallel.rs`).
 //!
-//! **Panics** in any task propagate to the caller (the scope joins every
-//! worker, then re-raises the first payload). At `threads == 1` — or
-//! when `n_items` is 0 or 1 — everything runs inline on the caller's
-//! thread: no spawns, the exact serial code path.
+//! **Panics** in any task propagate to the caller (the dispatch drains
+//! every worker result, then re-raises the lowest-index payload). The
+//! pool stays **usable** afterwards: workers catch task panics and never
+//! die, so the next `run*` call behaves normally (pinned by
+//! `integration_parallel::pool_stays_usable_after_task_panic`). At
+//! `threads == 1` — or when `n_items` is 0 or 1 — everything runs inline
+//! on the caller's thread: no worker traffic, the exact serial code
+//! path.
 //!
-//! Workers are scoped `std::thread`s spawned per call (dependency-free,
-//! borrows allowed in tasks). Spawn cost is ~tens of µs per worker, so
-//! parallelise work units of ≥ ~100 µs; a persistent-worker pool is the
-//! documented upgrade path if profiles ever show spawn overhead
-//! dominating (DESIGN.md §Parallel).
+//! **Workers are persistent**: `Pool::new(t)` spawns `t − 1` OS threads
+//! once, each owning a one-slot mailbox; `run*` posts one job per worker
+//! and runs worker 0's range on the calling thread, then waits on a
+//! per-dispatch latch. Idle workers park on their mailbox condvar; the
+//! last clone's `Drop` signals shutdown and joins every worker. This
+//! replaces the previous per-call `std::thread::scope` spawns (~163 µs
+//! per spawn measured on the authoring container) with a
+//! mutex+condvar round-trip (~1–10 µs), the host-side analogue of the
+//! paper replacing per-operator kernel launches with one persistent
+//! cluster-resident kernel. `Pool` is `Clone`; clones share the same
+//! workers and concurrent dispatches from clones serialise on an
+//! internal lock.
+//!
+//! Dispatch volume is observable via [`Pool::stats`]
+//! (`dispatches`/`tasks` counters, current remote-job depth) so the
+//! serving layer can export `pool_dispatch_total` / `pool_tasks_total` /
+//! `pool_queue_depth` through `obs::MetricsRegistry`.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
 
 /// Per-task work (multiply-accumulates, ~50–100 µs scalar) below which
-/// a scoped spawn (~10–20 µs on conventional hosts, far more on some
-/// virtualised ones) cannot pay for itself. Owners that *auto*-size
-/// their pool check their workload against this before going wide
+/// even a persistent-pool dispatch (~1–10 µs mailbox round-trip per
+/// worker) cannot pay for itself. Owners that *auto*-size their pool
+/// check their workload against this before going wide
 /// (`FunctionalBackend::set_threads`); explicitly sized pools are never
 /// second-guessed — benches and the invariance tests pick their own
-/// widths.
+/// widths, and an explicit `CLUSTERFUSION_THREADS` always wins.
 pub const MIN_TASK_MACS: usize = 1 << 16;
 
-/// Hard ceiling on pool width. Spawning is per `run*` call, so an
-/// absurd width would attempt thousands of OS threads per kernel call
-/// and abort the process when the OS refuses one; no machine this
-/// simulator targets benefits beyond this. `ServeConfig::validate`
-/// rejects larger `threads` values with a readable error; the
-/// constructor clamps as the last line of defence.
+/// Hard ceiling on pool width. Workers are resident for the pool's
+/// lifetime, so an absurd width would pin thousands of parked OS
+/// threads; no machine this simulator targets benefits beyond this.
+/// `ServeConfig::validate` rejects larger `threads` values with a
+/// readable error; the constructor clamps as the last line of defence.
 pub const MAX_THREADS: usize = 512;
 
-/// A fixed-width worker pool. Cheap to construct; holds no threads
-/// between calls.
-#[derive(Debug, Clone)]
+/// A job posted to one worker's mailbox: run `task(w)` then count down
+/// the dispatch latch. The pointers are only valid until the latch hits
+/// zero — the dispatching `run_ranges` call does not return (or unwind)
+/// before that, so workers never observe them dangling.
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    w: usize,
+    latch: *const Latch,
+}
+
+// SAFETY: `task` is `Sync` (shared immutably across workers) and the
+// latch pointer is only dereferenced while the dispatching call keeps
+// the latch alive (see `Job` docs).
+unsafe impl Send for Job {}
+
+/// Count-down latch: the dispatcher waits until every posted job has
+/// signalled completion. Notification happens while the lock is held so
+/// a worker never touches the latch after the dispatcher could have
+/// freed it.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Self { remaining: Mutex::new(count), done: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut g = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
+        *g -= 1;
+        if *g == 0 {
+            // notify while holding the lock: after we release it the
+            // dispatcher may free the latch
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
+        while *g > 0 {
+            g = self.done.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// One worker's single-slot inbox. The dispatch lock guarantees at most
+/// one outstanding job per mailbox.
+struct Mailbox {
+    slot: Mutex<Option<Job>>,
+    ready: Condvar,
+}
+
+impl Mailbox {
+    fn post(&self, job: Job) {
+        let mut slot = self.slot.lock().unwrap_or_else(PoisonError::into_inner);
+        debug_assert!(slot.is_none(), "mailbox already holds a job");
+        *slot = Some(job);
+        self.ready.notify_one();
+    }
+}
+
+/// State shared between the owning `Pool` clones and the workers.
+struct Shared {
+    mailboxes: Vec<Mailbox>,
+    shutdown: AtomicBool,
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    let mb = &shared.mailboxes[idx];
+    loop {
+        let job = {
+            let mut slot = mb.slot.lock().unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match slot.take() {
+                    Some(j) => break j,
+                    None => slot = mb.ready.wait(slot).unwrap_or_else(PoisonError::into_inner),
+                }
+            }
+        };
+        // The task itself catches panics into its result slot; this
+        // outer catch is belt-and-braces so a worker can never die and
+        // the pool stays usable after any task panic.
+        let _ = catch_unwind(AssertUnwindSafe(|| (job.task)(job.w)));
+        // SAFETY: the dispatcher keeps the latch alive until this count
+        // reaches zero (see `Job`).
+        unsafe { &*job.latch }.count_down();
+    }
+}
+
+/// The resident worker set: joined when the last `Pool` clone drops.
+struct Inner {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Serialises dispatches from clones sharing these workers (each
+    /// mailbox holds at most one job).
+    dispatch: Mutex<()>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for mb in &self.shared.mailboxes {
+            // take the mailbox lock so a worker between its shutdown
+            // check and its wait cannot miss the wakeup
+            let _g = mb.slot.lock().unwrap_or_else(PoisonError::into_inner);
+            mb.ready.notify_all();
+        }
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap_or_else(PoisonError::into_inner));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cumulative dispatch counters for one worker set (shared by clones).
+#[derive(Debug, Default)]
+struct Counters {
+    dispatches: AtomicU64,
+    tasks: AtomicU64,
+    inflight: AtomicU64,
+}
+
+/// A snapshot of a pool's dispatch activity (see [`Pool::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// `run`/`run_map`/`run_ranges` calls that fanned out (or ran
+    /// inline) — one per call with `n_items > 0`.
+    pub dispatches: u64,
+    /// Worker ranges executed across all dispatches (1 per dispatch on
+    /// the inline path, `min(threads, n_items)` otherwise).
+    pub tasks: u64,
+    /// Remote jobs currently posted and not yet completed. Zero between
+    /// dispatches; sampled by the serving layer as `pool_queue_depth`.
+    pub queue_depth: u64,
+}
+
+/// A fixed-width pool of persistent workers. `new(t)` spawns `t − 1`
+/// threads once; they stay parked between calls and are joined when the
+/// last clone drops. `threads == 1` holds no threads at all.
 pub struct Pool {
     threads: usize,
+    counters: Arc<Counters>,
+    inner: Option<Arc<Inner>>,
+}
+
+impl Clone for Pool {
+    /// Clones share the same resident workers and counters.
+    fn clone(&self) -> Self {
+        Self { threads: self.threads, counters: self.counters.clone(), inner: self.inner.clone() }
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("threads", &self.threads)
+            .field("resident_workers", &self.inner.as_ref().map_or(0, |_| self.threads - 1))
+            .finish()
+    }
 }
 
 impl Pool {
     /// A pool of exactly `threads` workers (clamped to
-    /// `1..=`[`MAX_THREADS`]).
+    /// `1..=`[`MAX_THREADS`]). Spawns the `threads − 1` resident worker
+    /// threads immediately; worker 0 is always the calling thread.
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.clamp(1, MAX_THREADS) }
+        let threads = threads.clamp(1, MAX_THREADS);
+        let counters = Arc::new(Counters::default());
+        if threads == 1 {
+            return Self { threads, counters, inner: None };
+        }
+        let shared = Arc::new(Shared {
+            mailboxes: (0..threads - 1)
+                .map(|_| Mailbox { slot: Mutex::new(None), ready: Condvar::new() })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..threads - 1)
+            .map(|idx| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cf-pool-{}", idx + 1))
+                    .spawn(move || worker_loop(shared, idx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            threads,
+            counters,
+            inner: Some(Arc::new(Inner {
+                shared,
+                handles: Mutex::new(handles),
+                dispatch: Mutex::new(()),
+            })),
+        }
     }
 
     /// The inline pool: every `run*` degrades to the serial loop.
@@ -99,6 +307,16 @@ impl Pool {
         self.threads
     }
 
+    /// Snapshot of cumulative dispatch/task counts and the current
+    /// remote-job depth. Shared by clones; never reset.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            dispatches: self.counters.dispatches.load(Ordering::Relaxed),
+            tasks: self.counters.tasks.load(Ordering::Relaxed),
+            queue_depth: self.counters.inflight.load(Ordering::Relaxed),
+        }
+    }
+
     /// Deterministic contiguous partition: worker `w` of `workers` owns
     /// `[w·n/workers, (w+1)·n/workers)` — a pure function of the inputs.
     #[inline]
@@ -110,7 +328,7 @@ impl Pool {
     /// run `f(lo, hi)` on each; returns the per-worker results **in
     /// worker (= ascending range) order**. Worker 0's range runs on the
     /// calling thread, so `threads == 1` (or `n_items ≤ 1`) is the exact
-    /// inline path with zero spawns.
+    /// inline path with zero worker traffic.
     pub fn run_ranges<T, F>(&self, n_items: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -120,30 +338,57 @@ impl Pool {
             return Vec::new();
         }
         let workers = self.threads.min(n_items);
+        self.counters.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.counters.tasks.fetch_add(workers as u64, Ordering::Relaxed);
         if workers == 1 {
             return vec![f(0, n_items)];
         }
-        std::thread::scope(|s| {
-            let f = &f;
-            let handles: Vec<_> = (1..workers)
-                .map(|w| {
-                    let (lo, hi) = Self::chunk(w, workers, n_items);
-                    s.spawn(move || f(lo, hi))
-                })
-                .collect();
-            let (lo0, hi0) = Self::chunk(0, workers, n_items);
-            let mut out = Vec::with_capacity(workers);
-            out.push(f(lo0, hi0));
-            for h in handles {
-                match h.join() {
-                    Ok(v) => out.push(v),
-                    // first panicking worker wins; the scope joins the
-                    // rest during unwind
-                    Err(payload) => std::panic::resume_unwind(payload),
-                }
+        let inner = self.inner.as_ref().expect("threads > 1 implies resident workers");
+        let dispatch = inner.dispatch.lock().unwrap_or_else(PoisonError::into_inner);
+
+        // one result slot per worker, written exactly once each
+        let slots: Vec<Mutex<Option<std::thread::Result<T>>>> =
+            (0..workers).map(|_| Mutex::new(None)).collect();
+        let latch = Latch::new(workers - 1);
+        let task = |w: usize| {
+            let (lo, hi) = Self::chunk(w, workers, n_items);
+            let r = catch_unwind(AssertUnwindSafe(|| f(lo, hi)));
+            *slots[w].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
+        };
+        self.counters.inflight.store(workers as u64 - 1, Ordering::Relaxed);
+        {
+            let task_ref: &(dyn Fn(usize) + Sync) = &task;
+            // SAFETY: the borrowed task (and everything it captures)
+            // outlives every posted job — we run worker 0 inline and
+            // then block on the latch until all remote jobs have
+            // finished before `task` goes out of scope, even when a
+            // task panicked (the panic is parked in its slot and only
+            // resumed after the latch wait).
+            let task_static: &'static (dyn Fn(usize) + Sync) =
+                unsafe { std::mem::transmute(task_ref) };
+            for w in 1..workers {
+                inner.shared.mailboxes[w - 1].post(Job { task: task_static, w, latch: &latch });
             }
-            out
-        })
+        }
+        task(0);
+        latch.wait();
+        self.counters.inflight.store(0, Ordering::Relaxed);
+        drop(dispatch);
+
+        let mut out = Vec::with_capacity(workers);
+        for slot in slots {
+            match slot
+                .into_inner()
+                .unwrap_or_else(PoisonError::into_inner)
+                .expect("every dispatched worker writes its result slot")
+            {
+                Ok(v) => out.push(v),
+                // lowest-index panicking worker wins, matching the old
+                // scoped-join order; remaining results are dropped
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        out
     }
 
     /// `ParallelFor` with per-item results, collected **in item order**:
@@ -245,7 +490,30 @@ mod tests {
         let pool = Pool::serial();
         let here = std::thread::current().id();
         let ids = pool.run_map(5, |_| std::thread::current().id());
-        assert!(ids.iter().all(|id| *id == here), "serial pool must not spawn");
+        assert!(ids.iter().all(|id| *id == here), "serial pool must not use workers");
+    }
+
+    #[test]
+    fn workers_are_reused_across_calls() {
+        // persistent pool: the same spawned threads serve every call
+        let pool = Pool::new(3);
+        let ids = |_: usize| std::thread::current().id();
+        let first = pool.run_map(3, ids);
+        for _ in 0..50 {
+            assert_eq!(pool.run_map(3, ids), first, "worker identity must be stable");
+        }
+    }
+
+    #[test]
+    fn clones_share_the_same_workers_and_counters() {
+        let pool = Pool::new(4);
+        let clone = pool.clone();
+        let a = pool.run_map(4, |_| std::thread::current().id());
+        let b = clone.run_map(4, |_| std::thread::current().id());
+        assert_eq!(a, b, "clones must dispatch to the same resident workers");
+        assert_eq!(pool.stats(), clone.stats());
+        assert_eq!(pool.stats().dispatches, 2);
+        assert_eq!(pool.stats().tasks, 8);
     }
 
     #[test]
@@ -270,12 +538,44 @@ mod tests {
     }
 
     #[test]
+    fn pool_is_usable_after_a_task_panic() {
+        // pinned lifecycle choice (DESIGN.md §Parallel): usable, not
+        // poisoned — workers catch task panics and never die
+        let pool = Pool::new(4);
+        for round in 0..3 {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(8, |i| {
+                    if i == 2 {
+                        panic!("round {round}");
+                    }
+                });
+            }));
+            assert!(r.is_err());
+            assert_eq!(pool.run_map(8, |i| i * 3), (0..8).map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
     fn auto_threads_is_at_least_one_and_width_is_capped() {
         assert!(Pool::auto_threads() >= 1);
         assert!(Pool::auto().threads() >= 1);
         assert_eq!(Pool::new(0).threads(), 1, "zero clamps to serial");
         assert_eq!(Pool::default().threads(), 1);
         assert_eq!(Pool::new(usize::MAX).threads(), MAX_THREADS, "width is capped");
+    }
+
+    #[test]
+    fn stats_count_dispatches_and_tasks() {
+        let pool = Pool::new(4);
+        assert_eq!(pool.stats(), PoolStats::default());
+        pool.run_ranges(8, |lo, hi| (lo, hi)); // 4 workers
+        pool.run_map(2, |i| i); // 2 workers
+        pool.run_map(1, |i| i); // inline, still one dispatch
+        pool.run_map(0, |i| i); // no-op, not a dispatch
+        let s = pool.stats();
+        assert_eq!(s.dispatches, 3);
+        assert_eq!(s.tasks, 4 + 2 + 1);
+        assert_eq!(s.queue_depth, 0, "idle between dispatches");
     }
 
     #[test]

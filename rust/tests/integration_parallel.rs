@@ -9,7 +9,11 @@
 //! merge runs on the calling thread in the serial code's order. This
 //! suite pins that contract across pool sizes 1/2/4/8, for MHA and MLA
 //! geometries, on both transports, plus the pool's own unit semantics
-//! (empty ranges, more threads than items, panic propagation).
+//! (empty ranges, more threads than items, panic propagation) and the
+//! persistent-worker lifecycle: the same resident threads serve
+//! thousands of dispatches, a task panic leaves the pool usable (not
+//! poisoned), `Drop` joins every worker, and an explicit
+//! `CLUSTERFUSION_THREADS` width beats the `MIN_TASK_MACS` auto-gate.
 //!
 //! If this suite trips, a kernel raced on shared state or a merge left
 //! the serial order. Fix the kernel/merge, not the test.
@@ -160,6 +164,112 @@ fn pool_propagates_task_panics() {
         }));
         assert!(r.is_err(), "panic must reach the caller at threads={threads}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent-worker lifecycle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_reuses_workers_across_thousands_of_calls() {
+    // Persistent workers: thousands of dispatches ride the same threads
+    // spawned once in `Pool::new` (the point of the rewrite — per-call
+    // scoped spawns paid ~163 µs/worker/call), and the counters record
+    // exactly one dispatch per call.
+    let pool = Pool::new(4);
+    let ids = |_: usize| std::thread::current().id();
+    let first = pool.run_map(4, ids);
+    let distinct: std::collections::HashSet<_> = first.iter().collect();
+    assert_eq!(distinct.len(), 4, "4 items on a 4-pool use 4 distinct threads");
+    for call in 0..2_000 {
+        assert_eq!(pool.run_map(4, ids), first, "call {call}: worker identity must be stable");
+    }
+    let s = pool.stats();
+    assert_eq!(s.dispatches, 2_001);
+    assert_eq!(s.tasks, 4 * 2_001);
+    assert_eq!(s.queue_depth, 0, "idle between dispatches");
+}
+
+#[test]
+fn pool_stays_usable_after_task_panic() {
+    // Pinned lifecycle choice (referenced by `util::pool`'s module docs):
+    // workers catch task panics and never die, so the pool is usable —
+    // not poisoned — after the panic reaches the caller. Repeatedly.
+    let pool = Pool::new(4);
+    for round in 0..3 {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 3 {
+                    panic!("round {round}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "round {round}: panic must reach the caller");
+        assert_eq!(
+            pool.run_map(8, |i| i + 1),
+            (1..=8).collect::<Vec<_>>(),
+            "round {round}: pool must keep working after a task panic"
+        );
+    }
+}
+
+/// Live `cf-pool-*` worker threads of this process (Linux: every thread
+/// is a `/proc/self/task` entry until it exits and is joined).
+#[cfg(target_os = "linux")]
+fn resident_worker_threads() -> usize {
+    let mut n = 0;
+    if let Ok(dir) = std::fs::read_dir("/proc/self/task") {
+        for e in dir.flatten() {
+            if let Ok(comm) = std::fs::read_to_string(e.path().join("comm")) {
+                if comm.trim().starts_with("cf-pool-") {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+#[test]
+#[cfg(target_os = "linux")]
+fn drop_joins_all_resident_workers() {
+    // `Drop` must signal shutdown and join every worker: no parked
+    // threads may outlive the pool. Width 65 (64 workers) dwarfs any
+    // pool a concurrently running test holds (≤ 16), so the count
+    // deltas are unambiguous even with libtest parallelism.
+    let width = 65usize;
+    let before = resident_worker_threads();
+    let pool = Pool::new(width);
+    assert!(
+        resident_worker_threads() >= before + width - 1,
+        "Pool::new must spawn its workers eagerly"
+    );
+    pool.run(width * 4, |_| {}); // workers actually exercised
+    // join is synchronous: drop returning at all proves every worker
+    // exited and was reaped — a stuck worker would hang this test
+    drop(pool);
+    let after = resident_worker_threads();
+    assert!(
+        after <= before + 32,
+        "workers must be joined on drop: {before} before, {after} after"
+    );
+}
+
+#[test]
+fn env_width_beats_the_auto_gate() {
+    // `CLUSTERFUSION_THREADS` is an explicit ask: it must win over the
+    // `MIN_TASK_MACS` work-size gate that keeps auto-sized pools serial
+    // on micro models (the CI matrix legs depend on this). micro-llama's
+    // cluster-block tasks are ~KMACs, far below the gate.
+    let saved = std::env::var("CLUSTERFUSION_THREADS").ok();
+    std::env::set_var("CLUSTERFUSION_THREADS", "4");
+    let auto = FunctionalBackend::from_model_name_on("micro-llama", 42, 2, 0).unwrap();
+    let env_width = auto.threads();
+    match &saved {
+        Some(v) => std::env::set_var("CLUSTERFUSION_THREADS", v),
+        None => std::env::remove_var("CLUSTERFUSION_THREADS"),
+    }
+    assert_eq!(env_width, 4, "env width must beat the MIN_TASK_MACS gate");
 }
 
 // ---------------------------------------------------------------------------
